@@ -1,0 +1,6 @@
+//! Regenerates Fig. 16: single-machine Landscape vs GraphZeppelin-mode.
+fn main() {
+    let quick = !std::env::args().any(|a| a == "--full");
+    let t = landscape::experiments::fig16_single_machine(quick);
+    landscape::experiments::emit(&t, "fig16_single_machine");
+}

@@ -1,0 +1,7 @@
+//! Regenerates Fig. 3: ingestion rate vs distributed workers, with
+//! RAM-bandwidth reference lines.  `cargo bench --bench fig3_scaling`.
+fn main() {
+    let quick = !std::env::args().any(|a| a == "--full");
+    let t = landscape::experiments::fig3_scaling(quick);
+    landscape::experiments::emit(&t, "fig3_scaling");
+}

@@ -1,0 +1,6 @@
+//! Regenerates Fig. 4: the CameoSketch × pipeline-hypertree ablation.
+fn main() {
+    let quick = !std::env::args().any(|a| a == "--full");
+    let t = landscape::experiments::fig4_ablation(quick);
+    landscape::experiments::emit(&t, "fig4_ablation");
+}

@@ -1,0 +1,6 @@
+//! Regenerates Fig. 5: GreedyCC query-burst latencies.
+fn main() {
+    let quick = !std::env::args().any(|a| a == "--full");
+    let t = landscape::experiments::fig5_query_bursts(quick);
+    landscape::experiments::emit(&t, "fig5_query_bursts");
+}

@@ -1,0 +1,168 @@
+//! Micro-benchmarks of every hot path — the §Perf profiling harness.
+//!
+//! Run with `cargo bench --bench micro_hot_paths`.  Reports per-op costs
+//! for: CameoSketch vs CubeSketch updates, batched delta computation,
+//! hypertree vs gutter ingestion, sketch-delta merge, work-queue
+//! handoff, Borůvka queries, GreedyCC ops, adjacency-matrix bit flips,
+//! and RAM bandwidth — everything EXPERIMENTS.md §Perf tracks.
+
+use std::sync::Arc;
+
+use landscape::baseline::AdjacencyMatrix;
+use landscape::benchkit::{bench, fmt_rate, Table};
+use landscape::coordinator::work_queue::WorkQueue;
+use landscape::hypertree::{BatchSink, Hypertree, HypertreeConfig, VertexBatch};
+use landscape::metrics::Metrics;
+use landscape::sketch::params::{encode_edge, SketchParams};
+use landscape::sketch::seeds::SketchSeeds;
+use landscape::sketch::{CameoSketch, CubeSketch, SketchStore};
+use landscape::stream::update::Update;
+use landscape::util::rng::Xoshiro256;
+
+struct NullSink;
+impl BatchSink for NullSink {
+    fn full_batch(&self, _b: VertexBatch) {}
+    fn local_batch(&self, _v: u32, _o: &[u32]) {}
+}
+
+fn main() {
+    let v = 1u64 << 12;
+    let params = SketchParams::for_vertices(v);
+    let seeds = SketchSeeds::derive(&params, 42);
+    let mut rng = Xoshiro256::new(9);
+    let n = 100_000usize;
+    let edges: Vec<(u32, u32)> = (0..n)
+        .map(|_| {
+            let a = rng.next_below(v - 1) as u32;
+            let b = a + 1 + rng.next_below(v - 1 - a as u64) as u32;
+            (a, b)
+        })
+        .collect();
+    let indices: Vec<u64> = edges.iter().map(|&(a, b)| encode_edge(a, b, v)).collect();
+
+    let mut t = Table::new(
+        "micro hot paths (V=2^12)",
+        &["path", "ns_per_op", "rate"],
+    );
+    let mut row = |name: &str, secs_per_op: f64| {
+        t.row(vec![
+            name.to_string(),
+            format!("{:.1}", secs_per_op * 1e9),
+            fmt_rate(1.0 / secs_per_op),
+        ]);
+    };
+
+    // sketch update kernels
+    let mut buckets = vec![0u64; params.words()];
+    let s = bench(1, 5, || {
+        for &idx in &indices {
+            CameoSketch::apply_update(&mut buckets, &params, &seeds, idx);
+        }
+    });
+    row("cameo_update", s.median / n as f64);
+
+    let s = bench(1, 3, || {
+        for &idx in &indices[..n / 4] {
+            CubeSketch::apply_update(&mut buckets, &params, &seeds, idx);
+        }
+    });
+    row("cube_update", s.median / (n / 4) as f64);
+
+    // batched delta (the worker hot path) — level-major loop (§Perf #1)
+    let mut delta = vec![0u64; params.words()];
+    let s = bench(1, 5, || {
+        CameoSketch::delta_of_batch_into(&mut delta, &params, &seeds, &indices);
+    });
+    row("cameo_delta_batch(level-major)", s.median / n as f64);
+
+    // the pre-optimization variant: update-major via apply_update
+    let s = bench(1, 5, || {
+        delta.fill(0);
+        for &idx in &indices {
+            CameoSketch::apply_update(&mut delta, &params, &seeds, idx);
+        }
+    });
+    row("cameo_delta_batch(update-major)", s.median / n as f64);
+
+    // merge (the main-node hot path)
+    let store = SketchStore::new(params, 42);
+    let s = bench(1, 20, || {
+        store.merge_delta(0, &delta);
+    });
+    row("delta_merge_per_word", s.median / params.words() as f64);
+
+    // hypertree vs gutter ingestion
+    let metrics = Arc::new(Metrics::new());
+    let tree = Arc::new(Hypertree::new(
+        HypertreeConfig::for_vertices(v, params.words() * 2),
+        metrics.clone(),
+    ));
+    let mut local = tree.local();
+    let sink = NullSink;
+    let s = bench(1, 5, || {
+        for &(a, b) in &edges {
+            local.insert(a, b, &sink);
+            local.insert(b, a, &sink);
+        }
+        local.flush(&sink);
+    });
+    row("hypertree_insert(x2)", s.median / n as f64);
+
+    let gutter = landscape::gutter::GutterBuffer::new(v, params.words() * 2, 64, metrics);
+    let s = bench(1, 5, || {
+        for &(a, b) in &edges {
+            gutter.insert(a, b, &sink);
+            gutter.insert(b, a, &sink);
+        }
+    });
+    row("gutter_insert(x2)", s.median / n as f64);
+
+    // work-queue handoff
+    let q: WorkQueue<u64> = WorkQueue::new(1024);
+    let s = bench(1, 10, || {
+        for i in 0..512u64 {
+            q.push(i);
+        }
+        while q.try_pop().is_some() {}
+    });
+    row("workqueue_push_pop", s.median / 512.0);
+
+    // adjacency-matrix bit flip (the §2.1 comparison)
+    let mut m = AdjacencyMatrix::new(v);
+    let ups: Vec<Update> = edges.iter().map(|&(a, b)| Update::insert(a, b)).collect();
+    let s = bench(1, 10, || {
+        for u in &ups {
+            m.apply(u);
+        }
+    });
+    row("adj_matrix_bit_flip", s.median / n as f64);
+
+    // Borůvka query on a freshly populated store (NOT the merge-bench
+    // store, which holds junk deltas by now)
+    let qstore = SketchStore::new(params, 43);
+    for &idx in &indices[..20_000] {
+        let (a, b) = landscape::sketch::params::decode_edge(idx, v);
+        qstore.apply_local(a, idx);
+        qstore.apply_local(b, idx);
+    }
+    let s = bench(1, 3, || {
+        let _ = landscape::connectivity::boruvka::boruvka_components(&qstore);
+    });
+    row("boruvka_query_total", s.median);
+
+    // GreedyCC ops
+    let mut g = landscape::connectivity::greedycc::GreedyCC::fresh(v);
+    let s = bench(1, 5, || {
+        for &(a, b) in &edges {
+            g.on_insert(a, b);
+        }
+    });
+    row("greedycc_insert", s.median / n as f64);
+
+    // RAM bandwidth reference
+    let (seq, rnd) = landscape::analysis::rambw::measure_defaults();
+    row("ram_seq_write_8B", 8.0 / (seq.gib_per_sec() * (1u64 << 30) as f64));
+    row("ram_random_write_8B", 8.0 / (rnd.gib_per_sec() * (1u64 << 30) as f64));
+
+    landscape::experiments::emit(&t, "micro_hot_paths");
+}

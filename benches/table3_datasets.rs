@@ -1,0 +1,9 @@
+//! Regenerates Table 2 + Table 3: dataset inventory, ingestion rates and
+//! communication factors.
+fn main() {
+    let quick = !std::env::args().any(|a| a == "--full");
+    let t2 = landscape::experiments::table2_datasets(quick);
+    landscape::experiments::emit(&t2, "table2_datasets");
+    let t3 = landscape::experiments::table3_ingestion(quick);
+    landscape::experiments::emit(&t3, "table3_ingestion");
+}

@@ -1,0 +1,10 @@
+//! Regenerates Table 4 (+ Table 5 with --full): k-connectivity scaling.
+fn main() {
+    let quick = !std::env::args().any(|a| a == "--full");
+    let t = landscape::experiments::table4_kconn(quick);
+    landscape::experiments::emit(&t, "table4_kconn");
+    if !quick {
+        let t5 = landscape::experiments::table5_kconn_all(false);
+        landscape::experiments::emit(&t5, "table5_kconn_all");
+    }
+}

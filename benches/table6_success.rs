@@ -1,0 +1,12 @@
+//! Regenerates Table 6: CameoSketch column success probabilities,
+//! analytic recurrence vs Monte-Carlo, plus Fig. 1's survey and the
+//! App. F.2 correctness trials (the cheap analytic benches).
+fn main() {
+    let t = landscape::experiments::table6_success_prob();
+    landscape::experiments::emit(&t, "table6_success_prob");
+    let f1 = landscape::experiments::fig1_survey();
+    landscape::experiments::emit(&f1, "fig1_survey");
+    let quick = !std::env::args().any(|a| a == "--full");
+    let c = landscape::experiments::correctness(quick);
+    landscape::experiments::emit(&c, "correctness");
+}

@@ -1,0 +1,60 @@
+//! Quickstart: sketch a dense dynamic graph stream and query its
+//! connected components.
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use landscape::coordinator::{Coordinator, CoordinatorConfig};
+use landscape::stream::dynamify::Dynamify;
+use landscape::stream::erdos::ErdosRenyi;
+use landscape::stream::GraphStream;
+
+fn main() -> anyhow::Result<()> {
+    // A dense dynamic graph: G(4096, 1/2) whose edges are inserted and
+    // deleted 3 times over (net effect: the final graph).
+    let vertices = 1u64 << 12;
+    let model = ErdosRenyi::new(vertices, 0.5, 42);
+    let stream = Dynamify::new(model, 3);
+    println!(
+        "stream: V={vertices}, ~{} updates",
+        stream.len_hint().unwrap_or(0)
+    );
+
+    // The coordinator: sketches on the main node, CPU work distributed
+    // to (in-process) workers.
+    let mut coord = Coordinator::new(CoordinatorConfig::for_vertices(vertices))?;
+    println!(
+        "sketch memory: {} total ({} per vertex) — independent of edge count",
+        landscape::benchkit::fmt_bytes(coord.sketch_bytes() as f64),
+        landscape::benchkit::fmt_bytes(coord.params().bytes() as f64),
+    );
+
+    let report = coord.ingest_all(stream);
+    println!(
+        "ingested {} updates in {:.2}s ({})",
+        report.updates,
+        report.seconds,
+        landscape::benchkit::fmt_rate(report.rate())
+    );
+
+    // Global connectivity query.
+    let forest = coord.connected_components();
+    println!(
+        "connected components: {} ({} spanning-forest edges)",
+        forest.num_components(),
+        forest.edges.len()
+    );
+
+    // Batched reachability.
+    let answers = coord.reachability(&[(0, 1), (0, 2048), (1, 4095)]);
+    println!("reachability [(0,1),(0,2048),(1,4095)] = {answers:?}");
+
+    let m = coord.metrics();
+    println!(
+        "network: {:.2}x the input stream ({} batches to workers)",
+        m.communication_factor(),
+        m.batches_sent
+    );
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Tracking communities in a churning social network — the dynamic-graph
+//! use case from the paper's introduction (friend add/remove streams,
+//! community = connected component).
+//!
+//! A power-law "social" graph takes continuous edge churn; after every
+//! epoch the app asks for the community structure and for reachability
+//! between user pairs.  GreedyCC answers the cheap queries; deletions of
+//! spanning-forest edges force the occasional full sketch query.
+//!
+//! ```bash
+//! cargo run --release --offline --example social_communities
+//! ```
+
+use landscape::coordinator::{Coordinator, CoordinatorConfig};
+use landscape::stream::realworld::ChungLu;
+use landscape::stream::{EdgeModel, Update};
+use landscape::util::rng::Xoshiro256;
+use landscape::util::timer::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let users = 20_000u64;
+    let base = ChungLu::new(users, 0.5, 120_000, 7);
+    let mut coord = Coordinator::new(CoordinatorConfig::for_vertices(users))?;
+    let mut rng = Xoshiro256::new(99);
+
+    // Phase 1: the initial friendship graph arrives as a stream.
+    let sw = Stopwatch::new();
+    let mut live: Vec<(u32, u32)> = Vec::new();
+    for a in 0..users as u32 {
+        for b in (a + 1)..(users as u32).min(a + 2000) {
+            if base.contains(a, b) {
+                coord.ingest(Update::insert(a, b));
+                live.push((a, b));
+            }
+        }
+    }
+    println!(
+        "bootstrapped {} friendships in {:.2}s",
+        live.len(),
+        sw.elapsed_secs()
+    );
+
+    // Phase 2: churn epochs — friendships break and form.
+    for epoch in 0..5 {
+        let churn = live.len() / 20;
+        for _ in 0..churn {
+            // remove a random existing friendship
+            let i = rng.next_below(live.len() as u64) as usize;
+            let (a, b) = live.swap_remove(i);
+            coord.ingest(Update::delete(a, b));
+            // ... and form a new random one
+            loop {
+                let x = rng.next_below(users) as u32;
+                let y = rng.next_below(users) as u32;
+                if x != y
+                    && !live.contains(&(x.min(y), x.max(y)))
+                    && !base.contains(x.min(y), x.max(y))
+                {
+                    coord.ingest(Update::insert(x, y));
+                    live.push((x.min(y), x.max(y)));
+                    break;
+                }
+            }
+        }
+
+        // community query at the end of the epoch
+        let qsw = Stopwatch::new();
+        let forest = coord.connected_components();
+        let communities = forest.num_components();
+        let q1 = qsw.elapsed_secs();
+
+        // reachability between random user pairs (friend suggestions)
+        let pairs: Vec<(u32, u32)> = (0..1000)
+            .map(|_| {
+                (
+                    rng.next_below(users) as u32,
+                    rng.next_below(users) as u32,
+                )
+            })
+            .collect();
+        let qsw = Stopwatch::new();
+        let reach = coord.reachability(&pairs);
+        let connected = reach.iter().filter(|&&r| r).count();
+        println!(
+            "epoch {epoch}: {churn} churns, {communities} communities \
+             (query {:.4}s), {connected}/1000 pairs reachable ({:.6}s)",
+            q1,
+            qsw.elapsed_secs()
+        );
+    }
+
+    let m = coord.metrics();
+    println!(
+        "totals: {} updates, {} full queries, {} GreedyCC-served queries",
+        m.updates_ingested, m.queries_full, m.queries_greedy
+    );
+    Ok(())
+}

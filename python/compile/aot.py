@@ -1,0 +1,108 @@
+"""AOT lowering: sketch-delta graph -> HLO text artifacts.
+
+Run once at build time (``make artifacts``); Python is never on the
+request path.  Emits one artifact per supported graph-size config plus a
+manifest the Rust runtime uses to pick the right executable.
+
+Interchange format is HLO *text*, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .params import (
+    DEFAULT_BATCH,
+    DEFAULT_COLUMNS,
+    SEED_SCHEME_VERSION,
+    SketchParams,
+)
+
+# Vertex counts the default artifact set covers: every power of two used
+# by the examples and the bench harness.  (L, R) collapse many V values
+# onto the same artifact shape; we dedupe below.
+DEFAULT_VERTEX_CONFIGS = [1 << p for p in (8, 10, 11, 12, 13, 14, 16)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_config(params: SketchParams, batch: int) -> str:
+    fn = model.make_delta_fn(params, batch)
+    lowered = jax.jit(fn).lower(*model.example_args(params, batch))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    ap.add_argument("--columns", type=int, default=DEFAULT_COLUMNS)
+    ap.add_argument(
+        "--vertices",
+        type=int,
+        nargs="*",
+        default=DEFAULT_VERTEX_CONFIGS,
+        help="vertex counts to cover (deduped by artifact shape)",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {
+        "seed_scheme_version": SEED_SCHEME_VERSION,
+        "batch": args.batch,
+        "artifacts": [],
+    }
+    seen_shapes = {}
+    for v in sorted(args.vertices):
+        params = SketchParams.for_vertices(v, columns=args.columns)
+        shape_key = (params.levels, params.columns, params.rows)
+        if shape_key in seen_shapes:
+            name = seen_shapes[shape_key]
+        else:
+            name = (
+                f"cameo_delta_B{args.batch}_L{params.levels}"
+                f"_C{params.columns}_R{params.rows}.hlo.txt"
+            )
+            path = os.path.join(args.out_dir, name)
+            text = lower_config(params, args.batch)
+            with open(path, "w") as f:
+                f.write(text)
+            seen_shapes[shape_key] = name
+            print(f"wrote {path} ({len(text)} chars)")
+        manifest["artifacts"].append(
+            {
+                "vertices": v,
+                "levels": params.levels,
+                "columns": params.columns,
+                "rows": params.rows,
+                "batch": args.batch,
+                "file": name,
+            }
+        )
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} configs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""CameoSketch batched-delta Pallas kernel (L1).
+
+The compute hot-spot of the paper: turning a vertex-based batch of edge
+updates into a *sketch delta* (paper §5.2).  For one sketch level the
+work per update is: one checksum hash, C depth hashes, and four XORs per
+column (deterministic row 0 + the geometric row), exactly the
+CameoSketch update procedure of Fig. 12.
+
+Kernel layout
+  grid = (L,)  -- one program per sketch level; each level has its own
+                  depth/checksum seeds, so levels are fully independent
+                  and map cleanly onto a TPU grid.
+  inputs   idx[B]            uint64  edge-vector indices, 0 = padding
+           dseeds[L, C]      uint64  depth-hash seeds
+           cseeds[L]         uint64  checksum-hash seeds
+  output   delta[L, C, R, 2] uint64  (alpha, gamma) bucket deltas
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the per-level block
+(B + C*R*2 words) is VMEM-resident; the bucket accumulation is a masked
+XOR-reduce over the batch axis — VPU work, no MXU involvement, so the
+roofline is memory-bound.  On CPU we run interpret=True (Mosaic
+custom-calls are not executable on the CPU PJRT plugin).
+
+The update is *linear*: delta(batch1 ++ batch2) = delta(batch1) XOR
+delta(batch2).  Workers exploit this to chunk arbitrary batch sizes into
+the fixed B compiled here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import hashing
+
+
+def _xor_reduce(x, axis):
+    """XOR-fold an array along ``axis`` (identity element 0)."""
+    return jax.lax.reduce(x, jnp.uint64(0), jax.lax.bitwise_xor, (axis,))
+
+
+def _cameo_level_kernel(idx_ref, dseed_ref, cseed_ref, out_ref, *, rows):
+    """One grid step: the full delta of one sketch level."""
+    idx = idx_ref[...]  # (B,)
+    dseeds = dseed_ref[0, :]  # (C,)
+    cseed = cseed_ref[0]  # scalar
+
+    valid = idx != jnp.uint64(0)  # (B,)
+    chk = hashing.checksum(cseed, idx)  # (B,)
+
+    # Depth hash per (column, batch element); row choice is geometric.
+    h = hashing.depth_hash(dseeds[:, None], idx[None, :])  # (C, B)
+    depth = hashing.bucket_depth(h, rows)  # (C, B) int32
+
+    # mask[c, r, b] — does update b touch bucket (c, r)?  Row 0 is the
+    # deterministic bucket (hit by every valid update); row `depth` is the
+    # geometric bucket.  This is the CameoSketch rule: exactly two bucket
+    # writes per (update, column), vs CubeSketch's `depth` writes.
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (1, rows, 1), 1)  # (1,R,1)
+    hit = (row_ids == depth[:, None, :]) | (row_ids == 0)  # (C,R,B)
+    mask = hit & valid[None, None, :]
+
+    zero = jnp.uint64(0)
+    alpha = _xor_reduce(jnp.where(mask, idx[None, None, :], zero), 2)  # (C,R)
+    gamma = _xor_reduce(jnp.where(mask, chk[None, None, :], zero), 2)  # (C,R)
+    out_ref[0] = jnp.stack([alpha, gamma], axis=-1)  # (C,R,2)
+
+
+def cameo_delta(idx, dseeds, cseeds, *, rows, interpret=True):
+    """Compute the (L, C, R, 2) sketch delta of a padded batch.
+
+    Args:
+      idx:     (B,) uint64 edge-vector indices, 0-padded.
+      dseeds:  (L, C) uint64 depth seeds.
+      cseeds:  (L,) uint64 checksum seeds.
+      rows:    R, bucket rows per column.
+      interpret: keep True for CPU execution (see module docstring).
+    """
+    levels, columns = dseeds.shape
+    batch = idx.shape[0]
+    kernel = functools.partial(_cameo_level_kernel, rows=rows)
+    return pl.pallas_call(
+        kernel,
+        grid=(levels,),
+        in_specs=[
+            pl.BlockSpec((batch,), lambda l: (0,)),
+            pl.BlockSpec((1, columns), lambda l: (l, 0)),
+            pl.BlockSpec((1,), lambda l: (l,)),
+        ],
+        out_specs=pl.BlockSpec((1, columns, rows, 2), lambda l: (l, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((levels, columns, rows, 2), jnp.uint64),
+        interpret=interpret,
+    )(idx, dseeds, cseeds)

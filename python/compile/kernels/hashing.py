@@ -1,0 +1,87 @@
+"""splitmix64-based sketch hashing — jnp implementation.
+
+Bit-identical to ``rust/src/hashing/mod.rs``.  All randomness used by the
+sketches derives from the splitmix64 finalizer applied to seed^input.  The
+paper uses xxHash; any mixer of comparable quality preserves the sketch
+guarantees (DESIGN.md "Substitutions"), and splitmix64 is trivial to keep
+bit-identical across Rust and JAX.
+
+Requires ``jax_enable_x64``.  Python ints passed through ``U64`` are
+reduced mod 2^64 so plain-int call sites behave like wrapping u64 math.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MASK64 = (1 << 64) - 1
+
+# splitmix64 constants (Steele et al.)
+GOLDEN = 0x9E3779B97F4A7C15
+MIX1 = 0xBF58476D1CE4E5B9
+MIX2 = 0x94D049BB133111EB
+
+# Seed-derivation domain separators (arbitrary odd constants; the Rust
+# side uses the same values — see rust/src/hashing/mod.rs).
+DOM_LEVEL = 0xA24BAED4963EE407
+DOM_DEPTH = 0x9FB21C651E98DF25
+DOM_CHECK = 0xD6E8FEB86659FD93
+
+
+def _u64(x):
+    if isinstance(x, int):
+        x = x & MASK64
+    return jnp.asarray(x, dtype=jnp.uint64)
+
+
+def splitmix64(x):
+    """The splitmix64 finalizer over uint64 arrays."""
+    x = _u64(x)
+    z = x + _u64(GOLDEN)
+    z = (z ^ (z >> _u64(30))) * _u64(MIX1)
+    z = (z ^ (z >> _u64(27))) * _u64(MIX2)
+    return z ^ (z >> _u64(31))
+
+
+def level_seed(graph_seed, level):
+    """Seed for one sketch level (one CameoSketch repetition)."""
+    return splitmix64(_u64(graph_seed) ^ (_u64(level) * _u64(DOM_LEVEL)))
+
+
+def depth_seed(graph_seed, level, column):
+    """Seed of the depth (row-choice) hash for (level, column)."""
+    ls = level_seed(graph_seed, level)
+    return splitmix64(ls ^ ((_u64(column) + _u64(1)) * _u64(DOM_DEPTH)))
+
+
+def checksum_seed(graph_seed, level):
+    """Seed of the per-level checksum hash (shared by the level's columns,
+    matching the CameoSketch pseudocode where checksum = hash2(idx) is
+    hoisted out of the column loop)."""
+    ls = level_seed(graph_seed, level)
+    return splitmix64(ls ^ _u64(DOM_CHECK))
+
+
+def depth_hash(seed, idx):
+    """Raw depth hash; row choice is geometric in its trailing zeros."""
+    return splitmix64(_u64(seed) ^ _u64(idx))
+
+
+def checksum(seed, idx):
+    """Bucket checksum (the gamma XOR contribution of index ``idx``)."""
+    return splitmix64(_u64(seed) ^ _u64(idx))
+
+
+def bucket_depth(h, rows):
+    """Map a depth hash to a row in [1, rows-1].
+
+    P[depth = 1+t] = 2^-(t+1) via trailing zeros; h == 0 (probability
+    2^-64) and overly deep values clamp to the deepest row.
+    ctz(h) == popcount((h & -h) - 1).
+    """
+    h = _u64(h)
+    lowbit = h & (_u64(0) - h)
+    ctz = jax.lax.population_count(lowbit - _u64(1))
+    depth = jnp.uint64(1) + jnp.minimum(ctz, _u64(rows - 2))
+    return depth.astype(jnp.int32)

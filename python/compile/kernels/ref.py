@@ -1,0 +1,96 @@
+"""Pure-numpy CameoSketch oracle — the correctness reference for the
+Pallas kernel and (via shared golden fixtures) for the Rust native path.
+
+Deliberately written as the *scalar* per-update procedure of the paper's
+Fig. 12 pseudocode, one update at a time, with plain-int splitmix64 — a
+fully independent code path from the vectorized kernel.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+
+GOLDEN = 0x9E3779B97F4A7C15
+MIX1 = 0xBF58476D1CE4E5B9
+MIX2 = 0x94D049BB133111EB
+DOM_LEVEL = 0xA24BAED4963EE407
+DOM_DEPTH = 0x9FB21C651E98DF25
+DOM_CHECK = 0xD6E8FEB86659FD93
+
+
+def splitmix64(x: int) -> int:
+    z = (x + GOLDEN) & MASK64
+    z = ((z ^ (z >> 30)) * MIX1) & MASK64
+    z = ((z ^ (z >> 27)) * MIX2) & MASK64
+    return z ^ (z >> 31)
+
+
+def level_seed(graph_seed: int, level: int) -> int:
+    return splitmix64(graph_seed ^ ((level * DOM_LEVEL) & MASK64))
+
+
+def depth_seed(graph_seed: int, level: int, column: int) -> int:
+    return splitmix64(
+        level_seed(graph_seed, level) ^ (((column + 1) * DOM_DEPTH) & MASK64)
+    )
+
+
+def checksum_seed(graph_seed: int, level: int) -> int:
+    return splitmix64(level_seed(graph_seed, level) ^ DOM_CHECK)
+
+
+def checksum(seed: int, idx: int) -> int:
+    return splitmix64(seed ^ idx)
+
+
+def bucket_depth(h: int, rows: int) -> int:
+    """Row in [1, rows-1]; P[row = 1+t] = 2^-(t+1) via trailing zeros."""
+    if h == 0:
+        return rows - 1
+    ctz = (h & -h).bit_length() - 1
+    return 1 + min(ctz, rows - 2)
+
+
+def cameo_delta_ref(
+    indices, graph_seed: int, levels: int, columns: int, rows: int
+) -> np.ndarray:
+    """Scalar-loop reference of the batched delta.
+
+    Returns the same (L, C, R, 2) uint64 array the Pallas kernel produces.
+    """
+    out = np.zeros((levels, columns, rows, 2), dtype=np.uint64)
+    for lvl in range(levels):
+        cseed = checksum_seed(graph_seed, lvl)
+        dseeds = [depth_seed(graph_seed, lvl, c) for c in range(columns)]
+        for raw in indices:
+            idx = int(raw)
+            if idx == 0:  # padding sentinel
+                continue
+            chk = checksum(cseed, idx)
+            for c in range(columns):
+                h = splitmix64(dseeds[c] ^ idx)
+                d = bucket_depth(h, rows)
+                # deterministic bucket (row 0) + geometric bucket (row d)
+                out[lvl, c, 0, 0] ^= np.uint64(idx)
+                out[lvl, c, 0, 1] ^= np.uint64(chk)
+                out[lvl, c, d, 0] ^= np.uint64(idx)
+                out[lvl, c, d, 1] ^= np.uint64(chk)
+    return out
+
+
+def query_column(column_buckets, cseed: int):
+    """Recover a nonzero index from one column, or None.
+
+    A bucket (alpha, gamma) is *good* iff alpha != 0 and
+    checksum(cseed, alpha) == gamma.  Scans deepest-first (the deepest
+    good bucket is the most likely singleton).
+    """
+    rows = column_buckets.shape[0]
+    for r in range(rows - 1, -1, -1):
+        alpha = int(column_buckets[r, 0])
+        gamma = int(column_buckets[r, 1])
+        if alpha != 0 and checksum(cseed, alpha) == gamma:
+            return alpha
+    return None

@@ -1,0 +1,88 @@
+"""L2 — the sketch-delta computation graph.
+
+The "model" of this data-pipeline paper is not a neural network: it is the
+linear map  batch of edge indices  ->  vertex-sketch delta  that the
+distributed workers evaluate (paper §5.2).  This module assembles the L1
+Pallas kernel into the jit-able function that ``aot.py`` lowers to HLO
+text, plus helpers used by the tests.
+
+Seeds are *runtime inputs* (not baked constants) so a single artifact per
+(B, L, C, R) shape serves every graph seed and every k-connectivity copy.
+"""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import cameo, hashing
+from .params import SketchParams
+
+
+def make_delta_fn(params: SketchParams, batch: int, interpret: bool = True):
+    """Build the jit-able delta function for one sketch shape.
+
+    Returns ``fn(idx[B] u64, dseeds[L,C] u64, cseeds[L] u64) ->
+    (delta[L,C,R,2] u64,)`` — a 1-tuple, matching the return_tuple=True
+    lowering convention the Rust loader expects.
+    """
+
+    def fn(idx, dseeds, cseeds):
+        delta = cameo.cameo_delta(
+            idx, dseeds, cseeds, rows=params.rows, interpret=interpret
+        )
+        return (delta,)
+
+    return fn
+
+
+def example_args(params: SketchParams, batch: int):
+    """ShapeDtypeStructs used for lowering."""
+    return (
+        jax.ShapeDtypeStruct((batch,), jnp.uint64),
+        jax.ShapeDtypeStruct((params.levels, params.columns), jnp.uint64),
+        jax.ShapeDtypeStruct((params.levels,), jnp.uint64),
+    )
+
+
+def seeds_for(params: SketchParams, graph_seed: int):
+    """Derive the (dseeds, cseeds) arrays for a graph seed — matches the
+    Rust side's ``SketchSeeds::derive``."""
+    dseeds = np.zeros((params.levels, params.columns), dtype=np.uint64)
+    cseeds = np.zeros((params.levels,), dtype=np.uint64)
+    for lvl in range(params.levels):
+        cseeds[lvl] = np.uint64(
+            int(hashing.checksum_seed(graph_seed, lvl))
+        )
+        for c in range(params.columns):
+            dseeds[lvl, c] = np.uint64(
+                int(hashing.depth_seed(graph_seed, lvl, c))
+            )
+    return dseeds, cseeds
+
+
+def compute_delta(
+    indices, params: SketchParams, graph_seed: int, batch: int | None = None
+):
+    """Convenience entry point: pad, run the kernel, XOR-merge chunks.
+
+    Mirrors what a Rust worker does with the AOT artifact: chunk the batch
+    into B-sized pieces and XOR the per-chunk deltas (linearity).
+    """
+    indices = np.asarray(indices, dtype=np.uint64)
+    if batch is None:
+        batch = max(8, len(indices))
+    dseeds, cseeds = seeds_for(params, graph_seed)
+    fn = jax.jit(make_delta_fn(params, batch))
+    out = np.zeros((params.levels, params.columns, params.rows, 2), np.uint64)
+    for start in range(0, max(1, len(indices)), batch):
+        chunk = indices[start : start + batch]
+        padded = np.zeros((batch,), dtype=np.uint64)
+        padded[: len(chunk)] = chunk
+        (delta,) = fn(jnp.asarray(padded), jnp.asarray(dseeds), jnp.asarray(cseeds))
+        out ^= np.asarray(delta)
+    return out

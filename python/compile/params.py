@@ -1,0 +1,98 @@
+"""Sketch parameter derivation — the cross-language contract.
+
+This module is the single Python source of truth for how sketch shapes are
+derived from the number of graph vertices V.  `rust/src/sketch/params.rs`
+implements the *identical* derivation; `python/tests/test_hash_golden.py`
+pins both against a shared JSON fixture.
+
+Terminology (paper §4, App. B):
+  * n = V*V            -- the characteristic-vector index space (we use
+                          V*V rather than (V choose 2) so that encode /
+                          decode are single multiplies; unused slots are
+                          simply never touched).
+  * L  "levels"        -- independent CameoSketch repetitions per vertex,
+                          one consumed per Boruvka round:  ceil(log_{3/2} V).
+  * C  "columns"       -- log(1/delta) columns per level (default 3).
+  * R  "rows"          -- log2(n) + 6 bucket rows per column; row 0 is the
+                          deterministic bucket that receives every update.
+Each bucket is an (alpha, gamma) pair of u64.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+# Version tag for the seed-derivation scheme.  Bump if hashing changes;
+# the Rust runtime refuses artifacts with a mismatched version.
+SEED_SCHEME_VERSION = 1
+
+# Default number of columns per level (delta = 3^-C per column group,
+# see Theorem 4.3's log_3(1/delta) column count).
+DEFAULT_COLUMNS = 3
+
+# Default batch capacity compiled into the AOT artifact.  Workers chunk
+# arbitrary batch sizes into B-sized pieces and XOR-merge the deltas
+# (sketches are linear, so chunking is exact).
+DEFAULT_BATCH = 512
+
+
+def num_levels(v: int) -> int:
+    """ceil(log_{3/2} V) sketch levels, min 1 (paper App. E.2)."""
+    if v < 2:
+        return 1
+    return max(1, math.ceil(math.log(v) / math.log(1.5)))
+
+
+def num_rows(v: int) -> int:
+    """log2(n) + 6 rows where n = V^2; row 0 is the deterministic bucket."""
+    n_bits = max(1, math.ceil(math.log2(max(4, v))) * 2)
+    return n_bits + 6
+
+
+@dataclass(frozen=True)
+class SketchParams:
+    """Shape of one vertex sketch for a V-vertex graph."""
+
+    v: int
+    levels: int
+    columns: int
+    rows: int
+
+    @staticmethod
+    def for_vertices(v: int, columns: int = DEFAULT_COLUMNS) -> "SketchParams":
+        return SketchParams(
+            v=v, levels=num_levels(v), columns=columns, rows=num_rows(v)
+        )
+
+    @property
+    def buckets_per_level(self) -> int:
+        return self.columns * self.rows
+
+    @property
+    def words_per_level(self) -> int:
+        # (alpha, gamma) u64 pair per bucket
+        return self.buckets_per_level * 2
+
+    @property
+    def words(self) -> int:
+        return self.levels * self.words_per_level
+
+    @property
+    def bytes(self) -> int:
+        return self.words * 8
+
+
+def encode_edge(u: int, v: int, num_vertices: int) -> int:
+    """Edge (u,v) -> characteristic-vector index.  0 is reserved as the
+    padding sentinel, hence the +1 shift."""
+    lo, hi = (u, v) if u < v else (v, u)
+    assert 0 <= lo < hi < num_vertices
+    return lo * num_vertices + hi + 1
+
+
+def decode_edge(idx: int, num_vertices: int) -> tuple[int, int]:
+    """Inverse of :func:`encode_edge`."""
+    assert idx != 0
+    raw = idx - 1
+    return raw // num_vertices, raw % num_vertices

@@ -1,0 +1,82 @@
+"""Generate the cross-language golden fixtures shared with the Rust tests.
+
+Run from python/:  python gen_fixtures.py
+Writes ../tests/fixtures/{hash_golden.json, delta_golden.json}.
+
+These fixtures pin the exact hashing and sketch-delta bit patterns; the
+Rust unit tests (rust/src/hashing, rust/src/sketch) parse them and must
+reproduce every value.  Regenerate only if the seed scheme version bumps.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from compile.kernels import ref
+from compile.params import SketchParams, encode_edge
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "fixtures")
+
+
+def hash_golden():
+    inputs = [0, 1, 2, 63, 64, 0xDEADBEEF, (1 << 64) - 1, 0x0123456789ABCDEF]
+    entries = []
+    for x in inputs:
+        entries.append({"x": str(x), "splitmix64": str(ref.splitmix64(x))})
+    seeds = []
+    for graph_seed in (0, 42, 0xC0FFEE):
+        for level in (0, 1, 7):
+            for col in (0, 1, 2):
+                seeds.append(
+                    {
+                        "graph_seed": str(graph_seed),
+                        "level": level,
+                        "column": col,
+                        "level_seed": str(ref.level_seed(graph_seed, level)),
+                        "depth_seed": str(ref.depth_seed(graph_seed, level, col)),
+                        "checksum_seed": str(ref.checksum_seed(graph_seed, level)),
+                    }
+                )
+    depths = []
+    for h in (0, 1, 2, 4, 8, 0xF0, 1 << 40, (1 << 64) - 1):
+        for rows in (8, 22, 40):
+            depths.append({"h": str(h), "rows": rows, "depth": ref.bucket_depth(h, rows)})
+    return {"splitmix64": entries, "seeds": seeds, "depths": depths}
+
+
+def delta_golden():
+    v = 64
+    params = SketchParams.for_vertices(v)
+    graph_seed = 1234567
+    edges = [(0, 1), (0, 2), (1, 2), (5, 9), (62, 63), (0, 63)]
+    indices = [encode_edge(a, b, v) for a, b in edges]
+    delta = ref.cameo_delta_ref(
+        indices, graph_seed, params.levels, params.columns, params.rows
+    )
+    return {
+        "vertices": v,
+        "graph_seed": str(graph_seed),
+        "levels": params.levels,
+        "columns": params.columns,
+        "rows": params.rows,
+        "edges": [[a, b] for a, b in edges],
+        "indices": [str(i) for i in indices],
+        # flattened row-major (L, C, R, 2) as decimal strings
+        "delta": [str(int(x)) for x in np.asarray(delta).reshape(-1)],
+    }
+
+
+def main() -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "hash_golden.json"), "w") as f:
+        json.dump(hash_golden(), f, indent=1)
+    with open(os.path.join(OUT_DIR, "delta_golden.json"), "w") as f:
+        json.dump(delta_golden(), f, indent=1)
+    print(f"fixtures written to {os.path.abspath(OUT_DIR)}")
+
+
+if __name__ == "__main__":
+    main()

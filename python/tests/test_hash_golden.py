@@ -1,0 +1,59 @@
+"""Golden-fixture pinning: the exact bit patterns shared with the Rust
+tests.  If these fail, the cross-language contract broke — Rust workers
+and the AOT artifacts would produce incompatible sketches."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.params import SketchParams
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "..", "..", "tests", "fixtures")
+
+
+def load(name):
+    path = os.path.join(FIXTURES, name)
+    if not os.path.exists(path):
+        pytest.skip(f"fixture {name} not generated yet (python gen_fixtures.py)")
+    with open(path) as f:
+        return json.load(f)
+
+
+class TestHashGolden:
+    def test_splitmix64_pinned(self):
+        fx = load("hash_golden.json")
+        for e in fx["splitmix64"]:
+            assert ref.splitmix64(int(e["x"])) == int(e["splitmix64"])
+
+    def test_seed_derivation_pinned(self):
+        fx = load("hash_golden.json")
+        for e in fx["seeds"]:
+            gs, lvl, col = int(e["graph_seed"]), e["level"], e["column"]
+            assert ref.level_seed(gs, lvl) == int(e["level_seed"])
+            assert ref.depth_seed(gs, lvl, col) == int(e["depth_seed"])
+            assert ref.checksum_seed(gs, lvl) == int(e["checksum_seed"])
+
+    def test_depths_pinned(self):
+        fx = load("hash_golden.json")
+        for e in fx["depths"]:
+            assert ref.bucket_depth(int(e["h"]), e["rows"]) == e["depth"]
+
+
+class TestDeltaGolden:
+    def test_delta_pinned(self):
+        fx = load("delta_golden.json")
+        params = SketchParams.for_vertices(fx["vertices"])
+        assert (params.levels, params.columns, params.rows) == (
+            fx["levels"],
+            fx["columns"],
+            fx["rows"],
+        )
+        idx = [int(i) for i in fx["indices"]]
+        delta = ref.cameo_delta_ref(
+            idx, int(fx["graph_seed"]), params.levels, params.columns, params.rows
+        )
+        flat = [str(int(x)) for x in np.asarray(delta).reshape(-1)]
+        assert flat == fx["delta"]

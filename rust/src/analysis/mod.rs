@@ -1,0 +1,10 @@
+//! Analytical + measurement substrates backing the paper's evaluation:
+//! RAM-bandwidth probes (the objective ingestion standard), the
+//! CameoSketch success-probability recurrence (Table 6), the dataset
+//! survey synthesizer (Fig. 1/15), and the measured-cost cluster scaling
+//! model (Fig. 3 on a single-core container).
+
+pub mod cluster_model;
+pub mod rambw;
+pub mod success_prob;
+pub mod survey;

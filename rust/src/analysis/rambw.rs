@@ -1,0 +1,102 @@
+//! RAM bandwidth measurement — the paper's objective performance
+//! standard (§1.1, §7.2).
+//!
+//! *Sequential* write bandwidth bounds any stream-processing system (the
+//! data-acquisition cost: the input must at least be written to memory);
+//! *random-access* write bandwidth is what an adjacency-matrix bit-flip
+//! pays.  Landscape's headline claim is ingestion within 4× of the
+//! former and faster than the latter.
+
+use crate::util::rng::Xoshiro256;
+use crate::util::timer::Stopwatch;
+
+/// Result of one bandwidth probe.
+#[derive(Clone, Copy, Debug)]
+pub struct Bandwidth {
+    pub bytes: u64,
+    pub seconds: f64,
+}
+
+impl Bandwidth {
+    pub fn gib_per_sec(&self) -> f64 {
+        self.bytes as f64 / self.seconds.max(1e-12) / (1u64 << 30) as f64
+    }
+
+    /// Equivalent 9-byte-update ingestion rate (updates/sec).
+    pub fn updates_per_sec(&self) -> f64 {
+        self.bytes as f64 / 9.0 / self.seconds.max(1e-12)
+    }
+}
+
+/// Sequential write bandwidth: stream 8-byte words through `buf_words`
+/// of memory `passes` times.
+pub fn sequential_write(buf_words: usize, passes: usize) -> Bandwidth {
+    let mut buf = vec![0u64; buf_words];
+    let sw = Stopwatch::new();
+    let mut x = 0x9E3779B97F4A7C15u64;
+    for _ in 0..passes {
+        for w in buf.iter_mut() {
+            *w = x;
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+        }
+    }
+    let secs = sw.elapsed_secs();
+    std::hint::black_box(&buf);
+    Bandwidth {
+        bytes: (buf_words * 8 * passes) as u64,
+        seconds: secs,
+    }
+}
+
+/// Random-access write bandwidth: `writes` single-word writes at
+/// pseudo-random offsets in a buffer big enough to defeat caches.
+pub fn random_write(buf_words: usize, writes: usize) -> Bandwidth {
+    let mut buf = vec![0u64; buf_words];
+    let mut rng = Xoshiro256::new(42);
+    // pre-generate offsets so RNG cost stays out of the timed loop
+    let offsets: Vec<usize> = (0..writes)
+        .map(|_| rng.next_below(buf_words as u64) as usize)
+        .collect();
+    let sw = Stopwatch::new();
+    for (i, &o) in offsets.iter().enumerate() {
+        buf[o] = i as u64;
+    }
+    let secs = sw.elapsed_secs();
+    std::hint::black_box(&buf);
+    Bandwidth {
+        bytes: (writes * 8) as u64,
+        seconds: secs,
+    }
+}
+
+/// Default probe sizes: 64 MiB buffer (past L3 on any machine here).
+pub fn measure_defaults() -> (Bandwidth, Bandwidth) {
+    let words = (64usize << 20) / 8;
+    (sequential_write(words, 4), random_write(words, 4 << 20))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_beats_random() {
+        // the fundamental asymmetry the paper's comparison rests on
+        let words = (16usize << 20) / 8;
+        let seq = sequential_write(words, 2);
+        let rnd = random_write(words, 1 << 20);
+        assert!(
+            seq.gib_per_sec() > rnd.gib_per_sec(),
+            "seq {:.2} GiB/s vs random {:.2} GiB/s",
+            seq.gib_per_sec(),
+            rnd.gib_per_sec()
+        );
+    }
+
+    #[test]
+    fn rates_are_positive_and_sane() {
+        let b = sequential_write(1 << 20, 1);
+        assert!(b.gib_per_sec() > 0.05, "{} GiB/s", b.gib_per_sec());
+        assert!(b.updates_per_sec() > 1e6);
+    }
+}

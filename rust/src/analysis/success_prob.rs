@@ -1,0 +1,173 @@
+//! CameoSketch column success probability (App. H, Table 6).
+//!
+//! `F(z, d)`: the probability that a CameoSketch column with `d`
+//! geometric rows succeeds (some bucket holds exactly one of `z`
+//! nonzeros) under full independence:
+//!
+//! ```text
+//! F(a, b) = Σ_{i ∈ [0,a]\{1}} 2^-a · C(a,i) · F(a-i, b-1)  +  a·2^-a
+//! F(a, b) = 0 for a ≤ 0 or b ≤ 0
+//! ```
+//!
+//! and the isolated-column variant `F̂(z,d) = F(z,d) − z·2^−z·(1 −
+//! F(z−1, d−1))` that excludes the first bucket from the success
+//! definition (used in the k-isolated-column argument of Lemma H.4).
+//! A Monte-Carlo simulator cross-checks the recurrence against actual
+//! CameoSketch columns.
+
+use crate::hashing;
+
+/// Binomial coefficient in f64 (exact for the small a used here).
+fn binom(n: u64, k: u64) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    let k = k.min(n - k);
+    let mut out = 1.0f64;
+    for i in 0..k {
+        out = out * (n - i) as f64 / (i + 1) as f64;
+    }
+    out
+}
+
+/// The recurrence F(z, d) — memoized.
+pub fn success_probability(z: u64, d: u32) -> f64 {
+    let mut memo = std::collections::HashMap::new();
+    f_rec(z, d as i64, &mut memo)
+}
+
+fn f_rec(a: u64, b: i64, memo: &mut std::collections::HashMap<(u64, i64), f64>) -> f64 {
+    if a == 0 {
+        // zero nonzeros at this level: nothing to find — treat as
+        // success only via the a·2^-a term of the parent (i.e. 0 here)
+        return 0.0;
+    }
+    if b <= 0 {
+        return 0.0;
+    }
+    if a == 1 {
+        return 1.0; // a single nonzero lands alone in its bucket chain
+    }
+    if let Some(&v) = memo.get(&(a, b)) {
+        return v;
+    }
+    let pow = 0.5f64.powi(a as i32);
+    let mut total = a as f64 * pow; // exactly one lands in this bucket
+    for i in 0..=a {
+        if i == 1 {
+            continue;
+        }
+        let rest = if a - i == 0 {
+            0.0
+        } else {
+            f_rec(a - i, b - 1, memo)
+        };
+        total += pow * binom(a, i) * rest;
+    }
+    let v = total.min(1.0);
+    memo.insert((a, b), v);
+    v
+}
+
+/// F̂(z, d): success excluding the first bucket (App. H).
+pub fn isolated_success_probability(z: u64, d: u32) -> f64 {
+    if z <= 1 {
+        return if z == 1 { 1.0 } else { 0.0 };
+    }
+    let f = success_probability(z, d);
+    let first_only = z as f64 * 0.5f64.powi(z as i32)
+        * (1.0 - success_probability(z - 1, d.saturating_sub(1)));
+    (f - first_only).max(0.0)
+}
+
+/// Monte-Carlo estimate of the same probability using the *real*
+/// CameoSketch update rule (geometric depths from hashing, row 0 is the
+/// deterministic bucket which the analysis excludes).
+pub fn monte_carlo_success(z: u64, rows_excl_det: u32, trials: u32, seed: u64) -> f64 {
+    let rows = rows_excl_det as usize;
+    let mut success = 0u32;
+    for t in 0..trials {
+        // counts + last-index per geometric row 1..=rows
+        let mut count = vec![0u32; rows + 1];
+        let dseed = hashing::splitmix64(seed ^ t as u64);
+        for item in 0..z {
+            // fresh "index" per item per trial
+            let idx = hashing::splitmix64(dseed ^ (item + 1).wrapping_mul(0x9E3779B97F4A7C15));
+            let h = hashing::depth_hash(dseed, idx);
+            let depth = hashing::bucket_depth(h, rows_excl_det + 2) as usize;
+            count[depth.min(rows)] += 1;
+        }
+        if count[1..].iter().any(|&c| c == 1) {
+            success += 1;
+        }
+    }
+    success as f64 / trials as f64
+}
+
+/// Reproduce Table 6: lower bound on column success for z = 1..=7 with
+/// 10 buckets, full independence.
+pub fn table6_rows() -> Vec<(u64, f64)> {
+    (1..=7).map(|z| (z, success_probability(z, 10))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Table 6 values (CameoSketch column, 10 buckets).
+    const TABLE6: [(u64, f64); 7] = [
+        (1, 1.0),
+        (2, 0.666),
+        (3, 0.856),
+        (4, 0.799),
+        (5, 0.813),
+        (6, 0.810),
+        (7, 0.810),
+    ];
+
+    #[test]
+    fn recurrence_reproduces_table6() {
+        for (z, want) in TABLE6 {
+            let got = success_probability(z, 10);
+            assert!(
+                (got - want).abs() < 0.02,
+                "F({z},10) = {got:.3}, paper says {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn more_rows_never_hurt() {
+        for z in 2..10u64 {
+            assert!(success_probability(z, 12) >= success_probability(z, 6) - 1e-12);
+        }
+    }
+
+    #[test]
+    fn isolated_variant_is_lower() {
+        for z in 2..8u64 {
+            assert!(isolated_success_probability(z, 10) <= success_probability(z, 10));
+        }
+    }
+
+    #[test]
+    fn lemma_h4_bound_holds() {
+        // the 2/3 per-column success bound with >= 5 isolated rows
+        for z in 2..=7u64 {
+            let p = isolated_success_probability(z, 5);
+            assert!(p > 0.60, "F̂({z},5) = {p:.3}");
+        }
+    }
+
+    #[test]
+    fn monte_carlo_agrees_with_recurrence() {
+        for z in [2u64, 3, 5, 7] {
+            let analytic = success_probability(z, 10);
+            let mc = monte_carlo_success(z, 10, 40_000, 99);
+            assert!(
+                (analytic - mc).abs() < 0.02,
+                "z={z}: recurrence {analytic:.3} vs MC {mc:.3}"
+            );
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Comparator baselines (paper §2.1, App. F.2): the adjacency-matrix
+//! lossless representation Landscape out-ingests on dense graphs, and
+//! the exact streaming referee used for correctness validation.
+
+pub mod adj_matrix;
+pub mod referee;
+
+pub use adj_matrix::AdjacencyMatrix;
+pub use referee::Referee;

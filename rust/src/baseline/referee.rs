@@ -1,0 +1,131 @@
+//! Exact streaming referee (App. F.2's correctness oracle): a lossless
+//! edge set + DSU recomputation.  Slow and memory-hungry by design —
+//! it exists to *check* the sketching system, never to compete with it.
+
+use std::collections::HashSet;
+
+use crate::connectivity::dsu::Dsu;
+use crate::stream::update::{Update, UpdateKind};
+
+/// Lossless dynamic-graph referee.
+pub struct Referee {
+    v: u64,
+    edges: HashSet<(u32, u32)>,
+}
+
+impl Referee {
+    pub fn new(v: u64) -> Self {
+        Self {
+            v,
+            edges: HashSet::new(),
+        }
+    }
+
+    /// Apply one update, enforcing stream validity (panics on
+    /// double-insert / delete-of-absent, which the model forbids).
+    pub fn apply(&mut self, upd: &Update) {
+        let e = upd.endpoints();
+        match upd.kind {
+            UpdateKind::Insert => {
+                assert!(self.edges.insert(e), "insert of present edge {e:?}");
+            }
+            UpdateKind::Delete => {
+                assert!(self.edges.remove(&e), "delete of absent edge {e:?}");
+            }
+        }
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn edges(&self) -> impl Iterator<Item = &(u32, u32)> {
+        self.edges.iter()
+    }
+
+    /// Exact component map (recomputed per call).
+    pub fn component_map(&self) -> Vec<u32> {
+        let mut dsu = Dsu::new(self.v as usize);
+        for &(a, b) in &self.edges {
+            dsu.union(a, b);
+        }
+        dsu.component_map()
+    }
+
+    /// Exact connectivity for a batch of pairs.
+    pub fn reachability(&self, pairs: &[(u32, u32)]) -> Vec<bool> {
+        let map = self.component_map();
+        pairs
+            .iter()
+            .map(|&(a, b)| map[a as usize] == map[b as usize])
+            .collect()
+    }
+
+    /// Exact edge connectivity capped at k (via Stoer–Wagner).
+    pub fn k_connectivity(&self, k: u64) -> Option<u64> {
+        let edges: Vec<(u32, u32)> = self.edges.iter().copied().collect();
+        crate::connectivity::mincut::edge_connectivity_capped(self.v as usize, &edges, k)
+    }
+
+    /// Do two component maps describe the same partition (up to root
+    /// renaming)?  Shared by the correctness benches and tests.
+    pub fn same_partition(a: &[u32], b: &[u32]) -> bool {
+        if a.len() != b.len() {
+            return false;
+        }
+        let mut fwd = std::collections::HashMap::new();
+        let mut bwd = std::collections::HashMap::new();
+        for (x, y) in a.iter().zip(b) {
+            if *fwd.entry(*x).or_insert(*y) != *y || *bwd.entry(*y).or_insert(*x) != *x {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::dynamify::Dynamify;
+    use crate::stream::erdos::ErdosRenyi;
+    use crate::stream::{edge_list, EdgeModel as _};
+
+    #[test]
+    fn tracks_stream_net_effect() {
+        let model = ErdosRenyi::new(64, 0.2, 3);
+        let mut referee = Referee::new(64);
+        for upd in Dynamify::new(model, 5) {
+            referee.apply(&upd);
+        }
+        let mut got: Vec<(u32, u32)> = referee.edges().copied().collect();
+        got.sort_unstable();
+        assert_eq!(got, edge_list(&model));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_invalid_stream() {
+        let mut referee = Referee::new(8);
+        referee.apply(&Update::delete(0, 1)); // deleting an absent edge
+    }
+
+    #[test]
+    fn same_partition_detects_mismatch() {
+        assert!(Referee::same_partition(&[0, 0, 2], &[5, 5, 9]));
+        assert!(!Referee::same_partition(&[0, 0, 2], &[5, 6, 9]));
+        assert!(!Referee::same_partition(&[0, 1, 2], &[5, 5, 9]));
+        assert!(!Referee::same_partition(&[0, 0], &[0, 0, 0]));
+    }
+
+    #[test]
+    fn reachability_consistent_with_components() {
+        let mut referee = Referee::new(8);
+        referee.apply(&Update::insert(0, 1));
+        referee.apply(&Update::insert(2, 3));
+        assert_eq!(
+            referee.reachability(&[(0, 1), (1, 2), (2, 3)]),
+            vec![true, false, true]
+        );
+    }
+}

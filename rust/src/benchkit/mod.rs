@@ -1,0 +1,199 @@
+//! Minimal benchmarking harness.
+//!
+//! The offline environment vendors no criterion, so the bench targets
+//! (`benches/*.rs`, `harness = false`) use this instead: warmup +
+//! repeated timed runs with median/mean/min/stddev, plus an aligned
+//! table printer and CSV emission for the figure/table harnesses.
+
+use crate::util::timer::Stopwatch;
+
+/// Summary statistics over per-iteration seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub stddev: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+        Stats {
+            iters: n,
+            mean,
+            median: samples[n / 2],
+            min: samples[0],
+            stddev: var.sqrt(),
+        }
+    }
+
+    /// ops/sec at the median.
+    pub fn rate(&self, ops_per_iter: u64) -> f64 {
+        ops_per_iter as f64 / self.median.max(1e-12)
+    }
+}
+
+/// Run `f` for `warmup` + `iters` timed iterations.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let sw = Stopwatch::new();
+        f();
+        samples.push(sw.elapsed_secs());
+    }
+    Stats::from_samples(samples)
+}
+
+/// Human-friendly rate formatting (e.g. "12.3 M/s").
+pub fn fmt_rate(rate: f64) -> String {
+    if rate >= 1e9 {
+        format!("{:.2} G/s", rate / 1e9)
+    } else if rate >= 1e6 {
+        format!("{:.2} M/s", rate / 1e6)
+    } else if rate >= 1e3 {
+        format!("{:.2} K/s", rate / 1e3)
+    } else {
+        format!("{rate:.2} /s")
+    }
+}
+
+/// Human-friendly byte formatting.
+pub fn fmt_bytes(bytes: f64) -> String {
+    if bytes >= (1u64 << 30) as f64 {
+        format!("{:.2} GiB", bytes / (1u64 << 30) as f64)
+    } else if bytes >= (1u64 << 20) as f64 {
+        format!("{:.2} MiB", bytes / (1u64 << 20) as f64)
+    } else if bytes >= 1024.0 {
+        format!("{:.2} KiB", bytes / 1024.0)
+    } else {
+        format!("{bytes:.0} B")
+    }
+}
+
+/// An aligned results table that also serializes to CSV — every bench
+/// target prints one of these so table regeneration is copy-pasteable.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Aligned text rendering (stderr-friendly).
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV rendering (stdout-friendly; the figure data format).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.headers.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print text to stderr, CSV to stdout, and optionally save CSV.
+    pub fn emit(&self, csv_path: Option<&std::path::Path>) {
+        eprintln!("{}", self.render());
+        println!("{}", self.to_csv());
+        if let Some(p) = csv_path {
+            if let Some(dir) = p.parent() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+            let _ = std::fs::write(p, self.to_csv());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats::from_samples(vec![0.2, 0.1, 0.3]);
+        assert_eq!(s.iters, 3);
+        assert!((s.median - 0.2).abs() < 1e-12);
+        assert!((s.min - 0.1).abs() < 1e-12);
+        assert!((s.mean - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let mut count = 0;
+        let s = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn table_round_trips_csv() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "x".into()]);
+        t.row(vec!["2".into(), "y".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,x\n2,y\n");
+        assert!(t.render().contains("t"));
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_rate(2_500_000.0), "2.50 M/s");
+        assert_eq!(fmt_bytes(2048.0), "2.00 KiB");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        Table::new("t", &["a"]).row(vec!["1".into(), "2".into()]);
+    }
+}

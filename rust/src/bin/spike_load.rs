@@ -1,0 +1,28 @@
+// Spike: load /tmp/spike_u64.hlo.txt (u64 xor-fold pallas kernel) and
+// verify the numerics match the python reference.
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let path = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "/tmp/spike_u64.hlo.txt".to_string());
+    let client = xla::PjRtClient::cpu()?;
+    println!(
+        "platform={} devices={}",
+        client.platform_name(),
+        client.device_count()
+    );
+    let proto = xla::HloModuleProto::from_text_file(&path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+
+    const GOLDEN: u64 = 0x9E3779B97F4A7C15;
+    let input: Vec<u64> = (1..=8u64).map(|i| i.wrapping_mul(GOLDEN)).collect();
+    let lit = xla::Literal::vec1(&input);
+    let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+    let out = result.to_tuple1()?;
+    let values = out.to_vec::<u64>()?;
+    println!("result={values:?}");
+    // reference from spike_u64.py
+    assert_eq!(values, vec![12685939312746212621u64]);
+    println!("spike OK");
+    Ok(())
+}

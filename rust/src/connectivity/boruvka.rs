@@ -1,0 +1,249 @@
+//! Borůvka's algorithm over vertex sketches (paper §4, App. A).
+//!
+//! Round r queries sketch level r: every current component X aggregates
+//! its members' level-r sketches (S(f_X) = Σ_{u∈X} S(f_u), under which
+//! intra-component edges cancel — the XOR trick of App. A), samples one
+//! crossing edge, and merges.  Each level is used at most once so the
+//! per-round randomness is fresh, which is what the O(log V) level count
+//! is for.
+
+use crate::connectivity::dsu::Dsu;
+use crate::connectivity::SpanningForest;
+use crate::sketch::params::decode_edge;
+use crate::sketch::{CameoSketch, SketchStore};
+
+/// Outcome of a sketch-Borůvka run.
+#[derive(Clone, Debug)]
+pub struct ConnectivityResult {
+    /// The sampled spanning forest.
+    pub forest: SpanningForest,
+    /// Rounds actually executed (≤ sketch levels).
+    pub rounds: u32,
+    /// Components whose sketch query failed in some round (diagnostic;
+    /// a component can still be completed in a later round).
+    pub failed_queries: u64,
+}
+
+impl ConnectivityResult {
+    pub fn num_components(&self) -> usize {
+        self.forest.num_components()
+    }
+}
+
+/// Compute a spanning forest of the sketched graph.
+pub fn boruvka_components(store: &SketchStore) -> ConnectivityResult {
+    let params = *store.params();
+    let v = params.v as usize;
+    let wpl = params.words_per_level();
+    let mut dsu = Dsu::new(v);
+    let mut forest_edges = Vec::new();
+    let mut failed_queries = 0u64;
+    let mut rounds = 0u32;
+
+    // scratch: one aggregate buffer per component root, reused per round
+    let mut agg: Vec<u64> = Vec::new();
+    let mut slot_of_root: Vec<u32> = vec![u32::MAX; v];
+
+    for level in 0..params.levels {
+        rounds = level + 1;
+        // group members by root and XOR-aggregate their level slices
+        let mut roots: Vec<u32> = Vec::new();
+        for u in 0..v as u32 {
+            let r = dsu.find(u);
+            if slot_of_root[r as usize] == u32::MAX {
+                slot_of_root[r as usize] = roots.len() as u32;
+                roots.push(r);
+            }
+        }
+        agg.clear();
+        agg.resize(roots.len() * wpl, 0);
+        for u in 0..v as u32 {
+            let slot = slot_of_root[dsu.find(u) as usize] as usize;
+            store.xor_level_into(u, level, &mut agg[slot * wpl..(slot + 1) * wpl]);
+        }
+
+        // sample one crossing edge per component
+        let mut merged_any = false;
+        for (slot, &root) in roots.iter().enumerate() {
+            let buf = &agg[slot * wpl..(slot + 1) * wpl];
+            let nonzero = buf.iter().any(|&w| w != 0);
+            if !nonzero {
+                continue; // isolated component: no crossing edges remain
+            }
+            match CameoSketch::query_level(buf, &params, store.seeds(), level) {
+                Some(idx) => {
+                    let (a, b) = decode_edge(idx, params.v);
+                    if dsu.union(a, b) {
+                        forest_edges.push((a.min(b), a.max(b)));
+                        merged_any = true;
+                    }
+                }
+                None => {
+                    failed_queries += 1;
+                    let _ = root;
+                }
+            }
+        }
+
+        // reset root slots for the next round
+        for r in &roots {
+            slot_of_root[*r as usize] = u32::MAX;
+        }
+
+        if !merged_any {
+            break; // no component found an outgoing edge this round
+        }
+        if dsu.num_components() == 1 {
+            break;
+        }
+    }
+
+    ConnectivityResult {
+        forest: SpanningForest {
+            edges: forest_edges,
+            component: dsu.component_map(),
+        },
+        rounds,
+        failed_queries,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::params::{encode_edge, SketchParams};
+    use crate::util::testkit::{arb_edge_set, Cases};
+
+    /// Build a store holding the given edge set (each edge applied to
+    /// both endpoint sketches, as ingestion does).
+    fn store_with_edges(v: u64, seed: u64, edges: &[(u32, u32)]) -> SketchStore {
+        let s = SketchStore::new(SketchParams::for_vertices(v), seed);
+        for &(a, b) in edges {
+            let idx = encode_edge(a, b, v);
+            s.apply_local(a, idx);
+            s.apply_local(b, idx);
+        }
+        s
+    }
+
+    /// DSU reference components.
+    fn ref_components(v: u64, edges: &[(u32, u32)]) -> Vec<u32> {
+        let mut d = Dsu::new(v as usize);
+        for &(a, b) in edges {
+            d.union(a, b);
+        }
+        d.component_map()
+    }
+
+    fn same_partition(a: &[u32], b: &[u32]) -> bool {
+        // component maps equal up to renaming
+        let mut fwd = std::collections::HashMap::new();
+        let mut bwd = std::collections::HashMap::new();
+        for (x, y) in a.iter().zip(b) {
+            if *fwd.entry(*x).or_insert(*y) != *y {
+                return false;
+            }
+            if *bwd.entry(*y).or_insert(*x) != *x {
+                return false;
+            }
+        }
+        true
+    }
+
+    #[test]
+    fn empty_graph_all_singletons() {
+        let s = store_with_edges(16, 1, &[]);
+        let r = boruvka_components(&s);
+        assert_eq!(r.num_components(), 16);
+        assert!(r.forest.edges.is_empty());
+    }
+
+    #[test]
+    fn single_edge() {
+        let s = store_with_edges(8, 2, &[(2, 5)]);
+        let r = boruvka_components(&s);
+        assert_eq!(r.num_components(), 7);
+        assert_eq!(r.forest.edges, vec![(2, 5)]);
+    }
+
+    #[test]
+    fn path_graph_connects_fully() {
+        let v = 64u64;
+        let edges: Vec<(u32, u32)> = (0..63).map(|i| (i, i + 1)).collect();
+        let s = store_with_edges(v, 3, &edges);
+        let r = boruvka_components(&s);
+        assert_eq!(r.num_components(), 1, "failed queries: {}", r.failed_queries);
+        assert_eq!(r.forest.edges.len(), 63);
+    }
+
+    #[test]
+    fn two_cliques_stay_separate() {
+        let v = 20u64;
+        let mut edges = Vec::new();
+        for a in 0..8u32 {
+            for b in (a + 1)..8 {
+                edges.push((a, b));
+            }
+        }
+        for a in 10..16u32 {
+            for b in (a + 1)..16 {
+                edges.push((a, b));
+            }
+        }
+        let s = store_with_edges(v, 4, &edges);
+        let r = boruvka_components(&s);
+        let want = ref_components(v, &edges);
+        assert!(same_partition(&r.forest.component, &want));
+    }
+
+    #[test]
+    fn random_graphs_match_reference() {
+        Cases::new(25).run(|rng| {
+            let v = 4 + rng.next_below(96);
+            let edges = arb_edge_set(rng, v, 200);
+            let s = store_with_edges(v, rng.next_u64(), &edges);
+            let r = boruvka_components(&s);
+            let want = ref_components(v, &edges);
+            assert!(
+                same_partition(&r.forest.component, &want),
+                "V={v} |E|={} failed_queries={}",
+                edges.len(),
+                r.failed_queries
+            );
+            // forest must be spanning: edge count = V - #components
+            assert_eq!(
+                r.forest.edges.len(),
+                v as usize - r.num_components()
+            );
+        });
+    }
+
+    #[test]
+    fn forest_edges_are_real_edges() {
+        Cases::new(15).run(|rng| {
+            let v = 4 + rng.next_below(60);
+            let edges = arb_edge_set(rng, v, 120);
+            let set: std::collections::HashSet<(u32, u32)> =
+                edges.iter().copied().collect();
+            let s = store_with_edges(v, rng.next_u64(), &edges);
+            let r = boruvka_components(&s);
+            for e in &r.forest.edges {
+                assert!(set.contains(e), "forest contains phantom edge {e:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn deletions_disconnect() {
+        let v = 16u64;
+        // build a path 0-1-2-3, then delete the middle edge via re-apply
+        let s = store_with_edges(v, 6, &[(0, 1), (1, 2), (2, 3)]);
+        let idx = encode_edge(1, 2, v);
+        s.apply_local(1, idx);
+        s.apply_local(2, idx);
+        let r = boruvka_components(&s);
+        assert!(r.forest.connected(0, 1));
+        assert!(r.forest.connected(2, 3));
+        assert!(!r.forest.connected(1, 2));
+    }
+}

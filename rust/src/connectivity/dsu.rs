@@ -1,0 +1,187 @@
+//! Union-find with path compression + union by rank — O(α(V)) amortized
+//! per op (Tarjan & van Leeuwen), used by sketch-Borůvka, GreedyCC, and
+//! the correctness referee.
+
+/// Disjoint-set union over `0..n`.
+#[derive(Clone, Debug)]
+pub struct Dsu {
+    parent: Vec<u32>,
+    rank: Vec<u8>,
+    components: usize,
+}
+
+impl Dsu {
+    /// `n` singleton sets.
+    pub fn new(n: usize) -> Self {
+        Self {
+            parent: (0..n as u32).collect(),
+            rank: vec![0; n],
+            components: n,
+        }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Current number of disjoint sets.
+    pub fn num_components(&self) -> usize {
+        self.components
+    }
+
+    /// Find with iterative two-pass path compression.
+    pub fn find(&mut self, x: u32) -> u32 {
+        let mut root = x;
+        while self.parent[root as usize] != root {
+            root = self.parent[root as usize];
+        }
+        let mut cur = x;
+        while self.parent[cur as usize] != root {
+            let next = self.parent[cur as usize];
+            self.parent[cur as usize] = root;
+            cur = next;
+        }
+        root
+    }
+
+    /// Find without mutation (no compression) — for read-only contexts.
+    pub fn find_const(&self, x: u32) -> u32 {
+        let mut root = x;
+        while self.parent[root as usize] != root {
+            root = self.parent[root as usize];
+        }
+        root
+    }
+
+    /// Union the sets of `a` and `b`; returns true if they were distinct.
+    pub fn union(&mut self, a: u32, b: u32) -> bool {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        let (hi, lo) = if self.rank[ra as usize] >= self.rank[rb as usize] {
+            (ra, rb)
+        } else {
+            (rb, ra)
+        };
+        self.parent[lo as usize] = hi;
+        if self.rank[hi as usize] == self.rank[lo as usize] {
+            self.rank[hi as usize] += 1;
+        }
+        self.components -= 1;
+        true
+    }
+
+    /// Are `a` and `b` in the same set?
+    pub fn connected(&mut self, a: u32, b: u32) -> bool {
+        self.find(a) == self.find(b)
+    }
+
+    /// Component representative per element (compressed).
+    pub fn component_map(&mut self) -> Vec<u32> {
+        (0..self.parent.len() as u32).map(|i| self.find(i)).collect()
+    }
+
+    /// All current roots.
+    pub fn roots(&mut self) -> Vec<u32> {
+        let mut r: Vec<u32> = (0..self.parent.len() as u32)
+            .filter(|&i| self.find(i) == i)
+            .collect();
+        r.sort_unstable();
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{arb_edge, Cases};
+
+    #[test]
+    fn singletons_initially() {
+        let mut d = Dsu::new(5);
+        assert_eq!(d.num_components(), 5);
+        for i in 0..5 {
+            assert_eq!(d.find(i), i);
+        }
+    }
+
+    #[test]
+    fn union_reduces_components() {
+        let mut d = Dsu::new(4);
+        assert!(d.union(0, 1));
+        assert!(!d.union(1, 0));
+        assert!(d.union(2, 3));
+        assert!(d.union(0, 3));
+        assert_eq!(d.num_components(), 1);
+        assert!(d.connected(1, 2));
+    }
+
+    #[test]
+    fn component_map_is_consistent() {
+        let mut d = Dsu::new(6);
+        d.union(0, 1);
+        d.union(2, 3);
+        d.union(3, 4);
+        let m = d.component_map();
+        assert_eq!(m[0], m[1]);
+        assert_eq!(m[2], m[3]);
+        assert_eq!(m[3], m[4]);
+        assert_ne!(m[0], m[2]);
+        assert_ne!(m[5], m[0]);
+    }
+
+    #[test]
+    fn matches_naive_reference() {
+        // property: DSU connectivity == BFS connectivity on random graphs
+        Cases::new(40).run(|rng| {
+            let v = 2 + rng.next_below(40);
+            let n_edges = rng.next_below(60) as usize;
+            let mut dsu = Dsu::new(v as usize);
+            let mut adj = vec![Vec::new(); v as usize];
+            for _ in 0..n_edges {
+                let (a, b) = arb_edge(rng, v);
+                dsu.union(a, b);
+                adj[a as usize].push(b);
+                adj[b as usize].push(a);
+            }
+            // BFS reference from vertex 0
+            let mut seen = vec![false; v as usize];
+            let mut queue = std::collections::VecDeque::from([0u32]);
+            seen[0] = true;
+            while let Some(x) = queue.pop_front() {
+                for &y in &adj[x as usize] {
+                    if !seen[y as usize] {
+                        seen[y as usize] = true;
+                        queue.push_back(y);
+                    }
+                }
+            }
+            for i in 0..v as u32 {
+                assert_eq!(dsu.connected(0, i), seen[i as usize]);
+            }
+        });
+    }
+
+    #[test]
+    fn find_const_agrees_with_find() {
+        let mut d = Dsu::new(10);
+        d.union(1, 2);
+        d.union(2, 9);
+        assert_eq!(d.find_const(9), d.find(9));
+        assert_eq!(d.find_const(1), d.find(2));
+    }
+
+    #[test]
+    fn roots_enumerates_components() {
+        let mut d = Dsu::new(5);
+        d.union(0, 1);
+        d.union(3, 4);
+        assert_eq!(d.roots().len(), 3);
+    }
+}

@@ -1,0 +1,199 @@
+//! GreedyCC — the query accelerator (paper App. E.4).
+//!
+//! After a full sketch-Borůvka query, Landscape retains the spanning
+//! forest in a union-find + a hash set of forest edges.  Subsequent
+//! insertions keep it current in O(α(V)); subsequent *global* queries
+//! return the forest in O(V) and reachability pairs in O(α(V)) each —
+//! the 10²–10⁴× latency win of Fig. 5.  Deleting a forest edge destroys
+//! the information (a replacement edge can only be found in the
+//! sketches), so the structure *invalidates* itself and the next query
+//! falls back to Borůvka.
+
+use std::collections::HashSet;
+
+use crate::connectivity::dsu::Dsu;
+use crate::connectivity::SpanningForest;
+
+/// Reusable prior-query state.
+#[derive(Clone, Debug)]
+pub struct GreedyCC {
+    dsu: Dsu,
+    forest_edges: HashSet<(u32, u32)>,
+    valid: bool,
+}
+
+impl GreedyCC {
+    /// Seed from a freshly computed spanning forest.
+    pub fn from_forest(num_vertices: u64, forest: &SpanningForest) -> Self {
+        let mut dsu = Dsu::new(num_vertices as usize);
+        let mut forest_edges = HashSet::with_capacity(forest.edges.len());
+        for &(a, b) in &forest.edges {
+            dsu.union(a, b);
+            forest_edges.insert((a.min(b), a.max(b)));
+        }
+        Self {
+            dsu,
+            forest_edges,
+            valid: true,
+        }
+    }
+
+    /// Empty-graph GreedyCC (valid from the start of the stream — the
+    /// empty graph's forest is trivially known).
+    pub fn fresh(num_vertices: u64) -> Self {
+        Self {
+            dsu: Dsu::new(num_vertices as usize),
+            forest_edges: HashSet::new(),
+            valid: true,
+        }
+    }
+
+    /// Still usable for answering queries?
+    pub fn is_valid(&self) -> bool {
+        self.valid
+    }
+
+    /// Observe an edge insertion from the stream.
+    pub fn on_insert(&mut self, u: u32, v: u32) {
+        if !self.valid {
+            return;
+        }
+        if self.dsu.union(u, v) {
+            // u,v were in different components: this edge joins the forest
+            self.forest_edges.insert((u.min(v), u.max(v)));
+        }
+    }
+
+    /// Observe an edge deletion from the stream.  Deleting a forest edge
+    /// invalidates the structure (paper: "GreedyCC does not retain enough
+    /// information to find a replacement edge").
+    pub fn on_delete(&mut self, u: u32, v: u32) {
+        if !self.valid {
+            return;
+        }
+        if self.forest_edges.contains(&(u.min(v), u.max(v))) {
+            self.valid = false;
+            self.forest_edges.clear();
+        }
+    }
+
+    /// Global connectivity answer in O(V).  `None` if invalidated.
+    pub fn components(&mut self) -> Option<SpanningForest> {
+        if !self.valid {
+            return None;
+        }
+        let mut edges: Vec<(u32, u32)> = self.forest_edges.iter().copied().collect();
+        edges.sort_unstable();
+        Some(SpanningForest {
+            edges,
+            component: self.dsu.component_map(),
+        })
+    }
+
+    /// Batched reachability in O(α(V)) per pair.  `None` if invalidated.
+    pub fn reachability(&mut self, pairs: &[(u32, u32)]) -> Option<Vec<bool>> {
+        if !self.valid {
+            return None;
+        }
+        Some(
+            pairs
+                .iter()
+                .map(|&(a, b)| self.dsu.connected(a, b))
+                .collect(),
+        )
+    }
+
+    /// Memory estimate in bytes (the paper's O(V) compactness claim).
+    pub fn bytes(&self) -> usize {
+        self.dsu.len() * 5 + self.forest_edges.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{arb_edge, Cases};
+
+    #[test]
+    fn fresh_tracks_insertions() {
+        let mut g = GreedyCC::fresh(8);
+        g.on_insert(0, 1);
+        g.on_insert(1, 2);
+        let f = g.components().unwrap();
+        assert!(f.connected(0, 2));
+        assert!(!f.connected(0, 3));
+        assert_eq!(f.num_components(), 6);
+    }
+
+    #[test]
+    fn non_forest_deletion_keeps_validity() {
+        let mut g = GreedyCC::fresh(4);
+        g.on_insert(0, 1);
+        g.on_insert(1, 2);
+        g.on_insert(0, 2); // cycle edge: not in forest
+        g.on_delete(0, 2);
+        assert!(g.is_valid());
+        assert!(g.components().unwrap().connected(0, 2));
+    }
+
+    #[test]
+    fn forest_deletion_invalidates() {
+        let mut g = GreedyCC::fresh(4);
+        g.on_insert(0, 1);
+        g.on_delete(0, 1);
+        assert!(!g.is_valid());
+        assert!(g.components().is_none());
+        assert!(g.reachability(&[(0, 1)]).is_none());
+    }
+
+    #[test]
+    fn updates_after_invalidation_are_ignored() {
+        let mut g = GreedyCC::fresh(4);
+        g.on_insert(0, 1);
+        g.on_delete(0, 1);
+        g.on_insert(2, 3); // no panic, no effect
+        assert!(!g.is_valid());
+    }
+
+    #[test]
+    fn from_forest_matches_forest() {
+        let forest = SpanningForest {
+            edges: vec![(0, 1), (2, 3)],
+            component: vec![0, 0, 2, 2, 4],
+        };
+        let mut g = GreedyCC::from_forest(5, &forest);
+        let r = g.reachability(&[(0, 1), (1, 2), (2, 3), (4, 0)]).unwrap();
+        assert_eq!(r, vec![true, false, true, false]);
+    }
+
+    #[test]
+    fn insert_only_streams_match_dsu_reference() {
+        Cases::new(30).run(|rng| {
+            let v = 4 + rng.next_below(60);
+            let mut g = GreedyCC::fresh(v);
+            let mut d = Dsu::new(v as usize);
+            for _ in 0..rng.next_below(150) {
+                let (a, b) = arb_edge(rng, v);
+                g.on_insert(a, b);
+                d.union(a, b);
+            }
+            assert!(g.is_valid());
+            let f = g.components().unwrap();
+            for i in 0..v as u32 {
+                for j in (i + 1)..(v as u32).min(i + 5) {
+                    assert_eq!(f.connected(i, j), d.connected(i, j));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn compact_memory() {
+        let mut g = GreedyCC::fresh(1000);
+        for i in 0..999 {
+            g.on_insert(i, i + 1);
+        }
+        // O(V): well under sketch sizes (tens of KB per vertex)
+        assert!(g.bytes() < 32 * 1000);
+    }
+}

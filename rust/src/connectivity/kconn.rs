@@ -1,0 +1,231 @@
+//! k-edge-connectivity via sketch certificates (paper §4.1, §5.4).
+//!
+//! k independent connectivity sketches are maintained in parallel (each
+//! with fresh randomness).  At query time forest F_0 is extracted from
+//! copy 0, F_0's edges are *deleted* from copies 1..k-1 (sketches are
+//! linear — deleting is just re-applying the index), F_1 is extracted
+//! from copy 1, and so on.  H = F_0 ∪ … ∪ F_{k-1} is a k-connectivity
+//! certificate: H is k'-edge-connected iff G is, for every k' ≤ k.
+
+use crate::connectivity::boruvka::boruvka_components;
+use crate::connectivity::mincut;
+use crate::sketch::params::{encode_edge, SketchParams};
+use crate::sketch::seeds::SketchSeeds;
+use crate::sketch::SketchStore;
+
+/// k parallel sketch copies + certificate extraction.
+pub struct KConnectivity {
+    k: u32,
+    stores: Vec<SketchStore>,
+}
+
+/// A k-connectivity certificate: the union of k edge-disjoint spanning
+/// forests, plus the per-forest breakdown.
+#[derive(Clone, Debug)]
+pub struct Certificate {
+    pub forests: Vec<Vec<(u32, u32)>>,
+}
+
+impl Certificate {
+    /// All certificate edges (the union H).
+    pub fn edges(&self) -> Vec<(u32, u32)> {
+        let mut all: Vec<(u32, u32)> = self.forests.iter().flatten().copied().collect();
+        all.sort_unstable();
+        all
+    }
+}
+
+impl KConnectivity {
+    /// Allocate k independent sketch copies (k ≥ 1).
+    pub fn new(params: SketchParams, graph_seed: u64, k: u32) -> Self {
+        assert!(k >= 1);
+        let stores = (0..k)
+            .map(|copy| SketchStore::new(params, SketchSeeds::copy_seed(graph_seed, copy)))
+            .collect();
+        Self { k, stores }
+    }
+
+    pub fn k(&self) -> u32 {
+        self.k
+    }
+
+    pub fn params(&self) -> &SketchParams {
+        self.stores[0].params()
+    }
+
+    /// Per-copy stores (the coordinator merges worker deltas into each).
+    pub fn stores(&self) -> &[SketchStore] {
+        &self.stores
+    }
+
+    /// Apply one edge update locally to all k copies (both endpoints).
+    pub fn apply_local(&self, u: u32, v: u32) {
+        let idx = encode_edge(u, v, self.params().v);
+        for s in &self.stores {
+            s.apply_local(u, idx);
+            s.apply_local(v, idx);
+        }
+    }
+
+    /// Total sketch bytes (k × the connectivity footprint, Thm 5.4).
+    pub fn bytes(&self) -> usize {
+        self.stores.iter().map(|s| s.bytes()).sum()
+    }
+
+    /// Extract the k-connectivity certificate.
+    ///
+    /// Mutates copies 1..k-1 by deleting earlier forests' edges, exactly
+    /// as the paper's query algorithm does; call once per query (the
+    /// stream continues to update all copies afterwards, but the deleted
+    /// forest edges must be re-inserted to restore the invariant — see
+    /// [`Self::restore_after_query`]).
+    pub fn certificate(&self) -> Certificate {
+        let v = self.params().v;
+        let mut forests: Vec<Vec<(u32, u32)>> = Vec::with_capacity(self.k as usize);
+        for copy in 0..self.k as usize {
+            // delete all earlier forests' edges from this copy
+            for earlier in &forests {
+                for &(a, b) in earlier {
+                    let idx = encode_edge(a, b, v);
+                    self.stores[copy].apply_local(a, idx);
+                    self.stores[copy].apply_local(b, idx);
+                }
+            }
+            let result = boruvka_components(&self.stores[copy]);
+            forests.push(result.forest.edges);
+        }
+        Certificate { forests }
+    }
+
+    /// Undo the certificate-extraction deletions so the sketches again
+    /// reflect the stream (linearity makes this an exact inverse).
+    pub fn restore_after_query(&self, cert: &Certificate) {
+        let v = self.params().v;
+        for copy in 1..self.k as usize {
+            for earlier in &cert.forests[..copy] {
+                for &(a, b) in earlier {
+                    let idx = encode_edge(a, b, v);
+                    self.stores[copy].apply_local(a, idx);
+                    self.stores[copy].apply_local(b, idx);
+                }
+            }
+        }
+    }
+
+    /// Answer Problem 2: `Some(w)` if the min cut w < k, else `None`
+    /// ("at least k", the paper's ∞).
+    pub fn query_capped_connectivity(&self) -> Option<u64> {
+        let cert = self.certificate();
+        let edges = cert.edges();
+        let out = mincut::edge_connectivity_capped(
+            self.params().v as usize,
+            &edges,
+            self.k as u64,
+        );
+        self.restore_after_query(&cert);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::Cases;
+
+    fn kconn_with_edges(v: u64, k: u32, seed: u64, edges: &[(u32, u32)]) -> KConnectivity {
+        let kc = KConnectivity::new(SketchParams::for_vertices(v), seed, k);
+        for &(a, b) in edges {
+            kc.apply_local(a, b);
+        }
+        kc
+    }
+
+    #[test]
+    fn forests_are_edge_disjoint() {
+        let mut edges = Vec::new();
+        for a in 0..10u32 {
+            for b in (a + 1)..10 {
+                edges.push((a, b));
+            }
+        }
+        let kc = kconn_with_edges(10, 3, 5, &edges);
+        let cert = kc.certificate();
+        let mut seen = std::collections::HashSet::new();
+        for f in &cert.forests {
+            for e in f {
+                assert!(seen.insert(*e), "edge {e:?} appears in two forests");
+            }
+        }
+    }
+
+    #[test]
+    fn bridge_detected_below_k() {
+        // two K5s joined by one bridge: min cut 1 < k=3
+        let mut edges = Vec::new();
+        for a in 0..5u32 {
+            for b in (a + 1)..5 {
+                edges.push((a, b));
+                edges.push((a + 5, b + 5));
+            }
+        }
+        edges.push((0, 5));
+        let kc = kconn_with_edges(10, 3, 6, &edges);
+        assert_eq!(kc.query_capped_connectivity(), Some(1));
+    }
+
+    #[test]
+    fn dense_graph_reports_at_least_k() {
+        // K8 has edge connectivity 7 >= k=3
+        let mut edges = Vec::new();
+        for a in 0..8u32 {
+            for b in (a + 1)..8 {
+                edges.push((a, b));
+            }
+        }
+        let kc = kconn_with_edges(8, 3, 7, &edges);
+        assert_eq!(kc.query_capped_connectivity(), None);
+    }
+
+    #[test]
+    fn disconnected_graph_reports_zero() {
+        let kc = kconn_with_edges(6, 2, 8, &[(0, 1), (1, 2)]);
+        assert_eq!(kc.query_capped_connectivity(), Some(0));
+    }
+
+    #[test]
+    fn restore_after_query_is_exact() {
+        let mut edges = Vec::new();
+        for a in 0..8u32 {
+            for b in (a + 1)..8 {
+                edges.push((a, b));
+            }
+        }
+        let kc = kconn_with_edges(8, 3, 9, &edges);
+        let first = kc.query_capped_connectivity();
+        // a second query must see identical sketch state
+        let second = kc.query_capped_connectivity();
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn certificate_preserves_connectivity_capped_at_k() {
+        // property (certificate guarantee): min(mincut(H), k) == min(mincut(G), k)
+        Cases::new(10).run(|rng| {
+            let v = 6 + rng.next_below(5); // 6..10
+            let k = 1 + rng.next_below(3) as u32; // 1..3
+            let edges = crate::util::testkit::arb_edge_set(rng, v, 40);
+            let kc = kconn_with_edges(v, k, rng.next_u64(), &edges);
+            let got = kc.query_capped_connectivity();
+            let want = mincut::edge_connectivity_capped(v as usize, &edges, k as u64);
+            assert_eq!(got, want, "V={v} k={k} edges={edges:?}");
+        });
+    }
+
+    #[test]
+    fn memory_scales_linearly_in_k() {
+        let p = SketchParams::for_vertices(64);
+        let k1 = KConnectivity::new(p, 1, 1);
+        let k4 = KConnectivity::new(p, 1, 4);
+        assert_eq!(k4.bytes(), 4 * k1.bytes());
+    }
+}

@@ -1,0 +1,54 @@
+//! Connectivity machinery: union-find, sketch-Borůvka spanning forests,
+//! the GreedyCC query accelerator, and k-edge-connectivity certificates.
+
+pub mod boruvka;
+pub mod dsu;
+pub mod greedycc;
+pub mod kconn;
+pub mod mincut;
+
+pub use boruvka::{boruvka_components, ConnectivityResult};
+pub use dsu::Dsu;
+pub use greedycc::GreedyCC;
+pub use kconn::KConnectivity;
+
+/// A spanning forest: edges (u, v) with u < v, plus the component map.
+#[derive(Clone, Debug, Default)]
+pub struct SpanningForest {
+    /// Forest edges.
+    pub edges: Vec<(u32, u32)>,
+    /// Component representative (DSU root) per vertex.
+    pub component: Vec<u32>,
+}
+
+impl SpanningForest {
+    /// Number of distinct components.
+    pub fn num_components(&self) -> usize {
+        let mut roots: Vec<u32> = self.component.clone();
+        roots.sort_unstable();
+        roots.dedup();
+        roots.len()
+    }
+
+    /// Are `u` and `v` connected?
+    pub fn connected(&self, u: u32, v: u32) -> bool {
+        self.component[u as usize] == self.component[v as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forest_component_queries() {
+        let f = SpanningForest {
+            edges: vec![(0, 1), (2, 3)],
+            component: vec![0, 0, 2, 2, 4],
+        };
+        assert_eq!(f.num_components(), 3);
+        assert!(f.connected(0, 1));
+        assert!(!f.connected(1, 2));
+        assert!(!f.connected(4, 0));
+    }
+}

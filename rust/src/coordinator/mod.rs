@@ -1,0 +1,632 @@
+//! The main-node coordinator (paper §5, §6, App. E): stream ingestion
+//! through the pipeline hypertree, vertex-based batching, dispatch to
+//! worker backends via the Work Queue, sketch-delta merging, and query
+//! processing (GreedyCC fast path / sketch-Borůvka / k-connectivity
+//! certificates).
+//!
+//! Data flow (Fig. 2):
+//!
+//! ```text
+//! stream ──► GreedyCC (inline)
+//!        └─► pipeline hypertree ──► vertex-based batches ──► Work Queue
+//!                                                              │
+//!             sketch store  ◄── XOR merge ◄── sketch deltas ◄──┘
+//!                                            (worker backends)
+//! ```
+
+pub mod work_queue;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::connectivity::boruvka::boruvka_components;
+use crate::connectivity::greedycc::GreedyCC;
+use crate::connectivity::kconn::KConnectivity;
+use crate::connectivity::SpanningForest;
+use crate::hypertree::{BatchSink, Hypertree, HypertreeConfig, VertexBatch};
+use crate::gutter::GutterBuffer;
+use crate::metrics::{Metrics, MetricsSnapshot};
+use crate::sketch::params::{encode_edge, SketchParams};
+use crate::stream::update::{Update, UpdateKind, UPDATE_WIRE_BYTES};
+use crate::stream::GraphStream;
+use crate::worker::{CubeWorker, NativeWorker, WorkerBackend, WorkerSeeds, XlaWorker};
+use work_queue::WorkQueue;
+
+/// Build a worker backend inside a distributor thread.
+fn build_backend(
+    kind: &WorkerKind,
+    params: SketchParams,
+    graph_seed: u64,
+    k: u32,
+    slot: usize,
+) -> Result<Box<dyn WorkerBackend>> {
+    let seeds = WorkerSeeds::derive(params, graph_seed, k);
+    Ok(match kind {
+        WorkerKind::Native => Box::new(NativeWorker::new(seeds)),
+        WorkerKind::Cube => Box::new(CubeWorker::new(seeds)),
+        WorkerKind::Xla { artifact_dir } => Box::new(XlaWorker::load(artifact_dir, seeds)?),
+        WorkerKind::Remote { addrs } => {
+            if addrs.is_empty() {
+                return Err(anyhow!("no remote worker addresses"));
+            }
+            let addr = &addrs[slot % addrs.len()];
+            Box::new(crate::worker::remote::RemoteWorker::connect(
+                addr, params, graph_seed, k,
+            )?)
+        }
+    })
+}
+
+/// Which delta-computation backend the distributor threads use.
+#[derive(Clone, Debug, Default)]
+pub enum WorkerKind {
+    /// Native Rust CameoSketch kernel (the perf path).
+    #[default]
+    Native,
+    /// CubeSketch kernel (GraphZeppelin-mode ablation).
+    Cube,
+    /// The AOT Pallas artifact via PJRT (three-layer composition path).
+    Xla { artifact_dir: std::path::PathBuf },
+    /// Remote TCP workers, round-robin over addresses.
+    Remote { addrs: Vec<String> },
+}
+
+/// Which update-buffering structure the main node uses.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BufferKind {
+    /// The pipeline hypertree (the paper's design).
+    #[default]
+    Hypertree,
+    /// GraphZeppelin-style gutters (ablation baseline).
+    Gutter,
+}
+
+/// Coordinator configuration (defaults mirror §6 / App. E).
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub vertices: u64,
+    pub graph_seed: u64,
+    /// k-connectivity copies (1 = plain connectivity).
+    pub k: u32,
+    pub columns: u32,
+    /// Batch-size factor α: a leaf holds α× the delta's size in updates.
+    pub alpha: u32,
+    /// Query-flush fullness threshold γ (paper default 4%).
+    pub gamma: f64,
+    pub distributor_threads: usize,
+    pub queue_capacity: usize,
+    pub worker: WorkerKind,
+    pub buffer: BufferKind,
+    pub use_greedycc: bool,
+}
+
+impl CoordinatorConfig {
+    pub fn for_vertices(vertices: u64) -> Self {
+        Self {
+            vertices,
+            graph_seed: 0x1A5D5CAFE,
+            k: 1,
+            columns: crate::sketch::params::DEFAULT_COLUMNS,
+            alpha: 1,
+            gamma: 0.04,
+            distributor_threads: 2,
+            queue_capacity: 64,
+            worker: WorkerKind::Native,
+            buffer: BufferKind::Hypertree,
+            use_greedycc: true,
+        }
+    }
+
+    pub fn params(&self) -> SketchParams {
+        SketchParams::with_columns(self.vertices, self.columns)
+    }
+
+    /// Leaf capacity in updates: α·φ scaled by k (paper §5.4).  With
+    /// 4-byte batch entries, a full batch occupies α× the bytes of the
+    /// delta it returns (φ = words·8 bytes → capacity = α·words·2).
+    pub fn leaf_capacity(&self) -> usize {
+        self.params().words() * 2 * self.alpha as usize * self.k as usize
+    }
+}
+
+/// Update buffer: hypertree or gutter (ablation), behind one interface.
+enum Buffer {
+    Hyper(Arc<Hypertree>),
+    Gutter(Arc<GutterBuffer>),
+}
+
+/// Shared sink: full batches go to the work queue; underfull leaves are
+/// processed locally on the main node (§5.3's hybrid policy).
+struct QueueSink {
+    queue: Arc<WorkQueue<VertexBatch>>,
+    metrics: Arc<Metrics>,
+    in_flight: Arc<AtomicU64>,
+    kconn: Arc<KConnectivity>,
+}
+
+impl BatchSink for QueueSink {
+    fn full_batch(&self, batch: VertexBatch) {
+        Metrics::add(&self.metrics.batches_sent, 1);
+        Metrics::add(&self.metrics.batch_bytes_sent, batch.wire_bytes());
+        self.in_flight.fetch_add(1, Ordering::AcqRel);
+        if !self.queue.push(batch) {
+            self.in_flight.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+
+    fn local_batch(&self, vertex: u32, others: &[u32]) {
+        let v = self.kconn.params().v;
+        for store in self.kconn.stores() {
+            for &other in others {
+                store.apply_local(vertex, encode_edge(vertex, other, v));
+            }
+        }
+        Metrics::add(&self.metrics.updates_local, others.len() as u64);
+    }
+}
+
+/// Report returned by [`Coordinator::ingest_all`].
+#[derive(Clone, Copy, Debug)]
+pub struct IngestReport {
+    pub updates: u64,
+    pub seconds: f64,
+}
+
+impl IngestReport {
+    pub fn rate(&self) -> f64 {
+        crate::util::timer::rate(self.updates, self.seconds)
+    }
+}
+
+/// The main node.
+pub struct Coordinator {
+    config: CoordinatorConfig,
+    params: SketchParams,
+    metrics: Arc<Metrics>,
+    kconn: Arc<KConnectivity>,
+    buffer: Buffer,
+    sink: Arc<QueueSink>,
+    queue: Arc<WorkQueue<VertexBatch>>,
+    in_flight: Arc<AtomicU64>,
+    distributors: Vec<JoinHandle<()>>,
+    /// thread-local hypertree handle for the driver thread
+    local: Option<crate::hypertree::LocalIngest>,
+    greedy: Mutex<GreedyCC>,
+}
+
+impl Coordinator {
+    pub fn new(config: CoordinatorConfig) -> Result<Self> {
+        let params = config.params();
+        let metrics = Arc::new(Metrics::new());
+        let kconn = Arc::new(KConnectivity::new(params, config.graph_seed, config.k));
+        let queue = Arc::new(WorkQueue::new(config.queue_capacity));
+        let in_flight = Arc::new(AtomicU64::new(0));
+
+        let buffer = match config.buffer {
+            BufferKind::Hypertree => Buffer::Hyper(Arc::new(Hypertree::new(
+                HypertreeConfig::for_vertices(config.vertices, config.leaf_capacity()),
+                metrics.clone(),
+            ))),
+            BufferKind::Gutter => Buffer::Gutter(Arc::new(GutterBuffer::new(
+                config.vertices,
+                config.leaf_capacity(),
+                64,
+                metrics.clone(),
+            ))),
+        };
+
+        let sink = Arc::new(QueueSink {
+            queue: queue.clone(),
+            metrics: metrics.clone(),
+            in_flight: in_flight.clone(),
+            kconn: kconn.clone(),
+        });
+
+        let mut coord = Self {
+            local: None,
+            greedy: Mutex::new(GreedyCC::fresh(config.vertices)),
+            params,
+            metrics,
+            kconn,
+            buffer,
+            sink,
+            queue,
+            in_flight,
+            distributors: Vec::new(),
+            config,
+        };
+        coord.spawn_distributors()?;
+        if let Buffer::Hyper(ref t) = coord.buffer {
+            coord.local = Some(t.local());
+        }
+        Ok(coord)
+    }
+
+    fn spawn_distributors(&mut self) -> Result<()> {
+        let words = self.params.words();
+        for slot in 0..self.config.distributor_threads {
+            // backend construction data (Send) — the backend itself is
+            // built inside the thread (PJRT handles are thread-bound)
+            let kind = self.config.worker.clone();
+            let params = self.params;
+            let graph_seed = self.config.graph_seed;
+            let kk = self.config.k;
+            let queue = self.queue.clone();
+            let kconn = self.kconn.clone();
+            let metrics = self.metrics.clone();
+            let in_flight = self.in_flight.clone();
+            let k = self.config.k as usize;
+            self.distributors.push(std::thread::spawn(move || {
+                let backend = match build_backend(&kind, params, graph_seed, kk, slot) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        eprintln!("distributor {slot}: backend init failed: {e:#}");
+                        // drain the queue so producers don't deadlock
+                        while let Some(_batch) = queue.pop() {
+                            in_flight.fetch_sub(1, Ordering::AcqRel);
+                        }
+                        return;
+                    }
+                };
+                let mut out: Vec<u64> = Vec::with_capacity(words * k);
+                while let Some(batch) = queue.pop() {
+                    out.clear();
+                    if let Err(e) = backend.process(batch.vertex, &batch.others, &mut out)
+                    {
+                        eprintln!("worker error: {e:#}");
+                        in_flight.fetch_sub(1, Ordering::AcqRel);
+                        continue;
+                    }
+                    debug_assert_eq!(out.len(), words * k);
+                    for copy in 0..k {
+                        kconn.stores()[copy]
+                            .merge_delta(batch.vertex, &out[copy * words..(copy + 1) * words]);
+                    }
+                    Metrics::add(&metrics.deltas_merged, 1);
+                    Metrics::add(
+                        &metrics.delta_bytes_received,
+                        16 + out.len() as u64 * 8,
+                    );
+                    in_flight.fetch_sub(1, Ordering::AcqRel);
+                }
+            }));
+        }
+        Ok(())
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn params(&self) -> &SketchParams {
+        &self.params
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.config
+    }
+
+    /// Main-node sketch memory in bytes.
+    pub fn sketch_bytes(&self) -> usize {
+        self.kconn.bytes()
+    }
+
+    /// Ingest one stream update.
+    pub fn ingest(&mut self, update: Update) {
+        Metrics::add(&self.metrics.updates_ingested, 1);
+        Metrics::add(&self.metrics.stream_bytes, UPDATE_WIRE_BYTES);
+
+        if self.config.use_greedycc {
+            let mut g = self.greedy.lock().unwrap();
+            match update.kind {
+                UpdateKind::Insert => g.on_insert(update.u, update.v),
+                UpdateKind::Delete => g.on_delete(update.u, update.v),
+            }
+        }
+
+        match &self.buffer {
+            Buffer::Hyper(_) => {
+                let local = self.local.as_mut().expect("hypertree local handle");
+                local.insert(update.u, update.v, &*self.sink);
+                local.insert(update.v, update.u, &*self.sink);
+            }
+            Buffer::Gutter(g) => {
+                g.insert(update.u, update.v, &*self.sink);
+                g.insert(update.v, update.u, &*self.sink);
+            }
+        }
+    }
+
+    /// Ingest an entire stream, returning the throughput report.
+    pub fn ingest_all<S: GraphStream>(&mut self, stream: S) -> IngestReport {
+        let sw = crate::util::timer::Stopwatch::new();
+        let mut n = 0u64;
+        for update in stream {
+            self.ingest(update);
+            n += 1;
+        }
+        IngestReport {
+            updates: n,
+            seconds: sw.elapsed_secs(),
+        }
+    }
+
+    /// The query barrier (§5.3): flush all pending updates — γ-full
+    /// leaves to workers, the rest locally — then wait for every
+    /// in-flight delta to merge.
+    pub fn flush_pending(&mut self) {
+        if let Some(local) = self.local.as_mut() {
+            local.flush(&*self.sink);
+        }
+        match &self.buffer {
+            Buffer::Hyper(t) => t.force_flush(self.config.gamma, &*self.sink),
+            Buffer::Gutter(g) => g.force_flush(self.config.gamma, &*self.sink),
+        }
+        while self.in_flight.load(Ordering::Acquire) != 0 || !self.queue.is_empty() {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+
+    /// Global connectivity query.  Uses GreedyCC when valid (O(V)),
+    /// otherwise flushes and runs sketch-Borůvka, then re-seeds GreedyCC.
+    pub fn connected_components(&mut self) -> SpanningForest {
+        if self.config.use_greedycc {
+            let mut g = self.greedy.lock().unwrap();
+            if let Some(forest) = g.components() {
+                Metrics::add(&self.metrics.queries_greedy, 1);
+                return forest;
+            }
+        }
+        self.full_connectivity_query()
+    }
+
+    /// Force the full (flush + Borůvka) query path.
+    pub fn full_connectivity_query(&mut self) -> SpanningForest {
+        self.flush_pending();
+        let result = boruvka_components(&self.kconn.stores()[0]);
+        Metrics::add(&self.metrics.queries_full, 1);
+        if self.config.use_greedycc {
+            *self.greedy.lock().unwrap() =
+                GreedyCC::from_forest(self.params.v, &result.forest);
+        }
+        result.forest
+    }
+
+    /// Batched reachability query (§5.3).
+    pub fn reachability(&mut self, pairs: &[(u32, u32)]) -> Vec<bool> {
+        if self.config.use_greedycc {
+            let mut g = self.greedy.lock().unwrap();
+            if let Some(answers) = g.reachability(pairs) {
+                Metrics::add(&self.metrics.queries_greedy, 1);
+                return answers;
+            }
+        }
+        let forest = self.full_connectivity_query();
+        pairs
+            .iter()
+            .map(|&(a, b)| forest.connected(a, b))
+            .collect()
+    }
+
+    /// k-edge-connectivity query: `Some(w)` when the min cut w < k,
+    /// `None` meaning "at least k".
+    pub fn k_connectivity(&mut self) -> Option<u64> {
+        self.flush_pending();
+        Metrics::add(&self.metrics.queries_full, 1);
+        self.kconn.query_capped_connectivity()
+    }
+
+    /// Access the underlying sketch copies (benches, tests).
+    pub fn kconn(&self) -> &KConnectivity {
+        &self.kconn
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.queue.close();
+        for h in self.distributors.drain(..) {
+            let _ = h.join();
+        }
+        // tell remote workers to shut down cleanly
+        if let WorkerKind::Remote { .. } = self.config.worker {
+            // connections are owned by the (now-joined) distributor
+            // threads; dropping them closed the sockets.
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::connectivity::dsu::Dsu;
+    use crate::stream::dynamify::Dynamify;
+    use crate::stream::erdos::ErdosRenyi;
+    use crate::stream::{edge_list, VecStream};
+
+    fn small_config(v: u64) -> CoordinatorConfig {
+        let mut c = CoordinatorConfig::for_vertices(v);
+        // tiny batches so the distributed path is exercised even on
+        // small test streams
+        c.alpha = 1;
+        c.distributor_threads = 2;
+        c
+    }
+
+    fn ref_partition(v: u64, edges: &[(u32, u32)]) -> Vec<u32> {
+        let mut d = Dsu::new(v as usize);
+        for &(a, b) in edges {
+            d.union(a, b);
+        }
+        d.component_map()
+    }
+
+    fn same_partition(a: &[u32], b: &[u32]) -> bool {
+        let mut fwd = std::collections::HashMap::new();
+        let mut bwd = std::collections::HashMap::new();
+        for (x, y) in a.iter().zip(b) {
+            if *fwd.entry(*x).or_insert(*y) != *y || *bwd.entry(*y).or_insert(*x) != *x {
+                return false;
+            }
+        }
+        true
+    }
+
+    #[test]
+    fn end_to_end_connectivity_small_dense() {
+        let v = 128u64;
+        let model = ErdosRenyi::new(v, 0.15, 99);
+        let want = ref_partition(v, &edge_list(&model));
+        let mut coord = Coordinator::new(small_config(v)).unwrap();
+        coord.ingest_all(Dynamify::new(model, 3));
+        let forest = coord.connected_components();
+        assert!(same_partition(&forest.component, &want));
+    }
+
+    #[test]
+    fn greedycc_survives_insert_only_stream_without_flush() {
+        let v = 64u64;
+        let model = ErdosRenyi::new(v, 0.2, 5);
+        let mut coord = Coordinator::new(small_config(v)).unwrap();
+        coord.ingest_all(Dynamify::new(model, 1)); // inserts only
+        let m_before = coord.metrics();
+        let forest = coord.connected_components();
+        let m_after = coord.metrics();
+        // insert-only stream keeps GreedyCC valid: no full query needed
+        assert_eq!(m_after.queries_full, m_before.queries_full);
+        assert_eq!(m_after.queries_greedy, m_before.queries_greedy + 1);
+        let want = ref_partition(v, &edge_list(&model));
+        assert!(same_partition(&forest.component, &want));
+    }
+
+    #[test]
+    fn deletions_invalidate_greedycc_then_full_query_recovers() {
+        let v = 64u64;
+        let mut coord = Coordinator::new(small_config(v)).unwrap();
+        let updates = vec![
+            Update::insert(0, 1),
+            Update::insert(1, 2),
+            Update::insert(3, 4),
+            Update::delete(1, 2), // forest edge: invalidates GreedyCC
+        ];
+        coord.ingest_all(VecStream::new(v, updates));
+        let forest = coord.connected_components();
+        assert_eq!(coord.metrics().queries_full, 1);
+        assert!(forest.connected(0, 1));
+        assert!(!forest.connected(1, 2));
+        assert!(forest.connected(3, 4));
+    }
+
+    #[test]
+    fn reachability_pairs() {
+        let v = 32u64;
+        let mut coord = Coordinator::new(small_config(v)).unwrap();
+        coord.ingest_all(VecStream::new(
+            v,
+            vec![Update::insert(0, 1), Update::insert(1, 2), Update::insert(4, 5)],
+        ));
+        let ans = coord.reachability(&[(0, 2), (0, 4), (4, 5)]);
+        assert_eq!(ans, vec![true, false, true]);
+    }
+
+    #[test]
+    fn communication_factor_within_theorem_bound() {
+        let v = 256u64;
+        let model = ErdosRenyi::new(v, 0.3, 11);
+        let mut cfg = small_config(v);
+        cfg.use_greedycc = false;
+        let mut coord = Coordinator::new(cfg).unwrap();
+        coord.ingest_all(Dynamify::new(model, 7));
+        let _ = coord.full_connectivity_query();
+        let m = coord.metrics();
+        // Theorem 5.2: network <= (3 + 1/(gamma*alpha)) x stream bytes.
+        // Updates are 9B on the wire but 8B in batches, so the batch
+        // side alone is < 2x; deltas add 1/alpha per full batch.
+        let bound = (3.0 + 1.0 / (coord.config.gamma * coord.config.alpha as f64))
+            * m.stream_bytes as f64;
+        assert!(
+            (m.network_bytes() as f64) < bound,
+            "network {} vs bound {bound}",
+            m.network_bytes()
+        );
+        assert_eq!(m.updates_ingested * 2, m.updates_local + distributed(&m));
+    }
+
+    fn distributed(m: &MetricsSnapshot) -> u64 {
+        // every ingested update lands exactly twice (one per endpoint):
+        // either locally or in some shipped batch
+        (m.batch_bytes_sent - 8 * m.batches_sent) / 4
+    }
+
+    #[test]
+    fn gutter_buffer_mode_matches_hypertree_results() {
+        let v = 96u64;
+        let model = ErdosRenyi::new(v, 0.2, 21);
+        let want = ref_partition(v, &edge_list(&model));
+
+        let mut cfg = small_config(v);
+        cfg.buffer = BufferKind::Gutter;
+        let mut coord = Coordinator::new(cfg).unwrap();
+        coord.ingest_all(Dynamify::new(model, 3));
+        let forest = coord.connected_components();
+        assert!(same_partition(&forest.component, &want));
+    }
+
+    #[test]
+    fn cube_worker_mode_matches() {
+        let v = 96u64;
+        let model = ErdosRenyi::new(v, 0.15, 31);
+        let want = ref_partition(v, &edge_list(&model));
+        let mut cfg = small_config(v);
+        cfg.worker = WorkerKind::Cube;
+        cfg.use_greedycc = false;
+        let mut coord = Coordinator::new(cfg).unwrap();
+        coord.ingest_all(Dynamify::new(model, 3));
+        let forest = coord.connected_components();
+        assert!(same_partition(&forest.component, &want));
+    }
+
+    #[test]
+    fn k_connectivity_end_to_end() {
+        // two K6s joined by 2 parallel-ish edges: min cut 2 < k=3
+        let v = 12u64;
+        let mut edges = Vec::new();
+        for a in 0..6u32 {
+            for b in (a + 1)..6 {
+                edges.push(Update::insert(a, b));
+                edges.push(Update::insert(a + 6, b + 6));
+            }
+        }
+        edges.push(Update::insert(0, 6));
+        edges.push(Update::insert(1, 7));
+        let mut cfg = small_config(v);
+        cfg.k = 3;
+        let mut coord = Coordinator::new(cfg).unwrap();
+        coord.ingest_all(VecStream::new(v, edges));
+        assert_eq!(coord.k_connectivity(), Some(2));
+    }
+
+    #[test]
+    fn remote_worker_mode_end_to_end() {
+        let v = 64u64;
+        let model = ErdosRenyi::new(v, 0.2, 77);
+        let want = ref_partition(v, &edge_list(&model));
+
+        let server = crate::worker::remote::WorkerServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || server.serve(2));
+
+        let mut cfg = small_config(v);
+        cfg.worker = WorkerKind::Remote { addrs: vec![addr] };
+        cfg.distributor_threads = 2;
+        let mut coord = Coordinator::new(cfg).unwrap();
+        coord.ingest_all(Dynamify::new(model, 3));
+        let forest = coord.connected_components();
+        assert!(same_partition(&forest.component, &want));
+        drop(coord); // closes connections so the server exits
+        let _ = handle.join();
+    }
+}

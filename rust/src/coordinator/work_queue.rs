@@ -1,0 +1,210 @@
+//! The Work Queue (paper App. E.2): a bounded many-producer
+//! many-consumer queue built from *two* lists and two mutex/condvar
+//! pairs, so that both operations hold locks only for constant-time
+//! pointer swaps — Graph Insertion threads (producers) and Work
+//! Distributor threads (consumers) never contend on the same mutex
+//! except at the empty↔nonempty boundary.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// Bounded MPMC queue.
+pub struct WorkQueue<T> {
+    /// producers append here
+    producer: Mutex<VecDeque<T>>,
+    /// consumers drain here, refilling by swapping with `producer`
+    consumer: Mutex<VecDeque<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+    closed: AtomicBool,
+}
+
+impl<T> WorkQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            producer: Mutex::new(VecDeque::new()),
+            consumer: Mutex::new(VecDeque::new()),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    /// Blocking push (backpressure: waits while the producer list is at
+    /// capacity).  Returns false if the queue has been closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut p = self.producer.lock().unwrap();
+        while p.len() >= self.capacity {
+            if self.closed.load(Ordering::Acquire) {
+                return false;
+            }
+            p = self.not_full.wait(p).unwrap();
+        }
+        if self.closed.load(Ordering::Acquire) {
+            return false;
+        }
+        p.push_back(item);
+        drop(p);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Blocking pop.  Returns `None` once the queue is closed *and*
+    /// drained.
+    pub fn pop(&self) -> Option<T> {
+        loop {
+            // fast path: the consumer list
+            {
+                let mut c = self.consumer.lock().unwrap();
+                if let Some(x) = c.pop_front() {
+                    return Some(x);
+                }
+            }
+            // refill: swap the producer list in (constant-time)
+            let mut p = self.producer.lock().unwrap();
+            if p.is_empty() {
+                if self.closed.load(Ordering::Acquire) {
+                    return None;
+                }
+                let (guard, _timeout) = self
+                    .not_empty
+                    .wait_timeout(p, std::time::Duration::from_millis(50))
+                    .unwrap();
+                p = guard;
+                if p.is_empty() {
+                    continue;
+                }
+            }
+            {
+                // lock order is always producer -> consumer
+                let mut c = self.consumer.lock().unwrap();
+                std::mem::swap(&mut *p, &mut *c);
+            }
+            drop(p);
+            self.not_full.notify_all();
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        {
+            let mut c = self.consumer.lock().unwrap();
+            if let Some(x) = c.pop_front() {
+                return Some(x);
+            }
+        }
+        let mut p = self.producer.lock().unwrap();
+        if p.is_empty() {
+            return None;
+        }
+        let item = p.pop_front();
+        drop(p);
+        self.not_full.notify_all();
+        item
+    }
+
+    /// Close the queue: producers fail, consumers drain then get `None`.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Items currently queued (approximate under concurrency).
+    pub fn len(&self) -> usize {
+        self.producer.lock().unwrap().len() + self.consumer.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_single_thread() {
+        let q = WorkQueue::new(16);
+        for i in 0..10 {
+            assert!(q.push(i));
+        }
+        for i in 0..10 {
+            assert_eq!(q.try_pop(), Some(i));
+        }
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = WorkQueue::new(4);
+        q.push(1);
+        q.push(2);
+        q.close();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+        assert!(!q.push(3), "push after close must fail");
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_exactly_once() {
+        let q = Arc::new(WorkQueue::new(8));
+        let producers = 3;
+        let consumers = 3;
+        let per_producer = 2000u64;
+
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let q2 = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_producer {
+                    assert!(q2.push(p * per_producer + i));
+                }
+            }));
+        }
+        let mut consumers_h = Vec::new();
+        for _ in 0..consumers {
+            let q2 = q.clone();
+            consumers_h.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(x) = q2.pop() {
+                    got.push(x);
+                }
+                got
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u64> = Vec::new();
+        for h in consumers_h {
+            all.extend(h.join().unwrap());
+        }
+        all.sort_unstable();
+        let want: Vec<u64> = (0..producers * per_producer).collect();
+        assert_eq!(all, want);
+    }
+
+    #[test]
+    fn backpressure_blocks_until_pop() {
+        let q = Arc::new(WorkQueue::new(2));
+        q.push(1);
+        q.push(2);
+        let q2 = q.clone();
+        let pusher = std::thread::spawn(move || q2.push(3));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(!pusher.is_finished(), "push should block at capacity");
+        assert_eq!(q.pop(), Some(1));
+        assert!(pusher.join().unwrap());
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+}

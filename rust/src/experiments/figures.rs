@@ -1,0 +1,268 @@
+//! Figure harnesses: Fig. 1 (survey), Fig. 3 (scaling), Fig. 4
+//! (ablation), Fig. 5 (query bursts), Fig. 16 (single-machine).
+
+use crate::analysis::cluster_model::{measure_stage_costs, BufferingKind, KernelKind};
+use crate::analysis::{rambw, survey};
+use crate::benchkit::Table;
+use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::stream::datasets;
+use crate::stream::EdgeModel;
+use crate::util::rng::Xoshiro256;
+use crate::util::timer::Stopwatch;
+
+/// Fig. 1 / Fig. 15: the dataset-survey selection effect.  Emits the
+/// scatter series (one row per synthesized dataset) and prints the
+/// frontier summary.
+pub fn fig1_survey() -> Table {
+    let catalog = survey::synthesize_catalog(0x5EED);
+    let summary = survey::summarize(&catalog);
+    eprintln!(
+        "survey: {}/{} datasets under the 16 GB adjacency-list frontier \
+         (max {:.1} GiB)",
+        summary.under_frontier,
+        summary.total,
+        summary.max_adj_bytes / (1u64 << 30) as f64
+    );
+    let mut t = Table::new(
+        "Fig 1 — dataset survey (synthesized; see DESIGN.md Substitutions)",
+        &["category", "vertices", "edges", "density", "adj_list_gib"],
+    );
+    for p in &catalog {
+        t.row(vec![
+            p.category.to_string(),
+            format!("{:.0}", p.vertices),
+            format!("{:.0}", p.edges),
+            format!("{:.3e}", p.density()),
+            format!("{:.4}", p.adjacency_list_bytes() / (1u64 << 30) as f64),
+        ]);
+    }
+    t
+}
+
+/// Fig. 3: ingestion rate vs distributed workers, against RAM-bandwidth
+/// bounds.  Stage costs are *measured* single-thread; the worker axis
+/// uses the pipeline model (this box has one core — see DESIGN.md).
+pub fn fig3_scaling(quick: bool) -> Table {
+    let name = if quick { "kron10" } else { "kron12" };
+    let d = datasets::by_name(name).unwrap();
+    let v = d.model.num_vertices();
+    let samples = if quick { 100_000 } else { 400_000 };
+
+    let costs = measure_stage_costs(v, samples, KernelKind::Cameo, BufferingKind::Hypertree);
+    let (seq, rnd) = rambw::measure_defaults();
+    eprintln!(
+        "measured: main {:.0} ns/u, worker {:.0} ns/u, merge {:.1} ns/u; \
+         RAM seq {:.2} GiB/s ({:.0} Mu/s), random {:.2} GiB/s ({:.0} Mu/s)",
+        costs.main_per_update * 1e9,
+        costs.worker_per_update * 1e9,
+        costs.merge_per_update * 1e9,
+        seq.gib_per_sec(),
+        seq.updates_per_sec() / 1e6,
+        rnd.gib_per_sec(),
+        rnd.updates_per_sec() / 1e6,
+    );
+
+    let mut t = Table::new(
+        "Fig 3 — ingestion rate vs workers (measured costs + pipeline model)",
+        &[
+            "workers",
+            "threads_total",
+            "rate_updates_per_sec",
+            "seq_ram_updates_per_sec",
+            "random_ram_updates_per_sec",
+        ],
+    );
+    // the paper's main node is a 36-core c5n.18xlarge; its hypertree
+    // ingest parallelizes across those cores, which is what lets worker
+    // scaling run to 40 nodes before the main-node bound bites
+    let main_threads = 36;
+    for workers in [1u32, 2, 4, 8, 12, 16, 20, 24, 28, 32, 36, 40] {
+        let rate = costs.predict_rate_full(workers, 16, main_threads);
+        t.row(vec![
+            workers.to_string(),
+            (workers * 16).to_string(),
+            format!("{:.0}", rate),
+            format!("{:.0}", seq.updates_per_sec()),
+            format!("{:.0}", rnd.updates_per_sec()),
+        ]);
+    }
+    let sat = costs.saturation_workers_full(16, main_threads);
+    eprintln!(
+        "saturation at ~{} workers (36 main threads); speedup(40w vs 1w) = {:.1}x",
+        sat,
+        costs.predict_rate_full(40, 16, main_threads)
+            / costs.predict_rate_full(1, 16, main_threads)
+    );
+    t
+}
+
+/// Fig. 4: the ablation — CameoSketch and the pipeline hypertree are
+/// both required for scaling.  Three configurations over the worker
+/// axis, from measured stage costs.
+pub fn fig4_ablation(quick: bool) -> Table {
+    let name = if quick { "kron10" } else { "kron12" };
+    let d = datasets::by_name(name).unwrap();
+    let v = d.model.num_vertices();
+    let samples = if quick { 80_000 } else { 300_000 };
+
+    let configs = [
+        ("cube+gutter (GraphZeppelin)", KernelKind::Cube, BufferingKind::Gutter),
+        ("cameo+gutter", KernelKind::Cameo, BufferingKind::Gutter),
+        ("cameo+hypertree (Landscape)", KernelKind::Cameo, BufferingKind::Hypertree),
+    ];
+    let mut t = Table::new(
+        "Fig 4 — ablation: sketch kernel x buffering",
+        &["config", "workers", "rate_updates_per_sec"],
+    );
+    for (label, kernel, buffering) in configs {
+        let costs = measure_stage_costs(v, samples, kernel, buffering);
+        eprintln!(
+            "{label}: main {:.0} ns/u, worker {:.0} ns/u",
+            costs.main_per_update * 1e9,
+            costs.worker_per_update * 1e9
+        );
+        // the hypertree's thread-local levels parallelize across the
+        // main node's cores; the gutter's striped locks contend and its
+        // random per-update accesses serialize (GraphZeppelin "fails to
+        // scale beyond 80 threads", App. F.4) — model its main stage as
+        // non-scaling
+        let main_threads = if buffering == BufferingKind::Hypertree { 36 } else { 1 };
+        for workers in [1u32, 2, 4, 8, 16, 24, 32, 40] {
+            t.row(vec![
+                label.to_string(),
+                workers.to_string(),
+                format!(
+                    "{:.0}",
+                    costs.predict_rate_full(workers, 16, main_threads)
+                ),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 5: query-burst latency — the first query in a burst pays the
+/// flush + Borůvka cost; subsequent queries hit GreedyCC.
+pub fn fig5_query_bursts(quick: bool) -> Table {
+    let name = if quick { "kron10" } else { "kron11" };
+    let d = datasets::by_name(name).unwrap();
+    let v = d.model.num_vertices();
+    let mut cfg = CoordinatorConfig::for_vertices(v);
+    cfg.alpha = 1;
+    let mut coord = Coordinator::new(cfg).unwrap();
+
+    let mut t = Table::new(
+        "Fig 5 — query latency within bursts (seconds)",
+        &["burst", "query_in_burst", "kind", "latency_secs"],
+    );
+
+    let mut stream = d.stream();
+    let burst_gap = if quick { 400_000 } else { 2_000_000 };
+    let mut rng = Xoshiro256::new(3);
+    'outer: for burst in 0..4u32 {
+        // ingest a chunk of stream
+        for _ in 0..burst_gap {
+            match stream.next() {
+                Some(u) => coord.ingest(u),
+                None => {
+                    if burst == 0 {
+                        // stream too short for even one burst: still query
+                    }
+                    if burst > 0 {
+                        break 'outer;
+                    }
+                    break;
+                }
+            }
+        }
+        // burst of 5 queries: 1 forced-full + 4 accelerated
+        for q in 0..5u32 {
+            let pairs: Vec<(u32, u32)> = (0..64)
+                .map(|_| {
+                    let a = rng.next_below(v) as u32;
+                    let b = rng.next_below(v) as u32;
+                    (a, b)
+                })
+                .collect();
+            let sw = Stopwatch::new();
+            let kind = if q == 0 {
+                coord.full_connectivity_query();
+                "global(full)"
+            } else if q % 2 == 1 {
+                coord.connected_components();
+                "global(greedy)"
+            } else {
+                coord.reachability(&pairs);
+                "reachability(greedy)"
+            };
+            t.row(vec![
+                burst.to_string(),
+                q.to_string(),
+                kind.to_string(),
+                format!("{:.6}", sw.elapsed_secs()),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 16: single-machine Landscape vs GraphZeppelin-mode, thread
+/// sweep via the measured-cost model plus a real measured 1-thread run.
+pub fn fig16_single_machine(quick: bool) -> Table {
+    let name = if quick { "kron10" } else { "kron11" };
+    let d = datasets::by_name(name).unwrap();
+    let v = d.model.num_vertices();
+    let samples = if quick { 80_000 } else { 300_000 };
+
+    let landscape =
+        measure_stage_costs(v, samples, KernelKind::Cameo, BufferingKind::Hypertree);
+    let zeppelin = measure_stage_costs(v, samples, KernelKind::Cube, BufferingKind::Gutter);
+
+    let mut t = Table::new(
+        "Fig 16 — single-machine scaling (measured costs + model)",
+        &["system", "threads", "rate_updates_per_sec"],
+    );
+    for threads in [1u32, 2, 4, 8, 16, 32, 64, 96, 128, 192] {
+        // single machine: main-node work shares the same threads as
+        // delta computation — model as 1 worker with `threads` threads
+        // where the main stage parallelizes up to 4 ingest threads
+        let ls_main = landscape.main_per_update / (threads.min(4) as f64)
+            + landscape.merge_per_update;
+        let ls = 1.0 / ls_main.max(landscape.worker_per_update / threads as f64);
+        let gz_main =
+            zeppelin.main_per_update + zeppelin.merge_per_update; // gutter is contention-bound
+        let gz = 1.0 / gz_main.max(zeppelin.worker_per_update / threads as f64);
+        t.row(vec![
+            "landscape".to_string(),
+            threads.to_string(),
+            format!("{:.0}", ls),
+        ]);
+        t.row(vec![
+            "graphzeppelin-mode".to_string(),
+            threads.to_string(),
+            format!("{:.0}", gz),
+        ]);
+    }
+    t
+}
+
+/// Measured end-to-end single-core ingestion on a real coordinator —
+/// used by Fig. 3/16 narration and EXPERIMENTS.md.
+pub fn measured_ingestion_rate(dataset: &str, max_updates: u64) -> (u64, f64) {
+    let d = datasets::by_name(dataset).expect("unknown dataset");
+    let mut cfg = CoordinatorConfig::for_vertices(d.model.num_vertices());
+    cfg.alpha = 2;
+    cfg.use_greedycc = false;
+    let mut coord = Coordinator::new(cfg).unwrap();
+    let sw = Stopwatch::new();
+    let mut n = 0u64;
+    for u in d.stream() {
+        coord.ingest(u);
+        n += 1;
+        if n >= max_updates {
+            break;
+        }
+    }
+    coord.flush_pending(); // rate counts until sketches are current
+    (n, sw.elapsed_secs())
+}

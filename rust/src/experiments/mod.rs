@@ -1,0 +1,57 @@
+//! Experiment harnesses — one per table/figure in the paper's
+//! evaluation (see DESIGN.md "Per-experiment index").  Each returns a
+//! [`Table`] whose CSV regenerates the figure's data series; the
+//! `landscape bench <exp>` CLI and the `benches/` targets both call in
+//! here.
+
+pub mod figures;
+pub mod tables;
+
+pub use figures::*;
+pub use tables::*;
+
+use crate::benchkit::Table;
+
+/// Where CSV outputs land.
+pub fn results_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/results"))
+}
+
+/// Emit a table to stderr/stdout and `results/<name>.csv`.
+pub fn emit(table: &Table, name: &str) {
+    table.emit(Some(&results_dir().join(format!("{name}.csv"))));
+}
+
+/// Run an experiment by its CLI name.  Returns false if unknown.
+pub fn run_by_name(name: &str, quick: bool) -> bool {
+    match name {
+        "fig1" => emit(&figures::fig1_survey(), "fig1_survey"),
+        "fig3" => emit(&figures::fig3_scaling(quick), "fig3_scaling"),
+        "fig4" => emit(&figures::fig4_ablation(quick), "fig4_ablation"),
+        "fig5" => emit(&figures::fig5_query_bursts(quick), "fig5_query_bursts"),
+        "fig16" => emit(&figures::fig16_single_machine(quick), "fig16_single_machine"),
+        "table2" => emit(&tables::table2_datasets(quick), "table2_datasets"),
+        "table3" => emit(&tables::table3_ingestion(quick), "table3_ingestion"),
+        "table4" => emit(&tables::table4_kconn(quick), "table4_kconn"),
+        "table5" => emit(&tables::table5_kconn_all(quick), "table5_kconn_all"),
+        "table6" => emit(&tables::table6_success_prob(), "table6_success_prob"),
+        "correctness" => emit(&tables::correctness(quick), "correctness"),
+        "all" => {
+            for exp in [
+                "fig1", "table2", "table6", "fig3", "fig4", "fig5", "table3", "table4",
+                "fig16", "correctness",
+            ] {
+                eprintln!("\n### running {exp} ###");
+                run_by_name(exp, quick);
+            }
+        }
+        _ => return false,
+    }
+    true
+}
+
+/// Names accepted by [`run_by_name`].
+pub const EXPERIMENTS: &[&str] = &[
+    "fig1", "fig3", "fig4", "fig5", "fig16", "table2", "table3", "table4", "table5",
+    "table6", "correctness", "all",
+];

@@ -1,0 +1,316 @@
+//! Table harnesses: Table 2 (datasets), Table 3 (ingestion + comm),
+//! Table 4/5 (k-connectivity), Table 6 (success probability), and the
+//! App. F.2 correctness experiment.
+
+use crate::analysis::success_prob;
+use crate::baseline::Referee;
+use crate::benchkit::{fmt_bytes, fmt_rate, Table};
+use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::stream::datasets::{self, Dataset};
+use crate::stream::{count_edges, EdgeModel};
+use crate::util::timer::Stopwatch;
+
+/// Table 2: the dataset inventory (scaled stand-ins; exact edge counts
+/// for small models, expected counts for the rest).
+pub fn table2_datasets(quick: bool) -> Table {
+    let mut t = Table::new(
+        "Table 2 — datasets (scaled; see DESIGN.md)",
+        &["name", "stands_for", "vertices", "edges", "stream_updates"],
+    );
+    let names = if quick {
+        datasets::quick_names()
+    } else {
+        datasets::all_names()
+    };
+    for name in names {
+        let d = datasets::by_name(name).unwrap();
+        let v = d.model.num_vertices();
+        // exact count affordable below ~2^24 candidate pairs
+        let edges = if v * v <= (1 << 24) {
+            count_edges(&d.model) as f64
+        } else {
+            d.model.expected_edges()
+        };
+        t.row(vec![
+            d.name.to_string(),
+            d.paper_name.to_string(),
+            v.to_string(),
+            format!("{edges:.3e}"),
+            format!("{:.3e}", edges * d.repeats as f64),
+        ]);
+    }
+    t
+}
+
+/// One measured coordinator run over (a prefix of) a dataset stream.
+pub struct RunResult {
+    pub updates: u64,
+    pub seconds: f64,
+    pub comm_factor: f64,
+    pub sketch_bytes: usize,
+    pub query_secs: f64,
+    pub network_bytes: u64,
+}
+
+/// Drive a full ingest + final query run.
+pub fn run_dataset(d: &Dataset, k: u32, max_updates: u64) -> RunResult {
+    let mut cfg = CoordinatorConfig::for_vertices(d.model.num_vertices());
+    cfg.k = k;
+    cfg.alpha = 1;
+    cfg.use_greedycc = false; // measure the sketch path, as the paper does
+    let mut coord = Coordinator::new(cfg).unwrap();
+
+    let sw = Stopwatch::new();
+    let mut n = 0u64;
+    for u in d.stream() {
+        coord.ingest(u);
+        n += 1;
+        if n >= max_updates {
+            break;
+        }
+    }
+    // the paper's metric: wall clock until all updates are *applied to
+    // the sketches*, i.e. including the drain of in-flight batches
+    coord.flush_pending();
+    let ingest_secs = sw.elapsed_secs();
+
+    let qsw = Stopwatch::new();
+    if k == 1 {
+        let _ = coord.full_connectivity_query();
+    } else {
+        let _ = coord.k_connectivity();
+    }
+    let query_secs = qsw.elapsed_secs();
+
+    let m = coord.metrics();
+    RunResult {
+        updates: n,
+        seconds: ingest_secs,
+        comm_factor: m.communication_factor(),
+        sketch_bytes: coord.sketch_bytes(),
+        query_secs,
+        network_bytes: m.network_bytes(),
+    }
+}
+
+/// Table 3: ingestion rate + communication factor per dataset
+/// (single-core measured; the paper's 640-thread rates scale per Fig. 3).
+pub fn table3_ingestion(quick: bool) -> Table {
+    let names = if quick {
+        datasets::quick_names()
+    } else {
+        datasets::all_names()
+    };
+    let cap = if quick { 2_000_000 } else { 20_000_000 };
+    let mut t = Table::new(
+        "Table 3 — ingestion rate and communication factor (measured)",
+        &[
+            "dataset",
+            "updates",
+            "rate_updates_per_sec",
+            "comm_factor",
+            "sketch_bytes",
+        ],
+    );
+    for name in names {
+        let d = datasets::by_name(name).unwrap();
+        let r = run_dataset(&d, 1, cap);
+        eprintln!(
+            "{name}: {} updates at {} (comm {:.2}x, sketch {})",
+            r.updates,
+            fmt_rate(r.updates as f64 / r.seconds),
+            r.comm_factor,
+            fmt_bytes(r.sketch_bytes as f64),
+        );
+        t.row(vec![
+            name.to_string(),
+            r.updates.to_string(),
+            format!("{:.0}", r.updates as f64 / r.seconds),
+            format!("{:.3}", r.comm_factor),
+            r.sketch_bytes.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Table 4: k-connectivity scaling in k on one kron dataset.
+pub fn table4_kconn(quick: bool) -> Table {
+    let name = if quick { "kron10" } else { "kron11" };
+    let d = datasets::by_name(name).unwrap();
+    let cap = if quick { 1_500_000 } else { 8_000_000 };
+    let mut t = Table::new(
+        "Table 4 — k-connectivity vs k (measured)",
+        &[
+            "k",
+            "rate_updates_per_sec",
+            "sketch_bytes",
+            "query_secs",
+            "network_bytes",
+        ],
+    );
+    for k in [1u32, 2, 4, 8] {
+        let r = run_dataset(&d, k, cap);
+        eprintln!(
+            "k={k}: rate {}, sketch {}, query {:.3}s, net {}",
+            fmt_rate(r.updates as f64 / r.seconds),
+            fmt_bytes(r.sketch_bytes as f64),
+            r.query_secs,
+            fmt_bytes(r.network_bytes as f64),
+        );
+        t.row(vec![
+            k.to_string(),
+            format!("{:.0}", r.updates as f64 / r.seconds),
+            r.sketch_bytes.to_string(),
+            format!("{:.4}", r.query_secs),
+            r.network_bytes.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Table 5: k-connectivity across datasets.
+pub fn table5_kconn_all(quick: bool) -> Table {
+    let names = if quick {
+        &["kron10", "gnutella", "googleplus"][..]
+    } else {
+        datasets::quick_names()
+    };
+    let cap = if quick { 1_000_000 } else { 4_000_000 };
+    let mut t = Table::new(
+        "Table 5 — k-connectivity across datasets (measured)",
+        &["dataset", "k", "rate_updates_per_sec", "sketch_bytes", "query_secs"],
+    );
+    for name in names {
+        for k in [1u32, 2, 4] {
+            let d = datasets::by_name(name).unwrap();
+            let r = run_dataset(&d, k, cap);
+            t.row(vec![
+                name.to_string(),
+                k.to_string(),
+                format!("{:.0}", r.updates as f64 / r.seconds),
+                r.sketch_bytes.to_string(),
+                format!("{:.4}", r.query_secs),
+            ]);
+        }
+    }
+    t
+}
+
+/// Table 6: CameoSketch column success probability — analytic recurrence
+/// + Monte-Carlo cross-check with the real update rule.
+pub fn table6_success_prob() -> Table {
+    let mut t = Table::new(
+        "Table 6 — CameoSketch column success probability (10 buckets)",
+        &["nonzeros", "recurrence_F", "monte_carlo"],
+    );
+    for (z, f) in success_prob::table6_rows() {
+        let mc = success_prob::monte_carlo_success(z, 10, 60_000, 0xCAFE);
+        t.row(vec![
+            z.to_string(),
+            format!("{f:.4}"),
+            format!("{mc:.4}"),
+        ]);
+    }
+    t
+}
+
+/// App. F.2 correctness: the sketched spanning forest must induce the
+/// exact component partition, across repeated randomized trials.
+pub fn correctness(quick: bool) -> Table {
+    let trials = if quick { 10 } else { 100 };
+    let names = ["kron10", "gnutella-small", "erdos11"];
+    let mut t = Table::new(
+        "App F.2 — correctness trials (sketch partition vs exact referee)",
+        &["dataset", "trials", "failures"],
+    );
+    for name in names {
+        let mut failures = 0;
+        for trial in 0..trials {
+            // smaller stand-ins so many trials stay fast
+            let (v, model): (u64, Box<dyn EdgeModel>) = match name {
+                "kron10" => (
+                    1 << 10,
+                    Box::new(crate::stream::kron::Kronecker::paper(10, trial as u64)),
+                ),
+                "gnutella-small" => (
+                    4096,
+                    Box::new(crate::stream::realworld::SparseRandom::new(
+                        4096,
+                        4.8,
+                        trial as u64,
+                    )),
+                ),
+                _ => (
+                    1 << 11,
+                    Box::new(crate::stream::erdos::ErdosRenyi::new(
+                        1 << 11,
+                        0.25,
+                        trial as u64,
+                    )),
+                ),
+            };
+
+            let mut cfg = CoordinatorConfig::for_vertices(v);
+            cfg.graph_seed = 0xBEEF ^ (trial as u64) << 8;
+            cfg.alpha = 1;
+            cfg.use_greedycc = false;
+            let mut coord = Coordinator::new(cfg).unwrap();
+            let mut referee = Referee::new(v);
+            let stream = crate::stream::dynamify::Dynamify::new(ModelRef(&*model), 3);
+            for u in stream {
+                referee.apply(&u);
+                coord.ingest(u);
+            }
+            let forest = coord.full_connectivity_query();
+            if !Referee::same_partition(&forest.component, &referee.component_map()) {
+                failures += 1;
+            }
+        }
+        eprintln!("{name}: {failures}/{trials} failures");
+        t.row(vec![name.to_string(), trials.to_string(), failures.to_string()]);
+    }
+    t
+}
+
+/// Borrowed-model adapter for Dynamify.
+struct ModelRef<'a>(&'a dyn EdgeModel);
+impl<'a> EdgeModel for ModelRef<'a> {
+    fn num_vertices(&self) -> u64 {
+        self.0.num_vertices()
+    }
+    fn contains(&self, a: u32, b: u32) -> bool {
+        self.0.contains(a, b)
+    }
+    fn expected_edges(&self) -> f64 {
+        self.0.expected_edges()
+    }
+}
+
+/// The adjacency-matrix comparison of §2.1 (used by the micro bench and
+/// EXPERIMENTS.md): raw update throughput of bit-flips vs sketch
+/// ingestion, plus the space crossover.
+pub fn adjacency_matrix_comparison(v: u64, updates: u64) -> (f64, f64) {
+    use crate::baseline::AdjacencyMatrix;
+    use crate::stream::update::Update;
+    let mut m = AdjacencyMatrix::new(v);
+    let mut rng = crate::util::rng::Xoshiro256::new(1);
+    let ups: Vec<Update> = (0..updates)
+        .map(|_| {
+            let a = rng.next_below(v - 1) as u32;
+            let b = a + 1 + rng.next_below(v - 1 - a as u64) as u32;
+            Update::insert(a, b)
+        })
+        .collect();
+    let sw = Stopwatch::new();
+    for u in &ups {
+        m.apply(u);
+    }
+    let matrix_rate = updates as f64 / sw.elapsed_secs();
+    std::hint::black_box(&m);
+
+    let (n, secs) = crate::experiments::figures::measured_ingestion_rate(
+        "kron10",
+        updates.min(2_000_000),
+    );
+    (matrix_rate, n as f64 / secs)
+}

@@ -1,0 +1,180 @@
+//! GraphZeppelin-style "gutter" buffering — the ablation baseline for
+//! Fig. 4 / Fig. 16.
+//!
+//! GraphZeppelin's in-RAM buffering writes each update directly into a
+//! per-vertex gutter behind a striped lock: one shared-map access (≈ one
+//! cache miss) and one lock acquisition *per update*, versus the
+//! pipeline hypertree's bulk cascades.  The interface matches the
+//! hypertree's so the coordinator can swap them (`BufferKind::Gutter`).
+
+use std::sync::{Arc, Mutex};
+
+use crate::hypertree::{BatchSink, VertexBatch};
+use crate::metrics::Metrics;
+
+/// Per-vertex gutters behind striped mutexes.
+pub struct GutterBuffer {
+    vertices: u64,
+    leaf_capacity: usize,
+    stripes: Vec<Mutex<Vec<Vec<u32>>>>,
+    stripe_size: usize,
+    metrics: Arc<Metrics>,
+}
+
+impl GutterBuffer {
+    pub fn new(
+        vertices: u64,
+        leaf_capacity: usize,
+        num_stripes: usize,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        let stripe_size = crate::util::div_ceil(vertices as usize, num_stripes.max(1));
+        let stripes = (0..num_stripes.max(1))
+            .map(|s| {
+                let start = s * stripe_size;
+                let size = stripe_size.min((vertices as usize).saturating_sub(start));
+                Mutex::new((0..size).map(|_| Vec::new()).collect())
+            })
+            .collect();
+        Self {
+            vertices,
+            leaf_capacity,
+            stripes,
+            stripe_size,
+            metrics,
+        }
+    }
+
+    /// Insert one (destination, other-endpoint) entry — one lock + one
+    /// random gutter access per update (the baseline's bottleneck by
+    /// design).
+    pub fn insert<S: BatchSink>(&self, dest: u32, other: u32, sink: &S) {
+        let stripe = dest as usize / self.stripe_size;
+        let slot = dest as usize % self.stripe_size;
+        let mut gutters = self.stripes[stripe].lock().unwrap();
+        let gutter = &mut gutters[slot];
+        if gutter.capacity() == 0 {
+            gutter.reserve_exact(self.leaf_capacity);
+        }
+        gutter.push(other);
+        self.metrics
+            .hypertree_moves
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if gutter.len() >= self.leaf_capacity {
+            let full = std::mem::take(gutter);
+            sink.full_batch(VertexBatch {
+                vertex: dest,
+                others: full,
+            });
+        }
+    }
+
+    /// Flush everything; leaves ≥ `gamma` ship as batches, rest local —
+    /// same hybrid policy as the hypertree so comparisons are fair.
+    pub fn force_flush<S: BatchSink>(&self, gamma: f64, sink: &S) {
+        let threshold = ((self.leaf_capacity as f64 * gamma).ceil() as usize).max(1);
+        for (s, stripe) in self.stripes.iter().enumerate() {
+            let mut gutters = stripe.lock().unwrap();
+            for (i, gutter) in gutters.iter_mut().enumerate() {
+                if gutter.is_empty() {
+                    continue;
+                }
+                let vertex = (s * self.stripe_size + i) as u32;
+                if gutter.len() >= threshold {
+                    sink.full_batch(VertexBatch {
+                        vertex,
+                        others: std::mem::take(gutter),
+                    });
+                } else {
+                    sink.local_batch(vertex, gutter);
+                    gutter.clear();
+                }
+            }
+        }
+    }
+
+    pub fn vertices(&self) -> u64 {
+        self.vertices
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex as StdMutex;
+
+    #[derive(Default)]
+    struct Collect {
+        full: StdMutex<Vec<VertexBatch>>,
+        local: StdMutex<Vec<(u32, Vec<u32>)>>,
+    }
+
+    impl BatchSink for Collect {
+        fn full_batch(&self, b: VertexBatch) {
+            self.full.lock().unwrap().push(b);
+        }
+        fn local_batch(&self, v: u32, others: &[u32]) {
+            self.local.lock().unwrap().push((v, others.to_vec()));
+        }
+    }
+
+    #[test]
+    fn capacity_triggers_batches() {
+        let g = GutterBuffer::new(16, 4, 2, Arc::new(Metrics::new()));
+        let sink = Collect::default();
+        for i in 0..10u32 {
+            g.insert(3, i + 1, &sink);
+        }
+        g.force_flush(1.0, &sink);
+        let full = sink.full.lock().unwrap();
+        assert_eq!(full.len(), 2);
+        assert!(full.iter().all(|b| b.vertex == 3 && b.others.len() == 4));
+        assert_eq!(sink.local.lock().unwrap()[0].1.len(), 2);
+    }
+
+    #[test]
+    fn nothing_lost() {
+        let g = GutterBuffer::new(64, 7, 4, Arc::new(Metrics::new()));
+        let sink = Collect::default();
+        for i in 0..1000u32 {
+            g.insert(i % 64, i + 1, &sink);
+        }
+        g.force_flush(0.0, &sink);
+        let total: usize = sink
+            .full
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|b| b.others.len())
+            .sum();
+        assert_eq!(total, 1000);
+    }
+
+    #[test]
+    fn threads_contend_but_stay_correct() {
+        let g = Arc::new(GutterBuffer::new(32, 8, 2, Arc::new(Metrics::new())));
+        let sink = Arc::new(Collect::default());
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let g2 = g.clone();
+            let s2 = sink.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..2500u64 {
+                    g2.insert(((t * 2500 + i) % 32) as u32, (t * 2500 + i + 1) as u32, &*s2);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        g.force_flush(0.0, &*sink);
+        let total: usize = sink
+            .full
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|b| b.others.len())
+            .sum();
+        assert_eq!(total, 10_000);
+    }
+}

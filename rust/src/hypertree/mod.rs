@@ -1,0 +1,457 @@
+//! The pipeline hypertree (paper §5.1.2, App. C): a simplified, parallel
+//! buffer-tree variant that consolidates arbitrarily ordered stream
+//! updates into *vertex-based batches* while minimizing cache misses and
+//! thread contention.
+//!
+//! Topology (mirroring App. E.2's parameters, scaled by config):
+//!
+//! * **Thread-local levels** — each ingest thread owns a level-0 buffer
+//!   and a fan-out of level-1 buckets; no synchronization.
+//! * **Global group nodes** — one per `group_size` consecutive vertices,
+//!   mutex-protected, each owning its group's **leaves** (one per
+//!   vertex).  Entries are appended in bulk, so the amortized cost of
+//!   placing one update is far below one cache miss per update.
+//! * **Leaves** — per-vertex gutters of `leaf_capacity` edge indices; a
+//!   full leaf becomes a [`VertexBatch`] handed to the sink (the work
+//!   queue in the full system).
+//!
+//! `force_flush` implements the γ-fullness hybrid policy of §5.3: leaves
+//! at least `γ`-full are emitted as batches for distributed processing,
+//! the rest are handed back for local processing on the main node.
+
+pub mod node;
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::Metrics;
+use node::GroupNode;
+
+/// A vertex-based batch: all buffered updates incident to `vertex`,
+/// each stored as the *other* endpoint only — the edge (vertex, other)
+/// is reconstructed by the worker.  4 bytes per update is what keeps
+/// the communication factor near the paper's 1.6× (§5.1.1).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VertexBatch {
+    pub vertex: u32,
+    pub others: Vec<u32>,
+}
+
+impl VertexBatch {
+    /// Wire size of the batch message (vertex + count + endpoints).
+    pub fn wire_bytes(&self) -> u64 {
+        8 + self.others.len() as u64 * 4
+    }
+}
+
+/// Where completed batches go.
+pub trait BatchSink {
+    /// A leaf reached capacity (or was ≥γ-full at a force flush).
+    fn full_batch(&self, batch: VertexBatch);
+    /// An underfull leaf at force-flush time: process locally (§5.3).
+    fn local_batch(&self, vertex: u32, others: &[u32]);
+}
+
+/// Hypertree shape parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct HypertreeConfig {
+    pub vertices: u64,
+    /// Leaf capacity in updates (the vertex-based batch size α·φ).
+    pub leaf_capacity: usize,
+    /// Level-0 buffer entries per thread.
+    pub l0_capacity: usize,
+    /// Level-1 fan-out per thread.
+    pub l1_fanout: usize,
+    /// Level-1 bucket entries.
+    pub l1_capacity: usize,
+    /// Vertices per global group node.
+    pub group_size: usize,
+    /// Buffered entries per group node before flushing into leaves.
+    pub group_capacity: usize,
+}
+
+impl HypertreeConfig {
+    /// Defaults scaled from the paper's App. E.2 parameters.
+    pub fn for_vertices(vertices: u64, leaf_capacity: usize) -> Self {
+        Self {
+            vertices,
+            leaf_capacity,
+            l0_capacity: 1024,
+            l1_fanout: 16,
+            l1_capacity: 1024,
+            group_size: 64,
+            group_capacity: 8192,
+        }
+    }
+
+    fn num_groups(&self) -> usize {
+        crate::util::div_ceil(self.vertices as usize, self.group_size)
+    }
+}
+
+/// The shared (global-level) part of the hypertree.
+pub struct Hypertree {
+    config: HypertreeConfig,
+    groups: Vec<Mutex<GroupNode>>,
+    metrics: Arc<Metrics>,
+}
+
+impl Hypertree {
+    pub fn new(config: HypertreeConfig, metrics: Arc<Metrics>) -> Self {
+        let groups = (0..config.num_groups())
+            .map(|g| {
+                let start = g * config.group_size;
+                let size = config
+                    .group_size
+                    .min(config.vertices as usize - start);
+                Mutex::new(GroupNode::new(size, config.leaf_capacity))
+            })
+            .collect();
+        Self {
+            config,
+            groups,
+            metrics,
+        }
+    }
+
+    pub fn config(&self) -> &HypertreeConfig {
+        &self.config
+    }
+
+    /// Create a per-thread ingestion handle.
+    pub fn local(self: &Arc<Self>) -> LocalIngest {
+        LocalIngest::new(self.clone())
+    }
+
+    /// Total buffered bytes across global nodes + leaves (space audit).
+    pub fn buffered_bytes(&self) -> usize {
+        self.groups
+            .iter()
+            .map(|g| g.lock().unwrap().buffered_bytes())
+            .sum()
+    }
+
+    #[inline]
+    fn group_of(&self, dest: u32) -> usize {
+        dest as usize / self.config.group_size
+    }
+
+    /// Append a run of same-group entries to the group node; cascades
+    /// into leaves and emits full batches.
+    fn push_group_run<S: BatchSink>(&self, group: usize, run: &[(u32, u32)], sink: &S) {
+        let mut node = self.groups[group].lock().unwrap();
+        let base = (group * self.config.group_size) as u32;
+        self.metrics
+            .hypertree_moves
+            .fetch_add(run.len() as u64, Ordering::Relaxed);
+        node.append(run, base);
+        if node.buffered() >= self.config.group_capacity {
+            self.flush_group_node(&mut node, base, sink);
+        }
+    }
+
+    fn flush_group_node<S: BatchSink>(&self, node: &mut GroupNode, base: u32, sink: &S) {
+        self.metrics
+            .hypertree_moves
+            .fetch_add(node.buffered() as u64, Ordering::Relaxed);
+        node.flush_to_leaves(base, self.config.leaf_capacity, &mut |vertex, others| {
+            sink.full_batch(VertexBatch { vertex, others });
+        });
+    }
+
+    /// Force-flush every group node and leaf (the query barrier, §5.3).
+    ///
+    /// Leaves at least `gamma`-full ship as batches; underfull leaves go
+    /// through `sink.local_batch` for main-node processing.
+    pub fn force_flush<S: BatchSink>(&self, gamma: f64, sink: &S) {
+        for (g, group) in self.groups.iter().enumerate() {
+            let base = (g * self.config.group_size) as u32;
+            let mut node = group.lock().unwrap();
+            self.flush_group_node(&mut node, base, sink);
+            node.drain_leaves(
+                base,
+                (self.config.leaf_capacity as f64 * gamma).ceil() as usize,
+                &mut |vertex, others| {
+                    sink.full_batch(VertexBatch {
+                        vertex,
+                        others: others.to_vec(),
+                    });
+                },
+                &mut |vertex, others| {
+                    sink.local_batch(vertex, others);
+                },
+            );
+        }
+    }
+}
+
+/// Per-thread ingestion handle: the thread-local hypertree levels.
+pub struct LocalIngest {
+    tree: Arc<Hypertree>,
+    l0: Vec<(u32, u32)>,
+    l1: Vec<Vec<(u32, u32)>>,
+    /// scratch for grouping runs by destination group
+    scratch: Vec<(u32, u32)>,
+}
+
+impl LocalIngest {
+    fn new(tree: Arc<Hypertree>) -> Self {
+        let l0 = Vec::with_capacity(tree.config.l0_capacity);
+        let l1 = (0..tree.config.l1_fanout)
+            .map(|_| Vec::with_capacity(tree.config.l1_capacity))
+            .collect();
+        Self {
+            tree,
+            l0,
+            l1,
+            scratch: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn l1_bucket(&self, dest: u32) -> usize {
+        // route by destination so each bucket covers a contiguous range
+        (dest as u64 as usize * self.tree.config.l1_fanout)
+            / self.tree.config.vertices as usize
+    }
+
+    /// Insert one (destination, other-endpoint) entry.
+    #[inline]
+    pub fn insert<S: BatchSink>(&mut self, dest: u32, other: u32, sink: &S) {
+        self.l0.push((dest, other));
+        if self.l0.len() >= self.tree.config.l0_capacity {
+            self.flush_l0(sink);
+        }
+    }
+
+    fn flush_l0<S: BatchSink>(&mut self, sink: &S) {
+        self.tree
+            .metrics
+            .hypertree_moves
+            .fetch_add(self.l0.len() as u64, Ordering::Relaxed);
+        // move entries into their level-1 bucket; flush buckets that fill
+        let cap = self.tree.config.l1_capacity;
+        for i in 0..self.l0.len() {
+            let (dest, other) = self.l0[i];
+            let b = self.l1_bucket(dest);
+            self.l1[b].push((dest, other));
+            if self.l1[b].len() >= cap {
+                self.flush_l1_bucket(b, sink);
+            }
+        }
+        self.l0.clear();
+    }
+
+    fn flush_l1_bucket<S: BatchSink>(&mut self, bucket: usize, sink: &S) {
+        // group entries by destination group, then push each run with a
+        // single lock acquisition per group
+        self.scratch.clear();
+        self.scratch.append(&mut self.l1[bucket]);
+        let gs = self.tree.config.group_size as u32;
+        self.scratch.sort_unstable_by_key(|&(d, _)| d / gs);
+        let mut start = 0;
+        while start < self.scratch.len() {
+            let group = self.tree.group_of(self.scratch[start].0);
+            let mut end = start + 1;
+            while end < self.scratch.len() && self.tree.group_of(self.scratch[end].0) == group
+            {
+                end += 1;
+            }
+            self.tree
+                .push_group_run(group, &self.scratch[start..end], sink);
+            start = end;
+        }
+    }
+
+    /// Drain every thread-local buffer into the global levels.
+    pub fn flush<S: BatchSink>(&mut self, sink: &S) {
+        self.flush_l0(sink);
+        for b in 0..self.l1.len() {
+            if !self.l1[b].is_empty() {
+                self.flush_l1_bucket(b, sink);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex as StdMutex;
+
+    /// Collects everything for assertions.
+    #[derive(Default)]
+    struct Collect {
+        full: StdMutex<Vec<VertexBatch>>,
+        local: StdMutex<Vec<(u32, Vec<u32>)>>,
+    }
+
+    impl BatchSink for Collect {
+        fn full_batch(&self, batch: VertexBatch) {
+            self.full.lock().unwrap().push(batch);
+        }
+        fn local_batch(&self, vertex: u32, others: &[u32]) {
+            self.local
+                .lock()
+                .unwrap()
+                .push((vertex, others.to_vec()));
+        }
+    }
+
+    fn tree(v: u64, leaf_cap: usize) -> Arc<Hypertree> {
+        let mut cfg = HypertreeConfig::for_vertices(v, leaf_cap);
+        // small internal buffers so tests exercise the cascades
+        cfg.l0_capacity = 8;
+        cfg.l1_capacity = 16;
+        cfg.group_capacity = 32;
+        cfg.group_size = 16;
+        Arc::new(Hypertree::new(cfg, Arc::new(Metrics::new())))
+    }
+
+    #[test]
+    fn nothing_lost_between_insert_and_flush() {
+        let t = tree(64, 10);
+        let sink = Collect::default();
+        let mut local = t.local();
+        let mut want: Vec<(u32, u32)> = Vec::new();
+        for i in 0..500u32 {
+            let dest = i % 64;
+            let other = i + 1;
+            local.insert(dest, other, &sink);
+            want.push((dest, other));
+        }
+        local.flush(&sink);
+        t.force_flush(0.0, &sink); // gamma 0: everything ships as batches
+
+        let mut got: Vec<(u32, u32)> = Vec::new();
+        for b in sink.full.lock().unwrap().iter() {
+            for &other in &b.others {
+                got.push((b.vertex, other));
+            }
+        }
+        want.sort_unstable();
+        got.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn full_leaves_emit_batches_of_capacity() {
+        let t = tree(64, 10);
+        let sink = Collect::default();
+        let mut local = t.local();
+        // 35 updates for vertex 3: expect 3 full batches of 10 + 5 leftover
+        for i in 0..35u32 {
+            local.insert(3, i + 1, &sink);
+        }
+        local.flush(&sink);
+        t.force_flush(1.0, &sink); // gamma 1.0: leftovers go local
+        let full = sink.full.lock().unwrap();
+        assert_eq!(full.len(), 3);
+        assert!(full.iter().all(|b| b.vertex == 3 && b.others.len() == 10));
+        let local_out = sink.local.lock().unwrap();
+        assert_eq!(local_out.len(), 1);
+        assert_eq!(local_out[0].1.len(), 5);
+    }
+
+    #[test]
+    fn gamma_policy_splits_by_fullness() {
+        let t = tree(64, 10);
+        let sink = Collect::default();
+        let mut local = t.local();
+        // vertex 1: 6 updates (>= 50% full), vertex 2: 2 updates (< 50%)
+        for i in 0..6u32 {
+            local.insert(1, 100 + i, &sink);
+        }
+        for i in 0..2u32 {
+            local.insert(2, 200 + i, &sink);
+        }
+        local.flush(&sink);
+        t.force_flush(0.5, &sink);
+        let full = sink.full.lock().unwrap();
+        let local_out = sink.local.lock().unwrap();
+        assert_eq!(full.len(), 1);
+        assert_eq!(full[0].vertex, 1);
+        assert_eq!(local_out.len(), 1);
+        assert_eq!(local_out[0].0, 2);
+    }
+
+    #[test]
+    fn multithreaded_ingest_loses_nothing() {
+        let t = tree(256, 32);
+        let sink = Arc::new(Collect::default());
+        let threads = 4;
+        let per_thread = 5_000u64;
+        let mut handles = Vec::new();
+        for tid in 0..threads {
+            let t2 = t.clone();
+            let s2 = sink.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut local = t2.local();
+                for i in 0..per_thread {
+                    let dest = ((tid * per_thread + i) % 256) as u32;
+                    local.insert(dest, (tid * per_thread + i + 1) as u32, &*s2);
+                }
+                local.flush(&*s2);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        t.force_flush(0.0, &*sink);
+        let total: usize = sink
+            .full
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|b| b.others.len())
+            .sum();
+        assert_eq!(total as u64, threads * per_thread);
+    }
+
+    #[test]
+    fn batches_only_contain_their_vertex() {
+        let t = tree(64, 8);
+        let sink = Collect::default();
+        let mut local = t.local();
+        for i in 0..1000u32 {
+            local.insert(i % 61, i + 1, &sink);
+        }
+        local.flush(&sink);
+        t.force_flush(0.0, &sink);
+        // values were assigned round-robin: other-1 mod 61 == vertex
+        for b in sink.full.lock().unwrap().iter() {
+            for &other in &b.others {
+                assert_eq!((other - 1) % 61, b.vertex);
+            }
+        }
+    }
+
+    #[test]
+    fn wire_bytes_accounting() {
+        let b = VertexBatch {
+            vertex: 1,
+            others: vec![1, 2, 3],
+        };
+        assert_eq!(b.wire_bytes(), 8 + 12);
+    }
+
+    #[test]
+    fn moves_per_update_is_logarithmic_not_linear() {
+        // amortized moves/update should be a small constant (~tree depth)
+        let t = tree(256, 64);
+        let sink = Collect::default();
+        let mut local = t.local();
+        let n = 50_000u64;
+        for i in 0..n {
+            local.insert((i % 256) as u32, (i + 1) as u32, &sink);
+        }
+        local.flush(&sink);
+        t.force_flush(0.0, &sink);
+        let moves = t.metrics.hypertree_moves.load(Ordering::Relaxed);
+        let per_update = moves as f64 / n as f64;
+        assert!(
+            per_update < 6.0,
+            "moves per update {per_update} (expected ~tree depth)"
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! Global group nodes: the shared levels of the pipeline hypertree.
+//!
+//! A group node buffers entries for `group_size` consecutive vertices
+//! and owns those vertices' leaves.  One mutex covers both, so a flush
+//! from buffer to leaves is a single-lock bulk operation.
+
+/// One global node + its leaves.
+pub struct GroupNode {
+    /// (dest, idx) entries not yet routed to leaves.
+    buffer: Vec<(u32, u32)>,
+    /// Per-vertex gutters, indexed by `dest - base`.
+    leaves: Vec<Vec<u32>>,
+}
+
+impl GroupNode {
+    pub fn new(group_size: usize, _leaf_capacity: usize) -> Self {
+        Self {
+            buffer: Vec::new(),
+            leaves: (0..group_size).map(|_| Vec::new()).collect(),
+        }
+    }
+
+    /// Entries currently buffered (not yet in leaves).
+    pub fn buffered(&self) -> usize {
+        self.buffer.len()
+    }
+
+    /// Bytes held by this node (buffer + leaves) for the space audit.
+    pub fn buffered_bytes(&self) -> usize {
+        self.buffer.len() * 8
+            + self
+                .leaves
+                .iter()
+                .map(|l| l.len() * 4)
+                .sum::<usize>()
+    }
+
+    /// Bulk-append a run of entries destined for this group.
+    pub fn append(&mut self, run: &[(u32, u32)], base: u32) {
+        debug_assert!(run
+            .iter()
+            .all(|&(d, _)| (d - base) < self.leaves.len() as u32));
+        self.buffer.extend_from_slice(run);
+        let _ = base;
+    }
+
+    /// Route all buffered entries into leaves; emit each leaf that
+    /// reaches `leaf_capacity` through `emit(vertex, indices)`.
+    pub fn flush_to_leaves(
+        &mut self,
+        base: u32,
+        leaf_capacity: usize,
+        emit: &mut dyn FnMut(u32, Vec<u32>),
+    ) {
+        for i in 0..self.buffer.len() {
+            let (dest, other) = self.buffer[i];
+            let slot = (dest - base) as usize;
+            let leaf = &mut self.leaves[slot];
+            if leaf.capacity() == 0 {
+                leaf.reserve_exact(leaf_capacity);
+            }
+            leaf.push(other);
+            if leaf.len() >= leaf_capacity {
+                let full = std::mem::take(leaf);
+                emit(dest, full);
+            }
+        }
+        self.buffer.clear();
+    }
+
+    /// Drain all leaves (after a [`Self::flush_to_leaves`]).  Leaves with
+    /// at least `gamma_threshold` entries ship via `emit_full`; the rest
+    /// go through `emit_local` (paper §5.3's hybrid policy).
+    pub fn drain_leaves(
+        &mut self,
+        base: u32,
+        gamma_threshold: usize,
+        emit_full: &mut dyn FnMut(u32, &[u32]),
+        emit_local: &mut dyn FnMut(u32, &[u32]),
+    ) {
+        for (slot, leaf) in self.leaves.iter_mut().enumerate() {
+            if leaf.is_empty() {
+                continue;
+            }
+            let vertex = base + slot as u32;
+            if leaf.len() >= gamma_threshold.max(1) {
+                emit_full(vertex, leaf);
+            } else {
+                emit_local(vertex, leaf);
+            }
+            leaf.clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_then_flush_routes_by_vertex() {
+        let mut node = GroupNode::new(4, 100);
+        node.append(&[(10, 1), (11, 2), (10, 3)], 10);
+        let mut emitted = Vec::new();
+        node.flush_to_leaves(10, 100, &mut |v, idx| emitted.push((v, idx)));
+        assert!(emitted.is_empty(), "capacity not reached");
+        let mut full = Vec::new();
+        let mut local = Vec::new();
+        node.drain_leaves(
+            10,
+            3,
+            &mut |v, idx| full.push((v, idx.to_vec())),
+            &mut |v, idx| local.push((v, idx.to_vec())),
+        );
+        assert!(full.is_empty());
+        assert_eq!(local.len(), 2);
+        assert!(local.contains(&(10, vec![1, 3])));
+        assert!(local.contains(&(11, vec![2])));
+    }
+
+    #[test]
+    fn leaf_capacity_triggers_emit() {
+        let mut node = GroupNode::new(2, 100);
+        let entries: Vec<(u32, u32)> = (0..7).map(|i| (0u32, i + 1)).collect();
+        node.append(&entries, 0);
+        let mut emitted = Vec::new();
+        node.flush_to_leaves(0, 3, &mut |v, idx| emitted.push((v, idx)));
+        assert_eq!(emitted.len(), 2); // two full leaves of 3; 1 remains
+        assert!(emitted.iter().all(|(v, idx)| *v == 0 && idx.len() == 3));
+    }
+
+    #[test]
+    fn drain_is_idempotent() {
+        let mut node = GroupNode::new(2, 10);
+        node.append(&[(1, 5)], 0);
+        node.flush_to_leaves(0, 10, &mut |_, _| {});
+        let count = std::cell::Cell::new(0);
+        node.drain_leaves(0, 1, &mut |_, _| count.set(count.get() + 1), &mut |_, _| {
+            count.set(count.get() + 1)
+        });
+        assert_eq!(count.get(), 1);
+        count.set(0);
+        node.drain_leaves(0, 1, &mut |_, _| count.set(count.get() + 1), &mut |_, _| {
+            count.set(count.get() + 1)
+        });
+        assert_eq!(count.get(), 0);
+    }
+}

@@ -1,0 +1,61 @@
+//! # Landscape — distributed graph-stream sketching
+//!
+//! A reproduction of *"Exploring the Landscape of Distributed Graph
+//! Sketching"* (CS.DC 2024): a distributed graph-stream processing system
+//! that computes **connected components** and **k-edge-connectivity** over
+//! fully dynamic (insert + delete) edge streams using linear sketches.
+//!
+//! The main node keeps the graph sketch (Θ(V·log³V) bits — independent of
+//! edge count, hence the dense-graph advantage) and collects updates into
+//! *vertex-based batches* via the **pipeline hypertree**; stateless
+//! distributed workers turn batches into fixed-size **sketch deltas**
+//! (the expensive hashing work), which are XOR-merged back into the main
+//! sketch.  Total network traffic is provably a small constant factor of
+//! the input stream size (Theorem 5.2).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordinator: ingestion, batching, worker
+//!   dispatch, merging, queries ([`coordinator`], [`hypertree`],
+//!   [`worker`], [`connectivity`]).
+//! * **L2/L1 (python/, build-time only)** — the sketch-delta computation
+//!   graph and its Pallas kernel, AOT-lowered to HLO text artifacts that
+//!   [`runtime`] loads and executes via PJRT.  Workers can compute deltas
+//!   either natively ([`sketch::cameo`]) or through the artifact
+//!   ([`worker::XlaWorker`]); both paths are bit-identical.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use landscape::coordinator::{Coordinator, CoordinatorConfig};
+//! use landscape::stream::{dynamify::Dynamify, erdos::ErdosRenyi};
+//!
+//! let gen = ErdosRenyi::new(1 << 10, 0.5, 7);
+//! let stream = Dynamify::new(gen, 3);
+//! let mut coord =
+//!     Coordinator::new(CoordinatorConfig::for_vertices(1 << 10)).unwrap();
+//! coord.ingest_all(stream);
+//! let cc = coord.connected_components();
+//! println!("{} components", cc.num_components());
+//! ```
+
+pub mod analysis;
+pub mod baseline;
+pub mod benchkit;
+pub mod config;
+pub mod connectivity;
+pub mod coordinator;
+pub mod experiments;
+pub mod gutter;
+pub mod hashing;
+pub mod hypertree;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod sketch;
+pub mod stream;
+pub mod util;
+pub mod worker;
+
+pub use sketch::params::SketchParams;
+pub use stream::update::{Update, UpdateKind};

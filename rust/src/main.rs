@@ -1,0 +1,265 @@
+//! `landscape` — the CLI launcher.
+//!
+//! ```text
+//! landscape gen       --dataset kron11 --out stream.lstrm
+//! landscape ingest    --dataset kron11 [--worker native|cube|xla|remote]
+//!                     [--k 1] [--alpha 2] [--gamma 0.04] [--query]
+//! landscape worker    --listen 0.0.0.0:7011 [--connections N]
+//! landscape bench     <fig1|fig3|fig4|fig5|fig16|table2|table3|table4|
+//!                      table5|table6|correctness|all> [--full]
+//! landscape rambw     — RAM bandwidth probes
+//! ```
+
+use landscape::benchkit::{fmt_bytes, fmt_rate};
+use landscape::config::Args;
+use landscape::coordinator::{BufferKind, Coordinator, CoordinatorConfig, WorkerKind};
+use landscape::stream::{datasets, file, EdgeModel, GraphStream};
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.command.as_deref() {
+        Some("gen") => cmd_gen(&args),
+        Some("ingest") => cmd_ingest(&args),
+        Some("worker") => cmd_worker(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("rambw") => cmd_rambw(),
+        _ => {
+            eprintln!("{}", HELP);
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "landscape — distributed graph sketching (paper reproduction)
+
+commands:
+  gen     --dataset NAME --out FILE        write a stream file
+  ingest  --dataset NAME | --stream FILE   run the coordinator
+          [--worker native|cube|xla|remote] [--addrs host:port,..]
+          [--k N] [--alpha N] [--gamma F] [--buffer hypertree|gutter]
+          [--max-updates N] [--query] [--distributors N]
+  worker  --listen ADDR [--connections N]  run a remote worker server
+  bench   EXPERIMENT [--full]              regenerate a paper table/figure
+  rambw                                    RAM bandwidth probes
+
+datasets: kron10..13 erdos11..13 gnutella amazon googleplus webuk citeseer
+experiments: fig1 fig3 fig4 fig5 fig16 table2 table3 table4 table5 table6
+             correctness all";
+
+fn cmd_gen(args: &Args) -> i32 {
+    let name = args.get_str("dataset", "kron10");
+    let Some(d) = datasets::by_name(&name) else {
+        eprintln!("unknown dataset {name}");
+        return 2;
+    };
+    let out = args.get_str("out", &format!("{name}.lstrm"));
+    eprintln!("generating {name} -> {out} ...");
+    match file::write_stream(std::path::Path::new(&out), d.stream()) {
+        Ok(n) => {
+            eprintln!("wrote {n} updates ({})", fmt_bytes((n * 9 + 28) as f64));
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn build_config(args: &Args, vertices: u64) -> Option<CoordinatorConfig> {
+    let mut cfg = CoordinatorConfig::for_vertices(vertices);
+    cfg.k = args.get_u64("k", 1) as u32;
+    cfg.alpha = args.get_u64("alpha", 1) as u32;
+    cfg.gamma = args.get_f64("gamma", 0.04);
+    cfg.distributor_threads = args.get_usize("distributors", 2);
+    cfg.use_greedycc = !args.get_bool("no-greedycc");
+    cfg.buffer = match args.get_str("buffer", "hypertree").as_str() {
+        "hypertree" => BufferKind::Hypertree,
+        "gutter" => BufferKind::Gutter,
+        other => {
+            eprintln!("unknown buffer kind {other}");
+            return None;
+        }
+    };
+    cfg.worker = match args.get_str("worker", "native").as_str() {
+        "native" => WorkerKind::Native,
+        "cube" => WorkerKind::Cube,
+        "xla" => WorkerKind::Xla {
+            artifact_dir: std::path::PathBuf::from(args.get_str("artifacts", "artifacts")),
+        },
+        "remote" => WorkerKind::Remote {
+            addrs: args
+                .get_str("addrs", "127.0.0.1:7011")
+                .split(',')
+                .map(|s| s.to_string())
+                .collect(),
+        },
+        other => {
+            eprintln!("unknown worker kind {other}");
+            return None;
+        }
+    };
+    Some(cfg)
+}
+
+fn cmd_ingest(args: &Args) -> i32 {
+    let max_updates = args.get_u64("max-updates", u64::MAX);
+
+    // resolve the stream source
+    let (vertices, run): (u64, Box<dyn FnOnce(&mut Coordinator) -> u64>) =
+        if let Some(path) = args.get("stream") {
+            let fs = match file::FileStream::open(std::path::Path::new(path)) {
+                Ok(f) => f,
+                Err(e) => {
+                    eprintln!("open {path}: {e}");
+                    return 1;
+                }
+            };
+            let v = fs.num_vertices();
+            (
+                v,
+                Box::new(move |coord: &mut Coordinator| {
+                    let mut n = 0u64;
+                    for u in fs {
+                        coord.ingest(u);
+                        n += 1;
+                        if n >= max_updates {
+                            break;
+                        }
+                    }
+                    n
+                }),
+            )
+        } else {
+            let name = args.get_str("dataset", "kron10");
+            let Some(d) = datasets::by_name(&name) else {
+                eprintln!("unknown dataset {name}");
+                return 2;
+            };
+            let v = d.model.num_vertices();
+            (
+                v,
+                Box::new(move |coord: &mut Coordinator| {
+                    let mut n = 0u64;
+                    for u in d.stream() {
+                        coord.ingest(u);
+                        n += 1;
+                        if n >= max_updates {
+                            break;
+                        }
+                    }
+                    n
+                }),
+            )
+        };
+
+    let Some(cfg) = build_config(args, vertices) else {
+        return 2;
+    };
+    let k = cfg.k;
+    eprintln!(
+        "coordinator: V={vertices}, k={k}, sketch/vertex {}",
+        fmt_bytes(cfg.params().bytes() as f64 * k as f64)
+    );
+    let mut coord = match Coordinator::new(cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("init: {e:#}");
+            return 1;
+        }
+    };
+
+    let sw = landscape::util::timer::Stopwatch::new();
+    let n = run(&mut coord);
+    coord.flush_pending();
+    let secs = sw.elapsed_secs();
+    let m = coord.metrics();
+    eprintln!(
+        "ingested {n} updates in {secs:.2}s ({}); comm factor {:.2}x; \
+         sketch {}; local updates {}",
+        fmt_rate(n as f64 / secs),
+        m.communication_factor(),
+        fmt_bytes(coord.sketch_bytes() as f64),
+        m.updates_local,
+    );
+
+    if args.get_bool("query") {
+        let qsw = landscape::util::timer::Stopwatch::new();
+        if k == 1 {
+            let forest = coord.full_connectivity_query();
+            eprintln!(
+                "connectivity: {} components, {} forest edges ({:.3}s)",
+                forest.num_components(),
+                forest.edges.len(),
+                qsw.elapsed_secs()
+            );
+        } else {
+            let cut = coord.k_connectivity();
+            eprintln!(
+                "k-connectivity: {} ({:.3}s)",
+                cut.map(|w| w.to_string()).unwrap_or_else(|| format!(">= {k}")),
+                qsw.elapsed_secs()
+            );
+        }
+    }
+    0
+}
+
+fn cmd_worker(args: &Args) -> i32 {
+    let listen = args.get_str("listen", "127.0.0.1:7011");
+    let connections = args.get_usize("connections", usize::MAX);
+    let server = match landscape::worker::remote::WorkerServer::bind(&listen) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bind {listen}: {e:#}");
+            return 1;
+        }
+    };
+    eprintln!(
+        "worker listening on {} (stateless; serves {} connections)",
+        server.local_addr().map(|a| a.to_string()).unwrap_or(listen),
+        if connections == usize::MAX {
+            "unlimited".to_string()
+        } else {
+            connections.to_string()
+        }
+    );
+    if let Err(e) = server.serve(connections) {
+        eprintln!("serve: {e:#}");
+        return 1;
+    }
+    0
+}
+
+fn cmd_bench(args: &Args) -> i32 {
+    let Some(exp) = args.positional.first() else {
+        eprintln!(
+            "usage: landscape bench <{}> [--full]",
+            landscape::experiments::EXPERIMENTS.join("|")
+        );
+        return 2;
+    };
+    let quick = !args.get_bool("full");
+    if landscape::experiments::run_by_name(exp, quick) {
+        0
+    } else {
+        eprintln!("unknown experiment {exp}");
+        2
+    }
+}
+
+fn cmd_rambw() -> i32 {
+    let (seq, rnd) = landscape::analysis::rambw::measure_defaults();
+    println!(
+        "sequential write: {:.2} GiB/s ({} as 9B updates)",
+        seq.gib_per_sec(),
+        fmt_rate(seq.updates_per_sec())
+    );
+    println!(
+        "random write:     {:.2} GiB/s ({} as 9B updates)",
+        rnd.gib_per_sec(),
+        fmt_rate(rnd.updates_per_sec())
+    );
+    0
+}

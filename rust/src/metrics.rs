@@ -1,0 +1,111 @@
+//! Shared atomic counters for ingestion, communication, and query
+//! accounting — the quantities the paper's tables report.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Global coordinator metrics.  All counters are monotonic; snapshot
+/// with [`Metrics::snapshot`].
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Stream updates ingested at the main node.
+    pub updates_ingested: AtomicU64,
+    /// Bytes of raw stream received (data-acquisition cost: 9·N).
+    pub stream_bytes: AtomicU64,
+    /// Bytes of vertex-based batches sent main → workers.
+    pub batch_bytes_sent: AtomicU64,
+    /// Bytes of sketch deltas received workers → main.
+    pub delta_bytes_received: AtomicU64,
+    /// Batches dispatched to workers.
+    pub batches_sent: AtomicU64,
+    /// Updates processed locally on the main node (underfull leaves).
+    pub updates_local: AtomicU64,
+    /// Sketch deltas merged.
+    pub deltas_merged: AtomicU64,
+    /// Full (Borůvka) queries answered.
+    pub queries_full: AtomicU64,
+    /// Queries served by GreedyCC.
+    pub queries_greedy: AtomicU64,
+    /// Hypertree node-to-node moves (cache-behaviour accounting).
+    pub hypertree_moves: AtomicU64,
+}
+
+/// A plain-value copy of [`Metrics`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub updates_ingested: u64,
+    pub stream_bytes: u64,
+    pub batch_bytes_sent: u64,
+    pub delta_bytes_received: u64,
+    pub batches_sent: u64,
+    pub updates_local: u64,
+    pub deltas_merged: u64,
+    pub queries_full: u64,
+    pub queries_greedy: u64,
+    pub hypertree_moves: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            updates_ingested: self.updates_ingested.load(Ordering::Relaxed),
+            stream_bytes: self.stream_bytes.load(Ordering::Relaxed),
+            batch_bytes_sent: self.batch_bytes_sent.load(Ordering::Relaxed),
+            delta_bytes_received: self.delta_bytes_received.load(Ordering::Relaxed),
+            batches_sent: self.batches_sent.load(Ordering::Relaxed),
+            updates_local: self.updates_local.load(Ordering::Relaxed),
+            deltas_merged: self.deltas_merged.load(Ordering::Relaxed),
+            queries_full: self.queries_full.load(Ordering::Relaxed),
+            queries_greedy: self.queries_greedy.load(Ordering::Relaxed),
+            hypertree_moves: self.hypertree_moves.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Total network bytes to/from the main node, excluding the input
+    /// stream itself — the quantity Theorem 5.2 bounds.
+    pub fn network_bytes(&self) -> u64 {
+        self.batch_bytes_sent + self.delta_bytes_received
+    }
+
+    /// Network communication as a factor of stream size (Table 3's
+    /// "Communication" column).
+    pub fn communication_factor(&self) -> f64 {
+        if self.stream_bytes == 0 {
+            return 0.0;
+        }
+        self.network_bytes() as f64 / self.stream_bytes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_counts() {
+        let m = Metrics::new();
+        Metrics::add(&m.updates_ingested, 10);
+        Metrics::add(&m.stream_bytes, 90);
+        Metrics::add(&m.batch_bytes_sent, 100);
+        Metrics::add(&m.delta_bytes_received, 44);
+        let s = m.snapshot();
+        assert_eq!(s.updates_ingested, 10);
+        assert_eq!(s.network_bytes(), 144);
+        assert!((s.communication_factor() - 1.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_stream_factor_is_zero() {
+        assert_eq!(MetricsSnapshot::default().communication_factor(), 0.0);
+    }
+}

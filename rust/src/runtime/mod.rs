@@ -1,0 +1,228 @@
+//! PJRT runtime: loads the AOT-compiled sketch-delta kernels
+//! (`artifacts/*.hlo.txt`, produced once by `python/compile/aot.py`) and
+//! executes them from the worker hot path.  Python is never involved at
+//! runtime — the HLO text is compiled by the `xla` crate's bundled XLA
+//! (PJRT CPU client) at startup and executed as native code thereafter.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits HloModuleProto with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::sketch::params::{SketchParams, SEED_SCHEME_VERSION};
+use crate::sketch::seeds::SketchSeeds;
+use crate::util::json::Json;
+
+/// One artifact entry from `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub vertices: u64,
+    pub levels: u32,
+    pub columns: u32,
+    pub rows: u32,
+    pub batch: usize,
+    pub file: String,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub batch: usize,
+    pub entries: Vec<ArtifactEntry>,
+    dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let version = json
+            .get("seed_scheme_version")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow!("manifest missing seed_scheme_version"))?;
+        if version != SEED_SCHEME_VERSION {
+            bail!(
+                "artifact seed scheme v{version} != library v{SEED_SCHEME_VERSION}; \
+                 regenerate with `make artifacts`"
+            );
+        }
+        let batch = json
+            .get("batch")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("manifest missing batch"))?;
+        let mut entries = Vec::new();
+        for e in json
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            entries.push(ArtifactEntry {
+                vertices: e.get("vertices").and_then(|v| v.as_u64()).unwrap_or(0),
+                levels: e.get("levels").and_then(|v| v.as_u64()).unwrap_or(0) as u32,
+                columns: e.get("columns").and_then(|v| v.as_u64()).unwrap_or(0) as u32,
+                rows: e.get("rows").and_then(|v| v.as_u64()).unwrap_or(0) as u32,
+                batch: e.get("batch").and_then(|v| v.as_usize()).unwrap_or(batch),
+                file: e
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+            });
+        }
+        Ok(Self {
+            batch,
+            entries,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Find the artifact whose shape matches `params` (levels, columns,
+    /// rows all equal — V values sharing a shape share an artifact).
+    pub fn find(&self, params: &SketchParams) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| {
+            e.levels == params.levels && e.columns == params.columns && e.rows == params.rows
+        })
+    }
+}
+
+/// A compiled sketch-delta executable.
+pub struct DeltaExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+    params: SketchParams,
+}
+
+/// The PJRT client wrapper.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e:?}"))?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile the delta kernel for `params` from `artifact_dir`.
+    pub fn load_delta_executable(
+        &self,
+        artifact_dir: &Path,
+        params: SketchParams,
+    ) -> Result<DeltaExecutable> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let entry = manifest.find(&params).ok_or_else(|| {
+            anyhow!(
+                "no artifact for shape L{} C{} R{}; add V={} to aot.py --vertices",
+                params.levels,
+                params.columns,
+                params.rows,
+                params.v
+            )
+        })?;
+        let path = manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("hlo parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("xla compile: {e:?}"))?;
+        Ok(DeltaExecutable {
+            exe,
+            batch: entry.batch,
+            params,
+        })
+    }
+}
+
+impl DeltaExecutable {
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn params(&self) -> &SketchParams {
+        &self.params
+    }
+
+    /// Compute the (L·C·R·2)-word delta of `indices` under `seeds`.
+    ///
+    /// Chunks into the compiled batch size, XOR-merging chunk deltas —
+    /// exact by linearity, mirroring `python/compile/model.py`.
+    pub fn compute_delta(&self, indices: &[u64], seeds: &SketchSeeds) -> Result<Vec<u64>> {
+        let words = self.params.words();
+        let mut out = vec![0u64; words];
+        let dseeds = xla::Literal::vec1(&seeds.dseeds)
+            .reshape(&[self.params.levels as i64, self.params.columns as i64])
+            .map_err(|e| anyhow!("reshape dseeds: {e:?}"))?;
+        let cseeds = xla::Literal::vec1(&seeds.cseeds);
+
+        let mut padded = vec![0u64; self.batch];
+        for chunk in indices.chunks(self.batch.max(1)) {
+            padded.fill(0);
+            padded[..chunk.len()].copy_from_slice(chunk);
+            let idx = xla::Literal::vec1(&padded);
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&[idx, dseeds.clone(), cseeds.clone()])
+                .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            let delta = result
+                .to_tuple1()
+                .map_err(|e| anyhow!("to_tuple1: {e:?}"))?
+                .to_vec::<u64>()
+                .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            debug_assert_eq!(delta.len(), words);
+            for (o, d) in out.iter_mut().zip(&delta) {
+                *o ^= *d;
+            }
+        }
+        Ok(out)
+    }
+}
+
+// End-to-end runtime tests (needing `make artifacts`) live in
+// tests/xla_parity.rs; unit tests here cover manifest parsing.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    #[test]
+    fn manifest_parses_and_covers_configs() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.batch >= 8);
+        assert!(!m.entries.is_empty());
+        // the default artifact set covers V = 2^13
+        let p = SketchParams::for_vertices(1 << 13);
+        assert!(m.find(&p).is_some(), "no artifact for kron13 shape");
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clean_error() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("manifest"));
+    }
+}

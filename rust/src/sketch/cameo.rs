@@ -1,0 +1,331 @@
+//! CameoSketch — the paper's ℓ0-sampler (§4.2, App. B.3).
+//!
+//! Native Rust implementation of the same update procedure the L1 Pallas
+//! kernel computes, bit-identical by construction (shared hashing
+//! contract + the `delta_golden.json` fixture + the runtime
+//! equivalence test in `tests/xla_parity.rs`).
+//!
+//! Update procedure (Fig. 12): per (level, column) an index touches
+//! exactly **two** buckets — the deterministic row 0 and one geometric
+//! row — so the per-update work is `O(log 1/δ)` per level instead of
+//! CubeSketch's `O(log n · log 1/δ)` (Theorem 4.2, Claim 1.2).
+
+use crate::hashing;
+use crate::sketch::params::SketchParams;
+use crate::sketch::seeds::SketchSeeds;
+
+/// Stateless CameoSketch operations over caller-owned bucket storage.
+///
+/// Bucket layout for one vertex: `[level][column][row][α|γ]` flattened
+/// into `params.words()` u64 words (see [`SketchParams::bucket_offset`]).
+pub struct CameoSketch;
+
+impl CameoSketch {
+    /// Apply one index update to a full vertex sketch (all levels).
+    #[inline]
+    pub fn apply_update(
+        buckets: &mut [u64],
+        params: &SketchParams,
+        seeds: &SketchSeeds,
+        idx: u64,
+    ) {
+        debug_assert_eq!(buckets.len(), params.words());
+        debug_assert_ne!(idx, 0, "0 is the padding sentinel");
+        let wpl = params.words_per_level();
+        for level in 0..params.levels {
+            let base = level as usize * wpl;
+            Self::apply_update_level(
+                &mut buckets[base..base + wpl],
+                params,
+                seeds,
+                level,
+                idx,
+            );
+        }
+    }
+
+    /// Apply one index update to a single level's `C × R` bucket matrix.
+    #[inline(always)]
+    pub fn apply_update_level(
+        level_buckets: &mut [u64],
+        params: &SketchParams,
+        seeds: &SketchSeeds,
+        level: u32,
+        idx: u64,
+    ) {
+        let rows = params.rows as usize;
+        let chk = hashing::checksum(seeds.cseed(level), idx);
+        for column in 0..params.columns {
+            let h = hashing::depth_hash(seeds.dseed(level, column), idx);
+            let depth = hashing::bucket_depth(h, params.rows) as usize;
+            let col_base = column as usize * rows * 2;
+            // deterministic bucket (row 0)
+            level_buckets[col_base] ^= idx;
+            level_buckets[col_base + 1] ^= chk;
+            // geometric bucket (row `depth`)
+            level_buckets[col_base + depth * 2] ^= idx;
+            level_buckets[col_base + depth * 2 + 1] ^= chk;
+        }
+    }
+
+    /// Compute the sketch delta of a batch of indices — what a
+    /// distributed worker does (paper §5.2).  Zero entries (padding) are
+    /// skipped, mirroring the AOT kernel's sentinel handling.
+    pub fn delta_of_batch(
+        params: &SketchParams,
+        seeds: &SketchSeeds,
+        indices: &[u64],
+    ) -> Vec<u64> {
+        let mut delta = vec![0u64; params.words()];
+        Self::delta_of_batch_into(&mut delta, params, seeds, indices);
+        delta
+    }
+
+    /// Same as [`Self::delta_of_batch`] but reusing caller storage (the
+    /// worker hot path: one scratch buffer per worker thread).
+    ///
+    /// Perf note (§Perf iteration 1): the loop is **level-major**, not
+    /// update-major — one level's `C×R×2` bucket slice (~1–2 KiB) stays
+    /// L1-resident while the whole batch streams through it, instead of
+    /// every update touching all `L` level slices.  The per-level seeds
+    /// also stay in registers.
+    pub fn delta_of_batch_into(
+        delta: &mut [u64],
+        params: &SketchParams,
+        seeds: &SketchSeeds,
+        indices: &[u64],
+    ) {
+        debug_assert_eq!(delta.len(), params.words());
+        delta.fill(0);
+        let wpl = params.words_per_level();
+        let rows = params.rows as usize;
+        for level in 0..params.levels {
+            let lvl_delta = &mut delta[level as usize * wpl..(level as usize + 1) * wpl];
+            let cseed = seeds.cseed(level);
+            for &idx in indices {
+                if idx == 0 {
+                    continue; // padding sentinel
+                }
+                let chk = hashing::checksum(cseed, idx);
+                for column in 0..params.columns {
+                    let h = hashing::depth_hash(seeds.dseed(level, column), idx);
+                    let depth = hashing::bucket_depth(h, params.rows) as usize;
+                    let col_base = column as usize * rows * 2;
+                    lvl_delta[col_base] ^= idx;
+                    lvl_delta[col_base + 1] ^= chk;
+                    lvl_delta[col_base + depth * 2] ^= idx;
+                    lvl_delta[col_base + depth * 2 + 1] ^= chk;
+                }
+            }
+        }
+    }
+
+    /// XOR-merge `delta` into `acc` (linearity: S(x)+S(y) = S(x+y)).
+    #[inline]
+    pub fn merge(acc: &mut [u64], delta: &[u64]) {
+        debug_assert_eq!(acc.len(), delta.len());
+        for (a, d) in acc.iter_mut().zip(delta) {
+            *a ^= *d;
+        }
+    }
+
+    /// Query one level for a nonzero index of the sketched vector.
+    ///
+    /// Scans each column deepest-row-first and returns the first *good*
+    /// bucket's α.  A bucket is good iff α ≠ 0 and `checksum(α) == γ`;
+    /// a bad bucket passes this test with probability 2^-64 (the
+    /// polynomially-small checksum-error term of Theorem 4.2).
+    pub fn query_level(
+        level_buckets: &[u64],
+        params: &SketchParams,
+        seeds: &SketchSeeds,
+        level: u32,
+    ) -> Option<u64> {
+        let rows = params.rows as usize;
+        let cseed = seeds.cseed(level);
+        for column in 0..params.columns as usize {
+            let col_base = column * rows * 2;
+            for row in (0..rows).rev() {
+                let alpha = level_buckets[col_base + row * 2];
+                let gamma = level_buckets[col_base + row * 2 + 1];
+                if alpha != 0 && hashing::checksum(cseed, alpha) == gamma {
+                    return Some(alpha);
+                }
+            }
+        }
+        None
+    }
+
+    /// Number of hash evaluations one update costs — used by the bench
+    /// harness to report the paper's "hash calls per update" figure.
+    pub fn hashes_per_update(params: &SketchParams) -> u64 {
+        // per level: 1 checksum + C depth hashes
+        params.levels as u64 * (1 + params.columns as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::params::encode_edge;
+    use crate::util::json::Json;
+    use crate::util::testkit::{arb_edge_set, Cases};
+
+    fn fixture() -> Json {
+        let path = concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/tests/fixtures/delta_golden.json"
+        );
+        let text = std::fs::read_to_string(path)
+            .expect("delta_golden.json missing — run `make fixtures`");
+        Json::parse(&text).unwrap()
+    }
+
+    #[test]
+    fn delta_matches_python_golden() {
+        let fx = fixture();
+        let v = fx.get("vertices").unwrap().as_u64().unwrap();
+        let gs = fx.get("graph_seed").unwrap().as_u64().unwrap();
+        let params = SketchParams::for_vertices(v);
+        let seeds = SketchSeeds::derive(&params, gs);
+        let indices: Vec<u64> = fx
+            .get("indices")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|j| j.as_u64().unwrap())
+            .collect();
+        let delta = CameoSketch::delta_of_batch(&params, &seeds, &indices);
+        let want: Vec<u64> = fx
+            .get("delta")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|j| j.as_u64().unwrap())
+            .collect();
+        assert_eq!(delta, want, "native kernel diverged from python oracle");
+    }
+
+    #[test]
+    fn insert_delete_cancels() {
+        let params = SketchParams::for_vertices(64);
+        let seeds = SketchSeeds::derive(&params, 11);
+        let e = encode_edge(3, 9, 64);
+        let delta = CameoSketch::delta_of_batch(&params, &seeds, &[e, e]);
+        assert!(delta.iter().all(|&w| w == 0));
+    }
+
+    #[test]
+    fn padding_zeros_skipped() {
+        let params = SketchParams::for_vertices(64);
+        let seeds = SketchSeeds::derive(&params, 11);
+        let e = encode_edge(1, 2, 64);
+        let a = CameoSketch::delta_of_batch(&params, &seeds, &[e]);
+        let b = CameoSketch::delta_of_batch(&params, &seeds, &[e, 0, 0, 0]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn linearity_merge_equals_concat() {
+        Cases::new(30).run(|rng| {
+            let v = 64u64;
+            let params = SketchParams::for_vertices(v);
+            let seeds = SketchSeeds::derive(&params, rng.next_u64());
+            let ea = arb_edge_set(rng, v, 20);
+            let eb = arb_edge_set(rng, v, 20);
+            let ia: Vec<u64> = ea.iter().map(|&(a, b)| encode_edge(a, b, v)).collect();
+            let ib: Vec<u64> = eb.iter().map(|&(a, b)| encode_edge(a, b, v)).collect();
+            let mut da = CameoSketch::delta_of_batch(&params, &seeds, &ia);
+            let db = CameoSketch::delta_of_batch(&params, &seeds, &ib);
+            let mut iab = ia.clone();
+            iab.extend(&ib);
+            let dab = CameoSketch::delta_of_batch(&params, &seeds, &iab);
+            CameoSketch::merge(&mut da, &db);
+            assert_eq!(da, dab);
+        });
+    }
+
+    #[test]
+    fn single_edge_always_recovered() {
+        // with one nonzero, row-0 deterministic buckets are always good
+        Cases::new(50).run(|rng| {
+            let v = 256u64;
+            let params = SketchParams::for_vertices(v);
+            let seeds = SketchSeeds::derive(&params, rng.next_u64());
+            let (a, b) = crate::util::testkit::arb_edge(rng, v);
+            let idx = encode_edge(a, b, v);
+            let delta = CameoSketch::delta_of_batch(&params, &seeds, &[idx]);
+            for level in 0..params.levels {
+                let wpl = params.words_per_level();
+                let base = level as usize * wpl;
+                let got = CameoSketch::query_level(
+                    &delta[base..base + wpl],
+                    &params,
+                    &seeds,
+                    level,
+                );
+                assert_eq!(got, Some(idx));
+            }
+        });
+    }
+
+    #[test]
+    fn query_empty_sketch_is_none() {
+        let params = SketchParams::for_vertices(64);
+        let seeds = SketchSeeds::derive(&params, 5);
+        let empty = vec![0u64; params.words_per_level()];
+        assert_eq!(CameoSketch::query_level(&empty, &params, &seeds, 0), None);
+    }
+
+    #[test]
+    fn query_returns_valid_index_with_many_nonzeros() {
+        Cases::new(20).run(|rng| {
+            let v = 256u64;
+            let params = SketchParams::for_vertices(v);
+            let seeds = SketchSeeds::derive(&params, rng.next_u64());
+            let edges = arb_edge_set(rng, v, 100);
+            if edges.is_empty() {
+                return;
+            }
+            let set: std::collections::HashSet<u64> = edges
+                .iter()
+                .map(|&(a, b)| encode_edge(a, b, v))
+                .collect();
+            let indices: Vec<u64> = set.iter().copied().collect();
+            let delta = CameoSketch::delta_of_batch(&params, &seeds, &indices);
+            let mut recovered = 0;
+            for level in 0..params.levels {
+                let wpl = params.words_per_level();
+                let base = level as usize * wpl;
+                if let Some(got) = CameoSketch::query_level(
+                    &delta[base..base + wpl],
+                    &params,
+                    &seeds,
+                    level,
+                ) {
+                    assert!(set.contains(&got), "recovered a non-member index");
+                    recovered += 1;
+                }
+            }
+            // Lemma H.4: each level succeeds w.p. >= 2/3 per column group;
+            // across L levels nearly all should recover *something*.
+            assert!(
+                recovered * 2 >= params.levels,
+                "only {recovered}/{} levels recovered",
+                params.levels
+            );
+        });
+    }
+
+    #[test]
+    fn update_cost_is_log_v() {
+        // Claim 1.2: per-update hashes scale with L (≈ log V), not L·R
+        let p13 = SketchParams::for_vertices(1 << 13);
+        assert_eq!(
+            CameoSketch::hashes_per_update(&p13),
+            p13.levels as u64 * 4
+        );
+    }
+}

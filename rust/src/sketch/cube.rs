@@ -1,0 +1,203 @@
+//! CubeSketch — GraphZeppelin's ℓ0-sampler (paper App. B.2), kept as the
+//! ablation baseline for Fig. 4 / Fig. 16.
+//!
+//! Identical bucket matrix and goodness test as CameoSketch; the
+//! difference is the update rule: an index with geometric depth `d`
+//! touches **every** row `0..=d` of the column (Fig. 10) instead of just
+//! {0, d}.  That makes updates `O(log n)` per column — the exact factor
+//! CameoSketch removes (Theorem 4.2).
+//!
+//! The subset property ("each CameoSketch bucket contains a subset of
+//! the same CubeSketch bucket") from the Theorem 4.2 proof is asserted
+//! in the tests below: with shared randomness, any singleton CubeSketch
+//! bucket is either identical in the CameoSketch or the CameoSketch has
+//! its element at the column's deepest occupied row.
+
+use crate::hashing;
+use crate::sketch::params::SketchParams;
+use crate::sketch::seeds::SketchSeeds;
+
+/// Stateless CubeSketch operations over the same bucket layout as
+/// [`crate::sketch::CameoSketch`].
+pub struct CubeSketch;
+
+impl CubeSketch {
+    /// Apply one index update to a full vertex sketch (all levels).
+    #[inline]
+    pub fn apply_update(
+        buckets: &mut [u64],
+        params: &SketchParams,
+        seeds: &SketchSeeds,
+        idx: u64,
+    ) {
+        debug_assert_eq!(buckets.len(), params.words());
+        let wpl = params.words_per_level();
+        for level in 0..params.levels {
+            let base = level as usize * wpl;
+            Self::apply_update_level(
+                &mut buckets[base..base + wpl],
+                params,
+                seeds,
+                level,
+                idx,
+            );
+        }
+    }
+
+    /// Apply one index update to one level: rows `0..=depth` all get it.
+    #[inline(always)]
+    pub fn apply_update_level(
+        level_buckets: &mut [u64],
+        params: &SketchParams,
+        seeds: &SketchSeeds,
+        level: u32,
+        idx: u64,
+    ) {
+        let rows = params.rows as usize;
+        let chk = hashing::checksum(seeds.cseed(level), idx);
+        for column in 0..params.columns {
+            let h = hashing::depth_hash(seeds.dseed(level, column), idx);
+            let depth = hashing::bucket_depth(h, params.rows) as usize;
+            let col_base = column as usize * rows * 2;
+            for row in 0..=depth {
+                level_buckets[col_base + row * 2] ^= idx;
+                level_buckets[col_base + row * 2 + 1] ^= chk;
+            }
+        }
+    }
+
+    /// Batch delta (for the CubeSketch worker mode of the ablations).
+    pub fn delta_of_batch(
+        params: &SketchParams,
+        seeds: &SketchSeeds,
+        indices: &[u64],
+    ) -> Vec<u64> {
+        let mut delta = vec![0u64; params.words()];
+        for &idx in indices {
+            if idx != 0 {
+                Self::apply_update(&mut delta, params, seeds, idx);
+            }
+        }
+        delta
+    }
+
+    /// Query is identical to CameoSketch's (the paper changes only the
+    /// update procedure).
+    pub fn query_level(
+        level_buckets: &[u64],
+        params: &SketchParams,
+        seeds: &SketchSeeds,
+        level: u32,
+    ) -> Option<u64> {
+        crate::sketch::CameoSketch::query_level(level_buckets, params, seeds, level)
+    }
+
+    /// Hash evaluations per update — same as CameoSketch (hashing is per
+    /// column, the extra cost is bucket *writes*).
+    pub fn hashes_per_update(params: &SketchParams) -> u64 {
+        params.levels as u64 * (1 + params.columns as u64)
+    }
+
+    /// Expected bucket writes per update: rows 0..=d with E[d] ≈ 2, times
+    /// columns and levels — the O(log n) vs O(1) per-column contrast is
+    /// in the worst case (d can be R-1).
+    pub fn worst_case_writes_per_update(params: &SketchParams) -> u64 {
+        params.levels as u64 * params.columns as u64 * params.rows as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::params::encode_edge;
+    use crate::sketch::CameoSketch;
+    use crate::util::testkit::{arb_edge_set, Cases};
+
+    #[test]
+    fn insert_delete_cancels() {
+        let params = SketchParams::for_vertices(64);
+        let seeds = SketchSeeds::derive(&params, 3);
+        let e = encode_edge(5, 6, 64);
+        let delta = CubeSketch::delta_of_batch(&params, &seeds, &[e, e]);
+        assert!(delta.iter().all(|&w| w == 0));
+    }
+
+    #[test]
+    fn single_edge_recovered() {
+        let params = SketchParams::for_vertices(64);
+        let seeds = SketchSeeds::derive(&params, 8);
+        let e = encode_edge(10, 30, 64);
+        let delta = CubeSketch::delta_of_batch(&params, &seeds, &[e]);
+        let wpl = params.words_per_level();
+        assert_eq!(
+            CubeSketch::query_level(&delta[..wpl], &params, &seeds, 0),
+            Some(e)
+        );
+    }
+
+    #[test]
+    fn row0_matches_cameo_row0() {
+        // both sketches update the deterministic bucket identically
+        Cases::new(20).run(|rng| {
+            let v = 128u64;
+            let params = SketchParams::for_vertices(v);
+            let seeds = SketchSeeds::derive(&params, rng.next_u64());
+            let edges = arb_edge_set(rng, v, 30);
+            let idx: Vec<u64> = edges.iter().map(|&(a, b)| encode_edge(a, b, v)).collect();
+            let cube = CubeSketch::delta_of_batch(&params, &seeds, &idx);
+            let cameo = CameoSketch::delta_of_batch(&params, &seeds, &idx);
+            let rows = params.rows as usize;
+            for level in 0..params.levels as usize {
+                let base = level * params.words_per_level();
+                for col in 0..params.columns as usize {
+                    let off = base + col * rows * 2;
+                    assert_eq!(cube[off], cameo[off], "alpha row0");
+                    assert_eq!(cube[off + 1], cameo[off + 1], "gamma row0");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn cameo_good_whenever_cube_good() {
+        // Theorem 4.2's proof obligation, checked empirically: with
+        // shared randomness, if CubeSketch recovers an element from a
+        // column then CameoSketch's query on the same column succeeds.
+        Cases::new(30).run(|rng| {
+            let v = 128u64;
+            let params = SketchParams::for_vertices(v);
+            let seeds = SketchSeeds::derive(&params, rng.next_u64());
+            let edges = arb_edge_set(rng, v, 60);
+            if edges.is_empty() {
+                return;
+            }
+            let idx: Vec<u64> = edges.iter().map(|&(a, b)| encode_edge(a, b, v)).collect();
+            let cube = CubeSketch::delta_of_batch(&params, &seeds, &idx);
+            let cameo = CameoSketch::delta_of_batch(&params, &seeds, &idx);
+            let wpl = params.words_per_level();
+            for level in 0..params.levels {
+                let b = level as usize * wpl;
+                let cube_hit =
+                    CubeSketch::query_level(&cube[b..b + wpl], &params, &seeds, level);
+                let cameo_hit =
+                    CameoSketch::query_level(&cameo[b..b + wpl], &params, &seeds, level);
+                if cube_hit.is_some() {
+                    assert!(
+                        cameo_hit.is_some(),
+                        "cube recovered but cameo failed at level {level}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn write_cost_exceeds_cameo() {
+        let p = SketchParams::for_vertices(1 << 13);
+        // worst-case CubeSketch writes are R/2 times CameoSketch's 2/column
+        assert!(
+            CubeSketch::worst_case_writes_per_update(&p)
+                > 4 * p.levels as u64 * p.columns as u64
+        );
+    }
+}

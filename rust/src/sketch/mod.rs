@@ -1,0 +1,25 @@
+//! Linear graph sketches: CameoSketch (the paper's contribution),
+//! CubeSketch (the prior state of the art, kept as the ablation
+//! baseline), vertex-sketch storage, and batched delta computation.
+//!
+//! A *vertex sketch* for vertex `u` is `L` independent ℓ0-samplers of
+//! u's characteristic vector `f_u ∈ Z_2^(V·V)`, one consumed per Borůvka
+//! round.  Each sampler is a `C × R` matrix of buckets `(α, γ)`:
+//! α = XOR of the indices hashed into the bucket, γ = XOR of their
+//! checksums.  A bucket holding exactly one nonzero index is *good* —
+//! its α is that index and its γ matches `checksum(α)`.
+//!
+//! Everything is linear over XOR, which is what lets Landscape compute
+//! deltas remotely and merge them on the main node (paper §5.2).
+
+pub mod cameo;
+pub mod cube;
+pub mod params;
+pub mod seeds;
+pub mod store;
+
+pub use cameo::CameoSketch;
+pub use cube::CubeSketch;
+pub use params::SketchParams;
+pub use seeds::SketchSeeds;
+pub use store::SketchStore;

@@ -1,0 +1,207 @@
+//! Sketch parameter derivation — must match `python/compile/params.py`
+//! exactly (the AOT artifacts are compiled against these shapes).
+
+/// Version tag for the seed-derivation scheme; the runtime refuses
+/// artifacts whose manifest carries a different version.
+pub const SEED_SCHEME_VERSION: u64 = 1;
+
+/// Default number of columns per level (δ = 3^-C per column group, per
+/// Theorem 4.3's `log_3(1/δ)` column count).
+pub const DEFAULT_COLUMNS: u32 = 3;
+
+/// Shape of one vertex sketch for a V-vertex graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SketchParams {
+    /// Number of graph vertices.
+    pub v: u64,
+    /// Independent CameoSketch repetitions (one per Borůvka round):
+    /// `ceil(log_{3/2} V)` (paper App. E.2).
+    pub levels: u32,
+    /// Columns per level.
+    pub columns: u32,
+    /// Bucket rows per column: `log2(n) + 6`, n = V²; row 0 is the
+    /// deterministic bucket.
+    pub rows: u32,
+}
+
+impl SketchParams {
+    /// Derive the sketch shape for a V-vertex graph.
+    pub fn for_vertices(v: u64) -> Self {
+        Self::with_columns(v, DEFAULT_COLUMNS)
+    }
+
+    /// Same, with an explicit column count.
+    pub fn with_columns(v: u64, columns: u32) -> Self {
+        Self {
+            v,
+            levels: num_levels(v),
+            columns,
+            rows: num_rows(v),
+        }
+    }
+
+    /// Buckets per level (C·R).
+    #[inline]
+    pub fn buckets_per_level(&self) -> usize {
+        (self.columns * self.rows) as usize
+    }
+
+    /// u64 words per level — each bucket is an (α, γ) pair.
+    #[inline]
+    pub fn words_per_level(&self) -> usize {
+        self.buckets_per_level() * 2
+    }
+
+    /// u64 words per vertex sketch.
+    #[inline]
+    pub fn words(&self) -> usize {
+        self.levels as usize * self.words_per_level()
+    }
+
+    /// Bytes per vertex sketch.
+    #[inline]
+    pub fn bytes(&self) -> usize {
+        self.words() * 8
+    }
+
+    /// Word offset of bucket (level, column, row) within a vertex sketch;
+    /// the (α, γ) pair lives at `[off, off+1]`.
+    #[inline(always)]
+    pub fn bucket_offset(&self, level: u32, column: u32, row: u32) -> usize {
+        debug_assert!(level < self.levels && column < self.columns && row < self.rows);
+        ((level * self.columns * self.rows + column * self.rows + row) * 2) as usize
+    }
+
+    /// Default leaf-buffer / vertex-based-batch capacity in updates.
+    ///
+    /// Paper §5.1.1: a batch is sent when it holds `α·φ/log V` updates
+    /// (φ = sketch bits), i.e. when the batch occupies `α×` the bytes of
+    /// the sketch delta it will come back as.  With 8-byte updates and
+    /// 16-byte buckets this is `α · L · C · R · 2` updates.
+    pub fn batch_capacity(&self, alpha: u32) -> usize {
+        self.words() * alpha as usize
+    }
+}
+
+/// `ceil(log_{3/2} V)` sketch levels, min 1.
+pub fn num_levels(v: u64) -> u32 {
+    if v < 2 {
+        return 1;
+    }
+    let l = ((v as f64).ln() / 1.5f64.ln()).ceil() as u32;
+    l.max(1)
+}
+
+/// `log2(n) + 6` rows where n = V².
+pub fn num_rows(v: u64) -> u32 {
+    let n_bits = ((v.max(4) as f64).log2().ceil() as u32 * 2).max(1);
+    n_bits + 6
+}
+
+/// Edge (u,v) → characteristic-vector index.  0 is reserved as the
+/// padding sentinel, hence the +1 shift.  Orientation-invariant.
+#[inline(always)]
+pub fn encode_edge(u: u32, v: u32, num_vertices: u64) -> u64 {
+    let (lo, hi) = if u < v { (u, v) } else { (v, u) };
+    debug_assert!((hi as u64) < num_vertices && lo != hi);
+    lo as u64 * num_vertices + hi as u64 + 1
+}
+
+/// Inverse of [`encode_edge`].
+#[inline(always)]
+pub fn decode_edge(idx: u64, num_vertices: u64) -> (u32, u32) {
+    debug_assert!(idx != 0);
+    let raw = idx - 1;
+    ((raw / num_vertices) as u32, (raw % num_vertices) as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{arb_edge, Cases};
+
+    #[test]
+    fn known_values_match_python() {
+        // pinned against python/compile/params.py (test_model.py)
+        assert_eq!(num_levels(1 << 13), 23);
+        assert_eq!(num_rows(1 << 13), 32);
+        assert_eq!(num_levels(1 << 17), 30);
+        assert_eq!(num_rows(1 << 17), 40);
+    }
+
+    #[test]
+    fn shape_matches_delta_golden_fixture() {
+        let path = concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/tests/fixtures/delta_golden.json"
+        );
+        let text = std::fs::read_to_string(path)
+            .expect("delta_golden.json missing — run `make fixtures`");
+        let fx = crate::util::json::Json::parse(&text).unwrap();
+        let v = fx.get("vertices").unwrap().as_u64().unwrap();
+        let p = SketchParams::for_vertices(v);
+        assert_eq!(p.levels as u64, fx.get("levels").unwrap().as_u64().unwrap());
+        assert_eq!(p.columns as u64, fx.get("columns").unwrap().as_u64().unwrap());
+        assert_eq!(p.rows as u64, fx.get("rows").unwrap().as_u64().unwrap());
+    }
+
+    #[test]
+    fn sketch_is_polylog_sized() {
+        // Claim 1.1: sketch bytes << adjacency row for dense graphs
+        let p = SketchParams::for_vertices(1 << 16);
+        assert!(p.bytes() < 64 * 1024);
+        assert!((p.bytes() as u64) < (1u64 << 16) * (1 << 16) / 8 / 4);
+    }
+
+    #[test]
+    fn bucket_offsets_are_dense_and_disjoint() {
+        let p = SketchParams::with_columns(64, 3);
+        let mut seen = std::collections::HashSet::new();
+        for l in 0..p.levels {
+            for c in 0..p.columns {
+                for r in 0..p.rows {
+                    let off = p.bucket_offset(l, c, r);
+                    assert!(off + 1 < p.words());
+                    assert!(seen.insert(off), "offset collision at {l},{c},{r}");
+                }
+            }
+        }
+        assert_eq!(seen.len() * 2, p.words());
+    }
+
+    #[test]
+    fn edge_encode_decode_roundtrip() {
+        Cases::new(300).run(|rng| {
+            let v = 2 + rng.next_below(1 << 20);
+            let (a, b) = arb_edge(rng, v);
+            let idx = encode_edge(a, b, v);
+            assert_ne!(idx, 0);
+            assert_eq!(decode_edge(idx, v), (a, b));
+        });
+    }
+
+    #[test]
+    fn encode_is_orientation_invariant() {
+        assert_eq!(encode_edge(3, 7, 100), encode_edge(7, 3, 100));
+    }
+
+    #[test]
+    fn batch_capacity_scales_with_alpha() {
+        let p = SketchParams::for_vertices(1 << 10);
+        assert_eq!(p.batch_capacity(2), 2 * p.words());
+        // comm factor: delta bytes / batch bytes = 1/alpha
+        let delta_bytes = p.bytes();
+        let batch_bytes = p.batch_capacity(2) * 8;
+        assert_eq!(batch_bytes, 2 * delta_bytes);
+    }
+
+    #[test]
+    fn levels_monotone_in_v() {
+        let mut prev = 0;
+        for p in 1..22 {
+            let l = num_levels(1 << p);
+            assert!(l >= prev);
+            prev = l;
+        }
+    }
+}

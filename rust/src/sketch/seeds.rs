@@ -1,0 +1,101 @@
+//! Per-graph seed material for the sketch hash functions.
+//!
+//! Derivation must match `python/compile/model.py::seeds_for` — the Rust
+//! coordinator feeds exactly these arrays to the AOT executable as
+//! runtime inputs, and the native worker consumes them directly.
+
+use crate::hashing;
+use crate::sketch::params::SketchParams;
+
+/// Flattened seed arrays for one sketch instance.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SketchSeeds {
+    /// Depth-hash seeds, row-major `[level][column]`, length L·C.
+    pub dseeds: Vec<u64>,
+    /// Checksum seeds, one per level, length L.
+    pub cseeds: Vec<u64>,
+    columns: u32,
+}
+
+impl SketchSeeds {
+    /// Derive all seeds for `graph_seed`.
+    pub fn derive(params: &SketchParams, graph_seed: u64) -> Self {
+        let mut dseeds = Vec::with_capacity((params.levels * params.columns) as usize);
+        let mut cseeds = Vec::with_capacity(params.levels as usize);
+        for level in 0..params.levels {
+            cseeds.push(hashing::checksum_seed(graph_seed, level));
+            for column in 0..params.columns {
+                dseeds.push(hashing::depth_seed(graph_seed, level, column));
+            }
+        }
+        Self {
+            dseeds,
+            cseeds,
+            columns: params.columns,
+        }
+    }
+
+    /// Seed used by k-connectivity copy `copy` (copy 0 == graph_seed).
+    ///
+    /// Each of the k independent connectivity sketches needs fresh
+    /// randomness; deriving per-copy seeds keeps the worker protocol
+    /// unchanged (seeds are runtime inputs).
+    pub fn copy_seed(graph_seed: u64, copy: u32) -> u64 {
+        if copy == 0 {
+            graph_seed
+        } else {
+            hashing::splitmix64(graph_seed ^ (copy as u64).wrapping_mul(0xC2B2AE3D27D4EB4F))
+        }
+    }
+
+    /// Depth seed for (level, column).
+    #[inline(always)]
+    pub fn dseed(&self, level: u32, column: u32) -> u64 {
+        self.dseeds[(level * self.columns + column) as usize]
+    }
+
+    /// Checksum seed for `level`.
+    #[inline(always)]
+    pub fn cseed(&self, level: u32) -> u64 {
+        self.cseeds[level as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derivation_matches_hashing_primitives() {
+        let p = SketchParams::for_vertices(128);
+        let s = SketchSeeds::derive(&p, 42);
+        for lvl in 0..p.levels {
+            assert_eq!(s.cseed(lvl), hashing::checksum_seed(42, lvl));
+            for col in 0..p.columns {
+                assert_eq!(s.dseed(lvl, col), hashing::depth_seed(42, lvl, col));
+            }
+        }
+    }
+
+    #[test]
+    fn all_seeds_distinct() {
+        let p = SketchParams::for_vertices(1 << 12);
+        let s = SketchSeeds::derive(&p, 7);
+        let mut all: Vec<u64> = s.dseeds.clone();
+        all.extend(&s.cseeds);
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n);
+    }
+
+    #[test]
+    fn copy_seeds_distinct_and_stable() {
+        let s0 = SketchSeeds::copy_seed(99, 0);
+        assert_eq!(s0, 99);
+        let mut seen = std::collections::HashSet::new();
+        for k in 0..16 {
+            assert!(seen.insert(SketchSeeds::copy_seed(99, k)));
+        }
+    }
+}

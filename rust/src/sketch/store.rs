@@ -1,0 +1,246 @@
+//! Main-node sketch storage: the graph sketch S(G) = ⋃_u S(f_u).
+//!
+//! One flat `Vec<AtomicU64>` holds all V vertex sketches.  Sketch deltas
+//! arriving from (possibly concurrent) work-distributor threads are
+//! merged with relaxed `fetch_xor` — XOR is commutative/associative, so
+//! no ordering between deltas matters, and queries only run after the
+//! ingestion barrier (the pipeline is drained first, paper §5.3).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::sketch::params::SketchParams;
+use crate::sketch::seeds::SketchSeeds;
+use crate::sketch::CameoSketch;
+
+/// The main node's graph sketch: V vertex sketches in one allocation.
+pub struct SketchStore {
+    params: SketchParams,
+    seeds: SketchSeeds,
+    words: Vec<AtomicU64>,
+}
+
+impl SketchStore {
+    /// Allocate an all-zero graph sketch for `params`, seeded from
+    /// `graph_seed`.
+    pub fn new(params: SketchParams, graph_seed: u64) -> Self {
+        let total = params.v as usize * params.words();
+        let mut words = Vec::with_capacity(total);
+        words.resize_with(total, || AtomicU64::new(0));
+        Self {
+            seeds: SketchSeeds::derive(&params, graph_seed),
+            params,
+            words,
+        }
+    }
+
+    pub fn params(&self) -> &SketchParams {
+        &self.params
+    }
+
+    pub fn seeds(&self) -> &SketchSeeds {
+        &self.seeds
+    }
+
+    /// Total bytes of sketch storage (the paper's Θ(V log³ V) term).
+    pub fn bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    #[inline]
+    fn vertex_base(&self, u: u32) -> usize {
+        debug_assert!((u as u64) < self.params.v);
+        u as usize * self.params.words()
+    }
+
+    /// XOR-merge a vertex-sketch delta into vertex `u` (thread-safe).
+    pub fn merge_delta(&self, u: u32, delta: &[u64]) {
+        debug_assert_eq!(delta.len(), self.params.words());
+        let base = self.vertex_base(u);
+        for (i, &d) in delta.iter().enumerate() {
+            if d != 0 {
+                self.words[base + i].fetch_xor(d, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Apply a single edge-index update to vertex `u` locally (the main
+    /// node's path for underfull leaves, §5.3).
+    pub fn apply_local(&self, u: u32, idx: u64) {
+        // relaxed atomic XORs, same rationale as merge_delta
+        let base = self.vertex_base(u);
+        let wpl = self.params.words_per_level();
+        let rows = self.params.rows as usize;
+        for level in 0..self.params.levels {
+            let chk = crate::hashing::checksum(self.seeds.cseed(level), idx);
+            let lbase = base + level as usize * wpl;
+            for column in 0..self.params.columns {
+                let h = crate::hashing::depth_hash(self.seeds.dseed(level, column), idx);
+                let depth =
+                    crate::hashing::bucket_depth(h, self.params.rows) as usize;
+                let cbase = lbase + column as usize * rows * 2;
+                self.words[cbase].fetch_xor(idx, Ordering::Relaxed);
+                self.words[cbase + 1].fetch_xor(chk, Ordering::Relaxed);
+                self.words[cbase + depth * 2].fetch_xor(idx, Ordering::Relaxed);
+                self.words[cbase + depth * 2 + 1].fetch_xor(chk, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Snapshot one level of vertex `u` into `out` (length
+    /// `words_per_level`).  Only sound after the ingestion barrier.
+    pub fn read_level_into(&self, u: u32, level: u32, out: &mut [u64]) {
+        let wpl = self.params.words_per_level();
+        debug_assert_eq!(out.len(), wpl);
+        let base = self.vertex_base(u) + level as usize * wpl;
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = self.words[base + i].load(Ordering::Relaxed);
+        }
+    }
+
+    /// XOR one level of vertex `u` into `acc` — the supernode
+    /// aggregation step of sketch Borůvka (S(f_X) = Σ_{u∈X} S(f_u)).
+    pub fn xor_level_into(&self, u: u32, level: u32, acc: &mut [u64]) {
+        let wpl = self.params.words_per_level();
+        debug_assert_eq!(acc.len(), wpl);
+        let base = self.vertex_base(u) + level as usize * wpl;
+        for (i, slot) in acc.iter_mut().enumerate() {
+            *slot ^= self.words[base + i].load(Ordering::Relaxed);
+        }
+    }
+
+    /// Query vertex `u` at `level` (convenience for tests/examples).
+    pub fn query_vertex_level(&self, u: u32, level: u32) -> Option<u64> {
+        let mut buf = vec![0u64; self.params.words_per_level()];
+        self.read_level_into(u, level, &mut buf);
+        CameoSketch::query_level(&buf, &self.params, &self.seeds, level)
+    }
+
+    /// Reset every bucket to zero (between bench runs).
+    pub fn clear(&self) {
+        for w in &self.words {
+            w.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::params::encode_edge;
+
+    fn store(v: u64, seed: u64) -> SketchStore {
+        SketchStore::new(SketchParams::for_vertices(v), seed)
+    }
+
+    #[test]
+    fn merge_delta_equals_local_updates() {
+        let s1 = store(64, 42);
+        let s2 = store(64, 42);
+        let edges = [(1u32, 2u32), (1, 5), (1, 60)];
+        let idx: Vec<u64> = edges.iter().map(|&(a, b)| encode_edge(a, b, 64)).collect();
+
+        // path A: local single-update application
+        for &i in &idx {
+            s1.apply_local(1, i);
+        }
+        // path B: batched delta + merge
+        let delta = CameoSketch::delta_of_batch(s2.params(), s2.seeds(), &idx);
+        s2.merge_delta(1, &delta);
+
+        let mut a = vec![0u64; s1.params().words_per_level()];
+        let mut b = vec![0u64; s2.params().words_per_level()];
+        for level in 0..s1.params().levels {
+            s1.read_level_into(1, level, &mut a);
+            s2.read_level_into(1, level, &mut b);
+            assert_eq!(a, b, "level {level}");
+        }
+    }
+
+    #[test]
+    fn query_recovers_single_incident_edge() {
+        let s = store(64, 9);
+        let idx = encode_edge(7, 13, 64);
+        s.apply_local(7, idx);
+        s.apply_local(13, idx);
+        assert_eq!(s.query_vertex_level(7, 0), Some(idx));
+        assert_eq!(s.query_vertex_level(13, 0), Some(idx));
+        assert_eq!(s.query_vertex_level(20, 0), None);
+    }
+
+    #[test]
+    fn xor_level_into_aggregates_supernode() {
+        // edges inside {0,1} cancel in the aggregate; the crossing edge
+        // to 2 survives — exactly the cut-sampling property of App. A.
+        let v = 16u64;
+        let s = store(v, 5);
+        let inner = encode_edge(0, 1, v);
+        let crossing = encode_edge(1, 2, v);
+        s.apply_local(0, inner);
+        s.apply_local(1, inner);
+        s.apply_local(1, crossing);
+        s.apply_local(2, crossing);
+
+        let wpl = s.params().words_per_level();
+        for level in 0..s.params().levels {
+            let mut acc = vec![0u64; wpl];
+            s.xor_level_into(0, level, &mut acc);
+            s.xor_level_into(1, level, &mut acc);
+            let got =
+                CameoSketch::query_level(&acc, s.params(), s.seeds(), level);
+            assert_eq!(got, Some(crossing), "level {level}");
+        }
+    }
+
+    #[test]
+    fn concurrent_merges_commute() {
+        let v = 32u64;
+        let params = SketchParams::for_vertices(v);
+        let s = std::sync::Arc::new(SketchStore::new(params, 77));
+        let idx: Vec<u64> = (0..20)
+            .map(|i| encode_edge(3, (i % 30) + 4, v))
+            .collect();
+        let deltas: Vec<Vec<u64>> = idx
+            .chunks(5)
+            .map(|c| CameoSketch::delta_of_batch(s.params(), s.seeds(), c))
+            .collect();
+
+        let mut handles = Vec::new();
+        for d in deltas.clone() {
+            let s2 = s.clone();
+            handles.push(std::thread::spawn(move || s2.merge_delta(3, &d)));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+
+        // sequential reference
+        let s_ref = SketchStore::new(params, 77);
+        for d in &deltas {
+            s_ref.merge_delta(3, d);
+        }
+        let mut a = vec![0u64; params.words_per_level()];
+        let mut b = vec![0u64; params.words_per_level()];
+        for level in 0..params.levels {
+            s.read_level_into(3, level, &mut a);
+            s_ref.read_level_into(3, level, &mut b);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let s = store(128, 1);
+        assert_eq!(
+            s.bytes(),
+            128 * SketchParams::for_vertices(128).bytes()
+        );
+    }
+
+    #[test]
+    fn clear_zeroes_everything() {
+        let s = store(16, 2);
+        s.apply_local(0, encode_edge(0, 1, 16));
+        s.clear();
+        assert_eq!(s.query_vertex_level(0, 0), None);
+    }
+}

@@ -1,0 +1,242 @@
+//! The dataset registry — Table 2's evaluation suite, scaled to this
+//! container (see DESIGN.md "Scaling note" and "Substitutions").
+//!
+//! Paper datasets and their stand-ins:
+//!
+//! | paper         | here             | class              | scaling |
+//! |---------------|------------------|--------------------|---------|
+//! | kron13..17    | kron10..13       | dense Kronecker    | V ÷ 8–16 |
+//! | erdos18..20   | erdos11..13      | dense G(V, 1/4)    | V ÷ 128 |
+//! | p2p-gnutella  | gnutella         | sparse overlay     | 1:1     |
+//! | rec-amazon    | amazon           | near-planar grid   | 1:1     |
+//! | google-plus   | googleplus       | heavy power-law    | V ÷ 8   |
+//! | web-uk-2005   | webuk            | dense power-law    | V ÷ 32  |
+//! | ca-citeseer   | citeseer         | sparse power-law   | V ÷ 64  |
+
+use crate::stream::dynamify::Dynamify;
+use crate::stream::erdos::ErdosRenyi;
+use crate::stream::kron::Kronecker;
+use crate::stream::realworld::{ChungLu, GridLike, SparseRandom};
+use crate::stream::EdgeModel;
+
+/// A registered dataset: an edge model plus its stream parameters.
+pub enum DatasetModel {
+    Kron(Kronecker),
+    Erdos(ErdosRenyi),
+    ChungLu(ChungLu),
+    Grid(GridLike),
+    Sparse(SparseRandom),
+}
+
+impl EdgeModel for DatasetModel {
+    fn num_vertices(&self) -> u64 {
+        match self {
+            DatasetModel::Kron(m) => m.num_vertices(),
+            DatasetModel::Erdos(m) => m.num_vertices(),
+            DatasetModel::ChungLu(m) => m.num_vertices(),
+            DatasetModel::Grid(m) => m.num_vertices(),
+            DatasetModel::Sparse(m) => m.num_vertices(),
+        }
+    }
+
+    fn contains(&self, a: u32, b: u32) -> bool {
+        match self {
+            DatasetModel::Kron(m) => m.contains(a, b),
+            DatasetModel::Erdos(m) => m.contains(a, b),
+            DatasetModel::ChungLu(m) => m.contains(a, b),
+            DatasetModel::Grid(m) => m.contains(a, b),
+            DatasetModel::Sparse(m) => m.contains(a, b),
+        }
+    }
+
+    fn expected_edges(&self) -> f64 {
+        match self {
+            DatasetModel::Kron(m) => m.expected_edges(),
+            DatasetModel::Erdos(m) => m.expected_edges(),
+            DatasetModel::ChungLu(m) => m.expected_edges(),
+            DatasetModel::Grid(m) => m.expected_edges(),
+            DatasetModel::Sparse(m) => m.expected_edges(),
+        }
+    }
+}
+
+/// Dataset descriptor.
+pub struct Dataset {
+    pub name: &'static str,
+    /// Paper dataset this stands in for.
+    pub paper_name: &'static str,
+    pub model: DatasetModel,
+    /// Insert/delete repetition factor (paper uses 7).
+    pub repeats: u32,
+}
+
+impl Dataset {
+    pub fn stream(&self) -> Dynamify<&DatasetModel> {
+        Dynamify::new(&self.model, self.repeats)
+    }
+}
+
+impl<'a> EdgeModel for &'a DatasetModel {
+    fn num_vertices(&self) -> u64 {
+        (**self).num_vertices()
+    }
+    fn contains(&self, a: u32, b: u32) -> bool {
+        (**self).contains(a, b)
+    }
+    fn expected_edges(&self) -> f64 {
+        (**self).expected_edges()
+    }
+}
+
+const SEED: u64 = 0xDA7A5E7;
+
+/// Look a dataset up by name.
+pub fn by_name(name: &str) -> Option<Dataset> {
+    let d = match name {
+        "kron10" => Dataset {
+            name: "kron10",
+            paper_name: "kron13 (scaled)",
+            model: DatasetModel::Kron(Kronecker::paper(10, SEED)),
+            repeats: 7,
+        },
+        "kron11" => Dataset {
+            name: "kron11",
+            paper_name: "kron15 (scaled)",
+            model: DatasetModel::Kron(Kronecker::paper(11, SEED)),
+            repeats: 7,
+        },
+        "kron12" => Dataset {
+            name: "kron12",
+            paper_name: "kron16 (scaled)",
+            model: DatasetModel::Kron(Kronecker::paper(12, SEED)),
+            repeats: 7,
+        },
+        "kron13" => Dataset {
+            name: "kron13",
+            paper_name: "kron17 (scaled)",
+            model: DatasetModel::Kron(Kronecker::paper(13, SEED)),
+            repeats: 7,
+        },
+        "erdos11" => Dataset {
+            name: "erdos11",
+            paper_name: "erdos18 (scaled)",
+            model: DatasetModel::Erdos(ErdosRenyi::new(1 << 11, 0.5, SEED)),
+            repeats: 7,
+        },
+        "erdos12" => Dataset {
+            name: "erdos12",
+            paper_name: "erdos19 (scaled)",
+            model: DatasetModel::Erdos(ErdosRenyi::new(1 << 12, 0.5, SEED)),
+            repeats: 7,
+        },
+        "erdos13" => Dataset {
+            name: "erdos13",
+            paper_name: "erdos20 (scaled)",
+            model: DatasetModel::Erdos(ErdosRenyi::new(1 << 13, 0.5, SEED)),
+            repeats: 7,
+        },
+        "gnutella" => Dataset {
+            name: "gnutella",
+            paper_name: "p2p-gnutella (1:1)",
+            model: DatasetModel::Sparse(SparseRandom::new(63_000, 4.8, SEED)),
+            repeats: 13,
+        },
+        "amazon" => Dataset {
+            name: "amazon",
+            paper_name: "rec-amazon (1:1)",
+            model: DatasetModel::Grid(GridLike::new(92_000, 0.66, 0.2, SEED)),
+            repeats: 13,
+        },
+        "googleplus" => Dataset {
+            name: "googleplus",
+            paper_name: "google-plus (scaled)",
+            model: DatasetModel::ChungLu(ChungLu::new(14_000, 0.55, 220_000, SEED)),
+            repeats: 13,
+        },
+        "webuk" => Dataset {
+            name: "webuk",
+            paper_name: "web-uk-2005 (scaled)",
+            model: DatasetModel::ChungLu(ChungLu::new(40_000, 0.45, 470_000, SEED)),
+            repeats: 13,
+        },
+        "citeseer" => Dataset {
+            name: "citeseer",
+            paper_name: "ca-citeseer (scaled)",
+            model: DatasetModel::ChungLu(ChungLu::new(36_000, 0.3, 13_000, SEED)),
+            repeats: 13,
+        },
+        _ => return None,
+    };
+    Some(d)
+}
+
+/// All registry names in Table-2 order.
+pub fn all_names() -> &'static [&'static str] {
+    &[
+        "kron10",
+        "kron11",
+        "kron12",
+        "kron13",
+        "citeseer",
+        "gnutella",
+        "amazon",
+        "googleplus",
+        "webuk",
+        "erdos11",
+        "erdos12",
+        "erdos13",
+    ]
+}
+
+/// The quick subset used by default bench runs (small enough for
+/// minutes-scale wall clock on one core).
+pub fn quick_names() -> &'static [&'static str] {
+    &["kron10", "kron11", "gnutella", "googleplus", "erdos11"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_complete_and_consistent() {
+        for name in all_names() {
+            let d = by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(d.name, *name);
+            assert!(d.repeats % 2 == 1, "{name}: repeats must be odd");
+            assert!(d.model.num_vertices() >= 2);
+            assert!(d.model.expected_edges() > 0.0);
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn quick_subset_is_registered() {
+        for name in quick_names() {
+            assert!(by_name(name).is_some());
+        }
+    }
+
+    #[test]
+    fn kron_datasets_are_dense_realworld_sparse() {
+        let kron = by_name("kron10").unwrap();
+        let gnutella = by_name("gnutella").unwrap();
+        let kd = kron.model.expected_edges()
+            / (kron.model.num_vertices() * (kron.model.num_vertices() - 1) / 2) as f64;
+        let gd = gnutella.model.expected_edges()
+            / (gnutella.model.num_vertices() * (gnutella.model.num_vertices() - 1) / 2)
+                as f64;
+        assert!(kd > 0.05, "kron density {kd}");
+        assert!(gd < 1e-3, "gnutella density {gd}");
+    }
+
+    #[test]
+    fn streams_are_drivable() {
+        let d = by_name("erdos11").unwrap();
+        let mut n = 0u64;
+        for _ in d.stream().take(1000) {
+            n += 1;
+        }
+        assert_eq!(n, 1000);
+    }
+}

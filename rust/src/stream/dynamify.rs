@@ -1,0 +1,274 @@
+//! The insert/delete stream transform (paper §7.1).
+//!
+//! The paper turns each static graph into a fully dynamic stream by
+//! repeatedly inserting and deleting all its edges: with `repeats` odd,
+//! every edge appears `repeats` times, alternating insert/delete, so the
+//! stream's net effect is exactly the original edge list while the total
+//! update count is `repeats × E` (matching Table 2's updates/edges ≈ 7).
+//!
+//! Each round walks the candidate pair space in a *different* Feistel
+//! order, so inserts and deletes of different edges interleave
+//! arbitrarily — the adversarially-orderless property the semi-streaming
+//! model requires — while any prefix remains valid (an edge is only
+//! deleted while present: round r's delete follows round r-1's insert).
+
+use crate::stream::permute::FeistelPermutation;
+use crate::stream::{EdgeModel, GraphStream, Update, UpdateKind};
+use crate::util::rng::Xoshiro256;
+
+/// Sparse models materialize: if the candidate domain is more than this
+/// factor larger than the edge set, scanning it once per round would
+/// dominate, so the edge list is collected once and shuffled per round.
+const MATERIALIZE_RATIO: f64 = 64.0;
+
+/// Wraps an [`EdgeModel`] into a dynamic update stream.
+///
+/// Dense models walk the candidate pair domain in a per-round Feistel
+/// order (O(1) memory); sparse models over large V materialize the edge
+/// list once (one presence scan) and Fisher–Yates shuffle it per round —
+/// otherwise each round would scan a V² domain for a tiny edge set.
+pub struct Dynamify<M: EdgeModel> {
+    model: M,
+    repeats: u32,
+    round: u32,
+    perm: FeistelPermutation,
+    cursor: u64,
+    emitted: u64,
+    expected_total: Option<u64>,
+    /// Some(edges) when the sparse path is active.
+    materialized: Option<Vec<(u32, u32)>>,
+}
+
+impl<M: EdgeModel> Dynamify<M> {
+    /// `repeats` must be odd so every present edge nets to inserted.
+    pub fn new(model: M, repeats: u32) -> Self {
+        assert!(repeats % 2 == 1, "repeats must be odd");
+        let v = model.num_vertices();
+        let domain = (v * v) as f64;
+        let materialized = if model.expected_edges() * MATERIALIZE_RATIO < domain {
+            let mut edges = crate::stream::edge_list(&model);
+            let mut rng = Xoshiro256::new(Self::round_seed(&model, 0));
+            rng.shuffle(&mut edges);
+            Some(edges)
+        } else {
+            None
+        };
+        let perm = FeistelPermutation::covering(v * v, Self::round_seed(&model, 0));
+        let expected = match &materialized {
+            Some(e) => (e.len() as u64) * repeats as u64,
+            None => (model.expected_edges() * repeats as f64) as u64,
+        };
+        Self {
+            model,
+            repeats,
+            round: 0,
+            perm,
+            cursor: 0,
+            emitted: 0,
+            expected_total: Some(expected),
+            materialized,
+        }
+    }
+
+    fn round_seed(model: &M, round: u32) -> u64 {
+        crate::hashing::splitmix64(
+            model.num_vertices() ^ (round as u64 + 1).wrapping_mul(0x2545F4914F6CDD1D),
+        )
+    }
+
+    /// Exact stream length requires scanning; tests use collect().len().
+    pub fn model(&self) -> &M {
+        &self.model
+    }
+}
+
+impl<M: EdgeModel> Iterator for Dynamify<M> {
+    type Item = Update;
+
+    fn next(&mut self) -> Option<Update> {
+        // sparse path: walk the materialized, per-round-shuffled list
+        if let Some(edges) = &mut self.materialized {
+            loop {
+                if self.round >= self.repeats {
+                    return None;
+                }
+                if self.cursor >= edges.len() as u64 {
+                    self.round += 1;
+                    if self.round >= self.repeats {
+                        return None;
+                    }
+                    let mut rng =
+                        Xoshiro256::new(Self::round_seed(&self.model, self.round));
+                    rng.shuffle(edges);
+                    self.cursor = 0;
+                    continue;
+                }
+                let (a, b) = edges[self.cursor as usize];
+                self.cursor += 1;
+                self.emitted += 1;
+                let kind = if self.round % 2 == 0 {
+                    UpdateKind::Insert
+                } else {
+                    UpdateKind::Delete
+                };
+                return Some(Update { u: a, v: b, kind });
+            }
+        }
+
+        let v = self.model.num_vertices();
+        loop {
+            if self.round >= self.repeats {
+                return None;
+            }
+            if self.cursor >= self.perm.domain() {
+                self.round += 1;
+                if self.round >= self.repeats {
+                    return None;
+                }
+                self.perm = FeistelPermutation::covering(
+                    v * v,
+                    Self::round_seed(&self.model, self.round),
+                );
+                self.cursor = 0;
+                continue;
+            }
+            let raw = self.perm.apply(self.cursor);
+            self.cursor += 1;
+            let a = (raw / v.max(1)) as u64;
+            let b = raw % v.max(1);
+            if raw >= v * v || a >= b || b >= v {
+                continue; // out of the triangular pair domain
+            }
+            let (a, b) = (a as u32, b as u32);
+            if !self.model.contains(a, b) {
+                continue;
+            }
+            self.emitted += 1;
+            let kind = if self.round % 2 == 0 {
+                UpdateKind::Insert
+            } else {
+                UpdateKind::Delete
+            };
+            return Some(Update { u: a, v: b, kind });
+        }
+    }
+}
+
+impl<M: EdgeModel> GraphStream for Dynamify<M> {
+    fn num_vertices(&self) -> u64 {
+        self.model.num_vertices()
+    }
+    fn len_hint(&self) -> Option<u64> {
+        self.expected_total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::erdos::ErdosRenyi;
+    use crate::stream::{edge_list, VecStream};
+    use std::collections::HashMap;
+
+    fn net_effect(updates: &[Update]) -> Vec<(u32, u32)> {
+        let mut present: HashMap<(u32, u32), bool> = HashMap::new();
+        for u in updates {
+            let e = u.endpoints();
+            let slot = present.entry(e).or_insert(false);
+            match u.kind {
+                UpdateKind::Insert => {
+                    assert!(!*slot, "insert of present edge {e:?}");
+                    *slot = true;
+                }
+                UpdateKind::Delete => {
+                    assert!(*slot, "delete of absent edge {e:?}");
+                    *slot = false;
+                }
+            }
+        }
+        let mut edges: Vec<(u32, u32)> = present
+            .into_iter()
+            .filter_map(|(e, p)| p.then_some(e))
+            .collect();
+        edges.sort_unstable();
+        edges
+    }
+
+    #[test]
+    fn stream_is_valid_and_nets_to_the_model() {
+        let g = ErdosRenyi::new(64, 0.2, 11);
+        let want = edge_list(&g);
+        let updates: Vec<Update> = Dynamify::new(g, 3).collect();
+        assert_eq!(net_effect(&updates), want);
+        assert_eq!(updates.len(), want.len() * 3);
+    }
+
+    #[test]
+    fn repeats_one_is_insert_only() {
+        let g = ErdosRenyi::new(32, 0.3, 2);
+        let updates: Vec<Update> = Dynamify::new(g, 1).collect();
+        assert!(updates.iter().all(|u| u.kind == UpdateKind::Insert));
+        assert_eq!(net_effect(&updates).len(), updates.len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn even_repeats_rejected() {
+        let g = ErdosRenyi::new(8, 0.5, 1);
+        let _ = Dynamify::new(g, 2);
+    }
+
+    #[test]
+    fn rounds_use_different_orders() {
+        let g = ErdosRenyi::new(64, 0.3, 4);
+        let updates: Vec<Update> = Dynamify::new(g, 3).collect();
+        let per_round = updates.len() / 3;
+        let r0: Vec<(u32, u32)> = updates[..per_round].iter().map(|u| u.endpoints()).collect();
+        let r1: Vec<(u32, u32)> = updates[per_round..2 * per_round]
+            .iter()
+            .map(|u| u.endpoints())
+            .collect();
+        assert_ne!(r0, r1, "round orders should differ");
+        // but the edge *sets* are identical
+        let mut s0 = r0.clone();
+        let mut s1 = r1.clone();
+        s0.sort_unstable();
+        s1.sort_unstable();
+        assert_eq!(s0, s1);
+    }
+
+    #[test]
+    fn len_hint_is_reasonable() {
+        let g = ErdosRenyi::new(128, 0.25, 5);
+        let s = Dynamify::new(g, 7);
+        let hint = s.len_hint().unwrap() as f64;
+        let actual = s.count() as f64;
+        assert!((hint - actual).abs() / actual < 0.2, "hint={hint} actual={actual}");
+    }
+
+    #[test]
+    fn sparse_path_materializes_and_is_valid() {
+        // avg degree 2 over 4096 vertices: far under the 1/64 ratio
+        let g = crate::stream::realworld::SparseRandom::new(4096, 2.0, 5);
+        let s = Dynamify::new(g, 5);
+        assert!(s.materialized.is_some(), "sparse model should materialize");
+        let updates: Vec<Update> = s.collect();
+        let want = edge_list(&crate::stream::realworld::SparseRandom::new(4096, 2.0, 5));
+        assert_eq!(net_effect(&updates), want);
+        assert_eq!(updates.len(), want.len() * 5);
+    }
+
+    #[test]
+    fn dense_path_stays_streaming() {
+        let g = ErdosRenyi::new(64, 0.2, 11);
+        assert!(Dynamify::new(g, 3).materialized.is_none());
+    }
+
+    #[test]
+    fn replay_through_vecstream_matches() {
+        let g = ErdosRenyi::new(32, 0.4, 8);
+        let updates: Vec<Update> = Dynamify::new(g, 3).collect();
+        let replay: Vec<Update> = VecStream::new(32, updates.clone()).collect();
+        assert_eq!(replay, updates);
+    }
+}

@@ -1,0 +1,92 @@
+//! Erdős–Rényi G(V, p) edge model — the paper's `erdos18..20` datasets
+//! (§7.1) use p = 1/4.
+//!
+//! Presence is a pure hash-threshold function so the model is O(1) state
+//! regardless of density.
+
+use crate::hashing::splitmix64;
+use crate::sketch::params::encode_edge;
+use crate::stream::EdgeModel;
+
+/// G(V, p) with deterministic membership.
+#[derive(Clone, Copy, Debug)]
+pub struct ErdosRenyi {
+    v: u64,
+    /// presence threshold over the hash's u64 range
+    threshold: u64,
+    p: f64,
+    seed: u64,
+}
+
+impl ErdosRenyi {
+    pub fn new(v: u64, p: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&p));
+        let threshold = if p >= 1.0 {
+            u64::MAX
+        } else {
+            (p * 2f64.powi(64)) as u64
+        };
+        Self { v, threshold, p, seed }
+    }
+}
+
+impl EdgeModel for ErdosRenyi {
+    fn num_vertices(&self) -> u64 {
+        self.v
+    }
+
+    #[inline]
+    fn contains(&self, a: u32, b: u32) -> bool {
+        let idx = encode_edge(a, b, self.v);
+        splitmix64(self.seed ^ idx.wrapping_mul(0xE7037ED1A0B428DB)) < self.threshold
+    }
+
+    fn expected_edges(&self) -> f64 {
+        self.p * (self.v * (self.v - 1) / 2) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::count_edges;
+
+    #[test]
+    fn density_close_to_p() {
+        let g = ErdosRenyi::new(512, 0.25, 7);
+        let edges = count_edges(&g) as f64;
+        let expect = g.expected_edges();
+        assert!(
+            (edges - expect).abs() / expect < 0.05,
+            "edges={edges} expect={expect}"
+        );
+    }
+
+    #[test]
+    fn deterministic_membership() {
+        let g = ErdosRenyi::new(128, 0.3, 9);
+        for a in 0..20u32 {
+            for b in (a + 1)..20 {
+                assert_eq!(g.contains(a, b), g.contains(a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = ErdosRenyi::new(256, 0.5, 1);
+        let b = ErdosRenyi::new(256, 0.5, 2);
+        let diff = (0..255u32)
+            .filter(|&x| a.contains(x, x + 1) != b.contains(x, x + 1))
+            .count();
+        assert!(diff > 40);
+    }
+
+    #[test]
+    fn extreme_probabilities() {
+        let none = ErdosRenyi::new(64, 0.0, 3);
+        let all = ErdosRenyi::new(64, 1.0, 3);
+        assert_eq!(count_edges(&none), 0);
+        assert_eq!(count_edges(&all), 64 * 63 / 2);
+    }
+}

@@ -1,0 +1,170 @@
+//! Binary stream file format ("LSTRM1"): header + 9-byte update records.
+//!
+//! Matches the paper's setup where streams are read from files by the
+//! main node's ingest threads.  Layout:
+//!
+//! ```text
+//! magic   [8]  b"LSTRM1\0\0"
+//! version u32  le
+//! vertices u64 le
+//! count   u64  le
+//! records count × 9 bytes (see Update::to_bytes)
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::stream::{GraphStream, Update};
+
+const MAGIC: &[u8; 8] = b"LSTRM1\0\0";
+const VERSION: u32 = 1;
+
+/// Write a full stream to `path`.
+pub fn write_stream<S: GraphStream>(path: &Path, stream: S) -> std::io::Result<u64> {
+    let vertices = stream.num_vertices();
+    let mut w = BufWriter::with_capacity(1 << 20, File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&vertices.to_le_bytes())?;
+    // count patched after the fact via a second header write
+    w.write_all(&0u64.to_le_bytes())?;
+    let mut count = 0u64;
+    for upd in stream {
+        w.write_all(&upd.to_bytes())?;
+        count += 1;
+    }
+    w.flush()?;
+    drop(w);
+    // patch the count field (offset 20)
+    use std::io::{Seek, SeekFrom};
+    let mut f = std::fs::OpenOptions::new().write(true).open(path)?;
+    f.seek(SeekFrom::Start(20))?;
+    f.write_all(&count.to_le_bytes())?;
+    Ok(count)
+}
+
+/// Buffered reader over a stream file.
+pub struct FileStream {
+    reader: BufReader<File>,
+    vertices: u64,
+    count: u64,
+    read: u64,
+}
+
+impl FileStream {
+    pub fn open(path: &Path) -> std::io::Result<Self> {
+        let mut reader = BufReader::with_capacity(1 << 20, File::open(path)?);
+        let mut magic = [0u8; 8];
+        reader.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "bad stream magic",
+            ));
+        }
+        let mut buf4 = [0u8; 4];
+        reader.read_exact(&mut buf4)?;
+        let version = u32::from_le_bytes(buf4);
+        if version != VERSION {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("unsupported stream version {version}"),
+            ));
+        }
+        let mut buf8 = [0u8; 8];
+        reader.read_exact(&mut buf8)?;
+        let vertices = u64::from_le_bytes(buf8);
+        reader.read_exact(&mut buf8)?;
+        let count = u64::from_le_bytes(buf8);
+        Ok(Self {
+            reader,
+            vertices,
+            count,
+            read: 0,
+        })
+    }
+
+    /// Declared update count from the header.
+    pub fn declared_count(&self) -> u64 {
+        self.count
+    }
+}
+
+impl Iterator for FileStream {
+    type Item = Update;
+    fn next(&mut self) -> Option<Update> {
+        if self.read >= self.count {
+            return None;
+        }
+        let mut rec = [0u8; 9];
+        self.reader.read_exact(&mut rec).ok()?;
+        self.read += 1;
+        Update::from_bytes(&rec).ok()
+    }
+}
+
+impl GraphStream for FileStream {
+    fn num_vertices(&self) -> u64 {
+        self.vertices
+    }
+    fn len_hint(&self) -> Option<u64> {
+        Some(self.count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::dynamify::Dynamify;
+    use crate::stream::erdos::ErdosRenyi;
+    use crate::stream::VecStream;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("landscape_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_small_stream() {
+        let path = tmpfile("roundtrip.lstrm");
+        let updates = vec![
+            Update::insert(0, 1),
+            Update::insert(2, 3),
+            Update::delete(0, 1),
+        ];
+        let n = write_stream(&path, VecStream::new(8, updates.clone())).unwrap();
+        assert_eq!(n, 3);
+        let fs = FileStream::open(&path).unwrap();
+        assert_eq!(fs.num_vertices(), 8);
+        assert_eq!(fs.declared_count(), 3);
+        assert_eq!(fs.collect::<Vec<_>>(), updates);
+    }
+
+    #[test]
+    fn roundtrip_generated_stream() {
+        let path = tmpfile("generated.lstrm");
+        let make = || Dynamify::new(ErdosRenyi::new(64, 0.2, 9), 3);
+        let want: Vec<Update> = make().collect();
+        write_stream(&path, make()).unwrap();
+        let got: Vec<Update> = FileStream::open(&path).unwrap().collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let path = tmpfile("bad.lstrm");
+        std::fs::write(&path, b"NOTASTREAMFILE\0\0\0\0\0\0\0\0\0\0\0\0").unwrap();
+        assert!(FileStream::open(&path).is_err());
+    }
+
+    #[test]
+    fn file_size_is_header_plus_9n() {
+        let path = tmpfile("size.lstrm");
+        let updates: Vec<Update> = (0..100).map(|i| Update::insert(i, i + 1)).collect();
+        write_stream(&path, VecStream::new(256, updates)).unwrap();
+        let len = std::fs::metadata(&path).unwrap().len();
+        assert_eq!(len, 28 + 100 * 9);
+    }
+}

@@ -1,0 +1,151 @@
+//! Stochastic-Kronecker edge model — the paper's `kron13..17` datasets
+//! (§7.1) follow the Graph500 generator spec but at ~25% density.
+//!
+//! Edge probability is the Kronecker product of a 2×2 initiator over the
+//! bit-planes of the endpoint ids, normalized so the *mean* pair
+//! probability equals the target density, then clipped at 1.  Membership
+//! is a deterministic hash threshold against that probability, so the
+//! model is O(1) state like the others.
+
+use crate::hashing::splitmix64;
+use crate::sketch::params::encode_edge;
+use crate::stream::EdgeModel;
+
+/// Kronecker initiator as a symmetric 2×2 weight matrix scaled to sum 4
+/// (so the product over bit-planes has mean 1 over all pairs).
+///
+/// Graph500's raw (0.57, 0.19, 0.19, 0.05) weights make the per-pair
+/// product so skewed that, at the *dense* ~V²/4 edge counts the paper's
+/// kron streams have, most probability mass would be clipped at 1 and
+/// the realized density would collapse.  The paper's generator avoids
+/// this by sampling edges with replacement (heavy cells saturate); our
+/// closed-form membership model instead flattens the initiator toward
+/// uniform — preserving the low-id degree skew qualitatively while
+/// keeping the realized density at the paper's level.
+const INITIATOR: [[f64; 2]; 2] = [
+    [1.40, 1.00],
+    [1.00, 0.60],
+];
+
+/// Kronecker model over V = 2^scale vertices at a target mean density.
+#[derive(Clone, Copy, Debug)]
+pub struct Kronecker {
+    scale: u32,
+    density: f64,
+    seed: u64,
+}
+
+impl Kronecker {
+    /// `scale`: log2(V).  `density`: target mean edge probability — the
+    /// paper's kron streams sit near 0.25.
+    pub fn new(scale: u32, density: f64, seed: u64) -> Self {
+        assert!(scale >= 1 && scale <= 30);
+        assert!((0.0..=1.0).contains(&density));
+        Self {
+            scale,
+            density,
+            seed,
+        }
+    }
+
+    /// The paper's kron configuration at a given scale: ≈ V²/4 edges,
+    /// i.e. half of all unordered pairs (Table 2's kron13..17 ratios).
+    pub fn paper(scale: u32, seed: u64) -> Self {
+        Self::new(scale, 0.5, seed)
+    }
+
+    /// Pair probability before clipping.
+    #[inline]
+    fn raw_probability(&self, a: u32, b: u32) -> f64 {
+        let mut p = self.density;
+        for bit in 0..self.scale {
+            let ba = ((a >> bit) & 1) as usize;
+            let bb = ((b >> bit) & 1) as usize;
+            // symmetrize: unordered pair sees the average of both orders
+            p *= 0.5 * (INITIATOR[ba][bb] + INITIATOR[bb][ba]);
+        }
+        p
+    }
+}
+
+impl EdgeModel for Kronecker {
+    fn num_vertices(&self) -> u64 {
+        1u64 << self.scale
+    }
+
+    #[inline]
+    fn contains(&self, a: u32, b: u32) -> bool {
+        let p = self.raw_probability(a, b).min(1.0);
+        if p <= 0.0 {
+            return false;
+        }
+        let idx = encode_edge(a, b, self.num_vertices());
+        let h = splitmix64(self.seed ^ idx.wrapping_mul(0x8EBC6AF09C88C6E3));
+        (h as f64) < p * 2f64.powi(64)
+    }
+
+    fn expected_edges(&self) -> f64 {
+        // mean pair probability ≈ density (clipping skews it down for
+        // skewed initiators; report the nominal value)
+        let v = self.num_vertices();
+        self.density * (v * (v - 1) / 2) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::count_edges;
+
+    #[test]
+    fn density_in_the_right_regime() {
+        let g = Kronecker::paper(9, 5); // V=512
+        let edges = count_edges(&g) as f64;
+        let pairs = (512.0 * 511.0) / 2.0;
+        let density = edges / pairs;
+        // clipping makes the realized density land below the nominal
+        // 0.25, but it must stay dense (same regime as the paper's kron)
+        assert!(
+            density > 0.20 && density < 0.70,
+            "density={density}"
+        );
+    }
+
+    #[test]
+    fn degree_distribution_is_skewed() {
+        // Kronecker graphs concentrate edges among low-id vertices
+        let g = Kronecker::paper(9, 5);
+        let v = 512u32;
+        let degree = |x: u32| -> usize {
+            (0..v)
+                .filter(|&y| y != x && g.contains(x.min(y), x.max(y)))
+                .count()
+        };
+        let low: usize = (0..16).map(degree).sum();
+        let high: usize = (v - 16..v).map(degree).sum();
+        assert!(
+            low > 2 * high,
+            "low-id degree sum {low} vs high-id {high}"
+        );
+    }
+
+    #[test]
+    fn membership_is_deterministic_and_symmetric_encoding() {
+        let g = Kronecker::paper(8, 1);
+        for a in 0..30u32 {
+            for b in (a + 1)..30 {
+                assert_eq!(g.contains(a, b), g.contains(a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn seeds_change_the_graph() {
+        let a = Kronecker::paper(8, 1);
+        let b = Kronecker::paper(8, 2);
+        let diff = (0..200u32)
+            .filter(|&x| a.contains(x, x + 1) != b.contains(x, x + 1))
+            .count();
+        assert!(diff > 10);
+    }
+}

@@ -1,0 +1,134 @@
+//! Graph streams: the semi-streaming input model (paper §3), synthetic
+//! dataset generators matching the paper's evaluation suite (§7.1), the
+//! insert/delete stream transform, and the 9-byte binary wire format.
+//!
+//! All generators are *deterministic functions of their seed* with O(1)
+//! state: edge presence is decided by hash thresholds, and stream order
+//! by Feistel permutations — no edge list is ever materialized, so
+//! dense-graph streams far larger than RAM could be produced.
+
+pub mod datasets;
+pub mod dynamify;
+pub mod erdos;
+pub mod file;
+pub mod kron;
+pub mod permute;
+pub mod realworld;
+pub mod update;
+
+pub use update::{Update, UpdateKind};
+
+/// A graph-update stream: an iterator of updates plus its header data.
+pub trait GraphStream: Iterator<Item = Update> {
+    /// Number of vertices of the underlying graph.
+    fn num_vertices(&self) -> u64;
+    /// Total number of updates this stream will yield, if known.
+    fn len_hint(&self) -> Option<u64>;
+}
+
+/// Edge-presence models: a deterministic membership oracle for the
+/// *final* graph a stream defines.  `contains` must be a pure function
+/// of (model, a, b) — generators derive presence from hash thresholds.
+pub trait EdgeModel: Send + Sync {
+    fn num_vertices(&self) -> u64;
+    /// Membership test; callers guarantee a < b < V.
+    fn contains(&self, a: u32, b: u32) -> bool;
+    /// Expected number of edges (for sizing / reporting).
+    fn expected_edges(&self) -> f64;
+}
+
+/// Exact edge count by full enumeration — O(V²), for tests and the
+/// dataset-inventory bench on small V.
+pub fn count_edges<M: EdgeModel>(model: &M) -> u64 {
+    let v = model.num_vertices() as u32;
+    let mut n = 0;
+    for a in 0..v {
+        for b in (a + 1)..v {
+            if model.contains(a, b) {
+                n += 1;
+            }
+        }
+    }
+    n
+}
+
+/// Materialize a model's edge list — tests only.
+pub fn edge_list<M: EdgeModel>(model: &M) -> Vec<(u32, u32)> {
+    let v = model.num_vertices() as u32;
+    let mut edges = Vec::new();
+    for a in 0..v {
+        for b in (a + 1)..v {
+            if model.contains(a, b) {
+                edges.push((a, b));
+            }
+        }
+    }
+    edges
+}
+
+/// An in-memory stream over a materialized update vector (tests, small
+/// benches, and file replay).
+pub struct VecStream {
+    vertices: u64,
+    updates: std::vec::IntoIter<Update>,
+    total: u64,
+}
+
+impl VecStream {
+    pub fn new(vertices: u64, updates: Vec<Update>) -> Self {
+        let total = updates.len() as u64;
+        Self {
+            vertices,
+            updates: updates.into_iter(),
+            total,
+        }
+    }
+}
+
+impl Iterator for VecStream {
+    type Item = Update;
+    fn next(&mut self) -> Option<Update> {
+        self.updates.next()
+    }
+}
+
+impl GraphStream for VecStream {
+    fn num_vertices(&self) -> u64 {
+        self.vertices
+    }
+    fn len_hint(&self) -> Option<u64> {
+        Some(self.total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Tiny;
+    impl EdgeModel for Tiny {
+        fn num_vertices(&self) -> u64 {
+            4
+        }
+        fn contains(&self, a: u32, b: u32) -> bool {
+            (a, b) == (0, 1) || (a, b) == (2, 3)
+        }
+        fn expected_edges(&self) -> f64 {
+            2.0
+        }
+    }
+
+    #[test]
+    fn count_and_list_agree() {
+        assert_eq!(count_edges(&Tiny), 2);
+        assert_eq!(edge_list(&Tiny), vec![(0, 1), (2, 3)]);
+    }
+
+    #[test]
+    fn vec_stream_reports_header() {
+        let s = VecStream::new(4, vec![Update::insert(0, 1)]);
+        assert_eq!(s.num_vertices(), 4);
+        assert_eq!(s.len_hint(), Some(1));
+        assert_eq!(s.collect::<Vec<_>>().len(), 1);
+    }
+}

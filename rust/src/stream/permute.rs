@@ -1,0 +1,99 @@
+//! Feistel-network index permutations.
+//!
+//! Stream generators need each "round" of the insert/delete transform to
+//! visit the candidate edge space in a different pseudo-random order
+//! *without materializing a permutation array* (the candidate space is
+//! V², far too large).  A balanced 4-round Feistel network over a
+//! 2w-bit domain is a bijection computable in O(1) per element, seeded
+//! per round.
+
+use crate::hashing::splitmix64;
+
+/// A bijection over `[0, 2^(2·half_bits))`.
+#[derive(Clone, Copy, Debug)]
+pub struct FeistelPermutation {
+    half_bits: u32,
+    keys: [u64; 4],
+}
+
+impl FeistelPermutation {
+    /// A permutation over a domain of at least `min_size`, rounded up to
+    /// the next even power of two.  `min_size ≥ 1`.
+    pub fn covering(min_size: u64, seed: u64) -> Self {
+        let bits = 64 - (min_size.max(2) - 1).leading_zeros();
+        let half_bits = bits.div_ceil(2).max(1);
+        let mut keys = [0u64; 4];
+        for (i, k) in keys.iter_mut().enumerate() {
+            *k = splitmix64(seed ^ (i as u64 + 1).wrapping_mul(0xA0761D6478BD642F));
+        }
+        Self { half_bits, keys }
+    }
+
+    /// Domain size 2^(2·half_bits).
+    pub fn domain(&self) -> u64 {
+        1u64 << (2 * self.half_bits)
+    }
+
+    /// Apply the permutation.
+    #[inline]
+    pub fn apply(&self, x: u64) -> u64 {
+        debug_assert!(x < self.domain());
+        let mask = (1u64 << self.half_bits) - 1;
+        let mut left = x >> self.half_bits;
+        let mut right = x & mask;
+        for &k in &self.keys {
+            let f = splitmix64(right ^ k) & mask;
+            let new_right = left ^ f;
+            left = right;
+            right = new_right;
+        }
+        (left << self.half_bits) | right
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::Cases;
+
+    #[test]
+    fn is_a_bijection_on_small_domains() {
+        Cases::new(10).run(|rng| {
+            let p = FeistelPermutation::covering(1 + rng.next_below(4000), rng.next_u64());
+            let n = p.domain();
+            assert!(n <= 1 << 13, "test domain kept small");
+            let mut seen = vec![false; n as usize];
+            for x in 0..n {
+                let y = p.apply(x) as usize;
+                assert!(!seen[y], "collision at {x} -> {y}");
+                seen[y] = true;
+            }
+        });
+    }
+
+    #[test]
+    fn domain_covers_min_size() {
+        for min in [1u64, 2, 3, 100, 1 << 20, (1 << 26) + 1] {
+            let p = FeistelPermutation::covering(min, 7);
+            assert!(p.domain() >= min, "domain {} < {min}", p.domain());
+        }
+    }
+
+    #[test]
+    fn different_seeds_give_different_orders() {
+        let a = FeistelPermutation::covering(1 << 10, 1);
+        let b = FeistelPermutation::covering(1 << 10, 2);
+        let same = (0..1024).filter(|&x| a.apply(x) == b.apply(x)).count();
+        assert!(same < 8, "{same} agreements");
+    }
+
+    #[test]
+    fn order_looks_shuffled() {
+        // successive outputs shouldn't be successive inputs
+        let p = FeistelPermutation::covering(1 << 12, 3);
+        let monotone_pairs = (0..4095u64)
+            .filter(|&x| p.apply(x) + 1 == p.apply(x + 1))
+            .count();
+        assert!(monotone_pairs < 10);
+    }
+}

@@ -1,0 +1,115 @@
+//! Stream update records — the `((u,v), Δ)` elements of the graph
+//! semi-streaming model (paper §3).
+
+/// Insert or delete — the Δ ∈ {+1, -1} of the model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum UpdateKind {
+    Insert,
+    Delete,
+}
+
+/// One stream element.  The wire encoding is 9 bytes (1 kind + 2×u32
+/// endpoints), matching the paper's "graph stream updates are 9 bytes".
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Update {
+    pub u: u32,
+    pub v: u32,
+    pub kind: UpdateKind,
+}
+
+/// Bytes per update on the wire / in the data-acquisition accounting.
+pub const UPDATE_WIRE_BYTES: u64 = 9;
+
+impl Update {
+    #[inline]
+    pub fn insert(u: u32, v: u32) -> Self {
+        Self {
+            u,
+            v,
+            kind: UpdateKind::Insert,
+        }
+    }
+
+    #[inline]
+    pub fn delete(u: u32, v: u32) -> Self {
+        Self {
+            u,
+            v,
+            kind: UpdateKind::Delete,
+        }
+    }
+
+    /// Normalized endpoints (lo, hi).
+    #[inline]
+    pub fn endpoints(&self) -> (u32, u32) {
+        if self.u < self.v {
+            (self.u, self.v)
+        } else {
+            (self.v, self.u)
+        }
+    }
+
+    /// Serialize to the 9-byte wire format.
+    #[inline]
+    pub fn to_bytes(&self) -> [u8; 9] {
+        let mut out = [0u8; 9];
+        out[0] = match self.kind {
+            UpdateKind::Insert => 0,
+            UpdateKind::Delete => 1,
+        };
+        out[1..5].copy_from_slice(&self.u.to_le_bytes());
+        out[5..9].copy_from_slice(&self.v.to_le_bytes());
+        out
+    }
+
+    /// Parse the 9-byte wire format.
+    #[inline]
+    pub fn from_bytes(b: &[u8; 9]) -> Result<Self, String> {
+        let kind = match b[0] {
+            0 => UpdateKind::Insert,
+            1 => UpdateKind::Delete,
+            x => return Err(format!("bad update kind byte {x}")),
+        };
+        Ok(Self {
+            kind,
+            u: u32::from_le_bytes(b[1..5].try_into().unwrap()),
+            v: u32::from_le_bytes(b[5..9].try_into().unwrap()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::Cases;
+
+    #[test]
+    fn wire_roundtrip() {
+        Cases::new(100).run(|rng| {
+            let upd = Update {
+                u: rng.next_u64() as u32,
+                v: rng.next_u64() as u32,
+                kind: if rng.next_bool(0.5) {
+                    UpdateKind::Insert
+                } else {
+                    UpdateKind::Delete
+                },
+            };
+            let bytes = upd.to_bytes();
+            assert_eq!(Update::from_bytes(&bytes).unwrap(), upd);
+        });
+    }
+
+    #[test]
+    fn bad_kind_rejected() {
+        let mut b = Update::insert(1, 2).to_bytes();
+        b[0] = 9;
+        assert!(Update::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn endpoints_normalized() {
+        assert_eq!(Update::insert(9, 2).endpoints(), (2, 9));
+        assert_eq!(Update::delete(2, 9).endpoints(), (2, 9));
+    }
+}

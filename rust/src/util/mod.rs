@@ -1,0 +1,43 @@
+//! Small shared utilities: deterministic RNG, a minimal JSON
+//! reader/writer (no serde in this offline environment), timing helpers,
+//! and a seeded property-testing harness used across the test suite.
+
+pub mod json;
+pub mod rng;
+pub mod testkit;
+pub mod timer;
+
+/// Integer ceil-division.
+#[inline]
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// `ceil(log_base(x))` computed in f64 but guarded against edge cases —
+/// used for sketch parameter derivation (must match python/compile/params.py).
+pub fn ceil_log(x: f64, base: f64) -> u32 {
+    if x <= 1.0 {
+        return 0;
+    }
+    (x.ln() / base.ln()).ceil() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn div_ceil_basics() {
+        assert_eq!(div_ceil(0, 4), 0);
+        assert_eq!(div_ceil(1, 4), 1);
+        assert_eq!(div_ceil(4, 4), 1);
+        assert_eq!(div_ceil(5, 4), 2);
+    }
+
+    #[test]
+    fn ceil_log_matches_integer_expectations() {
+        assert_eq!(ceil_log(1.0, 2.0), 0);
+        assert_eq!(ceil_log(2.0, 2.0), 1);
+        assert_eq!(ceil_log(8192.0, 1.5), 23); // log_{1.5} 2^13, paper App. E
+    }
+}

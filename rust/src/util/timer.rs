@@ -1,0 +1,78 @@
+//! Wall-clock timing helpers shared by the coordinator metrics and the
+//! bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let sw = Stopwatch::new();
+    let out = f();
+    (out, sw.elapsed_secs())
+}
+
+/// Throughput in ops/sec guarded against zero elapsed time.
+pub fn rate(ops: u64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return f64::INFINITY;
+    }
+    ops as f64 / secs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_returns_value_and_positive_time() {
+        let (v, secs) = timed(|| (0..1000).sum::<u64>());
+        assert_eq!(v, 499_500);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn rate_handles_zero() {
+        assert!(rate(100, 0.0).is_infinite());
+        assert!((rate(100, 2.0) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn restart_resets() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        let first = sw.restart();
+        assert!(first.as_millis() >= 2);
+        assert!(sw.elapsed() <= first + Duration::from_millis(50));
+    }
+}

@@ -1,0 +1,214 @@
+//! Worker backends — the stateless distributed workers of §5.2.
+//!
+//! A worker receives a vertex-based batch of edge indices and returns a
+//! sketch delta for each of the k sketch copies, concatenated.  Workers
+//! hold no graph state (only the seed material), which is what lets the
+//! paper run them on 2 GB nodes and lets us swap implementations:
+//!
+//! * [`NativeWorker`] — the Rust CameoSketch kernel (the perf path).
+//! * [`XlaWorker`] — executes the AOT Pallas artifact via PJRT
+//!   (the three-layer composition path; bit-identical to native).
+//! * [`CubeWorker`] — CubeSketch updates (Fig. 4 / Fig. 16 ablation).
+//! * [`RemoteWorker`] — a TCP client speaking the `net` protocol to a
+//!   `landscape worker` server process.
+
+pub mod remote;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::sketch::params::{encode_edge, SketchParams};
+use crate::sketch::seeds::SketchSeeds;
+use crate::sketch::{CameoSketch, CubeSketch};
+
+/// A sketch-delta computation backend.
+///
+/// `process` must append `k × params.words()` u64 words to `out` — one
+/// delta per sketch copy, in copy order.
+///
+/// Deliberately *not* `Send + Sync`: the XLA backend wraps PJRT handles
+/// that must stay on the thread that created them, so the coordinator
+/// constructs one backend per distributor thread, inside that thread.
+pub trait WorkerBackend {
+    /// `others` are the non-`vertex` endpoints of the batched updates;
+    /// the worker reconstructs each edge index as
+    /// `encode_edge(vertex, other)` — the encode cost is part of the
+    /// work being distributed away.
+    fn process(&self, vertex: u32, others: &[u32], out: &mut Vec<u64>) -> Result<()>;
+    /// Human-readable backend name (for logs / bench output).
+    fn name(&self) -> &'static str;
+}
+
+/// Reconstruct edge indices from a (vertex, others) batch.
+pub fn batch_indices(vertex: u32, others: &[u32], v: u64, out: &mut Vec<u64>) {
+    out.clear();
+    out.reserve(others.len());
+    for &o in others {
+        out.push(encode_edge(vertex, o, v));
+    }
+}
+
+/// Seed material shared by all backends: one [`SketchSeeds`] per copy.
+#[derive(Clone, Debug)]
+pub struct WorkerSeeds {
+    pub params: SketchParams,
+    pub per_copy: Vec<SketchSeeds>,
+}
+
+impl WorkerSeeds {
+    pub fn derive(params: SketchParams, graph_seed: u64, k: u32) -> Self {
+        let per_copy = (0..k)
+            .map(|c| SketchSeeds::derive(&params, SketchSeeds::copy_seed(graph_seed, c)))
+            .collect();
+        Self { params, per_copy }
+    }
+
+    pub fn k(&self) -> u32 {
+        self.per_copy.len() as u32
+    }
+}
+
+/// Native Rust CameoSketch worker.
+pub struct NativeWorker {
+    seeds: WorkerSeeds,
+    scratch: std::cell::RefCell<Vec<u64>>,
+}
+
+impl NativeWorker {
+    pub fn new(seeds: WorkerSeeds) -> Self {
+        Self {
+            seeds,
+            scratch: std::cell::RefCell::new(Vec::new()),
+        }
+    }
+}
+
+impl WorkerBackend for NativeWorker {
+    fn process(&self, vertex: u32, others: &[u32], out: &mut Vec<u64>) -> Result<()> {
+        let words = self.seeds.params.words();
+        let mut idx = self.scratch.borrow_mut();
+        batch_indices(vertex, others, self.seeds.params.v, &mut idx);
+        for seeds in &self.seeds.per_copy {
+            let start = out.len();
+            out.resize(start + words, 0);
+            CameoSketch::delta_of_batch_into(
+                &mut out[start..],
+                &self.seeds.params,
+                seeds,
+                &idx,
+            );
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "native-cameo"
+    }
+}
+
+/// CubeSketch worker — the GraphZeppelin-mode ablation backend.
+pub struct CubeWorker {
+    seeds: WorkerSeeds,
+}
+
+impl CubeWorker {
+    pub fn new(seeds: WorkerSeeds) -> Self {
+        Self { seeds }
+    }
+}
+
+impl WorkerBackend for CubeWorker {
+    fn process(&self, vertex: u32, others: &[u32], out: &mut Vec<u64>) -> Result<()> {
+        let mut idx = Vec::new();
+        batch_indices(vertex, others, self.seeds.params.v, &mut idx);
+        for seeds in &self.seeds.per_copy {
+            let delta = CubeSketch::delta_of_batch(&self.seeds.params, seeds, &idx);
+            out.extend_from_slice(&delta);
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "cube-ablation"
+    }
+}
+
+/// XLA worker: the AOT-compiled Pallas kernel via PJRT.
+pub struct XlaWorker {
+    seeds: WorkerSeeds,
+    exe: crate::runtime::DeltaExecutable,
+}
+
+impl XlaWorker {
+    /// Load the artifact matching `seeds.params` from `artifact_dir`.
+    pub fn load(artifact_dir: &Path, seeds: WorkerSeeds) -> Result<Self> {
+        let rt = crate::runtime::Runtime::cpu()?;
+        let exe = rt.load_delta_executable(artifact_dir, seeds.params)?;
+        Ok(Self { seeds, exe })
+    }
+}
+
+impl WorkerBackend for XlaWorker {
+    fn process(&self, vertex: u32, others: &[u32], out: &mut Vec<u64>) -> Result<()> {
+        let mut idx = Vec::new();
+        batch_indices(vertex, others, self.seeds.params.v, &mut idx);
+        for seeds in &self.seeds.per_copy {
+            let delta = self.exe.compute_delta(&idx, seeds)?;
+            out.extend_from_slice(&delta);
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pallas"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::params::encode_edge;
+
+    fn seeds(v: u64, k: u32) -> WorkerSeeds {
+        WorkerSeeds::derive(SketchParams::for_vertices(v), 42, k)
+    }
+
+    #[test]
+    fn native_worker_emits_k_deltas() {
+        let s = seeds(64, 3);
+        let words = s.params.words();
+        let w = NativeWorker::new(s);
+        let mut out = Vec::new();
+        w.process(0, &[1, 2], &mut out).unwrap();
+        assert_eq!(out.len(), 3 * words);
+        // copies use different seeds, so deltas differ
+        assert_ne!(out[..words], out[words..2 * words]);
+    }
+
+    #[test]
+    fn native_matches_direct_kernel() {
+        let s = seeds(64, 1);
+        let params = s.params;
+        let direct = CameoSketch::delta_of_batch(
+            &params,
+            &s.per_copy[0],
+            &[encode_edge(3, 4, 64)],
+        );
+        let w = NativeWorker::new(s);
+        let mut out = Vec::new();
+        w.process(3, &[4], &mut out).unwrap();
+        assert_eq!(out, direct);
+    }
+
+    #[test]
+    fn cube_worker_differs_from_native_below_row0() {
+        let s = seeds(64, 1);
+        let native = NativeWorker::new(s.clone());
+        let cube = CubeWorker::new(s);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        native.process(0, &[1], &mut a).unwrap();
+        cube.process(0, &[1], &mut b).unwrap();
+        assert_ne!(a, b, "cube writes extra rows");
+    }
+}

@@ -1,0 +1,227 @@
+//! Remote workers over TCP: the server loop run by `landscape worker`,
+//! and the coordinator-side client backend.
+//!
+//! Workers are stateless (paper §6): the HELLO handshake carries the
+//! graph config, after which the server answers BATCH frames with DELTA
+//! frames computed by a [`NativeWorker`].  One connection serves one
+//! coordinator distributor thread; a server accepts many connections.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::net::Message;
+use crate::sketch::params::SketchParams;
+use crate::worker::{NativeWorker, WorkerBackend, WorkerSeeds};
+
+/// Coordinator-side backend that forwards batches to a remote worker.
+pub struct RemoteWorker {
+    conn: Mutex<RemoteConn>,
+    /// Bytes sent/received over this connection (metered at the framing
+    /// layer; feeds the Theorem 5.2 validation).
+    pub bytes_sent: AtomicU64,
+    pub bytes_received: AtomicU64,
+}
+
+struct RemoteConn {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl RemoteWorker {
+    /// Connect and perform the HELLO handshake.
+    pub fn connect(
+        addr: &str,
+        params: SketchParams,
+        graph_seed: u64,
+        k: u32,
+    ) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        let mut writer = BufWriter::new(stream);
+        let hello = Message::Hello {
+            vertices: params.v,
+            columns: params.columns,
+            graph_seed,
+            k,
+        };
+        let sent = hello.write_to(&mut writer)?;
+        let worker = Self {
+            conn: Mutex::new(RemoteConn { reader, writer }),
+            bytes_sent: AtomicU64::new(sent),
+            bytes_received: AtomicU64::new(0),
+        };
+        Ok(worker)
+    }
+
+    /// Politely shut the connection down.
+    pub fn shutdown(&self) {
+        if let Ok(mut conn) = self.conn.lock() {
+            let _ = Message::Shutdown.write_to(&mut conn.writer);
+        }
+    }
+}
+
+impl WorkerBackend for RemoteWorker {
+    fn process(&self, vertex: u32, others: &[u32], out: &mut Vec<u64>) -> Result<()> {
+        let mut conn = self.conn.lock().unwrap();
+        let batch = Message::Batch {
+            vertex,
+            others: others.to_vec(),
+        };
+        let sent = batch.write_to(&mut conn.writer)?;
+        self.bytes_sent.fetch_add(sent, Ordering::Relaxed);
+        match Message::read_from(&mut conn.reader)? {
+            Message::Delta {
+                vertex: rv,
+                delta,
+            } => {
+                if rv != vertex {
+                    bail!("delta for wrong vertex: sent {vertex}, got {rv}");
+                }
+                self.bytes_received.fetch_add(
+                    Message::Delta {
+                        vertex: rv,
+                        delta: Vec::new(),
+                    }
+                    .wire_bytes()
+                        + delta.len() as u64 * 8,
+                    Ordering::Relaxed,
+                );
+                out.extend_from_slice(&delta);
+                Ok(())
+            }
+            other => Err(anyhow!("expected DELTA, got {other:?}")),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "remote-tcp"
+    }
+}
+
+/// Worker server: accept connections, answer batches until SHUTDOWN.
+pub struct WorkerServer {
+    listener: TcpListener,
+}
+
+impl WorkerServer {
+    /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
+    pub fn bind(addr: &str) -> Result<Self> {
+        Ok(Self {
+            listener: TcpListener::bind(addr)?,
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve `max_connections` then return (use `usize::MAX` to run
+    /// forever).  Each connection is handled on its own thread.
+    pub fn serve(&self, max_connections: usize) -> Result<()> {
+        let mut served = 0;
+        let mut handles = Vec::new();
+        for stream in self.listener.incoming() {
+            let stream = stream?;
+            handles.push(std::thread::spawn(move || {
+                if let Err(e) = handle_connection(stream) {
+                    eprintln!("worker connection error: {e:#}");
+                }
+            }));
+            served += 1;
+            if served >= max_connections {
+                break;
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+fn handle_connection(stream: TcpStream) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+
+    // handshake: first frame must be HELLO
+    let backend: Box<dyn WorkerBackend> = match Message::read_from(&mut reader)? {
+        Message::Hello {
+            vertices,
+            columns,
+            graph_seed,
+            k,
+        } => {
+            let params = SketchParams::with_columns(vertices, columns);
+            Box::new(NativeWorker::new(WorkerSeeds::derive(params, graph_seed, k)))
+        }
+        other => bail!("expected HELLO, got {other:?}"),
+    };
+
+    let mut out = Vec::new();
+    loop {
+        match Message::read_from(&mut reader) {
+            Ok(Message::Batch { vertex, others }) => {
+                out.clear();
+                backend.process(vertex, &others, &mut out)?;
+                Message::Delta {
+                    vertex,
+                    delta: out.clone(),
+                }
+                .write_to(&mut writer)?;
+            }
+            Ok(Message::Shutdown) | Err(_) => return Ok(()),
+            Ok(other) => bail!("unexpected frame {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::params::encode_edge;
+    use crate::sketch::CameoSketch;
+    use crate::sketch::seeds::SketchSeeds;
+
+    #[test]
+    fn remote_worker_round_trip_matches_native() {
+        let params = SketchParams::for_vertices(64);
+        let server = WorkerServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let server_thread = std::thread::spawn(move || server.serve(1));
+
+        let remote = RemoteWorker::connect(&addr, params, 42, 1).unwrap();
+        let mut got = Vec::new();
+        remote.process(0, &[1, 3], &mut got).unwrap();
+        remote.shutdown();
+        server_thread.join().unwrap().unwrap();
+
+        let seeds = SketchSeeds::derive(&params, 42);
+        let idx = vec![encode_edge(0, 1, 64), encode_edge(0, 3, 64)];
+        let want = CameoSketch::delta_of_batch(&params, &seeds, &idx);
+        assert_eq!(got, want, "remote delta must be bit-identical to local");
+        assert!(remote.bytes_sent.load(Ordering::Relaxed) > 0);
+        assert!(remote.bytes_received.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn remote_worker_k_copies() {
+        let params = SketchParams::for_vertices(32);
+        let server = WorkerServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let server_thread = std::thread::spawn(move || server.serve(1));
+
+        let remote = RemoteWorker::connect(&addr, params, 7, 3).unwrap();
+        let mut got = Vec::new();
+        remote.process(1, &[2], &mut got).unwrap();
+        remote.shutdown();
+        server_thread.join().unwrap().unwrap();
+        assert_eq!(got.len(), 3 * params.words());
+    }
+}

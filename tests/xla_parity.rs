@@ -1,0 +1,161 @@
+//! Three-layer composition proof: the AOT-compiled Pallas kernel
+//! (python L1/L2 → HLO text → PJRT) must be *bit-identical* to the
+//! native Rust CameoSketch kernel, and a full coordinator run in XLA
+//! worker mode must produce correct connectivity.
+//!
+//! Requires `make artifacts` (skips cleanly otherwise).
+
+use std::path::PathBuf;
+
+use landscape::connectivity::dsu::Dsu;
+use landscape::coordinator::{Coordinator, CoordinatorConfig, WorkerKind};
+use landscape::runtime::Runtime;
+use landscape::sketch::params::{encode_edge, SketchParams};
+use landscape::sketch::seeds::SketchSeeds;
+use landscape::sketch::CameoSketch;
+use landscape::stream::dynamify::Dynamify;
+use landscape::stream::erdos::ErdosRenyi;
+use landscape::stream::{edge_list, EdgeModel};
+use landscape::util::rng::Xoshiro256;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn xla_delta_bit_identical_to_native() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let v = 1u64 << 10;
+    let params = SketchParams::for_vertices(v);
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_delta_executable(&dir, params).unwrap();
+
+    let mut rng = Xoshiro256::new(0xABCD);
+    for trial in 0..5 {
+        let graph_seed = rng.next_u64();
+        let seeds = SketchSeeds::derive(&params, graph_seed);
+        let n = (rng.next_below(600) + 1) as usize; // exercises chunking (B=512)
+        let indices: Vec<u64> = (0..n)
+            .map(|_| {
+                let a = rng.next_below(v - 1) as u32;
+                let b = a + 1 + rng.next_below(v - 1 - a as u64) as u32;
+                encode_edge(a, b, v)
+            })
+            .collect();
+
+        let xla = exe.compute_delta(&indices, &seeds).unwrap();
+        let native = CameoSketch::delta_of_batch(&params, &seeds, &indices);
+        assert_eq!(xla, native, "trial {trial}: XLA and native deltas diverged");
+    }
+}
+
+#[test]
+fn xla_delta_empty_and_padding_cases() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let v = 1u64 << 10;
+    let params = SketchParams::for_vertices(v);
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_delta_executable(&dir, params).unwrap();
+    let seeds = SketchSeeds::derive(&params, 7);
+
+    // empty batch → all-zero delta
+    let empty = exe.compute_delta(&[], &seeds).unwrap();
+    assert!(empty.iter().all(|&w| w == 0));
+
+    // exact batch-size boundary (512) vs 513 (forces a second chunk)
+    let idx: Vec<u64> = (0..513)
+        .map(|i| encode_edge(0, 1 + (i % (v as u32 - 1)), v))
+        .collect();
+    let a = exe.compute_delta(&idx[..512], &seeds).unwrap();
+    let b = exe.compute_delta(&idx[..513], &seeds).unwrap();
+    let native_a = CameoSketch::delta_of_batch(&params, &seeds, &idx[..512]);
+    let native_b = CameoSketch::delta_of_batch(&params, &seeds, &idx[..513]);
+    assert_eq!(a, native_a);
+    assert_eq!(b, native_b);
+}
+
+#[test]
+fn coordinator_in_xla_mode_computes_correct_components() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let v = 1u64 << 8; // shares the L14/R22 artifact shape
+    let model = ErdosRenyi::new(v, 0.1, 123);
+    let mut want = Dsu::new(v as usize);
+    for (a, b) in edge_list(&model) {
+        want.union(a, b);
+    }
+
+    let mut cfg = CoordinatorConfig::for_vertices(v);
+    cfg.alpha = 1;
+    cfg.distributor_threads = 1;
+    cfg.worker = WorkerKind::Xla { artifact_dir: dir };
+    cfg.use_greedycc = false;
+    let mut coord = Coordinator::new(cfg).unwrap();
+    coord.ingest_all(Dynamify::new(model, 3));
+    let forest = coord.connected_components();
+
+    for a in 0..v as u32 {
+        for b in (a + 1)..(v as u32).min(a + 4) {
+            assert_eq!(
+                forest.connected(a, b),
+                want.connected(a, b),
+                "pair ({a},{b})"
+            );
+        }
+    }
+    assert_eq!(forest.num_components(), want.num_components());
+}
+
+#[test]
+fn artifact_covers_every_example_scale() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let manifest = landscape::runtime::Manifest::load(&dir).unwrap();
+    for p in [8u32, 10, 11, 12, 13, 14, 16] {
+        let params = SketchParams::for_vertices(1 << p);
+        assert!(
+            manifest.find(&params).is_some(),
+            "missing artifact for V=2^{p}"
+        );
+    }
+}
+
+#[test]
+fn xla_worker_throughput_is_reported() {
+    // not a perf assertion — just exercises the worker-mode timing path
+    // so EXPERIMENTS.md has a measured XLA-vs-native number
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let v = 1u64 << 10;
+    let params = SketchParams::for_vertices(v);
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_delta_executable(&dir, params).unwrap();
+    let seeds = SketchSeeds::derive(&params, 3);
+    let indices: Vec<u64> = (0..512u32).map(|i| encode_edge(i, i + 1, v)).collect();
+
+    let (_, xla_secs) = landscape::util::timer::timed(|| {
+        exe.compute_delta(&indices, &seeds).unwrap()
+    });
+    let (_, native_secs) = landscape::util::timer::timed(|| {
+        CameoSketch::delta_of_batch(&params, &seeds, &indices)
+    });
+    eprintln!(
+        "batch=512 V=2^10: xla {:.3} ms, native {:.3} ms ({}x)",
+        xla_secs * 1e3,
+        native_secs * 1e3,
+        (xla_secs / native_secs.max(1e-9)) as u64
+    );
+}
