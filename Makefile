@@ -1,0 +1,26 @@
+# Convenience targets referenced by docs and test skip messages.
+
+.PHONY: build test fixtures artifacts fmt clippy ci
+
+build:
+	cargo build --release --workspace
+
+test:
+	cargo test -q --workspace
+
+fmt:
+	cargo fmt --all -- --check
+
+clippy:
+	cargo clippy --workspace --all-targets -- -D warnings
+
+ci: fmt clippy build test
+	python -m pytest python/tests -q
+
+# Cross-language golden fixtures (pure numpy; no jax needed).
+fixtures:
+	cd python && python3 gen_fixtures.py
+
+# AOT-compiled HLO kernels for the `xla` feature (needs jax).
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts

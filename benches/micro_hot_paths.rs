@@ -15,14 +15,38 @@ use landscape::hypertree::{BatchSink, Hypertree, HypertreeConfig, VertexBatch};
 use landscape::metrics::Metrics;
 use landscape::sketch::params::{encode_edge, SketchParams};
 use landscape::sketch::seeds::SketchSeeds;
-use landscape::sketch::{CameoSketch, CubeSketch, SketchStore};
+use landscape::sketch::{CameoSketch, CubeSketch, ShardSpec, SketchStore};
 use landscape::stream::update::Update;
 use landscape::util::rng::Xoshiro256;
 
 struct NullSink;
 impl BatchSink for NullSink {
-    fn full_batch(&self, _b: VertexBatch) {}
-    fn local_batch(&self, _v: u32, _o: &[u32]) {}
+    fn full_batch(&self, _shard: usize, _b: VertexBatch) {}
+    fn local_batch(&self, _shard: usize, _v: u32, _o: &[u32]) {}
+}
+
+/// The seed design's merge target: one flat allocation behind a single
+/// global mutex — the baseline the sharded store is measured against.
+struct MutexStore {
+    words_per_vertex: usize,
+    words: std::sync::Mutex<Vec<u64>>,
+}
+
+impl MutexStore {
+    fn new(params: &SketchParams) -> Self {
+        Self {
+            words_per_vertex: params.words(),
+            words: std::sync::Mutex::new(vec![0u64; params.v as usize * params.words()]),
+        }
+    }
+
+    fn merge_delta(&self, u: u32, delta: &[u64]) {
+        let mut words = self.words.lock().unwrap();
+        let base = u as usize * self.words_per_vertex;
+        for (i, &d) in delta.iter().enumerate() {
+            words[base + i] ^= d;
+        }
+    }
 }
 
 fn main() {
@@ -91,6 +115,58 @@ fn main() {
     });
     row("delta_merge_per_word", s.median / params.words() as f64);
 
+    // merge path, multi-threaded: the sharded lock-free store (each
+    // thread XOR-merges into its own shard, as the coordinator's
+    // distributors do) vs the single-global-mutex design.  ns_per_op is
+    // per merged word across ALL threads, so lower = higher aggregate
+    // merge throughput.
+    let merges_per_thread = 256usize;
+    for threads in [1usize, 2, 4, 8] {
+        let spec = ShardSpec::new(threads);
+        let total_words = (threads * merges_per_thread * params.words()) as f64;
+
+        let sharded = SketchStore::with_shards(params, 42, spec);
+        let s = bench(1, 5, || {
+            std::thread::scope(|scope| {
+                for t in 0..threads {
+                    let sharded = &sharded;
+                    let delta = &delta;
+                    scope.spawn(move || {
+                        let slots = spec.shard_len(t, v);
+                        for i in 0..merges_per_thread {
+                            if slots == 0 {
+                                break; // shard owns no vertices at this V
+                            }
+                            sharded
+                                .merge_delta_exclusive(spec.vertex_at(t, i % slots), delta);
+                        }
+                    });
+                }
+            });
+        });
+        row(&format!("merge_sharded_t{threads}"), s.median / total_words);
+
+        let mutexed = MutexStore::new(&params);
+        let s = bench(1, 5, || {
+            std::thread::scope(|scope| {
+                for t in 0..threads {
+                    let mutexed = &mutexed;
+                    let delta = &delta;
+                    scope.spawn(move || {
+                        let slots = spec.shard_len(t, v);
+                        for i in 0..merges_per_thread {
+                            if slots == 0 {
+                                break;
+                            }
+                            mutexed.merge_delta(spec.vertex_at(t, i % slots), delta);
+                        }
+                    });
+                }
+            });
+        });
+        row(&format!("merge_mutex_t{threads}"), s.median / total_words);
+    }
+
     // hypertree vs gutter ingestion
     let metrics = Arc::new(Metrics::new());
     let tree = Arc::new(Hypertree::new(
@@ -108,7 +184,12 @@ fn main() {
     });
     row("hypertree_insert(x2)", s.median / n as f64);
 
-    let gutter = landscape::gutter::GutterBuffer::new(v, params.words() * 2, 64, metrics);
+    let gutter = landscape::gutter::GutterBuffer::new(
+        v,
+        params.words() * 2,
+        ShardSpec::new(64),
+        metrics,
+    );
     let s = bench(1, 5, || {
         for &(a, b) in &edges {
             gutter.insert(a, b, &sink);

@@ -24,41 +24,54 @@ use landscape::stream::{datasets, EdgeModel, GraphStream};
 use landscape::util::rng::Xoshiro256;
 use landscape::util::timer::Stopwatch;
 
-fn main() -> anyhow::Result<()> {
+/// Stage 1: the XLA (Pallas-AOT) path on a stream slice.
+#[cfg(feature = "xla")]
+fn stage1_xla() -> anyhow::Result<()> {
     let artifact_dir = std::path::PathBuf::from("artifacts");
-
-    // ---- stage 1: the XLA (Pallas-AOT) path on a stream slice ----
-    if artifact_dir.join("manifest.json").exists() {
-        let d = datasets::by_name("kron10").unwrap();
-        let v = d.model.num_vertices();
-        let mut cfg = CoordinatorConfig::for_vertices(v);
-        cfg.worker = WorkerKind::Xla {
-            artifact_dir: artifact_dir.clone(),
-        };
-        cfg.distributor_threads = 1;
-        let mut coord = Coordinator::new(cfg)?;
-        let sw = Stopwatch::new();
-        let mut n = 0u64;
-        for u in d.stream() {
-            coord.ingest(u);
-            n += 1;
-            if n >= 200_000 {
-                break;
-            }
-        }
-        coord.flush_pending();
-        let forest = coord.connected_components();
-        println!(
-            "[stage 1] XLA worker mode: {} updates in {:.2}s ({}) via the \
-             AOT Pallas kernel; {} components",
-            n,
-            sw.elapsed_secs(),
-            fmt_rate(n as f64 / sw.elapsed_secs()),
-            forest.num_components()
-        );
-    } else {
+    if !artifact_dir.join("manifest.json").exists() {
         println!("[stage 1] skipped: run `make artifacts` for the XLA path");
+        return Ok(());
     }
+    let d = datasets::by_name("kron10").unwrap();
+    let v = d.model.num_vertices();
+    let mut cfg = CoordinatorConfig::for_vertices(v);
+    cfg.worker = WorkerKind::Xla {
+        artifact_dir: artifact_dir.clone(),
+    };
+    cfg.distributor_threads = 1;
+    let mut coord = Coordinator::new(cfg)?;
+    let sw = Stopwatch::new();
+    let mut n = 0u64;
+    for u in d.stream() {
+        coord.ingest(u);
+        n += 1;
+        if n >= 200_000 {
+            break;
+        }
+    }
+    coord.flush_pending();
+    let forest = coord.connected_components();
+    println!(
+        "[stage 1] XLA worker mode: {} updates in {:.2}s ({}) via the \
+         AOT Pallas kernel; {} components",
+        n,
+        sw.elapsed_secs(),
+        fmt_rate(n as f64 / sw.elapsed_secs()),
+        forest.num_components()
+    );
+    Ok(())
+}
+
+/// Stage 1 placeholder for default builds (the PJRT path needs the
+/// non-default `xla` cargo feature).
+#[cfg(not(feature = "xla"))]
+fn stage1_xla() -> anyhow::Result<()> {
+    println!("[stage 1] skipped: rebuild with `--features xla` for the XLA path");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    stage1_xla()?;
 
     // ---- stage 2: full run, native + remote TCP workers ----
     let d = datasets::by_name("kron12").unwrap();

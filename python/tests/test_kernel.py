@@ -5,13 +5,16 @@ interpret-mode kernel must match ref.py bit-for-bit on every shape and
 value pattern hypothesis throws at it.
 """
 
-import jax
+import pytest
+
+jax = pytest.importorskip("jax", reason="jax not installed; kernel tests need it")
 
 jax.config.update("jax_enable_x64", True)
 
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from compile import model

@@ -1,13 +1,16 @@
 """L2 tests: the sketch-delta model (shapes, chunking, seed derivation)
 and the AOT lowering path."""
 
-import jax
+import pytest
+
+jax = pytest.importorskip("jax", reason="jax not installed; model tests need it")
 
 jax.config.update("jax_enable_x64", True)
 
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from compile import aot, model

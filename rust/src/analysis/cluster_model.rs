@@ -45,8 +45,8 @@ pub struct StageCosts {
 /// A sink that counts batches but drops them (isolates buffering cost).
 struct NullSink;
 impl BatchSink for NullSink {
-    fn full_batch(&self, _b: VertexBatch) {}
-    fn local_batch(&self, _v: u32, _o: &[u32]) {}
+    fn full_batch(&self, _shard: usize, _b: VertexBatch) {}
+    fn local_batch(&self, _shard: usize, _v: u32, _o: &[u32]) {}
 }
 
 /// Which sketch kernel the "worker" stage uses.
@@ -104,7 +104,7 @@ pub fn measure_stage_costs(
             let g = crate::gutter::GutterBuffer::new(
                 v,
                 params.batch_capacity(2),
-                64,
+                crate::sketch::shard::ShardSpec::new(64),
                 Arc::new(Metrics::new()),
             );
             let sink = NullSink;

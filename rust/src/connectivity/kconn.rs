@@ -11,6 +11,7 @@ use crate::connectivity::boruvka::boruvka_components;
 use crate::connectivity::mincut;
 use crate::sketch::params::{encode_edge, SketchParams};
 use crate::sketch::seeds::SketchSeeds;
+use crate::sketch::shard::ShardSpec;
 use crate::sketch::SketchStore;
 
 /// k parallel sketch copies + certificate extraction.
@@ -36,11 +37,29 @@ impl Certificate {
 }
 
 impl KConnectivity {
-    /// Allocate k independent sketch copies (k ≥ 1).
+    /// Allocate k independent single-shard sketch copies (k ≥ 1).
     pub fn new(params: SketchParams, graph_seed: u64, k: u32) -> Self {
+        Self::with_shards(params, graph_seed, k, ShardSpec::SINGLE)
+    }
+
+    /// Allocate k independent sketch copies, each partitioned by `spec`
+    /// (the coordinator passes its distributor shard map so every copy
+    /// shares the same shard-affine merge routing).
+    pub fn with_shards(
+        params: SketchParams,
+        graph_seed: u64,
+        k: u32,
+        spec: ShardSpec,
+    ) -> Self {
         assert!(k >= 1);
         let stores = (0..k)
-            .map(|copy| SketchStore::new(params, SketchSeeds::copy_seed(graph_seed, copy)))
+            .map(|copy| {
+                SketchStore::with_shards(
+                    params,
+                    SketchSeeds::copy_seed(graph_seed, copy),
+                    spec,
+                )
+            })
             .collect();
         Self { k, stores }
     }

@@ -4,14 +4,17 @@
 //! processing (GreedyCC fast path / sketch-Borůvka / k-connectivity
 //! certificates).
 //!
-//! Data flow (Fig. 2):
+//! Data flow (Fig. 2).  Every stage after batching is sharded by vertex
+//! (`shard = hash(v) % N`, one shard per distributor thread), so a batch
+//! is queued, popped, processed, and XOR-merged by the same thread and
+//! the merge path never takes a global lock:
 //!
 //! ```text
 //! stream ──► GreedyCC (inline)
-//!        └─► pipeline hypertree ──► vertex-based batches ──► Work Queue
-//!                                                              │
-//!             sketch store  ◄── XOR merge ◄── sketch deltas ◄──┘
-//!                                            (worker backends)
+//!        └─► pipeline hypertree ──► vertex-based batches ──► shard queues
+//!                                                              │ (1 per
+//!             sketch shard s  ◄── XOR merge ◄── deltas ◄───────┘  shard)
+//!                                            (distributor s only)
 //! ```
 
 pub mod work_queue;
@@ -30,10 +33,13 @@ use crate::hypertree::{BatchSink, Hypertree, HypertreeConfig, VertexBatch};
 use crate::gutter::GutterBuffer;
 use crate::metrics::{Metrics, MetricsSnapshot};
 use crate::sketch::params::{encode_edge, SketchParams};
+use crate::sketch::shard::ShardSpec;
 use crate::stream::update::{Update, UpdateKind, UPDATE_WIRE_BYTES};
 use crate::stream::GraphStream;
-use crate::worker::{CubeWorker, NativeWorker, WorkerBackend, WorkerSeeds, XlaWorker};
-use work_queue::WorkQueue;
+#[cfg(feature = "xla")]
+use crate::worker::XlaWorker;
+use crate::worker::{CubeWorker, NativeWorker, WorkerBackend, WorkerSeeds};
+use work_queue::ShardedWorkQueue;
 
 /// Build a worker backend inside a distributor thread.
 fn build_backend(
@@ -47,6 +53,7 @@ fn build_backend(
     Ok(match kind {
         WorkerKind::Native => Box::new(NativeWorker::new(seeds)),
         WorkerKind::Cube => Box::new(CubeWorker::new(seeds)),
+        #[cfg(feature = "xla")]
         WorkerKind::Xla { artifact_dir } => Box::new(XlaWorker::load(artifact_dir, seeds)?),
         WorkerKind::Remote { addrs } => {
             if addrs.is_empty() {
@@ -68,7 +75,9 @@ pub enum WorkerKind {
     Native,
     /// CubeSketch kernel (GraphZeppelin-mode ablation).
     Cube,
-    /// The AOT Pallas artifact via PJRT (three-layer composition path).
+    /// The AOT Pallas artifact via PJRT (three-layer composition path;
+    /// needs the non-default `xla` cargo feature).
+    #[cfg(feature = "xla")]
     Xla { artifact_dir: std::path::PathBuf },
     /// Remote TCP workers, round-robin over addresses.
     Remote { addrs: Vec<String> },
@@ -97,6 +106,9 @@ pub struct CoordinatorConfig {
     /// Query-flush fullness threshold γ (paper default 4%).
     pub gamma: f64,
     pub distributor_threads: usize,
+    /// Work-queue capacity in batches, *per shard queue* (one queue per
+    /// distributor thread), so total buffering scales with
+    /// `distributor_threads × queue_capacity`.
     pub queue_capacity: usize,
     pub worker: WorkerKind,
     pub buffer: BufferKind,
@@ -124,6 +136,13 @@ impl CoordinatorConfig {
         SketchParams::with_columns(self.vertices, self.columns)
     }
 
+    /// The vertex shard map: one sketch shard (and one shard queue) per
+    /// distributor thread, so each thread merges only into storage it
+    /// owns.
+    pub fn shard_spec(&self) -> ShardSpec {
+        ShardSpec::new(self.distributor_threads.max(1))
+    }
+
     /// Leaf capacity in updates: α·φ scaled by k (paper §5.4).  With
     /// 4-byte batch entries, a full batch occupies α× the bytes of the
     /// delta it returns (φ = words·8 bytes → capacity = α·words·2).
@@ -138,33 +157,57 @@ enum Buffer {
     Gutter(Arc<GutterBuffer>),
 }
 
-/// Shared sink: full batches go to the work queue; underfull leaves are
-/// processed locally on the main node (§5.3's hybrid policy).
-struct QueueSink {
-    queue: Arc<WorkQueue<VertexBatch>>,
-    metrics: Arc<Metrics>,
-    in_flight: Arc<AtomicU64>,
-    kconn: Arc<KConnectivity>,
+/// One unit of shard-affine work for a distributor thread.
+enum WorkItem {
+    /// A γ-full batch: worker backend → sketch delta → exclusive merge.
+    Distribute(VertexBatch),
+    /// An underfull leaf at flush time: per-update local application on
+    /// the shard owner (§5.3's hybrid policy — no delta overhead).
+    Local(VertexBatch),
 }
 
-impl BatchSink for QueueSink {
-    fn full_batch(&self, batch: VertexBatch) {
-        Metrics::add(&self.metrics.batches_sent, 1);
-        Metrics::add(&self.metrics.batch_bytes_sent, batch.wire_bytes());
+/// Shared sink: every batch is routed to the shard queue of the
+/// distributor thread owning its vertex.  Underfull leaves travel the
+/// same shard-affine path as `WorkItem::Local` so that *all* sketch
+/// writes during ingestion happen on the owning thread — which is what
+/// makes the distributors' lock-free exclusive merge sound.
+struct QueueSink {
+    queue: Arc<ShardedWorkQueue<WorkItem>>,
+    spec: ShardSpec,
+    metrics: Arc<Metrics>,
+    in_flight: Arc<AtomicU64>,
+}
+
+impl QueueSink {
+    fn enqueue(&self, shard: usize, item: WorkItem) {
         self.in_flight.fetch_add(1, Ordering::AcqRel);
-        if !self.queue.push(batch) {
+        if !self.queue.push(shard, item) {
             self.in_flight.fetch_sub(1, Ordering::AcqRel);
         }
     }
+}
 
-    fn local_batch(&self, vertex: u32, others: &[u32]) {
-        let v = self.kconn.params().v;
-        for store in self.kconn.stores() {
-            for &other in others {
-                store.apply_local(vertex, encode_edge(vertex, other, v));
-            }
-        }
-        Metrics::add(&self.metrics.updates_local, others.len() as u64);
+impl BatchSink for QueueSink {
+    fn shards(&self) -> ShardSpec {
+        self.spec
+    }
+
+    fn full_batch(&self, shard: usize, batch: VertexBatch) {
+        debug_assert_eq!(shard, self.spec.shard_of(batch.vertex));
+        Metrics::add(&self.metrics.batches_sent, 1);
+        Metrics::add(&self.metrics.batch_bytes_sent, batch.wire_bytes());
+        self.enqueue(shard, WorkItem::Distribute(batch));
+    }
+
+    fn local_batch(&self, shard: usize, vertex: u32, others: &[u32]) {
+        debug_assert_eq!(shard, self.spec.shard_of(vertex));
+        self.enqueue(
+            shard,
+            WorkItem::Local(VertexBatch {
+                vertex,
+                others: others.to_vec(),
+            }),
+        );
     }
 }
 
@@ -189,7 +232,7 @@ pub struct Coordinator {
     kconn: Arc<KConnectivity>,
     buffer: Buffer,
     sink: Arc<QueueSink>,
-    queue: Arc<WorkQueue<VertexBatch>>,
+    queue: Arc<ShardedWorkQueue<WorkItem>>,
     in_flight: Arc<AtomicU64>,
     distributors: Vec<JoinHandle<()>>,
     /// thread-local hypertree handle for the driver thread
@@ -200,9 +243,15 @@ pub struct Coordinator {
 impl Coordinator {
     pub fn new(config: CoordinatorConfig) -> Result<Self> {
         let params = config.params();
+        let spec = config.shard_spec();
         let metrics = Arc::new(Metrics::new());
-        let kconn = Arc::new(KConnectivity::new(params, config.graph_seed, config.k));
-        let queue = Arc::new(WorkQueue::new(config.queue_capacity));
+        let kconn = Arc::new(KConnectivity::with_shards(
+            params,
+            config.graph_seed,
+            config.k,
+            spec,
+        ));
+        let queue = Arc::new(ShardedWorkQueue::new(spec.count(), config.queue_capacity));
         let in_flight = Arc::new(AtomicU64::new(0));
 
         let buffer = match config.buffer {
@@ -213,16 +262,16 @@ impl Coordinator {
             BufferKind::Gutter => Buffer::Gutter(Arc::new(GutterBuffer::new(
                 config.vertices,
                 config.leaf_capacity(),
-                64,
+                spec,
                 metrics.clone(),
             ))),
         };
 
         let sink = Arc::new(QueueSink {
             queue: queue.clone(),
+            spec,
             metrics: metrics.clone(),
             in_flight: in_flight.clone(),
-            kconn: kconn.clone(),
         });
 
         let mut coord = Self {
@@ -247,7 +296,10 @@ impl Coordinator {
 
     fn spawn_distributors(&mut self) -> Result<()> {
         let words = self.params.words();
-        for slot in 0..self.config.distributor_threads {
+        // one distributor per shard: thread `shard` is the only writer
+        // of sketch shard `shard` during ingestion, so its merges use
+        // the lock-free exclusive path
+        for shard in 0..self.config.shard_spec().count() {
             // backend construction data (Send) — the backend itself is
             // built inside the thread (PJRT handles are thread-bound)
             let kind = self.config.worker.clone();
@@ -260,36 +312,51 @@ impl Coordinator {
             let in_flight = self.in_flight.clone();
             let k = self.config.k as usize;
             self.distributors.push(std::thread::spawn(move || {
-                let backend = match build_backend(&kind, params, graph_seed, kk, slot) {
+                let backend = match build_backend(&kind, params, graph_seed, kk, shard) {
                     Ok(b) => b,
                     Err(e) => {
-                        eprintln!("distributor {slot}: backend init failed: {e:#}");
-                        // drain the queue so producers don't deadlock
-                        while let Some(_batch) = queue.pop() {
+                        eprintln!("distributor {shard}: backend init failed: {e:#}");
+                        // drain the shard queue so producers don't deadlock
+                        while queue.pop(shard).is_some() {
                             in_flight.fetch_sub(1, Ordering::AcqRel);
                         }
                         return;
                     }
                 };
                 let mut out: Vec<u64> = Vec::with_capacity(words * k);
-                while let Some(batch) = queue.pop() {
-                    out.clear();
-                    if let Err(e) = backend.process(batch.vertex, &batch.others, &mut out)
-                    {
-                        eprintln!("worker error: {e:#}");
-                        in_flight.fetch_sub(1, Ordering::AcqRel);
-                        continue;
+                while let Some(item) = queue.pop(shard) {
+                    match item {
+                        WorkItem::Distribute(batch) => {
+                            out.clear();
+                            match backend.process(batch.vertex, &batch.others, &mut out) {
+                                Ok(()) => {
+                                    debug_assert_eq!(out.len(), words * k);
+                                    for copy in 0..k {
+                                        kconn.stores()[copy].merge_delta_exclusive(
+                                            batch.vertex,
+                                            &out[copy * words..(copy + 1) * words],
+                                        );
+                                    }
+                                    Metrics::add(&metrics.deltas_merged, 1);
+                                    Metrics::add(
+                                        &metrics.delta_bytes_received,
+                                        16 + out.len() as u64 * 8,
+                                    );
+                                }
+                                Err(e) => eprintln!("worker error: {e:#}"),
+                            }
+                        }
+                        WorkItem::Local(batch) => {
+                            let v = params.v;
+                            for &other in &batch.others {
+                                let idx = encode_edge(batch.vertex, other, v);
+                                for store in kconn.stores() {
+                                    store.apply_local(batch.vertex, idx);
+                                }
+                            }
+                            Metrics::add(&metrics.updates_local, batch.others.len() as u64);
+                        }
                     }
-                    debug_assert_eq!(out.len(), words * k);
-                    for copy in 0..k {
-                        kconn.stores()[copy]
-                            .merge_delta(batch.vertex, &out[copy * words..(copy + 1) * words]);
-                    }
-                    Metrics::add(&metrics.deltas_merged, 1);
-                    Metrics::add(
-                        &metrics.delta_bytes_received,
-                        16 + out.len() as u64 * 8,
-                    );
                     in_flight.fetch_sub(1, Ordering::AcqRel);
                 }
             }));

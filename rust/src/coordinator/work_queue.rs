@@ -4,6 +4,11 @@
 //! pointer swaps — Graph Insertion threads (producers) and Work
 //! Distributor threads (consumers) never contend on the same mutex
 //! except at the empty↔nonempty boundary.
+//!
+//! [`ShardedWorkQueue`] layers the vertex shard map on top: one
+//! [`WorkQueue`] per sketch shard, so each distributor thread drains its
+//! own queue and merges only into its own shard — producers and the
+//! merge path stay contention-free end-to-end.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -124,6 +129,61 @@ impl<T> WorkQueue<T> {
     }
 }
 
+/// One bounded [`WorkQueue`] per sketch shard (see
+/// [`crate::sketch::shard::ShardSpec`]): batches are pushed to the queue
+/// of the shard owning their vertex, and distributor thread `s` pops
+/// exclusively from queue `s`.
+pub struct ShardedWorkQueue<T> {
+    queues: Vec<WorkQueue<T>>,
+}
+
+impl<T> ShardedWorkQueue<T> {
+    /// `shards` queues of `capacity` items each.
+    pub fn new(shards: usize, capacity: usize) -> Self {
+        assert!(shards > 0);
+        Self {
+            queues: (0..shards).map(|_| WorkQueue::new(capacity)).collect(),
+        }
+    }
+
+    /// Number of shard queues (= distributor threads).
+    pub fn shards(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Blocking push onto shard `shard`'s queue; false once closed.
+    pub fn push(&self, shard: usize, item: T) -> bool {
+        self.queues[shard].push(item)
+    }
+
+    /// Blocking pop from shard `shard`'s queue; `None` once closed and
+    /// drained.
+    pub fn pop(&self, shard: usize) -> Option<T> {
+        self.queues[shard].pop()
+    }
+
+    /// Non-blocking pop from shard `shard`'s queue.
+    pub fn try_pop(&self, shard: usize) -> Option<T> {
+        self.queues[shard].try_pop()
+    }
+
+    /// Close every shard queue.
+    pub fn close(&self) {
+        for q in &self.queues {
+            q.close();
+        }
+    }
+
+    /// Items queued across all shards (approximate under concurrency).
+    pub fn len(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,6 +251,38 @@ mod tests {
         all.sort_unstable();
         let want: Vec<u64> = (0..producers * per_producer).collect();
         assert_eq!(all, want);
+    }
+
+    #[test]
+    fn sharded_queues_are_independent() {
+        let q: ShardedWorkQueue<u64> = ShardedWorkQueue::new(4, 2);
+        assert_eq!(q.shards(), 4);
+        for shard in 0..4 {
+            assert!(q.push(shard, shard as u64 * 10));
+            assert!(q.push(shard, shard as u64 * 10 + 1));
+        }
+        assert_eq!(q.len(), 8);
+        // each shard pops only its own items, in FIFO order
+        for shard in 0..4 {
+            assert_eq!(q.try_pop(shard), Some(shard as u64 * 10));
+            assert_eq!(q.try_pop(shard), Some(shard as u64 * 10 + 1));
+            assert_eq!(q.try_pop(shard), None);
+        }
+        assert!(q.is_empty());
+        q.close();
+        assert!(!q.push(0, 9), "push after close must fail");
+        assert_eq!(q.pop(1), None);
+    }
+
+    #[test]
+    fn sharded_full_shard_does_not_block_others() {
+        let q: Arc<ShardedWorkQueue<u64>> = Arc::new(ShardedWorkQueue::new(2, 1));
+        assert!(q.push(0, 1)); // shard 0 now at capacity
+        let q2 = q.clone();
+        let other = std::thread::spawn(move || q2.push(1, 2));
+        assert!(other.join().unwrap(), "shard 1 must accept while 0 is full");
+        assert_eq!(q.try_pop(1), Some(2));
+        assert_eq!(q.try_pop(0), Some(1));
     }
 
     #[test]

@@ -6,18 +6,25 @@
 //! cache miss) and one lock acquisition *per update*, versus the
 //! pipeline hypertree's bulk cascades.  The interface matches the
 //! hypertree's so the coordinator can swap them (`BufferKind::Gutter`).
+//!
+//! Stripes are aligned to the sketch shard map ([`ShardSpec`]): stripe
+//! `s` holds exactly the vertices of sketch shard `s`, so every batch a
+//! stripe emits is consumed by the same distributor thread — the
+//! baseline keeps its per-update locking cost (that is the point of the
+//! ablation) but routes shard-affine like the hypertree does.
 
 use std::sync::{Arc, Mutex};
 
 use crate::hypertree::{BatchSink, VertexBatch};
 use crate::metrics::Metrics;
+use crate::sketch::shard::ShardSpec;
 
-/// Per-vertex gutters behind striped mutexes.
+/// Per-vertex gutters behind shard-aligned striped mutexes.
 pub struct GutterBuffer {
     vertices: u64,
     leaf_capacity: usize,
+    spec: ShardSpec,
     stripes: Vec<Mutex<Vec<Vec<u32>>>>,
-    stripe_size: usize,
     metrics: Arc<Metrics>,
 }
 
@@ -25,22 +32,20 @@ impl GutterBuffer {
     pub fn new(
         vertices: u64,
         leaf_capacity: usize,
-        num_stripes: usize,
+        spec: ShardSpec,
         metrics: Arc<Metrics>,
     ) -> Self {
-        let stripe_size = crate::util::div_ceil(vertices as usize, num_stripes.max(1));
-        let stripes = (0..num_stripes.max(1))
+        let stripes = (0..spec.count())
             .map(|s| {
-                let start = s * stripe_size;
-                let size = stripe_size.min((vertices as usize).saturating_sub(start));
+                let size = spec.shard_len(s, vertices);
                 Mutex::new((0..size).map(|_| Vec::new()).collect())
             })
             .collect();
         Self {
             vertices,
             leaf_capacity,
+            spec,
             stripes,
-            stripe_size,
             metrics,
         }
     }
@@ -49,8 +54,8 @@ impl GutterBuffer {
     /// random gutter access per update (the baseline's bottleneck by
     /// design).
     pub fn insert<S: BatchSink>(&self, dest: u32, other: u32, sink: &S) {
-        let stripe = dest as usize / self.stripe_size;
-        let slot = dest as usize % self.stripe_size;
+        let stripe = self.spec.shard_of(dest);
+        let slot = self.spec.slot_of(dest);
         let mut gutters = self.stripes[stripe].lock().unwrap();
         let gutter = &mut gutters[slot];
         if gutter.capacity() == 0 {
@@ -62,10 +67,14 @@ impl GutterBuffer {
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         if gutter.len() >= self.leaf_capacity {
             let full = std::mem::take(gutter);
-            sink.full_batch(VertexBatch {
-                vertex: dest,
-                others: full,
-            });
+            drop(gutters);
+            sink.full_batch(
+                sink.shards().shard_of(dest),
+                VertexBatch {
+                    vertex: dest,
+                    others: full,
+                },
+            );
         }
     }
 
@@ -73,20 +82,24 @@ impl GutterBuffer {
     /// same hybrid policy as the hypertree so comparisons are fair.
     pub fn force_flush<S: BatchSink>(&self, gamma: f64, sink: &S) {
         let threshold = ((self.leaf_capacity as f64 * gamma).ceil() as usize).max(1);
+        let route = sink.shards();
         for (s, stripe) in self.stripes.iter().enumerate() {
             let mut gutters = stripe.lock().unwrap();
             for (i, gutter) in gutters.iter_mut().enumerate() {
                 if gutter.is_empty() {
                     continue;
                 }
-                let vertex = (s * self.stripe_size + i) as u32;
+                let vertex = self.spec.vertex_at(s, i);
                 if gutter.len() >= threshold {
-                    sink.full_batch(VertexBatch {
-                        vertex,
-                        others: std::mem::take(gutter),
-                    });
+                    sink.full_batch(
+                        route.shard_of(vertex),
+                        VertexBatch {
+                            vertex,
+                            others: std::mem::take(gutter),
+                        },
+                    );
                 } else {
-                    sink.local_batch(vertex, gutter);
+                    sink.local_batch(route.shard_of(vertex), vertex, gutter);
                     gutter.clear();
                 }
             }
@@ -95,6 +108,11 @@ impl GutterBuffer {
 
     pub fn vertices(&self) -> u64 {
         self.vertices
+    }
+
+    /// The shard map stripes are aligned to.
+    pub fn shards(&self) -> ShardSpec {
+        self.spec
     }
 }
 
@@ -110,17 +128,19 @@ mod tests {
     }
 
     impl BatchSink for Collect {
-        fn full_batch(&self, b: VertexBatch) {
+        fn full_batch(&self, shard: usize, b: VertexBatch) {
+            assert_eq!(shard, 0, "single-shard sink must route to shard 0");
             self.full.lock().unwrap().push(b);
         }
-        fn local_batch(&self, v: u32, others: &[u32]) {
+        fn local_batch(&self, shard: usize, v: u32, others: &[u32]) {
+            assert_eq!(shard, 0);
             self.local.lock().unwrap().push((v, others.to_vec()));
         }
     }
 
     #[test]
     fn capacity_triggers_batches() {
-        let g = GutterBuffer::new(16, 4, 2, Arc::new(Metrics::new()));
+        let g = GutterBuffer::new(16, 4, ShardSpec::new(2), Arc::new(Metrics::new()));
         let sink = Collect::default();
         for i in 0..10u32 {
             g.insert(3, i + 1, &sink);
@@ -134,7 +154,7 @@ mod tests {
 
     #[test]
     fn nothing_lost() {
-        let g = GutterBuffer::new(64, 7, 4, Arc::new(Metrics::new()));
+        let g = GutterBuffer::new(64, 7, ShardSpec::new(4), Arc::new(Metrics::new()));
         let sink = Collect::default();
         for i in 0..1000u32 {
             g.insert(i % 64, i + 1, &sink);
@@ -151,8 +171,38 @@ mod tests {
     }
 
     #[test]
+    fn flush_reconstructs_vertices_across_stripes() {
+        // vertices 0..V scattered over shard-aligned stripes must come
+        // back out under their own ids
+        let g = GutterBuffer::new(32, 8, ShardSpec::new(3), Arc::new(Metrics::new()));
+        assert_eq!(g.shards().count(), 3);
+        let sink = Collect::default();
+        for v in 0..32u32 {
+            g.insert(v, v + 100, &sink);
+        }
+        g.force_flush(0.0, &sink);
+        let mut seen: Vec<u32> = sink
+            .full
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|b| {
+                assert_eq!(b.others, vec![b.vertex + 100]);
+                b.vertex
+            })
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..32).collect::<Vec<u32>>());
+    }
+
+    #[test]
     fn threads_contend_but_stay_correct() {
-        let g = Arc::new(GutterBuffer::new(32, 8, 2, Arc::new(Metrics::new())));
+        let g = Arc::new(GutterBuffer::new(
+            32,
+            8,
+            ShardSpec::new(2),
+            Arc::new(Metrics::new()),
+        ));
         let sink = Arc::new(Collect::default());
         let mut handles = Vec::new();
         for t in 0..4u64 {

@@ -25,6 +25,7 @@ use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 
 use crate::metrics::Metrics;
+use crate::sketch::shard::ShardSpec;
 use node::GroupNode;
 
 /// A vertex-based batch: all buffered updates incident to `vertex`,
@@ -45,11 +46,22 @@ impl VertexBatch {
 }
 
 /// Where completed batches go.
+///
+/// Emitters route every batch shard-affine: `shard` is always
+/// `self.shards().shard_of(vertex)`, so a sink backed by per-shard
+/// queues (the coordinator) hands each batch straight to the distributor
+/// thread owning that slice of the sketch store, with no shared-map
+/// contention on the merge path.
 pub trait BatchSink {
+    /// The vertex shard map batches are routed by.  The default
+    /// single-shard map sends everything to shard 0 (tests, benches).
+    fn shards(&self) -> ShardSpec {
+        ShardSpec::SINGLE
+    }
     /// A leaf reached capacity (or was ≥γ-full at a force flush).
-    fn full_batch(&self, batch: VertexBatch);
+    fn full_batch(&self, shard: usize, batch: VertexBatch);
     /// An underfull leaf at force-flush time: process locally (§5.3).
-    fn local_batch(&self, vertex: u32, others: &[u32]);
+    fn local_batch(&self, shard: usize, vertex: u32, others: &[u32]);
 }
 
 /// Hypertree shape parameters.
@@ -154,8 +166,9 @@ impl Hypertree {
         self.metrics
             .hypertree_moves
             .fetch_add(node.buffered() as u64, Ordering::Relaxed);
+        let spec = sink.shards();
         node.flush_to_leaves(base, self.config.leaf_capacity, &mut |vertex, others| {
-            sink.full_batch(VertexBatch { vertex, others });
+            sink.full_batch(spec.shard_of(vertex), VertexBatch { vertex, others });
         });
     }
 
@@ -164,6 +177,7 @@ impl Hypertree {
     /// Leaves at least `gamma`-full ship as batches; underfull leaves go
     /// through `sink.local_batch` for main-node processing.
     pub fn force_flush<S: BatchSink>(&self, gamma: f64, sink: &S) {
+        let spec = sink.shards();
         for (g, group) in self.groups.iter().enumerate() {
             let base = (g * self.config.group_size) as u32;
             let mut node = group.lock().unwrap();
@@ -172,13 +186,16 @@ impl Hypertree {
                 base,
                 (self.config.leaf_capacity as f64 * gamma).ceil() as usize,
                 &mut |vertex, others| {
-                    sink.full_batch(VertexBatch {
-                        vertex,
-                        others: others.to_vec(),
-                    });
+                    sink.full_batch(
+                        spec.shard_of(vertex),
+                        VertexBatch {
+                            vertex,
+                            others: others.to_vec(),
+                        },
+                    );
                 },
                 &mut |vertex, others| {
-                    sink.local_batch(vertex, others);
+                    sink.local_batch(spec.shard_of(vertex), vertex, others);
                 },
             );
         }
@@ -279,18 +296,39 @@ mod tests {
     use super::*;
     use std::sync::Mutex as StdMutex;
 
-    /// Collects everything for assertions.
-    #[derive(Default)]
+    /// Collects everything for assertions, checking shard routing.
     struct Collect {
+        spec: ShardSpec,
         full: StdMutex<Vec<VertexBatch>>,
         local: StdMutex<Vec<(u32, Vec<u32>)>>,
     }
 
+    impl Default for Collect {
+        fn default() -> Self {
+            Self::with_shards(ShardSpec::SINGLE)
+        }
+    }
+
+    impl Collect {
+        fn with_shards(spec: ShardSpec) -> Self {
+            Self {
+                spec,
+                full: StdMutex::new(Vec::new()),
+                local: StdMutex::new(Vec::new()),
+            }
+        }
+    }
+
     impl BatchSink for Collect {
-        fn full_batch(&self, batch: VertexBatch) {
+        fn shards(&self) -> ShardSpec {
+            self.spec
+        }
+        fn full_batch(&self, shard: usize, batch: VertexBatch) {
+            assert_eq!(shard, self.spec.shard_of(batch.vertex), "misrouted batch");
             self.full.lock().unwrap().push(batch);
         }
-        fn local_batch(&self, vertex: u32, others: &[u32]) {
+        fn local_batch(&self, shard: usize, vertex: u32, others: &[u32]) {
+            assert_eq!(shard, self.spec.shard_of(vertex), "misrouted local batch");
             self.local
                 .lock()
                 .unwrap()
@@ -406,6 +444,35 @@ mod tests {
             .map(|b| b.others.len())
             .sum();
         assert_eq!(total as u64, threads * per_thread);
+    }
+
+    #[test]
+    fn batches_route_shard_affine() {
+        // Collect asserts shard == shards().shard_of(vertex) on every
+        // emission, so this exercises routing on both flush paths.
+        let t = tree(64, 8);
+        let sink = Collect::with_shards(ShardSpec::new(4));
+        let mut local = t.local();
+        for i in 0..1000u32 {
+            local.insert(i % 64, i + 1, &sink);
+        }
+        local.flush(&sink);
+        t.force_flush(0.5, &sink);
+        let total: usize = sink
+            .full
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|b| b.others.len())
+            .sum::<usize>()
+            + sink
+                .local
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(_, o)| o.len())
+                .sum::<usize>();
+        assert_eq!(total, 1000);
     }
 
     #[test]

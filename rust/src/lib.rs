@@ -13,6 +13,11 @@
 //! sketch.  Total network traffic is provably a small constant factor of
 //! the input stream size (Theorem 5.2).
 //!
+//! The merge path is sharded: the sketch store is partitioned per-vertex
+//! ([`sketch::shard::ShardSpec`], one shard per distributor thread) and
+//! batches are routed shard-affine from the buffers through per-shard
+//! work queues, so delta merging never serializes behind a global lock.
+//!
 //! ## Architecture (three layers)
 //!
 //! * **L3 (this crate)** — the coordinator: ingestion, batching, worker
@@ -22,7 +27,9 @@
 //!   graph and its Pallas kernel, AOT-lowered to HLO text artifacts that
 //!   [`runtime`] loads and executes via PJRT.  Workers can compute deltas
 //!   either natively ([`sketch::cameo`]) or through the artifact
-//!   ([`worker::XlaWorker`]); both paths are bit-identical.
+//!   (`worker::XlaWorker`); both paths are bit-identical.  The PJRT
+//!   pieces need the non-default `xla` cargo feature — the default build
+//!   is pure Rust and runs on a bare toolchain.
 //!
 //! ## Quick start
 //!
@@ -38,6 +45,13 @@
 //! let cc = coord.connected_components();
 //! println!("{} components", cc.num_components());
 //! ```
+
+// Deliberate patterns clippy dislikes: index loops that sidestep borrow
+// conflicts (hypertree cascades) and ceil-division helpers predating the
+// std API.  `unknown_lints` keeps older clippy versions quiet about the
+// newer lint names.
+#![allow(unknown_lints)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
 
 pub mod analysis;
 pub mod baseline;

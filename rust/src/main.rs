@@ -10,6 +10,9 @@
 //! landscape rambw     — RAM bandwidth probes
 //! ```
 
+// the stream-source closure tuple in cmd_ingest is clearer inline
+#![allow(clippy::type_complexity)]
+
 use landscape::benchkit::{fmt_bytes, fmt_rate};
 use landscape::config::Args;
 use landscape::coordinator::{BufferKind, Coordinator, CoordinatorConfig, WorkerKind};
@@ -85,9 +88,7 @@ fn build_config(args: &Args, vertices: u64) -> Option<CoordinatorConfig> {
     cfg.worker = match args.get_str("worker", "native").as_str() {
         "native" => WorkerKind::Native,
         "cube" => WorkerKind::Cube,
-        "xla" => WorkerKind::Xla {
-            artifact_dir: std::path::PathBuf::from(args.get_str("artifacts", "artifacts")),
-        },
+        "xla" => xla_worker_kind(args)?,
         "remote" => WorkerKind::Remote {
             addrs: args
                 .get_str("addrs", "127.0.0.1:7011")
@@ -101,6 +102,19 @@ fn build_config(args: &Args, vertices: u64) -> Option<CoordinatorConfig> {
         }
     };
     Some(cfg)
+}
+
+#[cfg(feature = "xla")]
+fn xla_worker_kind(args: &Args) -> Option<WorkerKind> {
+    Some(WorkerKind::Xla {
+        artifact_dir: std::path::PathBuf::from(args.get_str("artifacts", "artifacts")),
+    })
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_worker_kind(_args: &Args) -> Option<WorkerKind> {
+    eprintln!("worker kind `xla` requires a build with `--features xla`");
+    None
 }
 
 fn cmd_ingest(args: &Args) -> i32 {

@@ -7,12 +7,18 @@
 //! Interchange is HLO *text*: jax ≥ 0.5 emits HloModuleProto with 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+//!
+//! The artifact [`Manifest`] is plain JSON and always available; the
+//! PJRT pieces ([`Runtime`], [`DeltaExecutable`]) depend on the external
+//! `xla` crate and are gated behind the non-default `xla` cargo feature
+//! so the pure-Rust worker paths build on a bare toolchain.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::sketch::params::{SketchParams, SEED_SCHEME_VERSION};
+#[cfg(feature = "xla")]
 use crate::sketch::seeds::SketchSeeds;
 use crate::util::json::Json;
 
@@ -92,6 +98,7 @@ impl Manifest {
 }
 
 /// A compiled sketch-delta executable.
+#[cfg(feature = "xla")]
 pub struct DeltaExecutable {
     exe: xla::PjRtLoadedExecutable,
     batch: usize,
@@ -99,10 +106,12 @@ pub struct DeltaExecutable {
 }
 
 /// The PJRT client wrapper.
+#[cfg(feature = "xla")]
 pub struct Runtime {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "xla")]
 impl Runtime {
     /// Create a CPU PJRT client.
     pub fn cpu() -> Result<Self> {
@@ -149,6 +158,7 @@ impl Runtime {
     }
 }
 
+#[cfg(feature = "xla")]
 impl DeltaExecutable {
     pub fn batch_size(&self) -> usize {
         self.batch
@@ -202,7 +212,7 @@ mod tests {
     use super::*;
 
     fn artifacts_dir() -> PathBuf {
-        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts"))
     }
 
     #[test]

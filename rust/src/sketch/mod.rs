@@ -16,10 +16,12 @@ pub mod cameo;
 pub mod cube;
 pub mod params;
 pub mod seeds;
+pub mod shard;
 pub mod store;
 
 pub use cameo::CameoSketch;
 pub use cube::CubeSketch;
 pub use params::SketchParams;
 pub use seeds::SketchSeeds;
+pub use shard::ShardSpec;
 pub use store::SketchStore;

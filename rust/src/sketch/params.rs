@@ -133,7 +133,7 @@ mod tests {
     fn shape_matches_delta_golden_fixture() {
         let path = concat!(
             env!("CARGO_MANIFEST_DIR"),
-            "/tests/fixtures/delta_golden.json"
+            "/../tests/fixtures/delta_golden.json"
         );
         let text = std::fs::read_to_string(path)
             .expect("delta_golden.json missing — run `make fixtures`");

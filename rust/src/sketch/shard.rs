@@ -1,0 +1,112 @@
+//! The vertex shard map shared by the merge path.
+//!
+//! The coordinator's distributor threads each own one shard of the graph
+//! sketch: `shard(u) = hash(u) mod N`, with N ≈ the distributor thread
+//! count.  Batches are routed shard-affine end-to-end (hypertree/gutter →
+//! work queue → distributor → sketch store), so a shard is only ever
+//! written by its owning thread during ingestion and the XOR merge never
+//! serializes behind a global lock (the GraphZeppelin shared-map
+//! bottleneck, arXiv 2203.14927).
+//!
+//! The shard hash is the identity: stream vertex ids are dense in
+//! `[0, V)` (and pre-permuted by the stream layer), so round-robin modulo
+//! is a perfectly balanced shard function whose within-shard slot index
+//! (`u / N`) costs no lookup table — important because the merge path
+//! resolves it once per delta word batch.
+
+/// A shard map over vertex ids: `shard = u % N`, `slot = u / N`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    count: u32,
+}
+
+impl ShardSpec {
+    /// The trivial single-shard map (everything in shard 0).
+    pub const SINGLE: ShardSpec = ShardSpec { count: 1 };
+
+    /// A map with `count` shards (≥ 1).
+    pub fn new(count: usize) -> Self {
+        assert!(count >= 1, "shard count must be at least 1");
+        assert!(count <= u32::MAX as usize);
+        Self {
+            count: count as u32,
+        }
+    }
+
+    /// Number of shards.
+    #[inline(always)]
+    pub fn count(&self) -> usize {
+        self.count as usize
+    }
+
+    /// Shard owning vertex `u`.
+    #[inline(always)]
+    pub fn shard_of(&self, u: u32) -> usize {
+        (u % self.count) as usize
+    }
+
+    /// Dense within-shard slot of vertex `u`.
+    #[inline(always)]
+    pub fn slot_of(&self, u: u32) -> usize {
+        (u / self.count) as usize
+    }
+
+    /// Inverse of (`shard_of`, `slot_of`).
+    #[inline(always)]
+    pub fn vertex_at(&self, shard: usize, slot: usize) -> u32 {
+        slot as u32 * self.count + shard as u32
+    }
+
+    /// Vertices of a V-vertex graph assigned to `shard`.
+    pub fn shard_len(&self, shard: usize, vertices: u64) -> usize {
+        let shard = shard as u64;
+        if shard >= vertices {
+            return 0;
+        }
+        ((vertices - shard - 1) / self.count as u64 + 1) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_balance() {
+        for n in [1usize, 2, 3, 8] {
+            let spec = ShardSpec::new(n);
+            let v = 100u64;
+            let mut per_shard = vec![0usize; n];
+            for u in 0..v as u32 {
+                let (s, i) = (spec.shard_of(u), spec.slot_of(u));
+                assert!(s < n);
+                assert_eq!(spec.vertex_at(s, i), u);
+                per_shard[s] += 1;
+            }
+            for (s, &len) in per_shard.iter().enumerate() {
+                assert_eq!(len, spec.shard_len(s, v), "shard {s} of {n}");
+            }
+            assert_eq!(per_shard.iter().sum::<usize>(), v as usize);
+            // modulo round-robin is balanced to within one vertex
+            let (min, max) = (per_shard.iter().min(), per_shard.iter().max());
+            assert!(max.unwrap() - min.unwrap() <= 1);
+        }
+    }
+
+    #[test]
+    fn shard_len_handles_small_graphs() {
+        let spec = ShardSpec::new(8);
+        assert_eq!(spec.shard_len(0, 3), 1);
+        assert_eq!(spec.shard_len(2, 3), 1);
+        assert_eq!(spec.shard_len(3, 3), 0);
+        assert_eq!(spec.shard_len(7, 3), 0);
+    }
+
+    #[test]
+    fn single_is_identity() {
+        let spec = ShardSpec::SINGLE;
+        assert_eq!(spec.shard_of(12345), 0);
+        assert_eq!(spec.slot_of(12345), 12345);
+        assert_eq!(spec.shard_len(0, 77), 77);
+    }
+}

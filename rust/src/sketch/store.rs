@@ -1,35 +1,65 @@
-//! Main-node sketch storage: the graph sketch S(G) = ⋃_u S(f_u).
+//! Main-node sketch storage: the graph sketch S(G) = ⋃_u S(f_u),
+//! partitioned into per-vertex shards.
 //!
-//! One flat `Vec<AtomicU64>` holds all V vertex sketches.  Sketch deltas
-//! arriving from (possibly concurrent) work-distributor threads are
-//! merged with relaxed `fetch_xor` — XOR is commutative/associative, so
-//! no ordering between deltas matters, and queries only run after the
-//! ingestion barrier (the pipeline is drained first, paper §5.3).
+//! Vertex sketches are split across [`ShardSpec::count`] independent
+//! allocations (`shard = hash(u) % N`, N ≈ distributor threads).  Each
+//! distributor thread XOR-merges worker deltas into *its own* shard, so
+//! the merge hot path never serializes behind a global lock and never
+//! bounces cache lines between merging threads — the per-update
+//! shared-map contention that caps GraphZeppelin-style ingestion
+//! (arXiv 2203.14927) is designed out.
+//!
+//! Two merge entry points exist:
+//!
+//! * [`SketchStore::merge_delta`] — atomic `fetch_xor` (relaxed), safe
+//!   under arbitrary concurrency; XOR is commutative/associative so no
+//!   ordering between deltas matters.
+//! * [`SketchStore::merge_delta_exclusive`] — relaxed load/store XOR,
+//!   the distributor fast path.  Correct only while the calling thread
+//!   is the sole writer of the vertex's shard, which the coordinator's
+//!   shard-affine batch routing guarantees during ingestion.
+//!
+//! Queries only run after the ingestion barrier (the pipeline is drained
+//! first, paper §5.3), so readers never race writers.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::sketch::params::SketchParams;
 use crate::sketch::seeds::SketchSeeds;
+use crate::sketch::shard::ShardSpec;
 use crate::sketch::CameoSketch;
 
-/// The main node's graph sketch: V vertex sketches in one allocation.
+/// The main node's graph sketch: V vertex sketches across N shards.
 pub struct SketchStore {
     params: SketchParams,
     seeds: SketchSeeds,
-    words: Vec<AtomicU64>,
+    spec: ShardSpec,
+    shards: Vec<Vec<AtomicU64>>,
 }
 
 impl SketchStore {
-    /// Allocate an all-zero graph sketch for `params`, seeded from
-    /// `graph_seed`.
+    /// Allocate an all-zero single-shard graph sketch for `params`,
+    /// seeded from `graph_seed`.
     pub fn new(params: SketchParams, graph_seed: u64) -> Self {
-        let total = params.v as usize * params.words();
-        let mut words = Vec::with_capacity(total);
-        words.resize_with(total, || AtomicU64::new(0));
+        Self::with_shards(params, graph_seed, ShardSpec::SINGLE)
+    }
+
+    /// Allocate an all-zero graph sketch partitioned per `spec`.
+    pub fn with_shards(params: SketchParams, graph_seed: u64, spec: ShardSpec) -> Self {
+        let words = params.words();
+        let shards = (0..spec.count())
+            .map(|s| {
+                let total = spec.shard_len(s, params.v) * words;
+                let mut shard = Vec::with_capacity(total);
+                shard.resize_with(total, || AtomicU64::new(0));
+                shard
+            })
+            .collect();
         Self {
             seeds: SketchSeeds::derive(&params, graph_seed),
             params,
-            words,
+            spec,
+            shards,
         }
     }
 
@@ -41,24 +71,54 @@ impl SketchStore {
         &self.seeds
     }
 
+    /// The shard map this store is partitioned by.
+    pub fn shards(&self) -> ShardSpec {
+        self.spec
+    }
+
     /// Total bytes of sketch storage (the paper's Θ(V log³ V) term).
     pub fn bytes(&self) -> usize {
-        self.words.len() * 8
+        self.shards.iter().map(|s| s.len() * 8).sum()
     }
 
-    #[inline]
-    fn vertex_base(&self, u: u32) -> usize {
+    /// Shard words + within-shard word offset of vertex `u`.
+    #[inline(always)]
+    fn locate(&self, u: u32) -> (&[AtomicU64], usize) {
         debug_assert!((u as u64) < self.params.v);
-        u as usize * self.params.words()
+        (
+            self.shards[self.spec.shard_of(u)].as_slice(),
+            self.spec.slot_of(u) * self.params.words(),
+        )
     }
 
-    /// XOR-merge a vertex-sketch delta into vertex `u` (thread-safe).
+    /// XOR-merge a vertex-sketch delta into vertex `u` (thread-safe
+    /// under arbitrary concurrency: atomic relaxed `fetch_xor`).
     pub fn merge_delta(&self, u: u32, delta: &[u64]) {
         debug_assert_eq!(delta.len(), self.params.words());
-        let base = self.vertex_base(u);
+        let (shard, base) = self.locate(u);
         for (i, &d) in delta.iter().enumerate() {
             if d != 0 {
-                self.words[base + i].fetch_xor(d, Ordering::Relaxed);
+                shard[base + i].fetch_xor(d, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// XOR-merge a delta into vertex `u` on the shard owner's fast path:
+    /// plain load/store (still data-race-free, no atomic RMW cost).
+    ///
+    /// The caller must be the only thread writing `u`'s shard for the
+    /// duration of the call — the coordinator's shard-affine routing
+    /// guarantees this for distributor threads during ingestion.  Misuse
+    /// cannot cause UB (all accesses stay atomic) but concurrent
+    /// same-shard writers could lose updates; use [`Self::merge_delta`]
+    /// when exclusivity is not structurally guaranteed.
+    pub fn merge_delta_exclusive(&self, u: u32, delta: &[u64]) {
+        debug_assert_eq!(delta.len(), self.params.words());
+        let (shard, base) = self.locate(u);
+        for (i, &d) in delta.iter().enumerate() {
+            if d != 0 {
+                let w = &shard[base + i];
+                w.store(w.load(Ordering::Relaxed) ^ d, Ordering::Relaxed);
             }
         }
     }
@@ -67,7 +127,7 @@ impl SketchStore {
     /// node's path for underfull leaves, §5.3).
     pub fn apply_local(&self, u: u32, idx: u64) {
         // relaxed atomic XORs, same rationale as merge_delta
-        let base = self.vertex_base(u);
+        let (shard, base) = self.locate(u);
         let wpl = self.params.words_per_level();
         let rows = self.params.rows as usize;
         for level in 0..self.params.levels {
@@ -78,10 +138,10 @@ impl SketchStore {
                 let depth =
                     crate::hashing::bucket_depth(h, self.params.rows) as usize;
                 let cbase = lbase + column as usize * rows * 2;
-                self.words[cbase].fetch_xor(idx, Ordering::Relaxed);
-                self.words[cbase + 1].fetch_xor(chk, Ordering::Relaxed);
-                self.words[cbase + depth * 2].fetch_xor(idx, Ordering::Relaxed);
-                self.words[cbase + depth * 2 + 1].fetch_xor(chk, Ordering::Relaxed);
+                shard[cbase].fetch_xor(idx, Ordering::Relaxed);
+                shard[cbase + 1].fetch_xor(chk, Ordering::Relaxed);
+                shard[cbase + depth * 2].fetch_xor(idx, Ordering::Relaxed);
+                shard[cbase + depth * 2 + 1].fetch_xor(chk, Ordering::Relaxed);
             }
         }
     }
@@ -91,9 +151,10 @@ impl SketchStore {
     pub fn read_level_into(&self, u: u32, level: u32, out: &mut [u64]) {
         let wpl = self.params.words_per_level();
         debug_assert_eq!(out.len(), wpl);
-        let base = self.vertex_base(u) + level as usize * wpl;
+        let (shard, vbase) = self.locate(u);
+        let base = vbase + level as usize * wpl;
         for (i, slot) in out.iter_mut().enumerate() {
-            *slot = self.words[base + i].load(Ordering::Relaxed);
+            *slot = shard[base + i].load(Ordering::Relaxed);
         }
     }
 
@@ -102,9 +163,10 @@ impl SketchStore {
     pub fn xor_level_into(&self, u: u32, level: u32, acc: &mut [u64]) {
         let wpl = self.params.words_per_level();
         debug_assert_eq!(acc.len(), wpl);
-        let base = self.vertex_base(u) + level as usize * wpl;
+        let (shard, vbase) = self.locate(u);
+        let base = vbase + level as usize * wpl;
         for (i, slot) in acc.iter_mut().enumerate() {
-            *slot ^= self.words[base + i].load(Ordering::Relaxed);
+            *slot ^= shard[base + i].load(Ordering::Relaxed);
         }
     }
 
@@ -117,8 +179,10 @@ impl SketchStore {
 
     /// Reset every bucket to zero (between bench runs).
     pub fn clear(&self) {
-        for w in &self.words {
-            w.store(0, Ordering::Relaxed);
+        for shard in &self.shards {
+            for w in shard {
+                w.store(0, Ordering::Relaxed);
+            }
         }
     }
 }
@@ -126,6 +190,7 @@ impl SketchStore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::connectivity::boruvka::boruvka_components;
     use crate::sketch::params::encode_edge;
 
     fn store(v: u64, seed: u64) -> SketchStore {
@@ -234,6 +299,16 @@ mod tests {
             s.bytes(),
             128 * SketchParams::for_vertices(128).bytes()
         );
+        // sharding never changes the total footprint
+        let sharded = SketchStore::with_shards(
+            SketchParams::for_vertices(100),
+            1,
+            ShardSpec::new(8),
+        );
+        assert_eq!(
+            sharded.bytes(),
+            100 * SketchParams::for_vertices(100).bytes()
+        );
     }
 
     #[test]
@@ -242,5 +317,97 @@ mod tests {
         s.apply_local(0, encode_edge(0, 1, 16));
         s.clear();
         assert_eq!(s.query_vertex_level(0, 0), None);
+    }
+
+    #[test]
+    fn exclusive_merge_matches_atomic_merge() {
+        let v = 48u64;
+        let params = SketchParams::for_vertices(v);
+        let atomic = SketchStore::with_shards(params, 7, ShardSpec::new(4));
+        let exclusive = SketchStore::with_shards(params, 7, ShardSpec::new(4));
+        for u in 0..v as u32 {
+            let idx: Vec<u64> = (0..5)
+                .map(|i| encode_edge(u, (u + i + 1) % v as u32, v))
+                .filter(|&x| x != 0)
+                .collect();
+            let delta = CameoSketch::delta_of_batch(atomic.params(), atomic.seeds(), &idx);
+            atomic.merge_delta(u, &delta);
+            exclusive.merge_delta_exclusive(u, &delta);
+        }
+        let mut a = vec![0u64; params.words_per_level()];
+        let mut b = vec![0u64; params.words_per_level()];
+        for u in 0..v as u32 {
+            for level in 0..params.levels {
+                atomic.read_level_into(u, level, &mut a);
+                exclusive.read_level_into(u, level, &mut b);
+                assert_eq!(a, b, "vertex {u} level {level}");
+            }
+        }
+    }
+
+    /// Deterministic sharding invariant: merging the same delta set into
+    /// stores partitioned 1-, 2-, and 8-way yields bit-identical sketch
+    /// state and identical `boruvka_components` output.
+    #[test]
+    fn shard_count_never_changes_sketch_state_or_queries() {
+        let v = 96u64;
+        let params = SketchParams::for_vertices(v);
+        let seed = 0xBADCAFE;
+
+        // a deterministic mixed workload: batched deltas for every
+        // vertex plus a few local single-update applications
+        let edges: Vec<(u32, u32)> = (0..160u32)
+            .map(|i| {
+                let a = (i * 7) % v as u32;
+                let b = (a + 1 + (i * 13) % (v as u32 - 1)) % v as u32;
+                (a.min(b), a.max(b))
+            })
+            .filter(|&(a, b)| a != b)
+            .collect();
+
+        let build = |spec: ShardSpec| {
+            let s = SketchStore::with_shards(params, seed, spec);
+            for &(a, b) in &edges {
+                let idx = encode_edge(a, b, v);
+                let delta =
+                    CameoSketch::delta_of_batch(s.params(), s.seeds(), &[idx]);
+                s.merge_delta(a, &delta);
+                s.merge_delta_exclusive(b, &delta);
+            }
+            for &(a, b) in edges.iter().take(10) {
+                // cancel + re-apply a few edges through the local path
+                let idx = encode_edge(a, b, v);
+                s.apply_local(a, idx);
+                s.apply_local(a, idx);
+            }
+            s
+        };
+
+        let s1 = build(ShardSpec::SINGLE);
+        let s2 = build(ShardSpec::new(2));
+        let s8 = build(ShardSpec::new(8));
+        assert_eq!(s1.shards().count(), 1);
+        assert_eq!(s2.shards().count(), 2);
+        assert_eq!(s8.shards().count(), 8);
+
+        let wpl = params.words_per_level();
+        let (mut a, mut b, mut c) = (vec![0u64; wpl], vec![0u64; wpl], vec![0u64; wpl]);
+        for u in 0..v as u32 {
+            for level in 0..params.levels {
+                s1.read_level_into(u, level, &mut a);
+                s2.read_level_into(u, level, &mut b);
+                s8.read_level_into(u, level, &mut c);
+                assert_eq!(a, b, "1 vs 2 shards: vertex {u} level {level}");
+                assert_eq!(a, c, "1 vs 8 shards: vertex {u} level {level}");
+            }
+        }
+
+        let r1 = boruvka_components(&s1);
+        let r2 = boruvka_components(&s2);
+        let r8 = boruvka_components(&s8);
+        assert_eq!(r1.forest.component, r2.forest.component);
+        assert_eq!(r1.forest.component, r8.forest.component);
+        assert_eq!(r1.forest.edges, r2.forest.edges);
+        assert_eq!(r1.forest.edges, r8.forest.edges);
     }
 }

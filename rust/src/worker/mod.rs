@@ -6,15 +6,14 @@
 //! paper run them on 2 GB nodes and lets us swap implementations:
 //!
 //! * [`NativeWorker`] — the Rust CameoSketch kernel (the perf path).
-//! * [`XlaWorker`] — executes the AOT Pallas artifact via PJRT
-//!   (the three-layer composition path; bit-identical to native).
+//! * [`XlaWorker`] — executes the AOT Pallas artifact via PJRT (the
+//!   three-layer composition path; bit-identical to native; needs the
+//!   non-default `xla` cargo feature).
 //! * [`CubeWorker`] — CubeSketch updates (Fig. 4 / Fig. 16 ablation).
 //! * [`RemoteWorker`] — a TCP client speaking the `net` protocol to a
 //!   `landscape worker` server process.
 
 pub mod remote;
-
-use std::path::Path;
 
 use anyhow::Result;
 
@@ -135,20 +134,23 @@ impl WorkerBackend for CubeWorker {
 }
 
 /// XLA worker: the AOT-compiled Pallas kernel via PJRT.
+#[cfg(feature = "xla")]
 pub struct XlaWorker {
     seeds: WorkerSeeds,
     exe: crate::runtime::DeltaExecutable,
 }
 
+#[cfg(feature = "xla")]
 impl XlaWorker {
     /// Load the artifact matching `seeds.params` from `artifact_dir`.
-    pub fn load(artifact_dir: &Path, seeds: WorkerSeeds) -> Result<Self> {
+    pub fn load(artifact_dir: &std::path::Path, seeds: WorkerSeeds) -> Result<Self> {
         let rt = crate::runtime::Runtime::cpu()?;
         let exe = rt.load_delta_executable(artifact_dir, seeds.params)?;
         Ok(Self { seeds, exe })
     }
 }
 
+#[cfg(feature = "xla")]
 impl WorkerBackend for XlaWorker {
     fn process(&self, vertex: u32, others: &[u32], out: &mut Vec<u64>) -> Result<()> {
         let mut idx = Vec::new();
