@@ -231,6 +231,74 @@ fn main() {
     });
     row("boruvka_query_total", s.median);
 
+    // tiered query path: tier 2 (full Borůvka over all V) vs tier 1
+    // (warm-started from the surviving forest, aggregating only
+    // dirty-region vertices).  Graph: 64 disjoint paths; `d` of them
+    // have one forest edge deleted, so the partial tier touches d/64 of
+    // the vertices.  Latency is seconds per query.
+    for vexp in [10u32, 12, 14] {
+        let qv = 1u64 << vexp;
+        let qparams = SketchParams::for_vertices(qv);
+        let comp = 64u32;
+        let span = (qv as u32) / comp;
+        let mut forest: Vec<(u32, u32)> = Vec::new();
+        for c in 0..comp {
+            let base = c * span;
+            for i in 0..span - 1 {
+                forest.push((base + i, base + i + 1));
+            }
+        }
+        let qstore = SketchStore::new(qparams, 70 + vexp as u64);
+        for &(a, b) in &forest {
+            let idx = encode_edge(a, b, qv);
+            qstore.apply_local(a, idx);
+            qstore.apply_local(b, idx);
+        }
+
+        let mut deleted = 0u32;
+        let mut surviving = forest.clone();
+        let mut delete_paths = |upto: u32, surviving: &mut Vec<(u32, u32)>| {
+            while deleted < upto {
+                let mid = deleted * span + span / 2;
+                let idx = encode_edge(mid, mid + 1, qv);
+                // XOR-cancel the edge out of the sketch and drop it from
+                // the warm-start forest
+                qstore.apply_local(mid, idx);
+                qstore.apply_local(mid + 1, idx);
+                surviving.retain(|&e| e != (mid, mid + 1));
+                deleted += 1;
+            }
+        };
+
+        // tier-2 baseline at the 1-dirty state (the acceptance
+        // comparison: one forest-edge delete, full vs partial)
+        delete_paths(1, &mut surviving);
+        let s = bench(1, 3, || {
+            let _ = landscape::connectivity::boruvka::boruvka_components(&qstore);
+        });
+        row(&format!("query_full_v2^{vexp}"), s.median);
+
+        for d in [1u32, 8, 64] {
+            delete_paths(d, &mut surviving);
+            let active: Vec<u32> = (0..d * span).collect();
+            let s = bench(1, 3, || {
+                // the clones mirror the real partial tier's seed
+                // construction cost (partial_seed rebuilds its DSU per
+                // query), so the row is end-to-end honest
+                let _ = landscape::connectivity::boruvka::boruvka_components_from(
+                    &qstore,
+                    landscape::connectivity::Dsu::from_edges(
+                        qv as usize,
+                        &surviving,
+                    ),
+                    surviving.clone(),
+                    &active,
+                );
+            });
+            row(&format!("query_partial_d{d}_v2^{vexp}"), s.median);
+        }
+    }
+
     // GreedyCC ops
     let mut g = landscape::connectivity::greedycc::GreedyCC::fresh(v);
     let s = bench(1, 5, || {

@@ -16,10 +16,15 @@
 //! ```bash
 //! make artifacts && cargo run --release --offline --example e2e_driver
 //! ```
+//!
+//! `--scenario query` runs only stage 0 (the tiered-query scenario) on a
+//! small graph — the CI-sized proof that all three query tiers answer
+//! correctly on a mixed insert/delete/query workload.
 
 use landscape::baseline::Referee;
 use landscape::benchkit::{fmt_bytes, fmt_rate};
-use landscape::coordinator::{Coordinator, CoordinatorConfig, WorkerKind};
+use landscape::coordinator::{Coordinator, CoordinatorConfig, QueryTier, WorkerKind};
+use landscape::stream::update::Update;
 use landscape::stream::{datasets, EdgeModel, GraphStream};
 use landscape::util::rng::Xoshiro256;
 use landscape::util::timer::Stopwatch;
@@ -70,7 +75,108 @@ fn stage1_xla() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Stage 0: the tiered query path on a mixed insert/delete/query
+/// workload (V = 2^12), exercising all three tiers:
+///
+/// * tier 0 (GreedyCC) — queries on the clean graph and after a
+///   non-forest (cycle-edge) deletion;
+/// * tier 1 (partial) — after forest-edge deletions dirty a few
+///   components, the query flushes and warm-starts Borůvka over the
+///   dirty region only;
+/// * tier 2 (full) — a forced full flush + Borůvka for comparison.
+///
+/// Every partition is checked against the exact referee, and the run
+/// asserts that no batch was dropped at the queue boundary.
+fn stage0_query_tiers() -> anyhow::Result<()> {
+    let v = 1u64 << 12;
+    let mut cfg = CoordinatorConfig::for_vertices(v);
+    cfg.alpha = 1;
+    let mut coord = Coordinator::new(cfg)?;
+    let mut referee = Referee::new(v);
+    let ingest = |coord: &mut Coordinator, referee: &mut Referee, u: Update| {
+        referee.apply(&u);
+        coord.ingest(u);
+    };
+
+    // 64 disjoint paths of 64 vertices, plus a chord per path (cycle edge)
+    let comp = 64u32;
+    let span = (v as u32) / comp;
+    for c in 0..comp {
+        let base = c * span;
+        for i in 0..span - 1 {
+            ingest(&mut coord, &mut referee, Update::insert(base + i, base + i + 1));
+        }
+        ingest(&mut coord, &mut referee, Update::insert(base, base + 2));
+    }
+
+    let check = |coord: &mut Coordinator, referee: &Referee, label: &str| {
+        let sw = Stopwatch::new();
+        let forest = coord.connected_components();
+        let secs = sw.elapsed_secs();
+        let ok = Referee::same_partition(&forest.component, &referee.component_map());
+        println!(
+            "[stage 0] {label}: {:.6}s, {} components — {}",
+            secs,
+            forest.num_components(),
+            if ok { "MATCH" } else { "MISMATCH" }
+        );
+        assert!(ok, "stage 0 ({label}): partition mismatch");
+    };
+
+    // tier 0: clean graph
+    assert_eq!(coord.query_plan(), QueryTier::Greedy);
+    check(&mut coord, &referee, "tier0 greedy (clean)");
+
+    // tier 0 after a non-forest deletion: the chord of path 0 is a cycle
+    // edge, so the query must stay on the greedy tier (no flush/Borůvka)
+    let full_before = coord.metrics().queries_full;
+    let partial_before = coord.metrics().queries_partial;
+    ingest(&mut coord, &mut referee, Update::delete(0, 2));
+    assert_eq!(coord.query_plan(), QueryTier::Greedy);
+    check(&mut coord, &referee, "tier0 greedy (after non-forest delete)");
+    assert_eq!(coord.metrics().queries_full, full_before);
+    assert_eq!(coord.metrics().queries_partial, partial_before);
+
+    // tier 1: delete one forest edge in each of 4 paths
+    for c in 0..4u32 {
+        let mid = c * span + span / 2;
+        ingest(&mut coord, &mut referee, Update::delete(mid, mid + 1));
+    }
+    assert_eq!(coord.query_plan(), QueryTier::Partial);
+    check(&mut coord, &referee, "tier1 partial (4 dirty / 64 components)");
+    assert_eq!(coord.metrics().queries_partial, partial_before + 1);
+
+    // tier 2: forced full query on the same state
+    let sw = Stopwatch::new();
+    let forest = coord.full_connectivity_query();
+    println!(
+        "[stage 0] tier2 full (forced): {:.6}s, {} components",
+        sw.elapsed_secs(),
+        forest.num_components()
+    );
+    assert!(Referee::same_partition(
+        &forest.component,
+        &referee.component_map()
+    ));
+
+    let m = coord.metrics();
+    assert_eq!(m.batches_dropped, 0, "batches silently dropped during the run");
+    println!(
+        "[stage 0] tiers exercised: {} greedy / {} partial / {} full; \
+         {} components marked dirty; 0 dropped batches",
+        m.queries_greedy, m.queries_partial, m.queries_full, m.dirty_components
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    stage0_query_tiers()?;
+    if std::env::args().any(|a| a == "--scenario")
+        && std::env::args().any(|a| a == "query")
+    {
+        return Ok(());
+    }
+
     stage1_xla()?;
 
     // ---- stage 2: full run, native + remote TCP workers ----
@@ -193,6 +299,10 @@ fn main() -> anyhow::Result<()> {
         fmt_bytes(coord.sketch_bytes() as f64),
         m.queries_full,
         m.queries_greedy,
+    );
+    assert_eq!(
+        m.batches_dropped, 0,
+        "batches silently dropped during the run"
     );
     assert!(ok, "correctness check failed");
     Ok(())

@@ -5,7 +5,8 @@
 //! A power-law "social" graph takes continuous edge churn; after every
 //! epoch the app asks for the community structure and for reachability
 //! between user pairs.  GreedyCC answers the cheap queries; deletions of
-//! spanning-forest edges force the occasional full sketch query.
+//! spanning-forest edges dirty their communities, and the next query
+//! resolves just those via the partial (warm-started Borůvka) tier.
 //!
 //! ```bash
 //! cargo run --release --offline --example social_communities
@@ -91,8 +92,13 @@ fn main() -> anyhow::Result<()> {
 
     let m = coord.metrics();
     println!(
-        "totals: {} updates, {} full queries, {} GreedyCC-served queries",
-        m.updates_ingested, m.queries_full, m.queries_greedy
+        "totals: {} updates, {} full / {} partial / {} GreedyCC-served \
+         queries, {} communities dirtied",
+        m.updates_ingested,
+        m.queries_full,
+        m.queries_partial,
+        m.queries_greedy,
+        m.dirty_components
     );
     Ok(())
 }

@@ -30,25 +30,55 @@ impl ConnectivityResult {
     }
 }
 
-/// Compute a spanning forest of the sketched graph.
+/// Compute a spanning forest of the sketched graph from scratch: fresh
+/// DSU, every vertex active.
 pub fn boruvka_components(store: &SketchStore) -> ConnectivityResult {
+    let v = store.params().v as usize;
+    let active: Vec<u32> = (0..v as u32).collect();
+    boruvka_components_from(store, Dsu::new(v), Vec::new(), &active)
+}
+
+/// Warm-started sketch-Borůvka — the partial-query tier.
+///
+/// `dsu` carries the already-known component structure (e.g. a surviving
+/// spanning forest contracted into supernodes) and `forest_edges` the
+/// real edges backing it; both are folded into the result.  Rounds
+/// aggregate level slices **only for the vertices in `active`**, so the
+/// per-round cost scales with the dirty region instead of V.  This is
+/// sound whenever the inactive components are exact connected components
+/// of the graph (no crossing edges) — their aggregates would be zero, so
+/// skipping them changes nothing.
+///
+/// Round-exit rule: a round that merges nothing only terminates the
+/// algorithm if no component *failed* a query on a nonzero aggregate.
+/// Failed queries are retried at the next level, whose randomness is
+/// fresh — breaking on the first all-failed round (the seed behaviour)
+/// abandons components that later levels would still connect.
+pub fn boruvka_components_from(
+    store: &SketchStore,
+    mut dsu: Dsu,
+    mut forest_edges: Vec<(u32, u32)>,
+    active: &[u32],
+) -> ConnectivityResult {
     let params = *store.params();
     let v = params.v as usize;
     let wpl = params.words_per_level();
-    let mut dsu = Dsu::new(v);
-    let mut forest_edges = Vec::new();
     let mut failed_queries = 0u64;
     let mut rounds = 0u32;
 
-    // scratch: one aggregate buffer per component root, reused per round
+    // scratch: one aggregate buffer per active component root, reused
+    // per round
     let mut agg: Vec<u64> = Vec::new();
     let mut slot_of_root: Vec<u32> = vec![u32::MAX; v];
 
     for level in 0..params.levels {
+        if active.is_empty() || dsu.num_components() == 1 {
+            break;
+        }
         rounds = level + 1;
-        // group members by root and XOR-aggregate their level slices
+        // group active members by root and XOR-aggregate their slices
         let mut roots: Vec<u32> = Vec::new();
-        for u in 0..v as u32 {
+        for &u in active {
             let r = dsu.find(u);
             if slot_of_root[r as usize] == u32::MAX {
                 slot_of_root[r as usize] = roots.len() as u32;
@@ -57,14 +87,15 @@ pub fn boruvka_components(store: &SketchStore) -> ConnectivityResult {
         }
         agg.clear();
         agg.resize(roots.len() * wpl, 0);
-        for u in 0..v as u32 {
+        for &u in active {
             let slot = slot_of_root[dsu.find(u) as usize] as usize;
             store.xor_level_into(u, level, &mut agg[slot * wpl..(slot + 1) * wpl]);
         }
 
         // sample one crossing edge per component
         let mut merged_any = false;
-        for (slot, &root) in roots.iter().enumerate() {
+        let mut failed_live = false;
+        for slot in 0..roots.len() {
             let buf = &agg[slot * wpl..(slot + 1) * wpl];
             let nonzero = buf.iter().any(|&w| w != 0);
             if !nonzero {
@@ -79,8 +110,11 @@ pub fn boruvka_components(store: &SketchStore) -> ConnectivityResult {
                     }
                 }
                 None => {
+                    // nonzero aggregate but no decodable bucket: the
+                    // component still has crossing edges — retry at the
+                    // next level
                     failed_queries += 1;
-                    let _ = root;
+                    failed_live = true;
                 }
             }
         }
@@ -90,11 +124,8 @@ pub fn boruvka_components(store: &SketchStore) -> ConnectivityResult {
             slot_of_root[*r as usize] = u32::MAX;
         }
 
-        if !merged_any {
-            break; // no component found an outgoing edge this round
-        }
-        if dsu.num_components() == 1 {
-            break;
+        if !merged_any && !failed_live {
+            break; // every active component's aggregate was zero: done
         }
     }
 
@@ -230,6 +261,106 @@ mod tests {
             for e in &r.forest.edges {
                 assert!(set.contains(e), "forest contains phantom edge {e:?}");
             }
+        });
+    }
+
+    /// Regression for the early-exit bug: a round in which *every* query
+    /// fails must not terminate the algorithm — later levels carry fresh
+    /// randomness and can still connect the graph.
+    ///
+    /// The failed round is forced deterministically: XOR garbage into
+    /// every level-0 checksum (γ) word of every vertex, so every level-0
+    /// bucket fails validation (`checksum(α) ≠ γ`) and round 1 produces
+    /// zero merges with nonzero aggregates.  Levels ≥ 1 are untouched.
+    #[test]
+    fn all_failed_round_does_not_terminate_boruvka() {
+        // a star: every leaf has degree 1, so once a round runs on an
+        // uncorrupted level, every leaf's query deterministically
+        // returns its single incident edge and the graph connects
+        let v = 64u64;
+        let edges: Vec<(u32, u32)> = (1..64).map(|i| (0, i)).collect();
+        let s = store_with_edges(v, 77, &edges);
+
+        let params = *s.params();
+        let wpl = params.words_per_level();
+        let mut corrupt = vec![0u64; params.words()];
+        for w in corrupt.iter_mut().take(wpl).skip(1).step_by(2) {
+            *w = 0x5EED_BADC_0FFE_E000;
+        }
+        for u in 0..v as u32 {
+            s.merge_delta(u, &corrupt);
+        }
+        // level 0 is now unanswerable for every vertex
+        for u in 0..v as u32 {
+            assert_eq!(s.query_vertex_level(u, 0), None);
+        }
+
+        let r = boruvka_components(&s);
+        assert!(
+            r.rounds >= 2,
+            "round 1 fails for every component; the query must go on"
+        );
+        assert!(r.failed_queries >= v, "every vertex fails at level 0");
+        assert_eq!(
+            r.num_components(),
+            1,
+            "round 2 (level 1) must still connect the star"
+        );
+        assert_eq!(r.forest.edges.len(), 63);
+    }
+
+    #[test]
+    fn warm_start_resolves_only_the_dirty_region() {
+        // two paths: 0..7 (clean) and 8..15 with edge (11,12) deleted —
+        // the graph holds both sub-paths but the warm-start forest lost
+        // the edge, so Borůvka must rediscover it from the sketches
+        let v = 16u64;
+        let mut edges: Vec<(u32, u32)> = (0..7).map(|i| (i, i + 1)).collect();
+        edges.extend((8..15).map(|i| (i, i + 1)));
+        let s = store_with_edges(v, 12, &edges);
+
+        let surviving: Vec<(u32, u32)> = edges
+            .iter()
+            .copied()
+            .filter(|&e| e != (11, 12))
+            .collect();
+        let dsu = Dsu::from_edges(v as usize, &surviving);
+        let active: Vec<u32> = (8..16).collect();
+        let r = boruvka_components_from(&s, dsu, surviving, &active);
+
+        let want = ref_components(v, &edges);
+        assert!(same_partition(&r.forest.component, &want));
+        // the rediscovered edge joins the surviving forest
+        assert!(r.forest.edges.contains(&(11, 12)));
+        assert_eq!(r.forest.edges.len(), 14);
+    }
+
+    #[test]
+    fn warm_start_with_nothing_active_returns_seed_verbatim() {
+        let v = 8u64;
+        let edges: Vec<(u32, u32)> = (0..7).map(|i| (i, i + 1)).collect();
+        let s = store_with_edges(v, 3, &edges);
+        let dsu = Dsu::from_edges(v as usize, &edges);
+        let r = boruvka_components_from(&s, dsu, edges.clone(), &[]);
+        assert_eq!(r.rounds, 0);
+        assert_eq!(r.forest.edges, edges);
+        assert_eq!(r.num_components(), 1);
+    }
+
+    #[test]
+    fn warm_start_matches_cold_start_on_random_graphs() {
+        Cases::new(15).run(|rng| {
+            let v = 4 + rng.next_below(60);
+            let edges = arb_edge_set(rng, v, 120);
+            let s = store_with_edges(v, rng.next_u64(), &edges);
+            let cold = boruvka_components(&s);
+            // warm start with an empty seed and all vertices active is
+            // exactly the cold start
+            let all: Vec<u32> = (0..v as u32).collect();
+            let warm =
+                boruvka_components_from(&s, Dsu::new(v as usize), Vec::new(), &all);
+            assert_eq!(cold.forest.component, warm.forest.component);
+            assert_eq!(cold.forest.edges, warm.forest.edges);
         });
     }
 

@@ -20,6 +20,17 @@ impl Dsu {
         }
     }
 
+    /// `n` elements pre-unioned over an edge list — the warm-start
+    /// constructor (e.g. contracting a surviving spanning forest before
+    /// a partial sketch-Borůvka run).
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Self {
+        let mut d = Self::new(n);
+        for &(a, b) in edges {
+            d.union(a, b);
+        }
+        d
+    }
+
     /// Number of elements.
     pub fn len(&self) -> usize {
         self.parent.len()
@@ -166,6 +177,17 @@ mod tests {
                 assert_eq!(dsu.connected(0, i), seen[i as usize]);
             }
         });
+    }
+
+    #[test]
+    fn from_edges_matches_incremental_unions() {
+        let mut a = Dsu::from_edges(6, &[(0, 1), (1, 2), (4, 5)]);
+        let mut b = Dsu::new(6);
+        b.union(0, 1);
+        b.union(1, 2);
+        b.union(4, 5);
+        assert_eq!(a.component_map(), b.component_map());
+        assert_eq!(a.num_components(), 3);
     }
 
     #[test]

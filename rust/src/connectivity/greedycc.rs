@@ -1,25 +1,56 @@
-//! GreedyCC — the query accelerator (paper App. E.4).
+//! GreedyCC — the query accelerator (paper App. E.4), with
+//! *incremental invalidation*.
 //!
 //! After a full sketch-Borůvka query, Landscape retains the spanning
 //! forest in a union-find + a hash set of forest edges.  Subsequent
 //! insertions keep it current in O(α(V)); subsequent *global* queries
 //! return the forest in O(V) and reachability pairs in O(α(V)) each —
-//! the 10²–10⁴× latency win of Fig. 5.  Deleting a forest edge destroys
-//! the information (a replacement edge can only be found in the
-//! sketches), so the structure *invalidates* itself and the next query
-//! falls back to Borůvka.
+//! the 10²–10⁴× latency win of Fig. 5.
+//!
+//! Deleting a forest edge destroys information (a replacement edge can
+//! only be found in the sketches), but only *locally*: instead of
+//! throwing the whole structure away, the component containing the
+//! deleted edge is marked **dirty**.  Clean components remain exact —
+//! the DSU partition is always a coarsening of true connectivity, every
+//! surviving forest edge is a real edge, and a clean component has never
+//! lost a forest edge, so it is still connected and (because DSU only
+//! ever merges) no current edge can leave it.  Dirty components may have
+//! split; resolving them needs a sketch query, but only over the dirty
+//! region — the partial tier of the coordinator's `QueryEngine`
+//! (`boruvka_components_from`), which warm-starts from
+//! [`GreedyCC::partial_seed`].
 
 use std::collections::HashSet;
 
 use crate::connectivity::dsu::Dsu;
 use crate::connectivity::SpanningForest;
 
+/// Warm-start state for a partial (dirty-region-only) sketch query: the
+/// surviving forest contracted into a fresh DSU, plus the vertices whose
+/// components need Borůvka rounds.
+#[derive(Clone, Debug)]
+pub struct PartialSeed {
+    /// Fresh DSU over the *surviving* forest edges: clean components are
+    /// fully contracted supernodes; dirty components appear as the
+    /// sub-forests left after the deletions.
+    pub dsu: Dsu,
+    /// Surviving forest edges (all still present in the graph).
+    pub forest_edges: Vec<(u32, u32)>,
+    /// Vertices belonging to dirty components — the only vertices whose
+    /// sketches Borůvka rounds must aggregate.
+    pub dirty_vertices: Vec<u32>,
+    /// Number of dirty (DSU-root) components being resolved.
+    pub dirty_components: usize,
+}
+
 /// Reusable prior-query state.
 #[derive(Clone, Debug)]
 pub struct GreedyCC {
     dsu: Dsu,
     forest_edges: HashSet<(u32, u32)>,
-    valid: bool,
+    /// DSU roots of components that may have split (a forest edge inside
+    /// them was deleted).  Empty ⇔ the whole partition is exact.
+    dirty: HashSet<u32>,
 }
 
 impl GreedyCC {
@@ -34,7 +65,7 @@ impl GreedyCC {
         Self {
             dsu,
             forest_edges,
-            valid: true,
+            dirty: HashSet::new(),
         }
     }
 
@@ -44,42 +75,56 @@ impl GreedyCC {
         Self {
             dsu: Dsu::new(num_vertices as usize),
             forest_edges: HashSet::new(),
-            valid: true,
+            dirty: HashSet::new(),
         }
     }
 
-    /// Still usable for answering queries?
+    /// Fully exact — no component has lost a forest edge since the last
+    /// (re-)seed?
     pub fn is_valid(&self) -> bool {
-        self.valid
+        self.dirty.is_empty()
+    }
+
+    /// Number of components currently marked dirty.
+    pub fn dirty_count(&self) -> usize {
+        self.dirty.len()
     }
 
     /// Observe an edge insertion from the stream.
     pub fn on_insert(&mut self, u: u32, v: u32) {
-        if !self.valid {
-            return;
+        let (ru, rv) = (self.dsu.find(u), self.dsu.find(v));
+        if ru == rv {
+            return; // cycle edge: partition unchanged
         }
-        if self.dsu.union(u, v) {
-            // u,v were in different components: this edge joins the forest
-            self.forest_edges.insert((u.min(v), u.max(v)));
+        // dirtiness is contagious: merging with a possibly-split
+        // component yields a possibly-split component
+        let tainted = self.dirty.remove(&ru) | self.dirty.remove(&rv);
+        self.dsu.union(u, v);
+        if tainted {
+            self.dirty.insert(self.dsu.find(u));
         }
+        // the edge joins the forest: it is a real edge connecting two
+        // previously-separate DSU components
+        self.forest_edges.insert((u.min(v), u.max(v)));
     }
 
     /// Observe an edge deletion from the stream.  Deleting a forest edge
-    /// invalidates the structure (paper: "GreedyCC does not retain enough
-    /// information to find a replacement edge").
-    pub fn on_delete(&mut self, u: u32, v: u32) {
-        if !self.valid {
-            return;
+    /// marks its component dirty (paper: "GreedyCC does not retain
+    /// enough information to find a replacement edge" — but only for
+    /// that component).  Returns `true` when a previously-clean
+    /// component transitioned to dirty (the `dirty_components` metric).
+    pub fn on_delete(&mut self, u: u32, v: u32) -> bool {
+        if !self.forest_edges.remove(&(u.min(v), u.max(v))) {
+            return false; // non-forest deletion: partition unchanged
         }
-        if self.forest_edges.contains(&(u.min(v), u.max(v))) {
-            self.valid = false;
-            self.forest_edges.clear();
-        }
+        // u and v share a root by construction (the edge was in the forest)
+        self.dirty.insert(self.dsu.find(u))
     }
 
-    /// Global connectivity answer in O(V).  `None` if invalidated.
+    /// Global connectivity answer in O(V).  `None` if any component is
+    /// dirty — fall through to the partial tier.
     pub fn components(&mut self) -> Option<SpanningForest> {
-        if !self.valid {
+        if !self.dirty.is_empty() {
             return None;
         }
         let mut edges: Vec<(u32, u32)> = self.forest_edges.iter().copied().collect();
@@ -90,10 +135,21 @@ impl GreedyCC {
         })
     }
 
-    /// Batched reachability in O(α(V)) per pair.  `None` if invalidated.
+    /// Batched reachability in O(α(V)) per pair.  `None` if any queried
+    /// pair touches a dirty component (conservative: a dirty component's
+    /// DSU answer may be a false positive).
     pub fn reachability(&mut self, pairs: &[(u32, u32)]) -> Option<Vec<bool>> {
-        if !self.valid {
-            return None;
+        if !self.dirty.is_empty() {
+            let touches_dirty = pairs.iter().any(|&(a, b)| {
+                let (ra, rb) = (self.dsu.find(a), self.dsu.find(b));
+                self.dirty.contains(&ra) || self.dirty.contains(&rb)
+            });
+            if touches_dirty {
+                return None;
+            }
+            // all queried pairs live in clean (exact) components: the
+            // DSU answer is authoritative even while other components
+            // are dirty
         }
         Some(
             pairs
@@ -103,9 +159,42 @@ impl GreedyCC {
         )
     }
 
+    /// Extract the warm-start state for a partial sketch query, or
+    /// `None` when nothing is dirty (tier 0 can answer directly).
+    ///
+    /// The returned DSU is rebuilt from the surviving forest edges, so
+    /// each dirty component decomposes into the sub-forests left by the
+    /// deletions; every such sub-component's vertices are listed in
+    /// `dirty_vertices`.  Clean components contract to supernodes that
+    /// Borůvka never has to touch (they have no crossing edges).
+    pub fn partial_seed(&mut self) -> Option<PartialSeed> {
+        if self.dirty.is_empty() {
+            return None;
+        }
+        let n = self.dsu.len();
+        // no sort: consumers only need the edge *set* (XOR aggregation
+        // and DSU unions are order-independent), and sorting would put
+        // an O(V log V) term on every partial query for nothing
+        let forest_edges: Vec<(u32, u32)> =
+            self.forest_edges.iter().copied().collect();
+        let dsu = Dsu::from_edges(n, &forest_edges);
+        let mut dirty_vertices = Vec::new();
+        for u in 0..n as u32 {
+            if self.dirty.contains(&self.dsu.find(u)) {
+                dirty_vertices.push(u);
+            }
+        }
+        Some(PartialSeed {
+            dsu,
+            forest_edges,
+            dirty_components: self.dirty.len(),
+            dirty_vertices,
+        })
+    }
+
     /// Memory estimate in bytes (the paper's O(V) compactness claim).
     pub fn bytes(&self) -> usize {
-        self.dsu.len() * 5 + self.forest_edges.len() * 8
+        self.dsu.len() * 5 + self.forest_edges.len() * 8 + self.dirty.len() * 4
     }
 }
 
@@ -131,28 +220,81 @@ mod tests {
         g.on_insert(0, 1);
         g.on_insert(1, 2);
         g.on_insert(0, 2); // cycle edge: not in forest
-        g.on_delete(0, 2);
+        assert!(!g.on_delete(0, 2));
         assert!(g.is_valid());
         assert!(g.components().unwrap().connected(0, 2));
     }
 
     #[test]
-    fn forest_deletion_invalidates() {
-        let mut g = GreedyCC::fresh(4);
+    fn forest_deletion_dirties_only_its_component() {
+        let mut g = GreedyCC::fresh(6);
         g.on_insert(0, 1);
-        g.on_delete(0, 1);
+        g.on_insert(2, 3);
+        g.on_insert(4, 5);
+        assert!(g.on_delete(0, 1), "first forest delete newly dirties");
         assert!(!g.is_valid());
+        assert_eq!(g.dirty_count(), 1);
         assert!(g.components().is_none());
+        // pairs entirely inside clean components still answer
+        assert_eq!(g.reachability(&[(2, 3), (2, 4)]), Some(vec![true, false]));
+        // pairs touching the dirty component do not
         assert!(g.reachability(&[(0, 1)]).is_none());
     }
 
     #[test]
-    fn updates_after_invalidation_are_ignored() {
+    fn second_delete_in_same_component_is_not_a_new_transition() {
         let mut g = GreedyCC::fresh(4);
         g.on_insert(0, 1);
-        g.on_delete(0, 1);
-        g.on_insert(2, 3); // no panic, no effect
-        assert!(!g.is_valid());
+        g.on_insert(1, 2);
+        assert!(g.on_delete(0, 1));
+        assert!(!g.on_delete(1, 2), "component already dirty");
+        assert_eq!(g.dirty_count(), 1);
+    }
+
+    #[test]
+    fn dirtiness_is_contagious_through_inserts() {
+        let mut g = GreedyCC::fresh(6);
+        g.on_insert(0, 1);
+        g.on_insert(2, 3);
+        g.on_delete(0, 1); // {0,1} dirty
+        g.on_insert(1, 2); // merges dirty {0,1} with clean {2,3}
+        assert_eq!(g.dirty_count(), 1);
+        assert!(g.reachability(&[(2, 3)]).is_none(), "merged component is dirty");
+        // untouched singletons remain clean and answerable
+        assert_eq!(g.reachability(&[(4, 5)]), Some(vec![false]));
+    }
+
+    #[test]
+    fn partial_seed_contracts_clean_and_exposes_dirty() {
+        let mut g = GreedyCC::fresh(8);
+        // clean path component {4,5,6}
+        g.on_insert(4, 5);
+        g.on_insert(5, 6);
+        // dirty component {0,1,2,3}: path 0-1-2-3, delete 1-2
+        g.on_insert(0, 1);
+        g.on_insert(1, 2);
+        g.on_insert(2, 3);
+        g.on_delete(1, 2);
+
+        let seed = g.partial_seed().unwrap();
+        assert_eq!(seed.dirty_components, 1);
+        assert_eq!(seed.dirty_vertices, vec![0, 1, 2, 3]);
+        // surviving forest: 0-1, 2-3, 4-5, 5-6 — deleted edge is gone
+        // (set comparison: partial_seed does not order its edges)
+        let mut got = seed.forest_edges.clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![(0, 1), (2, 3), (4, 5), (5, 6)]);
+        let mut dsu = seed.dsu;
+        assert!(dsu.connected(0, 1));
+        assert!(!dsu.connected(1, 2), "deleted edge must not be contracted");
+        assert!(dsu.connected(4, 6));
+    }
+
+    #[test]
+    fn partial_seed_none_when_clean() {
+        let mut g = GreedyCC::fresh(4);
+        g.on_insert(0, 1);
+        assert!(g.partial_seed().is_none());
     }
 
     #[test]
@@ -182,6 +324,42 @@ mod tests {
             for i in 0..v as u32 {
                 for j in (i + 1)..(v as u32).min(i + 5) {
                     assert_eq!(f.connected(i, j), d.connected(i, j));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn clean_components_stay_exact_under_random_dirtying() {
+        // property: whatever interleaving of inserts and forest/non-forest
+        // deletes, reachability answers (when given) match a from-scratch
+        // DSU over the live edge set
+        Cases::new(25).run(|rng| {
+            let v = 4 + rng.next_below(40);
+            let mut g = GreedyCC::fresh(v);
+            let mut live = std::collections::BTreeSet::new();
+            for _ in 0..rng.next_below(120) {
+                if !live.is_empty() && rng.next_below(4) == 0 {
+                    let i = rng.next_below(live.len() as u64) as usize;
+                    let e: (u32, u32) = *live.iter().nth(i).unwrap();
+                    live.remove(&e);
+                    g.on_delete(e.0, e.1);
+                } else {
+                    let e = arb_edge(rng, v);
+                    if live.insert(e) {
+                        g.on_insert(e.0, e.1);
+                    }
+                }
+            }
+            let mut d = Dsu::new(v as usize);
+            for &(a, b) in &live {
+                d.union(a, b);
+            }
+            let pairs: Vec<(u32, u32)> =
+                (0..8).map(|_| arb_edge(rng, v)).collect();
+            if let Some(answers) = g.reachability(&pairs) {
+                for (&(a, b), got) in pairs.iter().zip(answers) {
+                    assert_eq!(got, d.connected(a, b), "pair ({a},{b})");
                 }
             }
         });

@@ -7,9 +7,9 @@ pub mod greedycc;
 pub mod kconn;
 pub mod mincut;
 
-pub use boruvka::{boruvka_components, ConnectivityResult};
+pub use boruvka::{boruvka_components, boruvka_components_from, ConnectivityResult};
 pub use dsu::Dsu;
-pub use greedycc::GreedyCC;
+pub use greedycc::{GreedyCC, PartialSeed};
 pub use kconn::KConnectivity;
 
 /// A spanning forest: edges (u, v) with u < v, plus the component map.

@@ -17,16 +17,16 @@
 //!                                            (distributor s only)
 //! ```
 
+pub mod query;
 pub mod work_queue;
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use crate::connectivity::boruvka::boruvka_components;
-use crate::connectivity::greedycc::GreedyCC;
+use crate::connectivity::boruvka::{boruvka_components, boruvka_components_from};
+use crate::connectivity::greedycc::PartialSeed;
 use crate::connectivity::kconn::KConnectivity;
 use crate::connectivity::SpanningForest;
 use crate::hypertree::{BatchSink, Hypertree, HypertreeConfig, VertexBatch};
@@ -34,12 +34,13 @@ use crate::gutter::GutterBuffer;
 use crate::metrics::{Metrics, MetricsSnapshot};
 use crate::sketch::params::{encode_edge, SketchParams};
 use crate::sketch::shard::ShardSpec;
-use crate::stream::update::{Update, UpdateKind, UPDATE_WIRE_BYTES};
+use crate::stream::update::{Update, UPDATE_WIRE_BYTES};
 use crate::stream::GraphStream;
 #[cfg(feature = "xla")]
 use crate::worker::XlaWorker;
 use crate::worker::{CubeWorker, NativeWorker, WorkerBackend, WorkerSeeds};
-use work_queue::ShardedWorkQueue;
+pub use query::{QueryEngine, QueryTier};
+use work_queue::{FlushBarrier, ShardedWorkQueue};
 
 /// Build a worker backend inside a distributor thread.
 fn build_backend(
@@ -175,14 +176,26 @@ struct QueueSink {
     queue: Arc<ShardedWorkQueue<WorkItem>>,
     spec: ShardSpec,
     metrics: Arc<Metrics>,
-    in_flight: Arc<AtomicU64>,
+    barrier: Arc<FlushBarrier>,
 }
 
 impl QueueSink {
     fn enqueue(&self, shard: usize, item: WorkItem) {
-        self.in_flight.fetch_add(1, Ordering::AcqRel);
+        let (kind, vertex, len) = match &item {
+            WorkItem::Distribute(b) => ("distribute", b.vertex, b.others.len()),
+            WorkItem::Local(b) => ("local", b.vertex, b.others.len()),
+        };
+        self.barrier.register();
         if !self.queue.push(shard, item) {
-            self.in_flight.fetch_sub(1, Ordering::AcqRel);
+            // the shard queue is closed: these updates will never reach
+            // a sketch, which silently corrupts every later query —
+            // meter and log instead of vanishing
+            self.barrier.complete();
+            Metrics::add(&self.metrics.batches_dropped, 1);
+            eprintln!(
+                "coordinator: DROPPED {kind} batch (vertex {vertex}, {len} \
+                 updates) on closed shard queue {shard}"
+            );
         }
     }
 }
@@ -233,11 +246,11 @@ pub struct Coordinator {
     buffer: Buffer,
     sink: Arc<QueueSink>,
     queue: Arc<ShardedWorkQueue<WorkItem>>,
-    in_flight: Arc<AtomicU64>,
+    barrier: Arc<FlushBarrier>,
     distributors: Vec<JoinHandle<()>>,
     /// thread-local hypertree handle for the driver thread
     local: Option<crate::hypertree::LocalIngest>,
-    greedy: Mutex<GreedyCC>,
+    query: QueryEngine,
 }
 
 impl Coordinator {
@@ -252,7 +265,7 @@ impl Coordinator {
             spec,
         ));
         let queue = Arc::new(ShardedWorkQueue::new(spec.count(), config.queue_capacity));
-        let in_flight = Arc::new(AtomicU64::new(0));
+        let barrier = Arc::new(FlushBarrier::new());
 
         let buffer = match config.buffer {
             BufferKind::Hypertree => Buffer::Hyper(Arc::new(Hypertree::new(
@@ -271,19 +284,19 @@ impl Coordinator {
             queue: queue.clone(),
             spec,
             metrics: metrics.clone(),
-            in_flight: in_flight.clone(),
+            barrier: barrier.clone(),
         });
 
         let mut coord = Self {
             local: None,
-            greedy: Mutex::new(GreedyCC::fresh(config.vertices)),
+            query: QueryEngine::new(config.vertices, config.use_greedycc, metrics.clone()),
             params,
             metrics,
             kconn,
             buffer,
             sink,
             queue,
-            in_flight,
+            barrier,
             distributors: Vec::new(),
             config,
         };
@@ -303,22 +316,31 @@ impl Coordinator {
             // backend construction data (Send) — the backend itself is
             // built inside the thread (PJRT handles are thread-bound)
             let kind = self.config.worker.clone();
+            // deltas only cross the network for remote workers; in-process
+            // backends must not inflate the Theorem 5.2 accounting
+            let meter_delta_bytes = matches!(kind, WorkerKind::Remote { .. });
             let params = self.params;
             let graph_seed = self.config.graph_seed;
             let kk = self.config.k;
             let queue = self.queue.clone();
             let kconn = self.kconn.clone();
             let metrics = self.metrics.clone();
-            let in_flight = self.in_flight.clone();
+            let barrier = self.barrier.clone();
             let k = self.config.k as usize;
             self.distributors.push(std::thread::spawn(move || {
                 let backend = match build_backend(&kind, params, graph_seed, kk, shard) {
                     Ok(b) => b,
                     Err(e) => {
                         eprintln!("distributor {shard}: backend init failed: {e:#}");
-                        // drain the shard queue so producers don't deadlock
+                        // close this shard first so later pushes fail
+                        // fast and take QueueSink's metered drop path
+                        // (instead of filling a queue nobody pops and
+                        // wedging the flush barrier), then drain what
+                        // already got in — all of it is lost work
+                        queue.close_shard(shard);
                         while queue.pop(shard).is_some() {
-                            in_flight.fetch_sub(1, Ordering::AcqRel);
+                            Metrics::add(&metrics.batches_dropped, 1);
+                            barrier.complete();
                         }
                         return;
                     }
@@ -338,12 +360,20 @@ impl Coordinator {
                                         );
                                     }
                                     Metrics::add(&metrics.deltas_merged, 1);
-                                    Metrics::add(
-                                        &metrics.delta_bytes_received,
-                                        16 + out.len() as u64 * 8,
-                                    );
+                                    if meter_delta_bytes {
+                                        Metrics::add(
+                                            &metrics.delta_bytes_received,
+                                            16 + out.len() as u64 * 8,
+                                        );
+                                    }
                                 }
-                                Err(e) => eprintln!("worker error: {e:#}"),
+                                Err(e) => {
+                                    // the batch's updates never reach a
+                                    // sketch: that is lost work, and the
+                                    // query-barrier assertions must see it
+                                    Metrics::add(&metrics.batches_dropped, 1);
+                                    eprintln!("worker error (batch dropped): {e:#}");
+                                }
                             }
                         }
                         WorkItem::Local(batch) => {
@@ -357,7 +387,7 @@ impl Coordinator {
                             Metrics::add(&metrics.updates_local, batch.others.len() as u64);
                         }
                     }
-                    in_flight.fetch_sub(1, Ordering::AcqRel);
+                    barrier.complete();
                 }
             }));
         }
@@ -386,13 +416,8 @@ impl Coordinator {
         Metrics::add(&self.metrics.updates_ingested, 1);
         Metrics::add(&self.metrics.stream_bytes, UPDATE_WIRE_BYTES);
 
-        if self.config.use_greedycc {
-            let mut g = self.greedy.lock().unwrap();
-            match update.kind {
-                UpdateKind::Insert => g.on_insert(update.u, update.v),
-                UpdateKind::Delete => g.on_delete(update.u, update.v),
-            }
-        }
+        // uncontended (`&mut` + get_mut) — no lock on the hot path
+        self.query.on_update(&update);
 
         match &self.buffer {
             Buffer::Hyper(_) => {
@@ -422,8 +447,9 @@ impl Coordinator {
     }
 
     /// The query barrier (§5.3): flush all pending updates — γ-full
-    /// leaves to workers, the rest locally — then wait for every
-    /// in-flight delta to merge.
+    /// leaves to workers, the rest locally — then sleep on the flush
+    /// barrier's condvar until every in-flight item has merged (the seed
+    /// design poll-slept here, quantizing query latency to 200 µs).
     pub fn flush_pending(&mut self) {
         if let Some(local) = self.local.as_mut() {
             local.flush(&*self.sink);
@@ -432,46 +458,65 @@ impl Coordinator {
             Buffer::Hyper(t) => t.force_flush(self.config.gamma, &*self.sink),
             Buffer::Gutter(g) => g.force_flush(self.config.gamma, &*self.sink),
         }
-        while self.in_flight.load(Ordering::Acquire) != 0 || !self.queue.is_empty() {
-            std::thread::sleep(std::time::Duration::from_micros(200));
-        }
+        self.barrier.wait_idle();
     }
 
-    /// Global connectivity query.  Uses GreedyCC when valid (O(V)),
-    /// otherwise flushes and runs sketch-Borůvka, then re-seeds GreedyCC.
+    /// The tier that would answer [`Self::connected_components`] now.
+    pub fn query_plan(&self) -> QueryTier {
+        self.query.plan()
+    }
+
+    /// Global connectivity query, answered by the cheapest valid tier:
+    ///
+    /// * tier 0 — GreedyCC (all components clean): O(V), **no flush**;
+    /// * tier 1 — some components dirty: flush + Borůvka warm-started
+    ///   from the surviving forest, aggregating only dirty-region
+    ///   vertices;
+    /// * tier 2 — accelerator disabled: full flush + Borůvka.
     pub fn connected_components(&mut self) -> SpanningForest {
-        if self.config.use_greedycc {
-            let mut g = self.greedy.lock().unwrap();
-            if let Some(forest) = g.components() {
-                Metrics::add(&self.metrics.queries_greedy, 1);
-                return forest;
-            }
+        if let Some(forest) = self.query.try_greedy() {
+            Metrics::add(&self.metrics.queries_greedy, 1);
+            return forest;
+        }
+        if let Some(seed) = self.query.partial_seed() {
+            return self.partial_connectivity_query(seed);
         }
         self.full_connectivity_query()
     }
 
-    /// Force the full (flush + Borůvka) query path.
+    /// Tier 1: flush, then resolve only the dirty components against the
+    /// sketches; clean components ride along as contracted supernodes.
+    fn partial_connectivity_query(&mut self, seed: PartialSeed) -> SpanningForest {
+        self.flush_pending();
+        let result = boruvka_components_from(
+            &self.kconn.stores()[0],
+            seed.dsu,
+            seed.forest_edges,
+            &seed.dirty_vertices,
+        );
+        Metrics::add(&self.metrics.queries_partial, 1);
+        self.query.reseed(self.params.v, &result.forest);
+        result.forest
+    }
+
+    /// Force the full (flush + Borůvka) query path — tier 2.
     pub fn full_connectivity_query(&mut self) -> SpanningForest {
         self.flush_pending();
         let result = boruvka_components(&self.kconn.stores()[0]);
         Metrics::add(&self.metrics.queries_full, 1);
-        if self.config.use_greedycc {
-            *self.greedy.lock().unwrap() =
-                GreedyCC::from_forest(self.params.v, &result.forest);
-        }
+        self.query.reseed(self.params.v, &result.forest);
         result.forest
     }
 
-    /// Batched reachability query (§5.3).
+    /// Batched reachability query (§5.3).  Tier 0 answers when no
+    /// queried pair touches a dirty component; otherwise the query
+    /// escalates exactly like [`Self::connected_components`].
     pub fn reachability(&mut self, pairs: &[(u32, u32)]) -> Vec<bool> {
-        if self.config.use_greedycc {
-            let mut g = self.greedy.lock().unwrap();
-            if let Some(answers) = g.reachability(pairs) {
-                Metrics::add(&self.metrics.queries_greedy, 1);
-                return answers;
-            }
+        if let Some(answers) = self.query.try_reachability(pairs) {
+            Metrics::add(&self.metrics.queries_greedy, 1);
+            return answers;
         }
-        let forest = self.full_connectivity_query();
+        let forest = self.connected_components();
         pairs
             .iter()
             .map(|&(a, b)| forest.connected(a, b))
@@ -551,6 +596,7 @@ mod tests {
         coord.ingest_all(Dynamify::new(model, 3));
         let forest = coord.connected_components();
         assert!(same_partition(&forest.component, &want));
+        assert_eq!(coord.metrics().batches_dropped, 0);
     }
 
     #[test]
@@ -570,21 +616,82 @@ mod tests {
     }
 
     #[test]
-    fn deletions_invalidate_greedycc_then_full_query_recovers() {
+    fn forest_deletion_routes_to_partial_tier_and_recovers() {
         let v = 64u64;
         let mut coord = Coordinator::new(small_config(v)).unwrap();
         let updates = vec![
             Update::insert(0, 1),
             Update::insert(1, 2),
             Update::insert(3, 4),
-            Update::delete(1, 2), // forest edge: invalidates GreedyCC
+            Update::delete(1, 2), // forest edge: dirties {0,1,2} only
         ];
         coord.ingest_all(VecStream::new(v, updates));
+        assert_eq!(coord.query_plan(), QueryTier::Partial);
         let forest = coord.connected_components();
-        assert_eq!(coord.metrics().queries_full, 1);
+        let m = coord.metrics();
+        assert_eq!(m.queries_partial, 1, "dirty component resolves partially");
+        assert_eq!(m.queries_full, 0, "no full Borůvka needed");
+        assert_eq!(m.dirty_components, 1);
+        assert_eq!(m.batches_dropped, 0);
         assert!(forest.connected(0, 1));
         assert!(!forest.connected(1, 2));
         assert!(forest.connected(3, 4));
+        // the partial query re-seeded the accelerator: tier 0 again
+        assert_eq!(coord.query_plan(), QueryTier::Greedy);
+        let _ = coord.connected_components();
+        assert_eq!(coord.metrics().queries_greedy, 1);
+    }
+
+    #[test]
+    fn non_forest_deletion_never_triggers_a_flush_or_boruvka() {
+        let v = 32u64;
+        let mut coord = Coordinator::new(small_config(v)).unwrap();
+        let updates = vec![
+            Update::insert(0, 1),
+            Update::insert(1, 2),
+            Update::insert(0, 2), // cycle edge
+            Update::delete(0, 2), // non-forest delete: partition unchanged
+        ];
+        coord.ingest_all(VecStream::new(v, updates));
+        assert_eq!(coord.query_plan(), QueryTier::Greedy);
+        let forest = coord.connected_components();
+        let m = coord.metrics();
+        assert_eq!(m.queries_full, 0, "non-forest delete must not cost a full query");
+        assert_eq!(m.queries_partial, 0, "…nor a partial one");
+        assert_eq!(m.queries_greedy, 1);
+        assert_eq!(m.dirty_components, 0);
+        assert!(forest.connected(0, 2));
+    }
+
+    #[test]
+    fn multiple_dirty_components_resolve_in_one_partial_query() {
+        let v = 64u64;
+        let mut coord = Coordinator::new(small_config(v)).unwrap();
+        let mut updates = Vec::new();
+        // three disjoint paths of 4 vertices each, plus a spare edge
+        for base in [0u32, 8, 16] {
+            updates.push(Update::insert(base, base + 1));
+            updates.push(Update::insert(base + 1, base + 2));
+            updates.push(Update::insert(base + 2, base + 3));
+        }
+        updates.push(Update::insert(30, 31));
+        // delete a forest edge in two of the three paths
+        updates.push(Update::delete(1, 2));
+        updates.push(Update::delete(17, 18));
+        coord.ingest_all(VecStream::new(v, updates));
+
+        let forest = coord.connected_components();
+        let m = coord.metrics();
+        assert_eq!(m.queries_partial, 1);
+        assert_eq!(m.dirty_components, 2);
+        assert_eq!(m.batches_dropped, 0);
+        // dirty paths split exactly at the deleted edges
+        assert!(forest.connected(0, 1) && !forest.connected(1, 2));
+        assert!(forest.connected(2, 3));
+        assert!(forest.connected(16, 17) && !forest.connected(17, 18));
+        // untouched components intact
+        assert!(forest.connected(8, 11));
+        assert!(forest.connected(30, 31));
     }
 
     #[test]
@@ -609,17 +716,24 @@ mod tests {
         coord.ingest_all(Dynamify::new(model, 7));
         let _ = coord.full_connectivity_query();
         let m = coord.metrics();
-        // Theorem 5.2: network <= (3 + 1/(gamma*alpha)) x stream bytes.
-        // Updates are 9B on the wire but 8B in batches, so the batch
-        // side alone is < 2x; deltas add 1/alpha per full batch.
-        let bound = (3.0 + 1.0 / (coord.config.gamma * coord.config.alpha as f64))
-            * m.stream_bytes as f64;
+        // In-process (Native) workers never touch the network: delta
+        // bytes must not be metered as communication at all.
+        assert_eq!(
+            m.delta_bytes_received, 0,
+            "native deltas wrongly accounted as network traffic"
+        );
+        // With the delta leg gone, the batch leg alone is the network
+        // cost: 8B per update (4B per endpoint entry) + batch headers vs
+        // 9B of stream — well under 2x, far inside the Theorem 5.2 bound
+        // of (3 + 1/(gamma*alpha))x that the remote-mode test checks.
+        let bound = 2.0 * m.stream_bytes as f64;
         assert!(
             (m.network_bytes() as f64) < bound,
-            "network {} vs bound {bound}",
+            "network {} vs tightened bound {bound}",
             m.network_bytes()
         );
         assert_eq!(m.updates_ingested * 2, m.updates_local + distributed(&m));
+        assert_eq!(m.batches_dropped, 0);
     }
 
     fn distributed(m: &MetricsSnapshot) -> u64 {
@@ -693,6 +807,12 @@ mod tests {
         coord.ingest_all(Dynamify::new(model, 3));
         let forest = coord.connected_components();
         assert!(same_partition(&forest.component, &want));
+        let m = coord.metrics();
+        assert_eq!(m.batches_dropped, 0);
+        assert!(
+            m.deltas_merged == 0 || m.delta_bytes_received > 0,
+            "remote deltas must be metered as network traffic"
+        );
         drop(coord); // closes connections so the server exits
         let _ = handle.join();
     }

@@ -11,7 +11,7 @@
 //! merge path stay contention-free end-to-end.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 
 /// Bounded MPMC queue.
@@ -129,6 +129,78 @@ impl<T> WorkQueue<T> {
     }
 }
 
+/// Counts work items from enqueue to completion and lets the query
+/// barrier **sleep until the pipeline drains** instead of poll-sleeping.
+///
+/// The seed design's `flush_pending` spun on
+/// `sleep(200µs); load(in_flight)`, which quantized every query's
+/// latency to the poll interval — precisely the cost the paper's Fig. 5
+/// measures in microseconds.  Here the last `complete()` call notifies a
+/// condvar, so the barrier wakes within the OS scheduler's latency.
+///
+/// Protocol: producers call [`FlushBarrier::register`] *before* an item
+/// becomes visible to a consumer and consumers call
+/// [`FlushBarrier::complete`] after fully processing it (or the producer
+/// calls it itself if the hand-off fails), so `pending() == 0` implies
+/// every registered item has been fully processed.
+#[derive(Debug, Default)]
+pub struct FlushBarrier {
+    pending: AtomicU64,
+    lock: Mutex<()>,
+    idle: Condvar,
+}
+
+impl FlushBarrier {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Account one in-flight work item.
+    #[inline]
+    pub fn register(&self) {
+        self.pending.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Mark one work item fully processed; wakes the barrier when the
+    /// count reaches zero.
+    #[inline]
+    pub fn complete(&self) {
+        if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // take the lock so the notify can't slip between a waiter's
+            // count check and its wait()
+            let _guard = self.lock.lock().unwrap();
+            self.idle.notify_all();
+        }
+    }
+
+    /// Currently in-flight items.
+    #[inline]
+    pub fn pending(&self) -> u64 {
+        self.pending.load(Ordering::Acquire)
+    }
+
+    /// Block until every registered item has completed.
+    pub fn wait_idle(&self) {
+        if self.pending() == 0 {
+            return;
+        }
+        let mut guard = self.lock.lock().unwrap();
+        while self.pending() != 0 {
+            // the condvar delivers the wake-up; the timeout is pure
+            // defense-in-depth against a notify bug and does NOT restore
+            // liveness if a consumer dies holding an uncompleted item —
+            // consumers must complete() every registered item on every
+            // exit path (the coordinator closes a shard's queue before
+            // abandoning it so producers take their drop path instead)
+            let (g, _timeout) = self
+                .idle
+                .wait_timeout(guard, std::time::Duration::from_millis(50))
+                .unwrap();
+            guard = g;
+        }
+    }
+}
+
 /// One bounded [`WorkQueue`] per sketch shard (see
 /// [`crate::sketch::shard::ShardSpec`]): batches are pushed to the queue
 /// of the shard owning their vertex, and distributor thread `s` pops
@@ -172,6 +244,14 @@ impl<T> ShardedWorkQueue<T> {
         for q in &self.queues {
             q.close();
         }
+    }
+
+    /// Close a single shard's queue (e.g. its distributor cannot serve
+    /// it): subsequent pushes to this shard fail fast instead of
+    /// enqueueing work nobody will pop, letting the producer take its
+    /// metered drop path.  Other shards keep running.
+    pub fn close_shard(&self, shard: usize) {
+        self.queues[shard].close();
     }
 
     /// Items queued across all shards (approximate under concurrency).
@@ -283,6 +363,62 @@ mod tests {
         assert!(other.join().unwrap(), "shard 1 must accept while 0 is full");
         assert_eq!(q.try_pop(1), Some(2));
         assert_eq!(q.try_pop(0), Some(1));
+    }
+
+    #[test]
+    fn close_shard_fails_only_that_shards_pushes() {
+        let q: ShardedWorkQueue<u64> = ShardedWorkQueue::new(2, 4);
+        assert!(q.push(0, 1));
+        q.close_shard(0);
+        assert!(!q.push(0, 2), "closed shard must reject pushes");
+        assert!(q.push(1, 3), "other shards keep accepting");
+        // closed shard still drains what got in before the close
+        assert_eq!(q.pop(0), Some(1));
+        assert_eq!(q.pop(0), None);
+        assert_eq!(q.try_pop(1), Some(3));
+    }
+
+    #[test]
+    fn flush_barrier_wait_idle_returns_immediately_when_idle() {
+        let b = FlushBarrier::new();
+        b.wait_idle(); // must not hang
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn flush_barrier_blocks_until_all_complete() {
+        let b = Arc::new(FlushBarrier::new());
+        let n = 64u64;
+        for _ in 0..n {
+            b.register();
+        }
+        let b2 = b.clone();
+        let completer = std::thread::spawn(move || {
+            for _ in 0..n {
+                std::thread::yield_now();
+                b2.complete();
+            }
+        });
+        b.wait_idle();
+        assert_eq!(b.pending(), 0);
+        completer.join().unwrap();
+    }
+
+    #[test]
+    fn flush_barrier_many_waiters_all_wake() {
+        let b = Arc::new(FlushBarrier::new());
+        b.register();
+        let waiters: Vec<_> = (0..4)
+            .map(|_| {
+                let b2 = b.clone();
+                std::thread::spawn(move || b2.wait_idle())
+            })
+            .collect();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        b.complete();
+        for w in waiters {
+            w.join().unwrap();
+        }
     }
 
     #[test]

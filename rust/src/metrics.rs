@@ -23,8 +23,18 @@ pub struct Metrics {
     pub deltas_merged: AtomicU64,
     /// Full (Borůvka) queries answered.
     pub queries_full: AtomicU64,
+    /// Queries served by the partial tier (warm-started Borůvka over
+    /// dirty components only).
+    pub queries_partial: AtomicU64,
     /// Queries served by GreedyCC.
     pub queries_greedy: AtomicU64,
+    /// Components newly marked dirty by forest-edge deletions (clean →
+    /// dirty transitions; the partial tier's workload driver).
+    pub dirty_components: AtomicU64,
+    /// Batches lost at the work-queue boundary (push onto a closed
+    /// queue).  Nonzero means updates silently never reached a sketch —
+    /// end-to-end tests assert this stays 0 at every query barrier.
+    pub batches_dropped: AtomicU64,
     /// Hypertree node-to-node moves (cache-behaviour accounting).
     pub hypertree_moves: AtomicU64,
 }
@@ -40,7 +50,10 @@ pub struct MetricsSnapshot {
     pub updates_local: u64,
     pub deltas_merged: u64,
     pub queries_full: u64,
+    pub queries_partial: u64,
     pub queries_greedy: u64,
+    pub dirty_components: u64,
+    pub batches_dropped: u64,
     pub hypertree_moves: u64,
 }
 
@@ -64,7 +77,10 @@ impl Metrics {
             updates_local: self.updates_local.load(Ordering::Relaxed),
             deltas_merged: self.deltas_merged.load(Ordering::Relaxed),
             queries_full: self.queries_full.load(Ordering::Relaxed),
+            queries_partial: self.queries_partial.load(Ordering::Relaxed),
             queries_greedy: self.queries_greedy.load(Ordering::Relaxed),
+            dirty_components: self.dirty_components.load(Ordering::Relaxed),
+            batches_dropped: self.batches_dropped.load(Ordering::Relaxed),
             hypertree_moves: self.hypertree_moves.load(Ordering::Relaxed),
         }
     }

@@ -1,0 +1,134 @@
+//! End-to-end exercise of the tiered query path: random insert / delete
+//! / query interleavings through the full coordinator pipeline must
+//! produce partitions identical to a from-scratch DSU reference *no
+//! matter which tier answered*, and the tier accounting must add up.
+
+use landscape::baseline::Referee;
+use landscape::connectivity::dsu::Dsu;
+use landscape::coordinator::{Coordinator, CoordinatorConfig, QueryTier};
+use landscape::stream::update::Update;
+use landscape::stream::VecStream;
+use landscape::util::testkit::{arb_edge, Cases};
+
+fn small_config(v: u64) -> CoordinatorConfig {
+    let mut c = CoordinatorConfig::for_vertices(v);
+    c.alpha = 1;
+    c.distributor_threads = 2;
+    c
+}
+
+fn same_partition(a: &[u32], b: &[u32]) -> bool {
+    Referee::same_partition(a, b)
+}
+
+#[test]
+fn random_interleavings_match_dsu_reference_on_every_tier() {
+    Cases::new(8).run(|rng| {
+        let v = 8 + rng.next_below(40);
+        let mut coord = Coordinator::new(small_config(v)).unwrap();
+        let mut live: std::collections::BTreeSet<(u32, u32)> =
+            std::collections::BTreeSet::new();
+        let mut queries = 0u64;
+
+        for step in 0..(40 + rng.next_below(80)) {
+            if !live.is_empty() && rng.next_below(4) == 0 {
+                // delete a random live edge (may or may not be forest)
+                let i = rng.next_below(live.len() as u64) as usize;
+                let e = *live.iter().nth(i).unwrap();
+                live.remove(&e);
+                coord.ingest(Update::delete(e.0, e.1));
+            } else {
+                let e = arb_edge(rng, v);
+                if live.insert(e) {
+                    coord.ingest(Update::insert(e.0, e.1));
+                }
+            }
+
+            if step % 13 == 5 {
+                queries += 1;
+                let edges: Vec<(u32, u32)> = live.iter().copied().collect();
+                let mut d = Dsu::from_edges(v as usize, &edges);
+                let forest = coord.connected_components();
+                assert!(
+                    same_partition(&forest.component, &d.component_map()),
+                    "partition diverges at step {step} (tier accounting: {:?})",
+                    coord.metrics()
+                );
+            }
+        }
+
+        // final query + accounting
+        queries += 1;
+        let edges: Vec<(u32, u32)> = live.iter().copied().collect();
+        let mut d = Dsu::from_edges(v as usize, &edges);
+        let forest = coord.connected_components();
+        assert!(same_partition(&forest.component, &d.component_map()));
+
+        let m = coord.metrics();
+        // with the accelerator on, tier 2 is never needed: every query is
+        // answered by GreedyCC or the partial tier
+        assert_eq!(m.queries_full, 0, "tiered path must never fall to full");
+        assert_eq!(m.queries_greedy + m.queries_partial, queries);
+        // no update may vanish at the queue boundary
+        assert_eq!(m.batches_dropped, 0);
+    });
+}
+
+#[test]
+fn non_forest_deletes_keep_the_query_on_tier_zero() {
+    let v = 32u64;
+    let mut coord = Coordinator::new(small_config(v)).unwrap();
+    let mut updates = Vec::new();
+    // a triangle fan: edges (0,i) form the forest, (i,i+1) are cycles
+    for i in 1..10u32 {
+        updates.push(Update::insert(0, i));
+    }
+    for i in 1..9u32 {
+        updates.push(Update::insert(i, i + 1));
+    }
+    // delete every cycle edge — none is in the spanning forest
+    for i in 1..9u32 {
+        updates.push(Update::delete(i, i + 1));
+    }
+    coord.ingest_all(VecStream::new(v, updates));
+
+    assert_eq!(coord.query_plan(), QueryTier::Greedy);
+    let before = coord.metrics();
+    let forest = coord.connected_components();
+    let after = coord.metrics();
+
+    assert_eq!(after.queries_full, before.queries_full, "no full query");
+    assert_eq!(after.queries_full, 0);
+    assert_eq!(after.queries_partial, 0, "no partial query either");
+    assert_eq!(after.queries_greedy, 1);
+    assert_eq!(after.dirty_components, 0);
+    assert_eq!(after.batches_dropped, 0);
+    assert!(forest.connected(1, 9), "fan stays connected through vertex 0");
+}
+
+#[test]
+fn forest_delete_partial_query_then_back_to_tier_zero() {
+    let v = 64u64;
+    let mut coord = Coordinator::new(small_config(v)).unwrap();
+    let mut updates: Vec<Update> = (0..31).map(|i| Update::insert(i, i + 1)).collect();
+    updates.push(Update::delete(15, 16)); // forest edge mid-path
+    coord.ingest_all(VecStream::new(v, updates));
+
+    assert_eq!(coord.query_plan(), QueryTier::Partial);
+    let forest = coord.connected_components();
+    assert!(forest.connected(0, 15));
+    assert!(forest.connected(16, 31));
+    assert!(!forest.connected(15, 16));
+
+    let m = coord.metrics();
+    assert_eq!(m.queries_partial, 1);
+    assert_eq!(m.queries_full, 0);
+    assert_eq!(m.dirty_components, 1);
+    assert_eq!(m.batches_dropped, 0);
+
+    // the partial query re-seeded GreedyCC: next query is free again
+    assert_eq!(coord.query_plan(), QueryTier::Greedy);
+    let again = coord.connected_components();
+    assert_eq!(coord.metrics().queries_greedy, 1);
+    assert!(!again.connected(15, 16));
+}
