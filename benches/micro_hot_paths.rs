@@ -3,7 +3,8 @@
 //! Run with `cargo bench --bench micro_hot_paths`.  Reports per-op costs
 //! for: CameoSketch vs CubeSketch updates, batched delta computation,
 //! hypertree vs gutter ingestion, sketch-delta merge, work-queue
-//! handoff, Borůvka queries, GreedyCC ops, adjacency-matrix bit flips,
+//! handoff, lockstep vs pipelined remote transport under injected
+//! latency, Borůvka queries, GreedyCC ops, adjacency-matrix bit flips,
 //! and RAM bandwidth — everything EXPERIMENTS.md §Perf tracks.
 
 use std::sync::Arc;
@@ -207,6 +208,78 @@ fn main() {
         while q.try_pop().is_some() {}
     });
     row("workqueue_push_pop", s.median / 512.0);
+
+    // remote transport: lockstep (one blocking round trip per batch) vs
+    // pipelined (window of W batches in flight) over localhost with an
+    // injected 500µs per-reply latency — the regime real remote workers
+    // live in.  ns_per_op is per batch: lockstep pays one full latency
+    // per batch, the pipelined rows shrink roughly with W.
+    {
+        use landscape::worker::remote::{
+            PipelinedRemote, RemoteWorker, ServeOptions, WorkerServer,
+        };
+        use landscape::worker::{PendingBatch, SubmitBackend, WorkerBackend};
+        use std::time::Duration;
+
+        let latency = Duration::from_micros(500);
+        let server = WorkerServer::bind_with(
+            "127.0.0.1:0",
+            ServeOptions {
+                reply_latency: latency,
+                fail_after_batches: None,
+            },
+        )
+        .unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let server_thread = std::thread::spawn(move || server.serve(4));
+
+        let nbatches = 32u64;
+        let batch_others: Vec<u32> = (1..65).collect();
+
+        let lockstep = RemoteWorker::connect(&addr, params, 42, 1).unwrap();
+        let mut out = Vec::new();
+        let s = bench(1, 3, || {
+            for _ in 0..nbatches {
+                out.clear();
+                lockstep.process(0, &batch_others, &mut out).unwrap();
+            }
+        });
+        row("remote_lockstep_lat500us", s.median / nbatches as f64);
+        lockstep.shutdown();
+
+        for w in [1usize, 4, 16] {
+            let mut p = PipelinedRemote::connect(&addr, params, 42, 1, w).unwrap();
+            let mut token = 0u64;
+            let mut comps = Vec::new();
+            let s = bench(1, 3, || {
+                let mut done = 0u64;
+                for _ in 0..nbatches {
+                    token += 1;
+                    p.submit(PendingBatch {
+                        token,
+                        vertex: 0,
+                        others: batch_others.clone(),
+                    })
+                    .unwrap();
+                    p.drain(&mut comps, false).unwrap();
+                    done += comps.len() as u64;
+                    comps.clear();
+                }
+                p.flush_submits().unwrap();
+                while done < nbatches {
+                    p.drain(&mut comps, true).unwrap();
+                    done += comps.len() as u64;
+                    comps.clear();
+                }
+            });
+            row(
+                &format!("remote_pipelined_w{w}_lat500us"),
+                s.median / nbatches as f64,
+            );
+            p.finish().unwrap();
+        }
+        let _ = server_thread.join();
+    }
 
     // adjacency-matrix bit flip (the §2.1 comparison)
     let mut m = AdjacencyMatrix::new(v);

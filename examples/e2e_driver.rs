@@ -20,6 +20,11 @@
 //! `--scenario query` runs only stage 0 (the tiered-query scenario) on a
 //! small graph — the CI-sized proof that all three query tiers answer
 //! correctly on a mixed insert/delete/query workload.
+//!
+//! `--scenario remote` runs only the pipelined remote-transport scenario:
+//! in-process worker servers with injected reply latency, a window of
+//! batches in flight, out-of-order delta completion, and a mid-stream
+//! worker crash absorbed by failover — checked against the exact referee.
 
 use landscape::baseline::Referee;
 use landscape::benchkit::{fmt_bytes, fmt_rate};
@@ -169,14 +174,113 @@ fn stage0_query_tiers() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The pipelined remote-worker scenario (CI-sized): two worker servers
+/// with 200µs injected reply latency, one of which crashes its
+/// connection mid-stream; the coordinator must pipeline (peak in-flight
+/// ≥ 2), fail over with every unacknowledged batch requeued, drop
+/// nothing, and still match the exact referee.
+fn stage_remote() -> anyhow::Result<()> {
+    use landscape::stream::dynamify::Dynamify;
+    use landscape::stream::erdos::ErdosRenyi;
+    use landscape::worker::remote::{ServeOptions, WorkerServer};
+    use std::time::Duration;
+
+    // p is chosen so per-vertex leaves clear the γ-flush threshold
+    // (3·E[deg] ≈ 307 ≥ γ·capacity ≈ 225 at V=1024) and batches really
+    // cross the wire
+    let v = 1u64 << 10;
+    let model = ErdosRenyi::new(v, 0.1, 8080);
+    let latency = Duration::from_micros(200);
+
+    let flaky = WorkerServer::bind_with(
+        "127.0.0.1:0",
+        ServeOptions {
+            reply_latency: latency,
+            fail_after_batches: Some(4),
+        },
+    )?;
+    let healthy = WorkerServer::bind_with(
+        "127.0.0.1:0",
+        ServeOptions {
+            reply_latency: latency,
+            fail_after_batches: None,
+        },
+    )?;
+    let addrs = vec![
+        flaky.local_addr()?.to_string(),
+        healthy.local_addr()?.to_string(),
+    ];
+    let flaky_thread = std::thread::spawn(move || flaky.serve(1));
+    let healthy_thread = std::thread::spawn(move || healthy.serve(2));
+
+    let mut cfg = CoordinatorConfig::for_vertices(v);
+    cfg.alpha = 1;
+    cfg.distributor_threads = 2;
+    cfg.use_greedycc = false;
+    cfg.remote_window = 8;
+    cfg.worker = WorkerKind::Remote { addrs };
+    let mut coord = Coordinator::new(cfg)?;
+
+    let mut referee = Referee::new(v);
+    let sw = Stopwatch::new();
+    let mut n = 0u64;
+    for u in Dynamify::new(model, 3) {
+        referee.apply(&u);
+        coord.ingest(u);
+        n += 1;
+    }
+    let forest = coord.full_connectivity_query();
+    let secs = sw.elapsed_secs();
+    let ok = Referee::same_partition(&forest.component, &referee.component_map());
+    let m = coord.metrics();
+    println!(
+        "[remote] {} updates in {:.2}s ({}) over pipelined TCP (window 8, \
+         200µs injected reply latency): {} batches, peak {} in flight, \
+         {} worker failure(s), {} requeued, {} dropped — {}",
+        n,
+        secs,
+        fmt_rate(n as f64 / secs),
+        m.batches_sent,
+        m.remote_in_flight_peak,
+        m.worker_failures,
+        m.batches_requeued,
+        m.batches_dropped,
+        if ok { "MATCH" } else { "MISMATCH" },
+    );
+    assert!(ok, "remote scenario: partition mismatch");
+    assert_eq!(m.batches_dropped, 0, "remote scenario dropped batches");
+    assert!(m.worker_failures >= 1, "injected crash not observed");
+    assert!(m.batches_requeued >= 1, "no batches requeued after the crash");
+    assert!(
+        m.remote_in_flight_peak >= 2,
+        "transport never pipelined (peak in-flight < 2)"
+    );
+    drop(coord); // closes the surviving connections so the servers exit
+    let _ = flaky_thread.join();
+    let _ = healthy_thread.join();
+    Ok(())
+}
+
+/// The value following `--scenario`, if any.
+fn scenario_arg() -> Option<String> {
+    let mut args = std::env::args();
+    while let Some(a) = args.next() {
+        if a == "--scenario" {
+            return args.next();
+        }
+    }
+    None
+}
+
 fn main() -> anyhow::Result<()> {
-    stage0_query_tiers()?;
-    if std::env::args().any(|a| a == "--scenario")
-        && std::env::args().any(|a| a == "query")
-    {
-        return Ok(());
+    match scenario_arg().as_deref() {
+        Some("query") => return stage0_query_tiers(),
+        Some("remote") => return stage_remote(),
+        Some(other) => anyhow::bail!("unknown scenario {other} (query|remote)"),
+        None => {}
     }
 
+    stage0_query_tiers()?;
     stage1_xla()?;
 
     // ---- stage 2: full run, native + remote TCP workers ----

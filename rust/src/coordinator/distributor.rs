@@ -1,0 +1,415 @@
+//! The Work Distributor loop (paper App. E), reworked for the pipelined
+//! transport: instead of one blocking round trip per batch, the loop
+//! **interleaves submission and completion** — it keeps popping work and
+//! submitting it while the backend holds a window of batches in flight,
+//! and XOR-merges completions whenever they surface, in whatever order
+//! the worker answered them (merging commutes, so order is free).
+//!
+//! Failure handling: when a remote connection dies, the distributor
+//! recovers every unacknowledged batch from the dead backend, reconnects
+//! to the next surviving worker address, and resubmits them
+//! (`batches_requeued`).  Only when *no* worker survives does it fall
+//! back to PR 2's fail-fast path: close the shard queue so producers
+//! take their metered drop path, and account every lost batch in
+//! `batches_dropped`.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::connectivity::kconn::KConnectivity;
+use crate::hypertree::VertexBatch;
+use crate::metrics::Metrics;
+use crate::sketch::params::{encode_edge, SketchParams};
+use crate::worker::remote::PipelinedRemote;
+use crate::worker::{Completion, InlineSubmit, PendingBatch, SubmitBackend};
+
+use super::work_queue::{FlushBarrier, ShardedWorkQueue};
+use super::{build_inline_backend, WorkItem, WorkerKind};
+
+/// Everything a distributor thread needs, bundled so the spawn site
+/// stays readable.
+pub(crate) struct Distributor {
+    pub shard: usize,
+    pub kind: WorkerKind,
+    pub params: SketchParams,
+    pub graph_seed: u64,
+    pub k: u32,
+    /// In-flight window per remote connection (inline kinds ignore it).
+    pub window: usize,
+    pub queue: Arc<ShardedWorkQueue<WorkItem>>,
+    pub kconn: Arc<KConnectivity>,
+    pub metrics: Arc<Metrics>,
+    pub barrier: Arc<FlushBarrier>,
+}
+
+impl Distributor {
+    /// The thread body.
+    pub fn run(self) {
+        // remote worker addresses this distributor has given up on
+        let mut failed: HashSet<usize> = HashSet::new();
+        let mut current_slot = 0usize;
+        let mut backend = match self.build_backend(&mut failed, &mut current_slot) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("distributor {}: backend init failed: {e:#}", self.shard);
+                self.abandon_shard();
+                return;
+            }
+        };
+        let is_remote = matches!(self.kind, WorkerKind::Remote { .. });
+        let mut next_token = 1u64;
+        let mut scratch: Vec<Completion> = Vec::new();
+        // bytes of this backend's wire writes already folded into
+        // `batch_bytes_sent` (remote batches are metered byte-exactly
+        // from the framing layer, not from the nominal accounting)
+        let mut wire_metered = 0u64;
+        self.reconcile_wire_bytes(&*backend, &mut wire_metered);
+
+        loop {
+            // 1. merge whatever has completed so far — possibly out of
+            //    submission order; XOR-merging commutes
+            if !self.drain_and_merge(&mut *backend, &mut scratch, false)
+                && !self.failover(&mut backend, &mut failed, &mut current_slot, &mut wire_metered)
+            {
+                return;
+            }
+            self.reconcile_wire_bytes(&*backend, &mut wire_metered);
+
+            // 2. next work item: block on the queue only when nothing is
+            //    in flight, so completions never rot behind a quiet queue
+            let item = if backend.in_flight() == 0 {
+                match self.queue.pop(self.shard) {
+                    Some(item) => item,
+                    None => break, // closed and drained
+                }
+            } else {
+                match self.queue.try_pop(self.shard) {
+                    Some(item) => item,
+                    None => {
+                        // queue momentarily empty: push buffered frames
+                        // onto the wire and wait briefly on the reader
+                        if !self.drain_and_merge(&mut *backend, &mut scratch, true)
+                            && !self.failover(
+                                &mut backend,
+                                &mut failed,
+                                &mut current_slot,
+                                &mut wire_metered,
+                            )
+                        {
+                            return;
+                        }
+                        continue;
+                    }
+                }
+            };
+
+            match item {
+                WorkItem::Local(batch) => self.apply_local(&batch),
+                WorkItem::Distribute(batch) => {
+                    let token = next_token;
+                    next_token += 1;
+                    let pending = PendingBatch {
+                        token,
+                        vertex: batch.vertex,
+                        others: batch.others,
+                    };
+                    match backend.submit(pending) {
+                        Ok(()) => {
+                            if is_remote {
+                                // occupancy, not in_flight(): completions
+                                // awaiting drain are no longer on the wire
+                                Metrics::raise(
+                                    &self.metrics.remote_in_flight_peak,
+                                    backend.wire_occupancy() as u64,
+                                );
+                            }
+                        }
+                        Err(e) => {
+                            if backend.dead() {
+                                if !self.failover(
+                                    &mut backend,
+                                    &mut failed,
+                                    &mut current_slot,
+                                    &mut wire_metered,
+                                ) {
+                                    return;
+                                }
+                            } else {
+                                // per-batch computation error: the
+                                // backend survives, the batch does not
+                                Metrics::add(&self.metrics.batches_dropped, 1);
+                                self.barrier.complete();
+                                eprintln!("worker error (batch dropped): {e:#}");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // queue closed and drained: let the wire drain, then hand the
+        // connection down cleanly (SHUTDOWN → BYE)
+        while backend.in_flight() > 0 {
+            if !self.drain_and_merge(&mut *backend, &mut scratch, true)
+                && !self.failover(&mut backend, &mut failed, &mut current_slot, &mut wire_metered)
+            {
+                return;
+            }
+            self.reconcile_wire_bytes(&*backend, &mut wire_metered);
+        }
+        if let Err(e) = backend.finish() {
+            eprintln!("distributor {}: close handshake failed: {e:#}", self.shard);
+        }
+        self.reconcile_wire_bytes(&*backend, &mut wire_metered);
+    }
+
+    /// Fold this backend's freshly written wire bytes (exact, framing
+    /// layer) into `batch_bytes_sent`.  In-process backends report 0 and
+    /// keep the nominal accounting from `QueueSink`.
+    fn reconcile_wire_bytes(&self, backend: &dyn SubmitBackend, metered: &mut u64) {
+        let wire = backend.wire_bytes_sent();
+        if wire > *metered {
+            Metrics::add(&self.metrics.batch_bytes_sent, wire - *metered);
+            *metered = wire;
+        }
+    }
+
+    /// Drain available completions and merge them.  Returns false when
+    /// the backend is dead (caller must fail over).
+    fn drain_and_merge(
+        &self,
+        backend: &mut dyn SubmitBackend,
+        scratch: &mut Vec<Completion>,
+        block: bool,
+    ) -> bool {
+        let alive = backend.drain(scratch, block).is_ok();
+        for c in scratch.drain(..) {
+            self.merge(c);
+        }
+        alive
+    }
+
+    /// XOR-merge one completed delta into this distributor's shard.
+    fn merge(&self, c: Completion) {
+        let words = self.params.words();
+        let k = self.k as usize;
+        if c.delta.len() != words * k {
+            // a protocol-corrupt delta (version-skewed worker) must not
+            // panic the distributor — that would strand the barrier.
+            // Treat it as a metered lost batch instead.
+            eprintln!(
+                "distributor {}: delta for vertex {} has {} words, want {} — dropped",
+                self.shard,
+                c.vertex,
+                c.delta.len(),
+                words * k
+            );
+            Metrics::add(&self.metrics.batches_dropped, 1);
+            self.barrier.complete();
+            return;
+        }
+        for copy in 0..k {
+            self.kconn.stores()[copy]
+                .merge_delta_exclusive(c.vertex, &c.delta[copy * words..(copy + 1) * words]);
+        }
+        Metrics::add(&self.metrics.deltas_merged, 1);
+        if c.wire_bytes > 0 {
+            // real network traffic, metered byte-exactly at the framing
+            // layer (inline backends report 0 — Theorem 5.2 counts only
+            // bytes that crossed a wire)
+            Metrics::add(&self.metrics.delta_bytes_received, c.wire_bytes);
+        }
+        self.barrier.complete();
+    }
+
+    /// §5.3's hybrid policy: underfull leaves apply per-update on the
+    /// shard owner, no delta overhead.
+    fn apply_local(&self, batch: &VertexBatch) {
+        let v = self.params.v;
+        for &other in &batch.others {
+            let idx = encode_edge(batch.vertex, other, v);
+            for store in self.kconn.stores() {
+                store.apply_local(batch.vertex, idx);
+            }
+        }
+        Metrics::add(&self.metrics.updates_local, batch.others.len() as u64);
+        self.barrier.complete();
+    }
+
+    fn build_backend(
+        &self,
+        failed: &mut HashSet<usize>,
+        current_slot: &mut usize,
+    ) -> Result<Box<dyn SubmitBackend>> {
+        match &self.kind {
+            WorkerKind::Remote { addrs } => {
+                let (slot, conn) = self.connect_remote(addrs, failed)?;
+                *current_slot = slot;
+                Ok(Box::new(conn))
+            }
+            inline => Ok(Box::new(InlineSubmit::new(build_inline_backend(
+                inline,
+                self.params,
+                self.graph_seed,
+                self.k,
+            )?))),
+        }
+    }
+
+    /// Try every not-yet-failed address once, starting at this
+    /// distributor's slot so distributors spread across workers.
+    fn connect_remote(
+        &self,
+        addrs: &[String],
+        failed: &mut HashSet<usize>,
+    ) -> Result<(usize, PipelinedRemote)> {
+        if addrs.is_empty() {
+            bail!("no remote worker addresses");
+        }
+        for i in 0..addrs.len() {
+            let slot = (self.shard + i) % addrs.len();
+            if failed.contains(&slot) {
+                continue;
+            }
+            match PipelinedRemote::connect(
+                &addrs[slot],
+                self.params,
+                self.graph_seed,
+                self.k,
+                self.window,
+            ) {
+                Ok(conn) => return Ok((slot, conn)),
+                Err(e) => {
+                    eprintln!(
+                        "distributor {}: connect {} failed: {e:#}",
+                        self.shard, addrs[slot]
+                    );
+                    failed.insert(slot);
+                }
+            }
+        }
+        bail!("no surviving remote workers");
+    }
+
+    /// The connection died: salvage completions that already arrived,
+    /// requeue every unacknowledged batch onto a surviving worker, and
+    /// only if none survives abandon the shard fail-fast.  Returns true
+    /// when `backend` has been replaced and work can continue.
+    // the &mut Box is deliberate: on success the box itself is replaced
+    #[allow(clippy::borrowed_box)]
+    fn failover(
+        &self,
+        backend: &mut Box<dyn SubmitBackend>,
+        failed: &mut HashSet<usize>,
+        current_slot: &mut usize,
+        wire_metered: &mut u64,
+    ) -> bool {
+        Metrics::add(&self.metrics.worker_failures, 1);
+        failed.insert(*current_slot);
+        // everything the dead backend managed to put on the wire is
+        // real, metered traffic
+        self.reconcile_wire_bytes(&**backend, wire_metered);
+        // take the unacknowledged set FIRST: once a seq is out of the
+        // pending map, a delta racing in behind it cannot complete it a
+        // second time (the reader drops unknown seqs), so a batch is
+        // either requeued or merged — never both, never neither.  Then
+        // salvage the completions that did arrive before the death.
+        let mut unacked = backend.take_unacked();
+        let mut scratch = Vec::new();
+        let _ = backend.drain(&mut scratch, false);
+        for c in scratch.drain(..) {
+            self.merge(c);
+        }
+        eprintln!(
+            "distributor {}: worker connection died with {} unacknowledged batches",
+            self.shard,
+            unacked.len()
+        );
+        let WorkerKind::Remote { addrs } = &self.kind else {
+            // inline backends never report dead(); defensive
+            self.drop_batches(unacked.len());
+            self.abandon_shard();
+            return false;
+        };
+        loop {
+            let (slot, mut conn) = match self.connect_remote(addrs, failed) {
+                Ok(sc) => sc,
+                Err(_) => break,
+            };
+            let n = unacked.len() as u64;
+            let mut replacement_died = false;
+            // remove() one at a time (NOT drain: breaking out of a
+            // Drain drops the un-iterated tail) so a mid-requeue death
+            // leaves the unattempted batches still owned here
+            while !unacked.is_empty() {
+                let b = unacked.remove(0);
+                if conn.submit(b).is_err() {
+                    replacement_died = true;
+                    break;
+                }
+            }
+            if replacement_died {
+                // the replacement's death is a worker failure too
+                Metrics::add(&self.metrics.worker_failures, 1);
+                failed.insert(slot);
+                // same two-step recovery as above — the failed/pending
+                // batches come back from the replacement, the
+                // unattempted tail is still in `unacked` — then merge
+                // whatever the short-lived replacement did answer
+                let mut recovered = conn.take_unacked();
+                recovered.append(&mut unacked);
+                recovered.sort_by_key(|b| b.token);
+                unacked = recovered;
+                let _ = conn.drain(&mut scratch, false);
+                for c in scratch.drain(..) {
+                    self.merge(c);
+                }
+                self.reconcile_wire_bytes(&conn, &mut 0);
+                continue;
+            }
+            if n > 0 {
+                Metrics::add(&self.metrics.batches_requeued, n);
+                eprintln!(
+                    "distributor {}: requeued {n} batches to {}",
+                    self.shard, addrs[slot]
+                );
+            }
+            *current_slot = slot;
+            // restart wire accounting for the fresh connection (meter
+            // its HELLO + anything the resubmits already flushed)
+            *wire_metered = 0;
+            self.reconcile_wire_bytes(&conn, wire_metered);
+            *backend = Box::new(conn);
+            return true;
+        }
+        // no worker survived: everything unacknowledged is lost work
+        self.drop_batches(unacked.len());
+        self.abandon_shard();
+        false
+    }
+
+    fn drop_batches(&self, n: usize) {
+        if n == 0 {
+            return;
+        }
+        Metrics::add(&self.metrics.batches_dropped, n as u64);
+        for _ in 0..n {
+            self.barrier.complete();
+        }
+    }
+
+    /// Fail-fast shard teardown (PR 2): close the shard queue first so
+    /// later pushes fail immediately and take QueueSink's metered drop
+    /// path instead of wedging the flush barrier, then drain and meter
+    /// what already got in — all of it is lost work.
+    fn abandon_shard(&self) {
+        self.queue.close_shard(self.shard);
+        while let Some(item) = self.queue.pop(self.shard) {
+            drop(item);
+            Metrics::add(&self.metrics.batches_dropped, 1);
+            self.barrier.complete();
+        }
+    }
+}

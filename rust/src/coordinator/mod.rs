@@ -17,6 +17,7 @@
 //!                                            (distributor s only)
 //! ```
 
+mod distributor;
 pub mod query;
 pub mod work_queue;
 
@@ -32,7 +33,7 @@ use crate::connectivity::SpanningForest;
 use crate::hypertree::{BatchSink, Hypertree, HypertreeConfig, VertexBatch};
 use crate::gutter::GutterBuffer;
 use crate::metrics::{Metrics, MetricsSnapshot};
-use crate::sketch::params::{encode_edge, SketchParams};
+use crate::sketch::params::SketchParams;
 use crate::sketch::shard::ShardSpec;
 use crate::stream::update::{Update, UPDATE_WIRE_BYTES};
 use crate::stream::GraphStream;
@@ -42,13 +43,14 @@ use crate::worker::{CubeWorker, NativeWorker, WorkerBackend, WorkerSeeds};
 pub use query::{QueryEngine, QueryTier};
 use work_queue::{FlushBarrier, ShardedWorkQueue};
 
-/// Build a worker backend inside a distributor thread.
-fn build_backend(
+/// Build an in-process worker backend inside a distributor thread.
+/// `WorkerKind::Remote` never comes through here — the distributor
+/// builds a pipelined connection (with failover) for it instead.
+fn build_inline_backend(
     kind: &WorkerKind,
     params: SketchParams,
     graph_seed: u64,
     k: u32,
-    slot: usize,
 ) -> Result<Box<dyn WorkerBackend>> {
     let seeds = WorkerSeeds::derive(params, graph_seed, k);
     Ok(match kind {
@@ -56,14 +58,8 @@ fn build_backend(
         WorkerKind::Cube => Box::new(CubeWorker::new(seeds)),
         #[cfg(feature = "xla")]
         WorkerKind::Xla { artifact_dir } => Box::new(XlaWorker::load(artifact_dir, seeds)?),
-        WorkerKind::Remote { addrs } => {
-            if addrs.is_empty() {
-                return Err(anyhow!("no remote worker addresses"));
-            }
-            let addr = &addrs[slot % addrs.len()];
-            Box::new(crate::worker::remote::RemoteWorker::connect(
-                addr, params, graph_seed, k,
-            )?)
+        WorkerKind::Remote { .. } => {
+            return Err(anyhow!("remote workers use the pipelined backend"))
         }
     })
 }
@@ -112,6 +108,11 @@ pub struct CoordinatorConfig {
     /// `distributor_threads × queue_capacity`.
     pub queue_capacity: usize,
     pub worker: WorkerKind,
+    /// In-flight window per remote-worker connection: how many batches a
+    /// distributor keeps on the wire before submission backpressures
+    /// (1 ≈ lockstep; the paper's latency-hiding regime wants ≥ 8).
+    /// In-process backends complete inline and ignore this.
+    pub remote_window: usize,
     pub buffer: BufferKind,
     pub use_greedycc: bool,
 }
@@ -128,6 +129,7 @@ impl CoordinatorConfig {
             distributor_threads: 2,
             queue_capacity: 64,
             worker: WorkerKind::Native,
+            remote_window: 8,
             buffer: BufferKind::Hypertree,
             use_greedycc: true,
         }
@@ -159,7 +161,7 @@ enum Buffer {
 }
 
 /// One unit of shard-affine work for a distributor thread.
-enum WorkItem {
+pub(crate) enum WorkItem {
     /// A γ-full batch: worker backend → sketch delta → exclusive merge.
     Distribute(VertexBatch),
     /// An underfull leaf at flush time: per-update local application on
@@ -177,6 +179,11 @@ struct QueueSink {
     spec: ShardSpec,
     metrics: Arc<Metrics>,
     barrier: Arc<FlushBarrier>,
+    /// Meter `batch_bytes_sent` here with the nominal 8+4n accounting.
+    /// True for in-process workers (nothing crosses a wire, the nominal
+    /// figure *is* the model); false for remote workers, where the
+    /// distributor meters the real framing-layer bytes instead.
+    meter_batch_bytes: bool,
 }
 
 impl QueueSink {
@@ -208,7 +215,9 @@ impl BatchSink for QueueSink {
     fn full_batch(&self, shard: usize, batch: VertexBatch) {
         debug_assert_eq!(shard, self.spec.shard_of(batch.vertex));
         Metrics::add(&self.metrics.batches_sent, 1);
-        Metrics::add(&self.metrics.batch_bytes_sent, batch.wire_bytes());
+        if self.meter_batch_bytes {
+            Metrics::add(&self.metrics.batch_bytes_sent, batch.wire_bytes());
+        }
         self.enqueue(shard, WorkItem::Distribute(batch));
     }
 
@@ -285,6 +294,7 @@ impl Coordinator {
             spec,
             metrics: metrics.clone(),
             barrier: barrier.clone(),
+            meter_batch_bytes: !matches!(config.worker, WorkerKind::Remote { .. }),
         });
 
         let mut coord = Self {
@@ -308,88 +318,27 @@ impl Coordinator {
     }
 
     fn spawn_distributors(&mut self) -> Result<()> {
-        let words = self.params.words();
         // one distributor per shard: thread `shard` is the only writer
         // of sketch shard `shard` during ingestion, so its merges use
-        // the lock-free exclusive path
+        // the lock-free exclusive path.  The loop itself (interleaved
+        // submit/drain, out-of-order merge, remote failover) lives in
+        // `distributor::Distributor::run`.
         for shard in 0..self.config.shard_spec().count() {
-            // backend construction data (Send) — the backend itself is
-            // built inside the thread (PJRT handles are thread-bound)
-            let kind = self.config.worker.clone();
-            // deltas only cross the network for remote workers; in-process
-            // backends must not inflate the Theorem 5.2 accounting
-            let meter_delta_bytes = matches!(kind, WorkerKind::Remote { .. });
-            let params = self.params;
-            let graph_seed = self.config.graph_seed;
-            let kk = self.config.k;
-            let queue = self.queue.clone();
-            let kconn = self.kconn.clone();
-            let metrics = self.metrics.clone();
-            let barrier = self.barrier.clone();
-            let k = self.config.k as usize;
-            self.distributors.push(std::thread::spawn(move || {
-                let backend = match build_backend(&kind, params, graph_seed, kk, shard) {
-                    Ok(b) => b,
-                    Err(e) => {
-                        eprintln!("distributor {shard}: backend init failed: {e:#}");
-                        // close this shard first so later pushes fail
-                        // fast and take QueueSink's metered drop path
-                        // (instead of filling a queue nobody pops and
-                        // wedging the flush barrier), then drain what
-                        // already got in — all of it is lost work
-                        queue.close_shard(shard);
-                        while queue.pop(shard).is_some() {
-                            Metrics::add(&metrics.batches_dropped, 1);
-                            barrier.complete();
-                        }
-                        return;
-                    }
-                };
-                let mut out: Vec<u64> = Vec::with_capacity(words * k);
-                while let Some(item) = queue.pop(shard) {
-                    match item {
-                        WorkItem::Distribute(batch) => {
-                            out.clear();
-                            match backend.process(batch.vertex, &batch.others, &mut out) {
-                                Ok(()) => {
-                                    debug_assert_eq!(out.len(), words * k);
-                                    for copy in 0..k {
-                                        kconn.stores()[copy].merge_delta_exclusive(
-                                            batch.vertex,
-                                            &out[copy * words..(copy + 1) * words],
-                                        );
-                                    }
-                                    Metrics::add(&metrics.deltas_merged, 1);
-                                    if meter_delta_bytes {
-                                        Metrics::add(
-                                            &metrics.delta_bytes_received,
-                                            16 + out.len() as u64 * 8,
-                                        );
-                                    }
-                                }
-                                Err(e) => {
-                                    // the batch's updates never reach a
-                                    // sketch: that is lost work, and the
-                                    // query-barrier assertions must see it
-                                    Metrics::add(&metrics.batches_dropped, 1);
-                                    eprintln!("worker error (batch dropped): {e:#}");
-                                }
-                            }
-                        }
-                        WorkItem::Local(batch) => {
-                            let v = params.v;
-                            for &other in &batch.others {
-                                let idx = encode_edge(batch.vertex, other, v);
-                                for store in kconn.stores() {
-                                    store.apply_local(batch.vertex, idx);
-                                }
-                            }
-                            Metrics::add(&metrics.updates_local, batch.others.len() as u64);
-                        }
-                    }
-                    barrier.complete();
-                }
-            }));
+            // construction data is Send — the backend itself is built
+            // inside the thread (PJRT handles are thread-bound)
+            let d = distributor::Distributor {
+                shard,
+                kind: self.config.worker.clone(),
+                params: self.params,
+                graph_seed: self.config.graph_seed,
+                k: self.config.k,
+                window: self.config.remote_window.max(1),
+                queue: self.queue.clone(),
+                kconn: self.kconn.clone(),
+                metrics: self.metrics.clone(),
+                barrier: self.barrier.clone(),
+            };
+            self.distributors.push(std::thread::spawn(move || d.run()));
         }
         Ok(())
     }
@@ -543,11 +492,9 @@ impl Drop for Coordinator {
         for h in self.distributors.drain(..) {
             let _ = h.join();
         }
-        // tell remote workers to shut down cleanly
-        if let WorkerKind::Remote { .. } = self.config.worker {
-            // connections are owned by the (now-joined) distributor
-            // threads; dropping them closed the sockets.
-        }
+        // remote connections are owned by the (now-joined) distributor
+        // threads, which ended them with the SHUTDOWN → BYE handshake
+        // (or tore them down on failover) before exiting.
     }
 }
 
@@ -813,6 +760,12 @@ mod tests {
             m.deltas_merged == 0 || m.delta_bytes_received > 0,
             "remote deltas must be metered as network traffic"
         );
+        assert!(
+            m.deltas_merged == 0 || m.remote_in_flight_peak >= 1,
+            "pipelined submissions must be visible in the in-flight gauge"
+        );
+        assert_eq!(m.worker_failures, 0);
+        assert_eq!(m.batches_requeued, 0);
         drop(coord); // closes connections so the server exits
         let _ = handle.join();
     }

@@ -143,6 +143,14 @@ impl<T> WorkQueue<T> {
 /// [`FlushBarrier::complete`] after fully processing it (or the producer
 /// calls it itself if the hand-off fails), so `pending() == 0` implies
 /// every registered item has been fully processed.
+///
+/// With the pipelined remote transport an item stays registered across
+/// its whole asynchronous lifetime: queued → submitted on the wire →
+/// completed out of order → XOR-merged.  `complete()` fires only at the
+/// merge (or at the metered drop if the batch is lost after failover
+/// exhausts every worker), so the barrier transparently counts remote
+/// in-flight batches and `wait_idle()` still means "every update has
+/// reached a sketch".
 #[derive(Debug, Default)]
 pub struct FlushBarrier {
     pending: AtomicU64,

@@ -40,6 +40,7 @@ commands:
   gen     --dataset NAME --out FILE        write a stream file
   ingest  --dataset NAME | --stream FILE   run the coordinator
           [--worker native|cube|xla|remote] [--addrs host:port,..]
+          [--window N: batches in flight per remote connection]
           [--k N] [--alpha N] [--gamma F] [--buffer hypertree|gutter]
           [--max-updates N] [--query] [--distributors N]
   worker  --listen ADDR [--connections N]  run a remote worker server
@@ -76,6 +77,7 @@ fn build_config(args: &Args, vertices: u64) -> Option<CoordinatorConfig> {
     cfg.alpha = args.get_u64("alpha", 1) as u32;
     cfg.gamma = args.get_f64("gamma", 0.04);
     cfg.distributor_threads = args.get_usize("distributors", 2);
+    cfg.remote_window = args.get_usize("window", 8);
     cfg.use_greedycc = !args.get_bool("no-greedycc");
     cfg.buffer = match args.get_str("buffer", "hypertree").as_str() {
         "hypertree" => BufferKind::Hypertree,

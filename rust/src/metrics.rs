@@ -11,7 +11,10 @@ pub struct Metrics {
     pub updates_ingested: AtomicU64,
     /// Bytes of raw stream received (data-acquisition cost: 9·N).
     pub stream_bytes: AtomicU64,
-    /// Bytes of vertex-based batches sent main → workers.
+    /// Bytes of vertex-based batches sent main → workers.  For remote
+    /// workers this is the exact framing-layer byte count (HELLO + batch
+    /// frames + SHUTDOWN, reconciled from each connection's writer); for
+    /// in-process workers it is the nominal 8+4n accounting.
     pub batch_bytes_sent: AtomicU64,
     /// Bytes of sketch deltas received workers → main.
     pub delta_bytes_received: AtomicU64,
@@ -37,6 +40,14 @@ pub struct Metrics {
     pub batches_dropped: AtomicU64,
     /// Hypertree node-to-node moves (cache-behaviour accounting).
     pub hypertree_moves: AtomicU64,
+    /// Peak number of batches simultaneously in flight on any one
+    /// remote-worker connection (1 = lockstep; > 1 proves pipelining).
+    pub remote_in_flight_peak: AtomicU64,
+    /// Batches resubmitted to a surviving worker after a connection
+    /// death (failover requeues; these never count as dropped).
+    pub batches_requeued: AtomicU64,
+    /// Remote-worker connection deaths observed by distributors.
+    pub worker_failures: AtomicU64,
 }
 
 /// A plain-value copy of [`Metrics`].
@@ -55,6 +66,9 @@ pub struct MetricsSnapshot {
     pub dirty_components: u64,
     pub batches_dropped: u64,
     pub hypertree_moves: u64,
+    pub remote_in_flight_peak: u64,
+    pub batches_requeued: u64,
+    pub worker_failures: u64,
 }
 
 impl Metrics {
@@ -65,6 +79,12 @@ impl Metrics {
     #[inline]
     pub fn add(counter: &AtomicU64, n: u64) {
         counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Raise `counter` to at least `n` (peak/high-watermark gauges).
+    #[inline]
+    pub fn raise(counter: &AtomicU64, n: u64) {
+        counter.fetch_max(n, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -82,6 +102,9 @@ impl Metrics {
             dirty_components: self.dirty_components.load(Ordering::Relaxed),
             batches_dropped: self.batches_dropped.load(Ordering::Relaxed),
             hypertree_moves: self.hypertree_moves.load(Ordering::Relaxed),
+            remote_in_flight_peak: self.remote_in_flight_peak.load(Ordering::Relaxed),
+            batches_requeued: self.batches_requeued.load(Ordering::Relaxed),
+            worker_failures: self.worker_failures.load(Ordering::Relaxed),
         }
     }
 }
@@ -118,6 +141,15 @@ mod tests {
         assert_eq!(s.updates_ingested, 10);
         assert_eq!(s.network_bytes(), 144);
         assert!((s.communication_factor() - 1.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn raise_is_a_high_watermark() {
+        let m = Metrics::new();
+        Metrics::raise(&m.remote_in_flight_peak, 4);
+        Metrics::raise(&m.remote_in_flight_peak, 2);
+        Metrics::raise(&m.remote_in_flight_peak, 9);
+        assert_eq!(m.snapshot().remote_in_flight_peak, 9);
     }
 
     #[test]

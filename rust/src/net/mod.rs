@@ -3,23 +3,54 @@
 //!
 //! The paper uses OpenMPI; this environment vendors no MPI (or tokio),
 //! so the transport is length-framed messages over TCP with blocking
-//! I/O — one coordinator connection per worker thread, which matches
-//! the paper's one-batch-in-flight-per-worker-CPU structure.  All sizes
-//! are metered at the framing layer so Theorem 5.2's communication
-//! bound is validated against real serialized bytes.
+//! I/O — one coordinator connection per worker thread.  All sizes are
+//! metered at the framing layer so Theorem 5.2's communication bound is
+//! validated against real serialized bytes.
+//!
+//! Protocol v1 (lockstep) runs one BATCH/DELTA exchange at a time.
+//! Protocol v2 adds sequence tags so a distributor can keep a window of
+//! batches in flight and consume deltas **out of order** (XOR merging
+//! commutes), a coalesced MULTIBATCH frame that amortizes per-frame
+//! headers across a burst, and an explicit ERROR/BYE close handshake so
+//! both sides can tell a clean drain from a dead peer.
 //!
 //! Frames (all little-endian):
 //!
 //! ```text
-//! HELLO    tag=0  u64 vertices, u32 columns, u64 graph_seed, u32 k
-//! BATCH    tag=1  u32 vertex, u32 count, count×u64 indices
-//! DELTA    tag=2  u32 vertex, u32 words, words×u64 delta
-//! SHUTDOWN tag=3
+//! HELLO      tag=0  u64 vertices, u32 columns, u64 graph_seed, u32 k
+//! BATCH      tag=1  u32 vertex, u32 count, count×u32 other-endpoints
+//! DELTA      tag=2  u32 vertex, u32 words, words×u64 delta
+//! SHUTDOWN   tag=3
+//! BATCH2     tag=4  u64 seq, u32 vertex, u32 count, count×u32 other-endpoints
+//! DELTA2     tag=5  u64 seq, u32 vertex, u32 words, words×u64 delta
+//! MULTIBATCH tag=6  u32 count, count×(u64 seq, u32 vertex, u32 n, n×u32)
+//! ERROR      tag=7  u32 code, u32 len, len×u8 utf-8 reason
+//! BYE        tag=8
 //! ```
+//!
+//! BATCH/BATCH2 payloads are the batch's **other endpoints** (`u32`
+//! each); the worker reconstructs the `u64` edge indices itself via
+//! `encode_edge(vertex, other)` — shipping endpoints instead of indices
+//! halves the batch leg's bytes and moves the encode cost to the worker.
 
 use std::io::{Read, Write};
 
 use anyhow::{anyhow, bail, Result};
+
+/// One sequence-tagged batch inside a MULTIBATCH frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SeqBatch {
+    pub seq: u64,
+    pub vertex: u32,
+    pub others: Vec<u32>,
+}
+
+impl SeqBatch {
+    /// Bytes this entry contributes to a MULTIBATCH payload.
+    pub fn entry_bytes(&self) -> u64 {
+        8 + 4 + 4 + self.others.len() as u64 * 4
+    }
+}
 
 /// Protocol messages.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -39,6 +70,31 @@ pub enum Message {
         delta: Vec<u64>,
     },
     Shutdown,
+    /// v2: a sequence-tagged batch (answered by a [`Message::Delta2`]
+    /// with the same `seq`, in any order).
+    Batch2 {
+        seq: u64,
+        vertex: u32,
+        others: Vec<u32>,
+    },
+    /// v2: the delta for the batch submitted under `seq`.
+    Delta2 {
+        seq: u64,
+        vertex: u32,
+        delta: Vec<u64>,
+    },
+    /// v2: a burst of sequence-tagged batches in one frame.
+    MultiBatch { batches: Vec<SeqBatch> },
+    /// v2: fatal protocol/backend error; the sender closes after this.
+    Error { code: u32, reason: String },
+    /// v2: clean-close acknowledgement — the worker has answered every
+    /// batch it read and is closing.
+    Bye,
+}
+
+/// Exact wire size of a DELTA2 frame carrying `words` u64 words.
+pub fn delta2_wire_bytes(words: usize) -> u64 {
+    1 + 8 + 4 + 4 + words as u64 * 8
 }
 
 impl Message {
@@ -49,6 +105,13 @@ impl Message {
             Message::Batch { others, .. } => 1 + 4 + 4 + others.len() as u64 * 4,
             Message::Delta { delta, .. } => 1 + 4 + 4 + delta.len() as u64 * 8,
             Message::Shutdown => 1,
+            Message::Batch2 { others, .. } => 1 + 8 + 4 + 4 + others.len() as u64 * 4,
+            Message::Delta2 { delta, .. } => delta2_wire_bytes(delta.len()),
+            Message::MultiBatch { batches } => {
+                1 + 4 + batches.iter().map(SeqBatch::entry_bytes).sum::<u64>()
+            }
+            Message::Error { reason, .. } => 1 + 4 + 4 + reason.len() as u64,
+            Message::Bye => 1,
         }
     }
 
@@ -70,21 +133,49 @@ impl Message {
             Message::Batch { vertex, others } => {
                 w.write_all(&[1u8])?;
                 w.write_all(&vertex.to_le_bytes())?;
-                w.write_all(&(others.len() as u32).to_le_bytes())?;
-                for x in others {
-                    w.write_all(&x.to_le_bytes())?;
-                }
+                write_u32s(w, others)?;
             }
             Message::Delta { vertex, delta } => {
                 w.write_all(&[2u8])?;
                 w.write_all(&vertex.to_le_bytes())?;
-                w.write_all(&(delta.len() as u32).to_le_bytes())?;
-                for x in delta {
-                    w.write_all(&x.to_le_bytes())?;
-                }
+                write_u64s(w, delta)?;
             }
             Message::Shutdown => {
                 w.write_all(&[3u8])?;
+            }
+            Message::Batch2 {
+                seq,
+                vertex,
+                others,
+            } => {
+                w.write_all(&[4u8])?;
+                w.write_all(&seq.to_le_bytes())?;
+                w.write_all(&vertex.to_le_bytes())?;
+                write_u32s(w, others)?;
+            }
+            Message::Delta2 { seq, vertex, delta } => {
+                w.write_all(&[5u8])?;
+                w.write_all(&seq.to_le_bytes())?;
+                w.write_all(&vertex.to_le_bytes())?;
+                write_u64s(w, delta)?;
+            }
+            Message::MultiBatch { batches } => {
+                w.write_all(&[6u8])?;
+                w.write_all(&(batches.len() as u32).to_le_bytes())?;
+                for b in batches {
+                    w.write_all(&b.seq.to_le_bytes())?;
+                    w.write_all(&b.vertex.to_le_bytes())?;
+                    write_u32s(w, &b.others)?;
+                }
+            }
+            Message::Error { code, reason } => {
+                w.write_all(&[7u8])?;
+                w.write_all(&code.to_le_bytes())?;
+                w.write_all(&(reason.len() as u32).to_le_bytes())?;
+                w.write_all(reason.as_bytes())?;
+            }
+            Message::Bye => {
+                w.write_all(&[8u8])?;
             }
         }
         w.flush()?;
@@ -110,10 +201,7 @@ impl Message {
             }
             1 => {
                 let vertex = read_u32(r)?;
-                let count = read_u32(r)? as usize;
-                if count > (1 << 28) {
-                    bail!("batch too large: {count}");
-                }
+                let count = read_count(r, "batch")?;
                 Ok(Message::Batch {
                     vertex,
                     others: read_u32s(r, count)?,
@@ -121,19 +209,70 @@ impl Message {
             }
             2 => {
                 let vertex = read_u32(r)?;
-                let words = read_u32(r)? as usize;
-                if words > (1 << 28) {
-                    bail!("delta too large: {words}");
-                }
+                let words = read_count(r, "delta")?;
                 Ok(Message::Delta {
                     vertex,
                     delta: read_u64s(r, words)?,
                 })
             }
             3 => Ok(Message::Shutdown),
+            4 => {
+                let seq = read_u64(r)?;
+                let vertex = read_u32(r)?;
+                let count = read_count(r, "batch2")?;
+                Ok(Message::Batch2 {
+                    seq,
+                    vertex,
+                    others: read_u32s(r, count)?,
+                })
+            }
+            5 => {
+                let seq = read_u64(r)?;
+                let vertex = read_u32(r)?;
+                let words = read_count(r, "delta2")?;
+                Ok(Message::Delta2 {
+                    seq,
+                    vertex,
+                    delta: read_u64s(r, words)?,
+                })
+            }
+            6 => {
+                let count = read_count(r, "multibatch")?;
+                let mut batches = Vec::with_capacity(count.min(1 << 16));
+                for _ in 0..count {
+                    let seq = read_u64(r)?;
+                    let vertex = read_u32(r)?;
+                    let n = read_count(r, "multibatch entry")?;
+                    batches.push(SeqBatch {
+                        seq,
+                        vertex,
+                        others: read_u32s(r, n)?,
+                    });
+                }
+                Ok(Message::MultiBatch { batches })
+            }
+            7 => {
+                let code = read_u32(r)?;
+                let len = read_count(r, "error reason")?;
+                let mut bytes = vec![0u8; len];
+                r.read_exact(&mut bytes)?;
+                Ok(Message::Error {
+                    code,
+                    reason: String::from_utf8_lossy(&bytes).into_owned(),
+                })
+            }
+            8 => Ok(Message::Bye),
             t => Err(anyhow!("unknown frame tag {t}")),
         }
     }
+}
+
+fn read_count<R: Read>(r: &mut R, what: &str) -> Result<usize> {
+    let n = read_u32(r)? as usize;
+    if n > (1 << 28) {
+        bail!("{what} too large: {n}");
+    }
+    Ok(n)
 }
 
 fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
@@ -146,6 +285,22 @@ fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
     let mut b = [0u8; 8];
     r.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
+}
+
+fn write_u32s<W: Write>(w: &mut W, xs: &[u32]) -> Result<()> {
+    w.write_all(&(xs.len() as u32).to_le_bytes())?;
+    for x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn write_u64s<W: Write>(w: &mut W, xs: &[u64]) -> Result<()> {
+    w.write_all(&(xs.len() as u32).to_le_bytes())?;
+    for x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
 }
 
 fn read_u32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<u32>> {
@@ -198,6 +353,96 @@ mod tests {
     }
 
     #[test]
+    fn v2_frames_roundtrip() {
+        roundtrip(Message::Batch2 {
+            seq: u64::MAX - 1,
+            vertex: 7,
+            others: vec![3, 4, 5],
+        });
+        roundtrip(Message::Delta2 {
+            seq: 42,
+            vertex: 7,
+            delta: vec![9, 0, u64::MAX],
+        });
+        roundtrip(Message::MultiBatch {
+            batches: vec![
+                SeqBatch {
+                    seq: 1,
+                    vertex: 0,
+                    others: vec![1],
+                },
+                SeqBatch {
+                    seq: 2,
+                    vertex: 5,
+                    others: vec![],
+                },
+                SeqBatch {
+                    seq: 3,
+                    vertex: 9,
+                    others: vec![2, 4, 6, 8],
+                },
+            ],
+        });
+        roundtrip(Message::Error {
+            code: 2,
+            reason: "bad frame".into(),
+        });
+        roundtrip(Message::Bye);
+    }
+
+    #[test]
+    fn delta2_wire_bytes_helper_is_exact() {
+        for words in [0usize, 1, 17] {
+            let msg = Message::Delta2 {
+                seq: 5,
+                vertex: 1,
+                delta: vec![0u64; words],
+            };
+            assert_eq!(msg.wire_bytes(), delta2_wire_bytes(words));
+        }
+    }
+
+    #[test]
+    fn multibatch_amortizes_headers_for_bursts() {
+        // one MULTIBATCH of m entries = 5 + Σ(16 + 4·len) bytes vs
+        // m × (17 + 4·len) for separate BATCH2 frames: each entry saves
+        // the 1-byte tag against a 5-byte frame header, so coalescing
+        // wins on bytes for bursts of more than 5 (and always wins on
+        // write/flush syscalls)
+        let make = |m: u64| -> Vec<SeqBatch> {
+            (0..m)
+                .map(|i| SeqBatch {
+                    seq: i,
+                    vertex: i as u32,
+                    others: vec![1, 2],
+                })
+                .collect()
+        };
+        let singles = |batches: &[SeqBatch]| -> u64 {
+            batches
+                .iter()
+                .map(|b| {
+                    Message::Batch2 {
+                        seq: b.seq,
+                        vertex: b.vertex,
+                        others: b.others.clone(),
+                    }
+                    .wire_bytes()
+                })
+                .sum()
+        };
+        let two = Message::MultiBatch { batches: make(2) };
+        assert_eq!(two.wire_bytes(), 5 + 2 * (16 + 8));
+        assert_eq!(singles(&make(2)), 2 * (17 + 8));
+        let eight = Message::MultiBatch { batches: make(8) };
+        assert_eq!(eight.wire_bytes(), 5 + 8 * (16 + 8));
+        assert!(
+            eight.wire_bytes() < singles(&make(8)),
+            "coalescing must save bytes for a window-sized burst"
+        );
+    }
+
+    #[test]
     fn unknown_tag_rejected() {
         let buf = [42u8];
         assert!(Message::read_from(&mut buf.as_slice()).is_err());
@@ -206,7 +451,8 @@ mod tests {
     #[test]
     fn truncated_frame_rejected() {
         let mut buf = Vec::new();
-        Message::Batch {
+        Message::Batch2 {
+            seq: 1,
             vertex: 1,
             others: vec![1, 2, 3],
         }

@@ -10,8 +10,16 @@
 //!   three-layer composition path; bit-identical to native; needs the
 //!   non-default `xla` cargo feature).
 //! * [`CubeWorker`] — CubeSketch updates (Fig. 4 / Fig. 16 ablation).
-//! * [`RemoteWorker`] — a TCP client speaking the `net` protocol to a
-//!   `landscape worker` server process.
+//! * [`RemoteWorker`] — a TCP client speaking the lockstep v1 `net`
+//!   protocol to a `landscape worker` server process.
+//!
+//! On top of the synchronous [`WorkerBackend::process`], the
+//! [`SubmitBackend`] trait exposes a **submit/drain completion API**:
+//! a distributor submits sequence-tagged batches without waiting and
+//! later drains [`Completion`]s, possibly out of submission order.
+//! In-process backends complete inline ([`InlineSubmit`]); the remote
+//! backend ([`remote::PipelinedRemote`]) keeps a window of batches in
+//! flight on the wire and completes as DELTA2 frames arrive.
 
 pub mod remote;
 
@@ -37,6 +45,138 @@ pub trait WorkerBackend {
     fn process(&self, vertex: u32, others: &[u32], out: &mut Vec<u64>) -> Result<()>;
     /// Human-readable backend name (for logs / bench output).
     fn name(&self) -> &'static str;
+}
+
+/// A batch handed to a [`SubmitBackend`], tagged with the distributor's
+/// completion token (which doubles as the wire sequence number).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PendingBatch {
+    pub token: u64,
+    pub vertex: u32,
+    pub others: Vec<u32>,
+}
+
+/// A finished batch: the k concatenated sketch deltas for the batch
+/// submitted under `token`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Completion {
+    pub token: u64,
+    pub vertex: u32,
+    pub delta: Vec<u64>,
+    /// Exact bytes of the DELTA frame this completion arrived in
+    /// (0 for in-process backends — no network traffic to meter).
+    pub wire_bytes: u64,
+}
+
+/// The pipelined counterpart of [`WorkerBackend`]: batches are
+/// *submitted* (possibly buffered/coalesced, possibly blocking for
+/// window backpressure) and *drained* as out-of-order [`Completion`]s.
+///
+/// Error contract: a failed `submit`/`drain` with [`SubmitBackend::dead`]
+/// returning `true` means the backend is permanently gone (e.g. the TCP
+/// connection died) and every batch it still holds is recoverable via
+/// [`SubmitBackend::take_unacked`] for requeueing elsewhere.  A failed
+/// `submit` with `dead() == false` is a per-batch computation error: the
+/// batch is lost, the backend stays usable.
+pub trait SubmitBackend {
+    /// Queue one batch.  May block while the in-flight window is full
+    /// (backpressure).  On `Err` with `dead()`, the batch is retained in
+    /// the unacknowledged set.
+    fn submit(&mut self, batch: PendingBatch) -> Result<()>;
+
+    /// Push any buffered submissions onto the wire (MULTIBATCH
+    /// coalescing).  No-op for inline backends.
+    fn flush_submits(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Move available completions into `out`.  With `block`, waits
+    /// briefly for at least one completion when some are in flight.
+    /// `Err` only when the backend is dead *and* nothing is drainable.
+    fn drain(&mut self, out: &mut Vec<Completion>, block: bool) -> Result<()>;
+
+    /// Batches submitted but not yet drained as completions.
+    fn in_flight(&self) -> usize;
+
+    /// Batches actually occupying the transmission window (buffered or
+    /// on the wire, excluding completions awaiting drain) — the gauge
+    /// behind `remote_in_flight_peak`.
+    fn wire_occupancy(&self) -> usize {
+        self.in_flight()
+    }
+
+    /// Total bytes this backend has actually written to the wire
+    /// (HELLO + batch frames + SHUTDOWN), byte-exact at the framing
+    /// layer.  0 for in-process backends, which send nothing — the
+    /// coordinator uses the difference between successive readings to
+    /// meter the remote batch leg against real serialized bytes.
+    fn wire_bytes_sent(&self) -> u64 {
+        0
+    }
+
+    /// Whether the backend has permanently failed.
+    fn dead(&self) -> bool {
+        false
+    }
+
+    /// On a dead backend: every submitted-but-unacknowledged batch, in
+    /// token order, ready for resubmission to a surviving backend.
+    fn take_unacked(&mut self) -> Vec<PendingBatch> {
+        Vec::new()
+    }
+
+    /// Graceful close once everything has drained (SHUTDOWN/BYE
+    /// handshake for the remote backend).
+    fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Human-readable backend name (for logs / bench output).
+    fn name(&self) -> &'static str;
+}
+
+/// Adapts any synchronous [`WorkerBackend`] to the submit/drain API by
+/// completing every batch inline at submission time.
+pub struct InlineSubmit {
+    backend: Box<dyn WorkerBackend>,
+    ready: Vec<Completion>,
+}
+
+impl InlineSubmit {
+    pub fn new(backend: Box<dyn WorkerBackend>) -> Self {
+        Self {
+            backend,
+            ready: Vec::new(),
+        }
+    }
+}
+
+impl SubmitBackend for InlineSubmit {
+    fn submit(&mut self, batch: PendingBatch) -> Result<()> {
+        let mut delta = Vec::new();
+        self.backend
+            .process(batch.vertex, &batch.others, &mut delta)?;
+        self.ready.push(Completion {
+            token: batch.token,
+            vertex: batch.vertex,
+            delta,
+            wire_bytes: 0,
+        });
+        Ok(())
+    }
+
+    fn drain(&mut self, out: &mut Vec<Completion>, _block: bool) -> Result<()> {
+        out.append(&mut self.ready);
+        Ok(())
+    }
+
+    fn in_flight(&self) -> usize {
+        self.ready.len()
+    }
+
+    fn name(&self) -> &'static str {
+        self.backend.name()
+    }
 }
 
 /// Reconstruct edge indices from a (vertex, others) batch.
@@ -201,6 +341,34 @@ mod tests {
         let mut out = Vec::new();
         w.process(3, &[4], &mut out).unwrap();
         assert_eq!(out, direct);
+    }
+
+    #[test]
+    fn inline_submit_completes_at_submission() {
+        let s = seeds(64, 2);
+        let words = s.params.words();
+        let mut b = InlineSubmit::new(Box::new(NativeWorker::new(s.clone())));
+        b.submit(PendingBatch {
+            token: 7,
+            vertex: 0,
+            others: vec![1, 2],
+        })
+        .unwrap();
+        assert_eq!(b.in_flight(), 1);
+        let mut out = Vec::new();
+        b.drain(&mut out, true).unwrap();
+        assert_eq!(b.in_flight(), 0);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].token, 7);
+        assert_eq!(out[0].wire_bytes, 0, "inline backends meter no network");
+        assert_eq!(out[0].delta.len(), 2 * words);
+        let native = NativeWorker::new(s);
+        let mut want = Vec::new();
+        native.process(0, &[1, 2], &mut want).unwrap();
+        assert_eq!(out[0].delta, want);
+        assert!(!b.dead());
+        assert!(b.take_unacked().is_empty());
+        b.finish().unwrap();
     }
 
     #[test]

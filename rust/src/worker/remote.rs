@@ -1,23 +1,42 @@
 //! Remote workers over TCP: the server loop run by `landscape worker`,
-//! and the coordinator-side client backend.
+//! and the coordinator-side client backends.
 //!
 //! Workers are stateless (paper §6): the HELLO handshake carries the
-//! graph config, after which the server answers BATCH frames with DELTA
+//! graph config, after which the server answers batch frames with delta
 //! frames computed by a [`NativeWorker`].  One connection serves one
 //! coordinator distributor thread; a server accepts many connections.
+//!
+//! Two client backends speak the `net` protocol:
+//!
+//! * [`RemoteWorker`] — lockstep v1: one BATCH in flight, the caller
+//!   blocks on every round trip.  Kept as the latency-coupled baseline
+//!   the pipelined path is measured against.
+//! * [`PipelinedRemote`] — v2: the connection is split into a writer
+//!   half (owned by the submitting thread) and a reader thread; up to
+//!   `window` sequence-tagged batches ride the wire at once, bursts are
+//!   coalesced into MULTIBATCH frames, and DELTA2 completions are
+//!   consumed **out of order**.  On connection death every
+//!   unacknowledged batch is recoverable for requeueing to a surviving
+//!   worker ([`crate::worker::SubmitBackend::take_unacked`]).
 
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::net::Message;
+use crate::net::{delta2_wire_bytes, Message, SeqBatch};
 use crate::sketch::params::SketchParams;
-use crate::worker::{NativeWorker, WorkerBackend, WorkerSeeds};
+use crate::worker::{
+    Completion, NativeWorker, PendingBatch, SubmitBackend, WorkerBackend, WorkerSeeds,
+};
 
-/// Coordinator-side backend that forwards batches to a remote worker.
+/// Coordinator-side backend that forwards batches to a remote worker,
+/// one blocking round trip at a time (protocol v1).
 pub struct RemoteWorker {
     conn: Mutex<RemoteConn>,
     /// Bytes sent/received over this connection (metered at the framing
@@ -104,16 +123,428 @@ impl WorkerBackend for RemoteWorker {
     }
 }
 
+/// Reader-thread / writer-half shared state of a [`PipelinedRemote`].
+struct PipeShared {
+    state: Mutex<PipeState>,
+    cv: Condvar,
+    dead: AtomicBool,
+    bytes_received: AtomicU64,
+}
+
+#[derive(Default)]
+struct PipeState {
+    /// On the wire, unacknowledged: seq → the batch, for requeueing.
+    pending: HashMap<u64, PendingBatch>,
+    /// Deltas received but not yet drained by the owner.
+    completed: VecDeque<Completion>,
+    /// The server acknowledged our SHUTDOWN with BYE.
+    saw_bye: bool,
+}
+
+impl PipeShared {
+    fn mark_dead(&self) {
+        self.dead.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+
+    fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Acquire)
+    }
+}
+
+/// Pipelined v2 client: a window of sequence-tagged batches in flight,
+/// out-of-order DELTA2 completion, MULTIBATCH coalescing, and exact
+/// framing-layer byte accounting.
+pub struct PipelinedRemote {
+    shared: Arc<PipeShared>,
+    writer: BufWriter<TcpStream>,
+    /// Raw handle used to break the reader out of a blocking read.
+    sock: TcpStream,
+    /// Submitted but not yet framed onto the wire (coalescing buffer).
+    write_buf: Vec<PendingBatch>,
+    window: usize,
+    bytes_sent: u64,
+    reader: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PipelinedRemote {
+    /// Connect, perform the HELLO handshake, and start the reader half.
+    /// `window` is the maximum number of batches in flight (≥ 1).
+    pub fn connect(
+        addr: &str,
+        params: SketchParams,
+        graph_seed: u64,
+        k: u32,
+        window: usize,
+    ) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let reader_stream = stream.try_clone()?;
+        let sock = stream.try_clone()?;
+        let mut writer = BufWriter::new(stream);
+        let hello = Message::Hello {
+            vertices: params.v,
+            columns: params.columns,
+            graph_seed,
+            k,
+        };
+        let bytes_sent = hello.write_to(&mut writer)?;
+        let shared = Arc::new(PipeShared {
+            state: Mutex::new(PipeState::default()),
+            cv: Condvar::new(),
+            dead: AtomicBool::new(false),
+            bytes_received: AtomicU64::new(0),
+        });
+        let shared2 = shared.clone();
+        let reader = std::thread::spawn(move || {
+            reader_loop(&shared2, BufReader::new(reader_stream));
+        });
+        Ok(Self {
+            shared,
+            writer,
+            sock,
+            write_buf: Vec::new(),
+            window: window.max(1),
+            bytes_sent,
+            reader: Some(reader),
+        })
+    }
+
+    /// Exact bytes written at the framing layer (HELLO + batch frames +
+    /// SHUTDOWN).
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes_sent
+    }
+
+    /// Exact bytes received at the framing layer (DELTA2 frames + BYE).
+    pub fn bytes_received(&self) -> u64 {
+        self.shared.bytes_received.load(Ordering::Relaxed)
+    }
+
+    /// Configured in-flight window.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Batches occupying the window: buffered + on the wire.
+    fn window_occupancy(&self) -> usize {
+        let st = self.shared.state.lock().unwrap();
+        self.write_buf.len() + st.pending.len()
+    }
+
+    /// Wait (bounded) for the reader to make progress: a completion
+    /// arriving, BYE, or death.
+    fn wait_for_progress(&self) -> Result<()> {
+        if self.shared.is_dead() {
+            bail!("remote worker connection is dead");
+        }
+        let st = self.shared.state.lock().unwrap();
+        if st.pending.is_empty() {
+            return Ok(());
+        }
+        let _ = self
+            .shared
+            .cv
+            .wait_timeout(st, Duration::from_millis(50))
+            .unwrap();
+        if self.shared.is_dead() {
+            bail!("remote worker connection is dead");
+        }
+        Ok(())
+    }
+
+    fn join_reader(&mut self) {
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl SubmitBackend for PipelinedRemote {
+    fn submit(&mut self, batch: PendingBatch) -> Result<()> {
+        // backpressure: never let more than `window` batches occupy the
+        // buffer + wire.  The reader thread frees window slots as DELTA2
+        // frames arrive, independent of this thread, so waiting here
+        // cannot deadlock.
+        while self.window_occupancy() >= self.window {
+            if let Err(e) = self.flush_submits().and_then(|()| self.wait_for_progress()) {
+                // retain the batch so take_unacked() can requeue it
+                self.write_buf.push(batch);
+                return Err(e);
+            }
+        }
+        if self.shared.is_dead() {
+            self.write_buf.push(batch);
+            bail!("remote worker connection is dead");
+        }
+        self.write_buf.push(batch);
+        Ok(())
+    }
+
+    fn flush_submits(&mut self) -> Result<()> {
+        if self.write_buf.is_empty() {
+            return Ok(());
+        }
+        if self.shared.is_dead() {
+            bail!("remote worker connection is dead");
+        }
+        let batches: Vec<PendingBatch> = self.write_buf.drain(..).collect();
+        // register as on-the-wire *before* writing: a torn write leaves
+        // every batch in the unacknowledged set for requeueing
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            for b in &batches {
+                st.pending.insert(b.token, b.clone());
+            }
+        }
+        // the clones above went to the pending map; the frame takes the
+        // originals, so each payload is copied exactly once
+        let msg = if batches.len() == 1 {
+            let b = batches.into_iter().next().unwrap();
+            Message::Batch2 {
+                seq: b.token,
+                vertex: b.vertex,
+                others: b.others,
+            }
+        } else {
+            Message::MultiBatch {
+                batches: batches
+                    .into_iter()
+                    .map(|b| SeqBatch {
+                        seq: b.token,
+                        vertex: b.vertex,
+                        others: b.others,
+                    })
+                    .collect(),
+            }
+        };
+        match msg.write_to(&mut self.writer) {
+            Ok(n) => {
+                self.bytes_sent += n;
+                Ok(())
+            }
+            Err(e) => {
+                self.shared.mark_dead();
+                Err(e)
+            }
+        }
+    }
+
+    fn drain(&mut self, out: &mut Vec<Completion>, block: bool) -> Result<()> {
+        // a blocking drain is about to wait on replies, so everything
+        // buffered must reach the wire first (their deltas are what we
+        // would be waiting for).  A non-blocking drain leaves the buffer
+        // growing so bursts coalesce into MULTIBATCH frames — the window
+        // check in submit() bounds how long that lasts.  A flush failure
+        // marks the backend dead, which is reported below once
+        // already-received completions have been handed out.
+        if block && !self.write_buf.is_empty() {
+            let _ = self.flush_submits();
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        if block && st.completed.is_empty() && !st.pending.is_empty() && !self.shared.is_dead() {
+            let (g, _timeout) = self
+                .shared
+                .cv
+                .wait_timeout(st, Duration::from_millis(1))
+                .unwrap();
+            st = g;
+        }
+        let got_any = !st.completed.is_empty();
+        out.extend(st.completed.drain(..));
+        drop(st);
+        if !got_any && self.shared.is_dead() {
+            bail!("remote worker connection is dead");
+        }
+        Ok(())
+    }
+
+    fn in_flight(&self) -> usize {
+        let st = self.shared.state.lock().unwrap();
+        self.write_buf.len() + st.pending.len() + st.completed.len()
+    }
+
+    fn wire_occupancy(&self) -> usize {
+        self.window_occupancy()
+    }
+
+    fn wire_bytes_sent(&self) -> u64 {
+        self.bytes_sent
+    }
+
+    fn dead(&self) -> bool {
+        self.shared.is_dead()
+    }
+
+    fn take_unacked(&mut self) -> Vec<PendingBatch> {
+        let mut unacked: Vec<PendingBatch> = self.write_buf.drain(..).collect();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            unacked.extend(st.pending.drain().map(|(_, b)| b));
+        }
+        unacked.sort_by_key(|b| b.token);
+        unacked
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.flush_submits()?;
+        // drain the wire before the close handshake
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            {
+                let st = self.shared.state.lock().unwrap();
+                if self.write_buf.len() + st.pending.len() == 0 {
+                    break;
+                }
+                if !self.shared.is_dead() && Instant::now() < deadline {
+                    let _ = self
+                        .shared
+                        .cv
+                        .wait_timeout(st, Duration::from_millis(10))
+                        .unwrap();
+                    continue;
+                }
+            }
+            bail!("connection died or timed out with batches still in flight");
+        }
+        // SHUTDOWN → BYE close handshake: the BYE proves the server saw
+        // and answered everything we sent
+        self.bytes_sent += Message::Shutdown.write_to(&mut self.writer)?;
+        let deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            let st = self.shared.state.lock().unwrap();
+            if st.saw_bye || self.shared.is_dead() || Instant::now() >= deadline {
+                break;
+            }
+            let _ = self
+                .shared
+                .cv
+                .wait_timeout(st, Duration::from_millis(10))
+                .unwrap();
+        }
+        // break the reader out of its blocking read before joining —
+        // without this a peer that never sends BYE (or a writer-side
+        // death the reader hasn't noticed) would hang the join despite
+        // the deadline above.  Harmless after a clean BYE: the
+        // connection is ending either way.
+        let _ = self.sock.shutdown(std::net::Shutdown::Both);
+        self.join_reader();
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "remote-tcp-pipelined"
+    }
+}
+
+impl Drop for PipelinedRemote {
+    fn drop(&mut self) {
+        self.shared.mark_dead();
+        let _ = self.sock.shutdown(std::net::Shutdown::Both);
+        self.join_reader();
+    }
+}
+
+/// The reader half: turns DELTA2 frames into completions until BYE,
+/// an error frame, or connection death.
+fn reader_loop(shared: &PipeShared, mut reader: BufReader<TcpStream>) {
+    loop {
+        match Message::read_from(&mut reader) {
+            Ok(Message::Delta2 { seq, vertex, delta }) => {
+                let wire = delta2_wire_bytes(delta.len());
+                let mut st = shared.state.lock().unwrap();
+                match st.pending.remove(&seq) {
+                    Some(b) if b.vertex == vertex => {
+                        st.completed.push_back(Completion {
+                            token: seq,
+                            vertex,
+                            delta,
+                            wire_bytes: wire,
+                        });
+                        drop(st);
+                        shared.bytes_received.fetch_add(wire, Ordering::Relaxed);
+                        shared.cv.notify_all();
+                    }
+                    Some(b) => {
+                        eprintln!(
+                            "remote: delta seq {seq} for wrong vertex (sent {}, got \
+                             {vertex})",
+                            b.vertex
+                        );
+                        // keep the batch requeueable
+                        st.pending.insert(seq, b);
+                        drop(st);
+                        shared.mark_dead();
+                        return;
+                    }
+                    None => {
+                        eprintln!("remote: delta for unknown seq {seq}");
+                        drop(st);
+                        shared.mark_dead();
+                        return;
+                    }
+                }
+            }
+            Ok(Message::Bye) => {
+                shared
+                    .bytes_received
+                    .fetch_add(Message::Bye.wire_bytes(), Ordering::Relaxed);
+                shared.state.lock().unwrap().saw_bye = true;
+                shared.cv.notify_all();
+                return;
+            }
+            Ok(Message::Error { code, reason }) => {
+                eprintln!("remote: worker reported error {code}: {reason}");
+                shared.mark_dead();
+                return;
+            }
+            Ok(other) => {
+                eprintln!("remote: unexpected frame {other:?}");
+                shared.mark_dead();
+                return;
+            }
+            Err(_) => {
+                // connection closed (cleanly after BYE the loop already
+                // returned, so this is a death)
+                shared.mark_dead();
+                return;
+            }
+        }
+    }
+}
+
+/// Server-side knobs (latency injection and failure injection are used
+/// by benches/tests; production servers run the defaults).
+#[derive(Clone, Debug, Default)]
+pub struct ServeOptions {
+    /// Injected per-frame reply latency: each delta is held this long
+    /// before hitting the wire.  Replies are delayed on a dedicated
+    /// sender thread, so latency does **not** cap server throughput —
+    /// exactly the regime where pipelining beats lockstep.
+    pub reply_latency: Duration,
+    /// Failure injection: after this many batches have been answered,
+    /// the next data frame makes the connection drop abruptly (no BYE),
+    /// simulating a worker crash with batches in flight.
+    pub fail_after_batches: Option<u64>,
+}
+
 /// Worker server: accept connections, answer batches until SHUTDOWN.
 pub struct WorkerServer {
     listener: TcpListener,
+    opts: ServeOptions,
 }
 
 impl WorkerServer {
     /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
     pub fn bind(addr: &str) -> Result<Self> {
+        Self::bind_with(addr, ServeOptions::default())
+    }
+
+    /// Bind with explicit [`ServeOptions`].
+    pub fn bind_with(addr: &str, opts: ServeOptions) -> Result<Self> {
         Ok(Self {
             listener: TcpListener::bind(addr)?,
+            opts,
         })
     }
 
@@ -122,14 +553,45 @@ impl WorkerServer {
     }
 
     /// Serve `max_connections` then return (use `usize::MAX` to run
-    /// forever).  Each connection is handled on its own thread.
+    /// forever).  Each connection is handled on its own thread; a client
+    /// disconnecting mid-stream — or a failed accept — is logged and
+    /// served around, never treated as a server error.
     pub fn serve(&self, max_connections: usize) -> Result<()> {
         let mut served = 0;
+        let mut accept_failures = 0u32;
         let mut handles = Vec::new();
         for stream in self.listener.incoming() {
-            let stream = stream?;
+            let stream = match stream {
+                Ok(s) => {
+                    accept_failures = 0;
+                    s
+                }
+                // a client vanishing between SYN and accept is transient:
+                // log-and-continue.  A *persistently* failing accept (fd
+                // exhaustion) must not become a hot error loop, so back
+                // off briefly and give up after a bounded run of them.
+                Err(e) => {
+                    accept_failures += 1;
+                    eprintln!("worker: accept failed ({accept_failures} in a row): {e}");
+                    if accept_failures >= 64 {
+                        for h in handles.drain(..) {
+                            let _ = h.join();
+                        }
+                        return Err(e.into());
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                    continue;
+                }
+            };
+            // low-latency replies on the server side too — without this
+            // the kernel nagles small DELTA frames behind the previous
+            // reply's ACK
+            if let Err(e) = stream.set_nodelay(true) {
+                eprintln!("worker: TCP_NODELAY failed (continuing): {e}");
+            }
+            let opts = self.opts.clone();
             handles.push(std::thread::spawn(move || {
-                if let Err(e) = handle_connection(stream) {
+                if let Err(e) = handle_connection(stream, opts) {
                     eprintln!("worker connection error: {e:#}");
                 }
             }));
@@ -145,10 +607,13 @@ impl WorkerServer {
     }
 }
 
-fn handle_connection(stream: TcpStream) -> Result<()> {
-    stream.set_nodelay(true)?;
+/// A reply frame queued for the sender thread, due no earlier than the
+/// attached instant.
+type QueuedReply = (Option<Instant>, Message);
+
+fn handle_connection(stream: TcpStream, opts: ServeOptions) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
+    let writer = BufWriter::new(stream);
 
     // handshake: first frame must be HELLO
     let backend: Box<dyn WorkerBackend> = match Message::read_from(&mut reader)? {
@@ -164,20 +629,137 @@ fn handle_connection(stream: TcpStream) -> Result<()> {
         other => bail!("expected HELLO, got {other:?}"),
     };
 
+    // all replies go through a dedicated sender thread so an injected
+    // latency delays each frame without serializing computation behind
+    // it, and so v2 batch computation never blocks on TCP backpressure
+    let (tx, rx) = mpsc::channel::<QueuedReply>();
+    let sender = std::thread::spawn(move || sender_loop(writer, rx));
+    let due = |latency: Duration| {
+        if latency.is_zero() {
+            None
+        } else {
+            Some(Instant::now() + latency)
+        }
+    };
+
+    let mut answered = 0u64;
+    let mut protocol_err: Option<String> = None;
     let mut out = Vec::new();
     loop {
-        match Message::read_from(&mut reader) {
-            Ok(Message::Batch { vertex, others }) => {
+        let msg = match Message::read_from(&mut reader) {
+            Ok(m) => m,
+            // a client disconnecting mid-stream is a normal way for a
+            // connection to end (coordinator died, failover kicked in):
+            // log-and-continue serving other connections, not an error
+            Err(e) => {
+                eprintln!("worker: client disconnected mid-stream ({e}); closing");
+                break;
+            }
+        };
+        let is_data = matches!(
+            msg,
+            Message::Batch { .. } | Message::Batch2 { .. } | Message::MultiBatch { .. }
+        );
+        let crash_now = opts.fail_after_batches.is_some_and(|limit| answered >= limit);
+        if is_data && crash_now {
+            // injected crash: drop the connection with this frame's
+            // batches unanswered (no BYE)
+            eprintln!("worker: injected crash after {answered} answered batches");
+            break;
+        }
+        match msg {
+            Message::Batch { vertex, others } => {
                 out.clear();
                 backend.process(vertex, &others, &mut out)?;
-                Message::Delta {
+                let reply = Message::Delta {
                     vertex,
                     delta: out.clone(),
+                };
+                if tx.send((due(opts.reply_latency), reply)).is_err() {
+                    break;
                 }
-                .write_to(&mut writer)?;
+                answered += 1;
             }
-            Ok(Message::Shutdown) | Err(_) => return Ok(()),
-            Ok(other) => bail!("unexpected frame {other:?}"),
+            Message::Batch2 {
+                seq,
+                vertex,
+                others,
+            } => {
+                out.clear();
+                backend.process(vertex, &others, &mut out)?;
+                let reply = Message::Delta2 {
+                    seq,
+                    vertex,
+                    delta: out.clone(),
+                };
+                if tx.send((due(opts.reply_latency), reply)).is_err() {
+                    break;
+                }
+                answered += 1;
+            }
+            Message::MultiBatch { batches } => {
+                // compute every delta, then queue the replies in REVERSE
+                // order: a deliberate, deterministic out-of-order
+                // completion exercise for pipelined clients (XOR merges
+                // commute, so order must not matter)
+                let mut replies = Vec::with_capacity(batches.len());
+                for b in &batches {
+                    out.clear();
+                    backend.process(b.vertex, &b.others, &mut out)?;
+                    replies.push(Message::Delta2 {
+                        seq: b.seq,
+                        vertex: b.vertex,
+                        delta: out.clone(),
+                    });
+                }
+                answered += replies.len() as u64;
+                let when = due(opts.reply_latency);
+                for r in replies.into_iter().rev() {
+                    if tx.send((when, r)).is_err() {
+                        break;
+                    }
+                }
+            }
+            Message::Shutdown => {
+                // clean close: BYE after every queued delta has flushed
+                let _ = tx.send((None, Message::Bye));
+                break;
+            }
+            other => {
+                let reason = format!("unexpected frame {other:?}");
+                let _ = tx.send((
+                    None,
+                    Message::Error {
+                        code: 1,
+                        reason: reason.clone(),
+                    },
+                ));
+                protocol_err = Some(reason);
+                break;
+            }
+        }
+    }
+    drop(tx);
+    let _ = sender.join();
+    if let Some(reason) = protocol_err {
+        bail!("{reason}");
+    }
+    Ok(())
+}
+
+/// Writes queued replies in order, holding each until its due time.
+fn sender_loop(mut writer: BufWriter<TcpStream>, rx: mpsc::Receiver<QueuedReply>) {
+    while let Ok((due, msg)) = rx.recv() {
+        if let Some(t) = due {
+            let now = Instant::now();
+            if t > now {
+                std::thread::sleep(t - now);
+            }
+        }
+        if msg.write_to(&mut writer).is_err() {
+            // the client went away mid-reply: drain and exit quietly
+            while rx.recv().is_ok() {}
+            return;
         }
     }
 }
@@ -186,8 +768,8 @@ fn handle_connection(stream: TcpStream) -> Result<()> {
 mod tests {
     use super::*;
     use crate::sketch::params::encode_edge;
-    use crate::sketch::CameoSketch;
     use crate::sketch::seeds::SketchSeeds;
+    use crate::sketch::CameoSketch;
 
     #[test]
     fn remote_worker_round_trip_matches_native() {
@@ -223,5 +805,220 @@ mod tests {
         remote.shutdown();
         server_thread.join().unwrap().unwrap();
         assert_eq!(got.len(), 3 * params.words());
+    }
+
+    fn native_delta(params: SketchParams, seed: u64, k: u32, v: u32, others: &[u32]) -> Vec<u64> {
+        let w = NativeWorker::new(WorkerSeeds::derive(params, seed, k));
+        let mut out = Vec::new();
+        w.process(v, others, &mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn pipelined_round_trip_matches_native_out_of_order() {
+        let params = SketchParams::for_vertices(64);
+        let server = WorkerServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let server_thread = std::thread::spawn(move || server.serve(1));
+
+        let mut p = PipelinedRemote::connect(&addr, params, 42, 1, 8).unwrap();
+        let batches = [(1u64, 0u32, vec![1u32, 3]), (2, 5, vec![6]), (3, 9, vec![2, 4])];
+        for (token, vertex, others) in &batches {
+            p.submit(PendingBatch {
+                token: *token,
+                vertex: *vertex,
+                others: others.clone(),
+            })
+            .unwrap();
+        }
+        // one coalesced MULTIBATCH frame; the server replies in reverse
+        p.flush_submits().unwrap();
+        let mut got = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while got.len() < batches.len() && Instant::now() < deadline {
+            p.drain(&mut got, true).unwrap();
+        }
+        assert_eq!(got.len(), 3);
+        let tokens: Vec<u64> = got.iter().map(|c| c.token).collect();
+        assert_eq!(tokens, vec![3, 2, 1], "server must reply in reverse order");
+        for c in &got {
+            let (_, vertex, others) = batches.iter().find(|b| b.0 == c.token).unwrap();
+            assert_eq!(c.vertex, *vertex);
+            assert_eq!(c.delta, native_delta(params, 42, 1, *vertex, others));
+        }
+        assert_eq!(p.in_flight(), 0);
+        p.finish().unwrap();
+        server_thread.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn pipelined_meters_exact_wire_bytes() {
+        let params = SketchParams::for_vertices(64);
+        let server = WorkerServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let server_thread = std::thread::spawn(move || server.serve(1));
+
+        let mut p = PipelinedRemote::connect(&addr, params, 7, 2, 16).unwrap();
+        let b1 = PendingBatch {
+            token: 1,
+            vertex: 0,
+            others: vec![1, 2, 3],
+        };
+        let b2 = PendingBatch {
+            token: 2,
+            vertex: 4,
+            others: vec![5],
+        };
+        p.submit(b1.clone()).unwrap();
+        p.submit(b2.clone()).unwrap();
+        p.flush_submits().unwrap();
+        let mut got = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while got.len() < 2 && Instant::now() < deadline {
+            p.drain(&mut got, true).unwrap();
+        }
+        p.finish().unwrap();
+        server_thread.join().unwrap().unwrap();
+
+        let hello = Message::Hello {
+            vertices: params.v,
+            columns: params.columns,
+            graph_seed: 7,
+            k: 2,
+        };
+        let multi = Message::MultiBatch {
+            batches: vec![
+                SeqBatch {
+                    seq: 1,
+                    vertex: 0,
+                    others: b1.others.clone(),
+                },
+                SeqBatch {
+                    seq: 2,
+                    vertex: 4,
+                    others: b2.others.clone(),
+                },
+            ],
+        };
+        assert_eq!(
+            p.bytes_sent(),
+            hello.wire_bytes() + multi.wire_bytes() + Message::Shutdown.wire_bytes()
+        );
+        let words = 2 * params.words();
+        assert_eq!(
+            p.bytes_received(),
+            2 * delta2_wire_bytes(words) + Message::Bye.wire_bytes()
+        );
+        for c in &got {
+            assert_eq!(c.wire_bytes, delta2_wire_bytes(words));
+        }
+    }
+
+    #[test]
+    fn crashed_server_leaves_unacked_batches_recoverable() {
+        let params = SketchParams::for_vertices(64);
+        let opts = ServeOptions {
+            fail_after_batches: Some(1),
+            ..Default::default()
+        };
+        let server = WorkerServer::bind_with("127.0.0.1:0", opts).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let server_thread = std::thread::spawn(move || server.serve(1));
+
+        let mut p = PipelinedRemote::connect(&addr, params, 42, 1, 8).unwrap();
+        // first batch is answered; the second triggers the crash
+        p.submit(PendingBatch {
+            token: 1,
+            vertex: 0,
+            others: vec![1],
+        })
+        .unwrap();
+        p.flush_submits().unwrap();
+        let mut got = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while got.is_empty() && Instant::now() < deadline {
+            p.drain(&mut got, true).unwrap();
+        }
+        assert_eq!(got.len(), 1);
+
+        p.submit(PendingBatch {
+            token: 2,
+            vertex: 3,
+            others: vec![4, 5],
+        })
+        .unwrap();
+        let _ = p.flush_submits();
+        // the crash surfaces as a dead backend on drain
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let died = loop {
+            match p.drain(&mut got, true) {
+                Err(_) => break true,
+                Ok(()) if Instant::now() >= deadline => break false,
+                Ok(()) => {}
+            }
+        };
+        assert!(died, "crash must surface as a drain error");
+        assert!(p.dead());
+        let unacked = p.take_unacked();
+        assert_eq!(unacked.len(), 1);
+        assert_eq!(unacked[0].token, 2);
+        assert_eq!(unacked[0].others, vec![4, 5]);
+        server_thread.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn pipelined_beats_lockstep_under_injected_latency() {
+        // the acceptance experiment in miniature: per-reply latency of
+        // 5ms, 12 batches.  Lockstep pays 12 serial round trips (≥ 60ms
+        // by construction); a window of 8 overlaps them.
+        let params = SketchParams::for_vertices(64);
+        let latency = Duration::from_millis(5);
+        let n = 12u64;
+        let opts = ServeOptions {
+            reply_latency: latency,
+            ..Default::default()
+        };
+        let server = WorkerServer::bind_with("127.0.0.1:0", opts).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let server_thread = std::thread::spawn(move || server.serve(2));
+
+        let lockstep = RemoteWorker::connect(&addr, params, 42, 1).unwrap();
+        let t0 = Instant::now();
+        let mut out = Vec::new();
+        for i in 0..n {
+            out.clear();
+            lockstep.process(i as u32, &[i as u32 + 1], &mut out).unwrap();
+        }
+        let lockstep_secs = t0.elapsed().as_secs_f64();
+        lockstep.shutdown();
+
+        let mut p = PipelinedRemote::connect(&addr, params, 42, 1, 8).unwrap();
+        let t0 = Instant::now();
+        let mut done = 0u64;
+        let mut comps = Vec::new();
+        for i in 0..n {
+            p.submit(PendingBatch {
+                token: i + 1,
+                vertex: i as u32,
+                others: vec![i as u32 + 1],
+            })
+            .unwrap();
+            p.drain(&mut comps, false).unwrap();
+            done += comps.drain(..).len() as u64;
+        }
+        p.flush_submits().unwrap();
+        while done < n {
+            p.drain(&mut comps, true).unwrap();
+            done += comps.drain(..).len() as u64;
+        }
+        let pipelined_secs = t0.elapsed().as_secs_f64();
+        p.finish().unwrap();
+        server_thread.join().unwrap().unwrap();
+
+        assert!(
+            pipelined_secs * 2.0 < lockstep_secs,
+            "pipelined ({pipelined_secs:.3}s) must be at least 2x faster than \
+             lockstep ({lockstep_secs:.3}s) under {latency:?} reply latency"
+        );
     }
 }

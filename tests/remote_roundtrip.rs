@@ -14,7 +14,7 @@ use landscape::sketch::params::SketchParams;
 use landscape::stream::dynamify::Dynamify;
 use landscape::stream::erdos::ErdosRenyi;
 use landscape::stream::edge_list;
-use landscape::worker::remote::{RemoteWorker, WorkerServer};
+use landscape::worker::remote::{RemoteWorker, ServeOptions, WorkerServer};
 use landscape::worker::WorkerBackend;
 
 fn same_partition(a: &[u32], b: &[u32]) -> bool {
@@ -39,8 +39,11 @@ fn config(v: u64, addr: String) -> CoordinatorConfig {
 
 #[test]
 fn remote_ingest_matches_native_and_obeys_communication_bound() {
-    let v = 128u64;
-    let model = ErdosRenyi::new(v, 0.15, 4242);
+    // dense enough that per-vertex leaves clear the γ-flush threshold
+    // (3·E[deg] ≈ 229 ≥ γ·capacity ≈ 148 at V=256), so real BATCH/DELTA
+    // traffic crosses the wire for the bound to measure
+    let v = 256u64;
+    let model = ErdosRenyi::new(v, 0.3, 4242);
 
     // exact reference partition
     let mut dsu = Dsu::new(v as usize);
@@ -89,6 +92,71 @@ fn remote_ingest_matches_native_and_obeys_communication_bound() {
 
     drop(coord); // closes both connections so the server thread exits
     let _ = server_thread.join();
+}
+
+/// Kill one of two worker servers mid-stream: the distributor must
+/// observe the death, requeue every unacknowledged batch onto the
+/// surviving server, and finish with a partition identical to the exact
+/// DSU referee — zero batches lost.
+#[test]
+fn worker_failover_requeues_unacked_batches_with_zero_drops() {
+    // dense enough (see above) that every shard ships many batches, so
+    // the injected crash is guaranteed to strand some in flight
+    let v = 256u64;
+    let model = ErdosRenyi::new(v, 0.3, 1717);
+
+    let mut dsu = Dsu::new(v as usize);
+    for (a, b) in edge_list(&model) {
+        dsu.union(a, b);
+    }
+
+    // server A answers 2 batches, then crashes its connection on the
+    // next data frame (dropping that frame's batches unanswered);
+    // server B stays healthy and absorbs A's distributor after failover
+    let flaky = WorkerServer::bind_with(
+        "127.0.0.1:0",
+        ServeOptions {
+            fail_after_batches: Some(2),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let healthy = WorkerServer::bind("127.0.0.1:0").unwrap();
+    let flaky_addr = flaky.local_addr().unwrap().to_string();
+    let healthy_addr = healthy.local_addr().unwrap().to_string();
+    let flaky_thread = std::thread::spawn(move || flaky.serve(1));
+    let healthy_thread = std::thread::spawn(move || healthy.serve(2));
+
+    let mut cfg = CoordinatorConfig::for_vertices(v);
+    cfg.alpha = 1;
+    cfg.distributor_threads = 2;
+    cfg.use_greedycc = false;
+    cfg.remote_window = 8;
+    cfg.worker = WorkerKind::Remote {
+        addrs: vec![flaky_addr, healthy_addr],
+    };
+    let mut coord = Coordinator::new(cfg).unwrap();
+    coord.ingest_all(Dynamify::new(model, 3));
+    let forest = coord.full_connectivity_query();
+
+    let m = coord.metrics();
+    assert_eq!(m.batches_dropped, 0, "failover must not lose a single batch");
+    assert!(
+        m.worker_failures >= 1,
+        "the injected crash must surface as a worker failure"
+    );
+    assert!(
+        m.batches_requeued >= 1,
+        "the crash strands unacknowledged batches that must be requeued"
+    );
+    assert!(
+        same_partition(&forest.component, &dsu.component_map()),
+        "partition after failover diverges from the exact reference"
+    );
+
+    drop(coord); // closes the surviving connections so the servers exit
+    let _ = flaky_thread.join();
+    let _ = healthy_thread.join();
 }
 
 #[test]
