@@ -2,7 +2,8 @@
 //!
 //! Run with `cargo bench --bench micro_hot_paths`.  Reports per-op costs
 //! for: CameoSketch vs CubeSketch updates, batched delta computation,
-//! hypertree vs gutter ingestion, sketch-delta merge, work-queue
+//! hypertree vs gutter ingestion, multi-producer session ingest
+//! (`ingest_producers_{1,2,4}`), sketch-delta merge, work-queue
 //! handoff, lockstep vs pipelined remote transport under injected
 //! latency, Borůvka queries, GreedyCC ops, adjacency-matrix bit flips,
 //! and RAM bandwidth — everything EXPERIMENTS.md §Perf tracks.
@@ -198,6 +199,55 @@ fn main() {
         }
     });
     row("gutter_insert(x2)", s.median / n as f64);
+
+    // multi-producer session ingest (the API redesign's headline): the
+    // same 200k-update stream through 1/2/4 concurrent IngestHandles at
+    // V=2^14.  ns_per_op is per update end-to-end (handle create →
+    // ingest on all producers → publish → flush barrier), so the rows
+    // track how ingest rate scales with producer count until the shard
+    // queues saturate.
+    {
+        use landscape::Landscape;
+
+        let pv = 1u64 << 14;
+        let n_up = 200_000usize;
+        let mut prng = Xoshiro256::new(77);
+        let ups: Vec<Update> = (0..n_up)
+            .map(|_| {
+                let a = prng.next_below(pv - 1) as u32;
+                let b = a + 1 + prng.next_below(pv - 1 - a as u64) as u32;
+                Update::insert(a, b)
+            })
+            .collect();
+        for producers in [1usize, 2, 4] {
+            let chunks: Vec<Vec<Update>> = (0..producers)
+                .map(|p| ups.iter().copied().skip(p).step_by(producers).collect())
+                .collect();
+            let session = Landscape::builder()
+                .vertices(pv)
+                .distributor_threads(2)
+                .greedycc(false) // isolate the front-end path
+                .build()
+                .unwrap();
+            let s = bench(1, 3, || {
+                std::thread::scope(|scope| {
+                    for chunk in &chunks {
+                        let mut h = session.ingest_handle();
+                        scope.spawn(move || {
+                            for &u in chunk {
+                                h.ingest(u);
+                            }
+                        });
+                    }
+                });
+                session.flush();
+            });
+            row(
+                &format!("ingest_producers_{producers}"),
+                s.median / n_up as f64,
+            );
+        }
+    }
 
     // work-queue handoff
     let q: WorkQueue<u64> = WorkQueue::new(1024);

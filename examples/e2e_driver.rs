@@ -28,7 +28,8 @@
 
 use landscape::baseline::Referee;
 use landscape::benchkit::{fmt_bytes, fmt_rate};
-use landscape::coordinator::{Coordinator, CoordinatorConfig, QueryTier, WorkerKind};
+use landscape::coordinator::{CoordinatorConfig, QueryTier, WorkerKind};
+use landscape::session::{IngestHandle, Landscape, QueryHandle};
 use landscape::stream::update::Update;
 use landscape::stream::{datasets, EdgeModel, GraphStream};
 use landscape::util::rng::Xoshiro256;
@@ -49,18 +50,20 @@ fn stage1_xla() -> anyhow::Result<()> {
         artifact_dir: artifact_dir.clone(),
     };
     cfg.distributor_threads = 1;
-    let mut coord = Coordinator::new(cfg)?;
+    let session = Landscape::from_config(cfg)?;
+    let mut ingest = session.ingest_handle();
     let sw = Stopwatch::new();
     let mut n = 0u64;
     for u in d.stream() {
-        coord.ingest(u);
+        ingest.ingest(u);
         n += 1;
         if n >= 200_000 {
             break;
         }
     }
-    coord.flush_pending();
-    let forest = coord.connected_components();
+    ingest.flush();
+    session.flush();
+    let forest = session.query_handle().connected_components();
     println!(
         "[stage 1] XLA worker mode: {} updates in {:.2}s ({}) via the \
          AOT Pallas kernel; {} components",
@@ -94,13 +97,13 @@ fn stage1_xla() -> anyhow::Result<()> {
 /// asserts that no batch was dropped at the queue boundary.
 fn stage0_query_tiers() -> anyhow::Result<()> {
     let v = 1u64 << 12;
-    let mut cfg = CoordinatorConfig::for_vertices(v);
-    cfg.alpha = 1;
-    let mut coord = Coordinator::new(cfg)?;
+    let session = Landscape::builder().vertices(v).alpha(1).build()?;
+    let mut producer = session.ingest_handle();
+    let queries = session.query_handle();
     let mut referee = Referee::new(v);
-    let ingest = |coord: &mut Coordinator, referee: &mut Referee, u: Update| {
+    let ingest = |producer: &mut IngestHandle, referee: &mut Referee, u: Update| {
         referee.apply(&u);
-        coord.ingest(u);
+        producer.ingest(u);
     };
 
     // 64 disjoint paths of 64 vertices, plus a chord per path (cycle edge)
@@ -109,14 +112,18 @@ fn stage0_query_tiers() -> anyhow::Result<()> {
     for c in 0..comp {
         let base = c * span;
         for i in 0..span - 1 {
-            ingest(&mut coord, &mut referee, Update::insert(base + i, base + i + 1));
+            ingest(&mut producer, &mut referee, Update::insert(base + i, base + i + 1));
         }
-        ingest(&mut coord, &mut referee, Update::insert(base, base + 2));
+        ingest(&mut producer, &mut referee, Update::insert(base, base + 2));
     }
 
-    let check = |coord: &mut Coordinator, referee: &Referee, label: &str| {
+    let check = |producer: &mut IngestHandle,
+                 queries: &QueryHandle,
+                 referee: &Referee,
+                 label: &str| {
+        producer.flush();
         let sw = Stopwatch::new();
-        let forest = coord.connected_components();
+        let forest = queries.connected_components();
         let secs = sw.elapsed_secs();
         let ok = Referee::same_partition(&forest.component, &referee.component_map());
         println!(
@@ -128,32 +135,35 @@ fn stage0_query_tiers() -> anyhow::Result<()> {
         assert!(ok, "stage 0 ({label}): partition mismatch");
     };
 
-    // tier 0: clean graph
-    assert_eq!(coord.query_plan(), QueryTier::Greedy);
-    check(&mut coord, &referee, "tier0 greedy (clean)");
+    // tier 0: clean graph (publish the producer tail before planning)
+    producer.flush();
+    assert_eq!(queries.query_plan(), QueryTier::Greedy);
+    check(&mut producer, &queries, &referee, "tier0 greedy (clean)");
 
     // tier 0 after a non-forest deletion: the chord of path 0 is a cycle
     // edge, so the query must stay on the greedy tier (no flush/Borůvka)
-    let full_before = coord.metrics().queries_full;
-    let partial_before = coord.metrics().queries_partial;
-    ingest(&mut coord, &mut referee, Update::delete(0, 2));
-    assert_eq!(coord.query_plan(), QueryTier::Greedy);
-    check(&mut coord, &referee, "tier0 greedy (after non-forest delete)");
-    assert_eq!(coord.metrics().queries_full, full_before);
-    assert_eq!(coord.metrics().queries_partial, partial_before);
+    let full_before = session.metrics().queries_full;
+    let partial_before = session.metrics().queries_partial;
+    ingest(&mut producer, &mut referee, Update::delete(0, 2));
+    producer.flush();
+    assert_eq!(queries.query_plan(), QueryTier::Greedy);
+    check(&mut producer, &queries, &referee, "tier0 greedy (after non-forest delete)");
+    assert_eq!(session.metrics().queries_full, full_before);
+    assert_eq!(session.metrics().queries_partial, partial_before);
 
     // tier 1: delete one forest edge in each of 4 paths
     for c in 0..4u32 {
         let mid = c * span + span / 2;
-        ingest(&mut coord, &mut referee, Update::delete(mid, mid + 1));
+        ingest(&mut producer, &mut referee, Update::delete(mid, mid + 1));
     }
-    assert_eq!(coord.query_plan(), QueryTier::Partial);
-    check(&mut coord, &referee, "tier1 partial (4 dirty / 64 components)");
-    assert_eq!(coord.metrics().queries_partial, partial_before + 1);
+    producer.flush();
+    assert_eq!(queries.query_plan(), QueryTier::Partial);
+    check(&mut producer, &queries, &referee, "tier1 partial (4 dirty / 64 components)");
+    assert_eq!(session.metrics().queries_partial, partial_before + 1);
 
     // tier 2: forced full query on the same state
     let sw = Stopwatch::new();
-    let forest = coord.full_connectivity_query();
+    let forest = queries.full_connectivity_query();
     println!(
         "[stage 0] tier2 full (forced): {:.6}s, {} components",
         sw.elapsed_secs(),
@@ -164,7 +174,7 @@ fn stage0_query_tiers() -> anyhow::Result<()> {
         &referee.component_map()
     ));
 
-    let m = coord.metrics();
+    let m = session.metrics();
     assert_eq!(m.batches_dropped, 0, "batches silently dropped during the run");
     println!(
         "[stage 0] tiers exercised: {} greedy / {} partial / {} full; \
@@ -219,20 +229,22 @@ fn stage_remote() -> anyhow::Result<()> {
     cfg.use_greedycc = false;
     cfg.remote_window = 8;
     cfg.worker = WorkerKind::Remote { addrs };
-    let mut coord = Coordinator::new(cfg)?;
+    let session = Landscape::from_config(cfg)?;
+    let mut ingest = session.ingest_handle();
 
     let mut referee = Referee::new(v);
     let sw = Stopwatch::new();
     let mut n = 0u64;
     for u in Dynamify::new(model, 3) {
         referee.apply(&u);
-        coord.ingest(u);
+        ingest.ingest(u);
         n += 1;
     }
-    let forest = coord.full_connectivity_query();
+    ingest.flush();
+    let forest = session.query_handle().full_connectivity_query();
     let secs = sw.elapsed_secs();
     let ok = Referee::same_partition(&forest.component, &referee.component_map());
-    let m = coord.metrics();
+    let m = session.metrics();
     println!(
         "[remote] {} updates in {:.2}s ({}) over pipelined TCP (window 8, \
          200µs injected reply latency): {} batches, peak {} in flight, \
@@ -255,7 +267,8 @@ fn stage_remote() -> anyhow::Result<()> {
         m.remote_in_flight_peak >= 2,
         "transport never pipelined (peak in-flight < 2)"
     );
-    drop(coord); // closes the surviving connections so the servers exit
+    drop(ingest);
+    drop(session); // closes the surviving connections so the servers exit
     let _ = flaky_thread.join();
     let _ = healthy_thread.join();
     Ok(())
@@ -295,18 +308,20 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = CoordinatorConfig::for_vertices(v);
     cfg.distributor_threads = 2; // slot 0 native, slot 1 remote? — mixed below
     cfg.worker = WorkerKind::Native;
-    let mut coord = Coordinator::new(cfg)?;
+    let session = Landscape::from_config(cfg)?;
+    let mut producer = session.ingest_handle();
+    let queries = session.query_handle();
 
     // one extra distributor-equivalent: drive the remote worker directly
     // with a few batches to prove the wire path with identical results
     {
         use landscape::worker::remote::RemoteWorker;
         use landscape::worker::{NativeWorker, WorkerBackend, WorkerSeeds};
-        let params = *coord.params();
-        let remote = RemoteWorker::connect(&addr, params, coord.config().graph_seed, 1)?;
+        let params = *session.params();
+        let remote = RemoteWorker::connect(&addr, params, session.config().graph_seed, 1)?;
         let native = NativeWorker::new(WorkerSeeds::derive(
             params,
-            coord.config().graph_seed,
+            session.config().graph_seed,
             1,
         ));
         let others: Vec<u32> = (1..400).collect();
@@ -334,7 +349,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "[stage 2] ingesting kron12: V={v}, ~{} updates, sketch {}",
         stream.len_hint().unwrap_or(0),
-        fmt_bytes(coord.sketch_bytes() as f64)
+        fmt_bytes(session.sketch_bytes() as f64)
     );
     let sw = Stopwatch::new();
     let mut n = 0u64;
@@ -342,26 +357,28 @@ fn main() -> anyhow::Result<()> {
     let mut query_log: Vec<(String, f64)> = Vec::new();
     for u in stream {
         referee.apply(&u);
-        coord.ingest(u);
+        producer.ingest(u);
         n += 1;
         // ---- stage 3: queries during the stream ----
         if n % 6_000_000 == 0 {
+            producer.flush(); // publish the prefix the queries measure
             let qsw = Stopwatch::new();
-            let forest = coord.full_connectivity_query();
+            let forest = queries.full_connectivity_query();
             query_log.push(("full-boruvka".into(), qsw.elapsed_secs()));
             let qsw = Stopwatch::new();
-            let _ = coord.connected_components();
+            let _ = queries.connected_components();
             query_log.push(("greedy-global".into(), qsw.elapsed_secs()));
             let pairs: Vec<(u32, u32)> = (0..128)
                 .map(|_| (rng.next_below(v) as u32, rng.next_below(v) as u32))
                 .collect();
             let qsw = Stopwatch::new();
-            let _ = coord.reachability(&pairs);
+            let _ = queries.reachability(&pairs);
             query_log.push(("greedy-reach-128".into(), qsw.elapsed_secs()));
             let _ = forest;
         }
     }
-    coord.flush_pending(); // count until every update reaches the sketches
+    producer.flush();
+    session.flush(); // count until every update reaches the sketches
     let ingest_secs = sw.elapsed_secs();
     println!(
         "[stage 2] {} updates in {:.1}s ({})",
@@ -375,7 +392,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- stage 4: final query + exact correctness check ----
     let qsw = Stopwatch::new();
-    let forest = coord.full_connectivity_query();
+    let forest = queries.full_connectivity_query();
     let final_query = qsw.elapsed_secs();
     let exact = referee.component_map();
     let ok = Referee::same_partition(&forest.component, &exact);
@@ -392,7 +409,7 @@ fn main() -> anyhow::Result<()> {
         if ok { "MATCH" } else { "MISMATCH" }
     );
 
-    let m = coord.metrics();
+    let m = session.metrics();
     println!(
         "[report] rate {} | comm {:.2}x stream | {} batches | {} local updates \
          | sketch {} | {} full / {} greedy queries",
@@ -400,7 +417,7 @@ fn main() -> anyhow::Result<()> {
         m.communication_factor(),
         m.batches_sent,
         m.updates_local,
-        fmt_bytes(coord.sketch_bytes() as f64),
+        fmt_bytes(session.sketch_bytes() as f64),
         m.queries_full,
         m.queries_greedy,
     );

@@ -11,7 +11,8 @@
 //! cargo run --release --offline --example kconn_monitor
 //! ```
 
-use landscape::coordinator::{Coordinator, CoordinatorConfig};
+use landscape::session::{IngestHandle, QueryHandle};
+use landscape::Landscape;
 use landscape::stream::realworld::GridLike;
 use landscape::stream::{edge_list, Update};
 use landscape::util::rng::Xoshiro256;
@@ -24,20 +25,19 @@ fn main() -> anyhow::Result<()> {
     let base = GridLike::new(nodes, 0.95, 6.0, 11);
     let edges = edge_list(&base);
 
-    let mut cfg = CoordinatorConfig::for_vertices(nodes);
-    cfg.k = k;
-    cfg.alpha = 1;
-    let mut coord = Coordinator::new(cfg)?;
+    let session = Landscape::builder().vertices(nodes).k(k).alpha(1).build()?;
+    let mut ingest = session.ingest_handle();
+    let queries = session.query_handle();
     println!(
         "monitoring {} links across {nodes} nodes with k={k} sketches ({})",
         edges.len(),
-        landscape::benchkit::fmt_bytes(coord.sketch_bytes() as f64)
+        landscape::benchkit::fmt_bytes(session.sketch_bytes() as f64)
     );
 
     for &(a, b) in &edges {
-        coord.ingest(Update::insert(a, b));
+        ingest.ingest(Update::insert(a, b));
     }
-    report(&mut coord, k, "baseline");
+    report(&mut ingest, &queries, k, "baseline");
 
     let mut rng = Xoshiro256::new(5);
     let mut down: Vec<(u32, u32)> = Vec::new();
@@ -46,31 +46,32 @@ fn main() -> anyhow::Result<()> {
         let mut failed = 0;
         for &(a, b) in &edges {
             if !down.contains(&(a, b)) && rng.next_bool(0.08) {
-                coord.ingest(Update::delete(a, b));
+                ingest.ingest(Update::delete(a, b));
                 down.push((a, b));
                 failed += 1;
             }
         }
         println!("wave {wave}: {failed} links failed ({} total down)", down.len());
-        report(&mut coord, k, &format!("after wave {wave}"));
+        report(&mut ingest, &queries, k, &format!("after wave {wave}"));
 
         // repairs: half of the downed links come back
         let repair = down.len() / 2;
         for _ in 0..repair {
             let i = rng.next_below(down.len() as u64) as usize;
             let (a, b) = down.swap_remove(i);
-            coord.ingest(Update::insert(a, b));
+            ingest.ingest(Update::insert(a, b));
         }
         println!("        {repair} links repaired");
     }
 
-    report(&mut coord, k, "final");
+    report(&mut ingest, &queries, k, "final");
     Ok(())
 }
 
-fn report(coord: &mut Coordinator, k: u32, label: &str) {
+fn report(ingest: &mut IngestHandle, queries: &QueryHandle, k: u32, label: &str) {
+    ingest.flush(); // publish this producer's tail before querying
     let sw = Stopwatch::new();
-    let cut = coord.k_connectivity();
+    let cut = queries.k_connectivity();
     match cut {
         Some(w) => println!(
             "  [{label}] RESILIENCE ALERT: min cut = {w} (< {k}) — {:.3}s",

@@ -1,45 +1,66 @@
-//! Quickstart: sketch a dense dynamic graph stream and query its
-//! connected components.
+//! Quickstart: sketch a dense dynamic graph stream through concurrent
+//! producers and query its connected components — the session API in
+//! one page.
 //!
 //! ```bash
 //! cargo run --release --offline --example quickstart
 //! ```
 
-use landscape::coordinator::{Coordinator, CoordinatorConfig};
 use landscape::stream::dynamify::Dynamify;
 use landscape::stream::erdos::ErdosRenyi;
 use landscape::stream::GraphStream;
+use landscape::Landscape;
 
 fn main() -> anyhow::Result<()> {
     // A dense dynamic graph: G(4096, 1/2) whose edges are inserted and
     // deleted 3 times over (net effect: the final graph).
     let vertices = 1u64 << 12;
+    let producers = 4u64;
     let model = ErdosRenyi::new(vertices, 0.5, 42);
-    let stream = Dynamify::new(model, 3);
     println!(
-        "stream: V={vertices}, ~{} updates",
-        stream.len_hint().unwrap_or(0)
+        "stream: V={vertices}, ~{} updates, {producers} producers",
+        Dynamify::new(model, 3).len_hint().unwrap_or(0)
     );
 
-    // The coordinator: sketches on the main node, CPU work distributed
-    // to (in-process) workers.
-    let mut coord = Coordinator::new(CoordinatorConfig::for_vertices(vertices))?;
+    // The session: validated build, sketches on the main node, CPU work
+    // distributed to (in-process) workers.  Invalid knobs are typed
+    // errors, not panics — e.g. `.vertices(0)` returns
+    // `Err(ConfigError::ZeroVertices)`.
+    let session = Landscape::builder().vertices(vertices).build()?;
     println!(
         "sketch memory: {} total ({} per vertex) — independent of edge count",
-        landscape::benchkit::fmt_bytes(coord.sketch_bytes() as f64),
-        landscape::benchkit::fmt_bytes(coord.params().bytes() as f64),
+        landscape::benchkit::fmt_bytes(session.sketch_bytes() as f64),
+        landscape::benchkit::fmt_bytes(session.params().bytes() as f64),
     );
 
-    let report = coord.ingest_all(stream);
+    // N concurrent producers, each with its own Send ingest handle.
+    // ErdosRenyi is Copy, so every thread re-derives its stream slice.
+    let sw = landscape::util::timer::Stopwatch::new();
+    std::thread::scope(|scope| {
+        for p in 0..producers {
+            let mut handle = session.ingest_handle();
+            scope.spawn(move || {
+                for (i, u) in Dynamify::new(model, 3).enumerate() {
+                    if i as u64 % producers == p {
+                        handle.ingest(u);
+                    }
+                }
+            }); // dropping the handle publishes its tail
+        }
+    });
+    session.flush(); // barrier: every update has reached a sketch
+    let m = session.metrics();
     println!(
-        "ingested {} updates in {:.2}s ({})",
-        report.updates,
-        report.seconds,
-        landscape::benchkit::fmt_rate(report.rate())
+        "ingested {} updates in {:.2}s ({}) across {} handles",
+        m.updates_ingested,
+        sw.elapsed_secs(),
+        landscape::benchkit::fmt_rate(m.updates_ingested as f64 / sw.elapsed_secs()),
+        m.handles_spawned,
     );
 
-    // Global connectivity query.
-    let forest = coord.connected_components();
+    // Read side: no &mut access to ingestion, cloneable across threads.
+    let queries = session.query_handle();
+    let forest = queries.connected_components();
     println!(
         "connected components: {} ({} spanning-forest edges)",
         forest.num_components(),
@@ -47,10 +68,10 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Batched reachability.
-    let answers = coord.reachability(&[(0, 1), (0, 2048), (1, 4095)]);
+    let answers = queries.reachability(&[(0, 1), (0, 2048), (1, 4095)]);
     println!("reachability [(0,1),(0,2048),(1,4095)] = {answers:?}");
 
-    let m = coord.metrics();
+    let m = session.metrics();
     println!(
         "network: {:.2}x the input stream ({} batches to workers)",
         m.communication_factor(),

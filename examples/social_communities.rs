@@ -12,7 +12,7 @@
 //! cargo run --release --offline --example social_communities
 //! ```
 
-use landscape::coordinator::{Coordinator, CoordinatorConfig};
+use landscape::Landscape;
 use landscape::stream::realworld::ChungLu;
 use landscape::stream::{EdgeModel, Update};
 use landscape::util::rng::Xoshiro256;
@@ -21,7 +21,9 @@ use landscape::util::timer::Stopwatch;
 fn main() -> anyhow::Result<()> {
     let users = 20_000u64;
     let base = ChungLu::new(users, 0.5, 120_000, 7);
-    let mut coord = Coordinator::new(CoordinatorConfig::for_vertices(users))?;
+    let session = Landscape::builder().vertices(users).build()?;
+    let mut ingest = session.ingest_handle();
+    let queries = session.query_handle();
     let mut rng = Xoshiro256::new(99);
 
     // Phase 1: the initial friendship graph arrives as a stream.
@@ -30,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     for a in 0..users as u32 {
         for b in (a + 1)..(users as u32).min(a + 2000) {
             if base.contains(a, b) {
-                coord.ingest(Update::insert(a, b));
+                ingest.ingest(Update::insert(a, b));
                 live.push((a, b));
             }
         }
@@ -48,7 +50,7 @@ fn main() -> anyhow::Result<()> {
             // remove a random existing friendship
             let i = rng.next_below(live.len() as u64) as usize;
             let (a, b) = live.swap_remove(i);
-            coord.ingest(Update::delete(a, b));
+            ingest.ingest(Update::delete(a, b));
             // ... and form a new random one
             loop {
                 let x = rng.next_below(users) as u32;
@@ -57,16 +59,18 @@ fn main() -> anyhow::Result<()> {
                     && !live.contains(&(x.min(y), x.max(y)))
                     && !base.contains(x.min(y), x.max(y))
                 {
-                    coord.ingest(Update::insert(x, y));
+                    ingest.ingest(Update::insert(x, y));
                     live.push((x.min(y), x.max(y)));
                     break;
                 }
             }
         }
 
-        // community query at the end of the epoch
+        // community query at the end of the epoch: publish this
+        // producer's tail, then query through the read-side handle
+        ingest.flush();
         let qsw = Stopwatch::new();
-        let forest = coord.connected_components();
+        let forest = queries.connected_components();
         let communities = forest.num_components();
         let q1 = qsw.elapsed_secs();
 
@@ -80,7 +84,7 @@ fn main() -> anyhow::Result<()> {
             })
             .collect();
         let qsw = Stopwatch::new();
-        let reach = coord.reachability(&pairs);
+        let reach = queries.reachability(&pairs);
         let connected = reach.iter().filter(|&&r| r).count();
         println!(
             "epoch {epoch}: {churn} churns, {communities} communities \
@@ -90,7 +94,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    let m = coord.metrics();
+    let m = session.metrics();
     println!(
         "totals: {} updates, {} full / {} partial / {} GreedyCC-served \
          queries, {} communities dirtied",

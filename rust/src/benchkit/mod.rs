@@ -144,7 +144,7 @@ impl Table {
 
     /// Print text to stderr, CSV to stdout, and optionally save CSV.
     pub fn emit(&self, csv_path: Option<&std::path::Path>) {
-        eprintln!("{}", self.render());
+        crate::log_info!("{}", self.render());
         println!("{}", self.to_csv());
         if let Some(p) = csv_path {
             if let Some(dir) = p.parent() {

@@ -111,14 +111,34 @@ impl GreedyCC {
     /// Observe an edge deletion from the stream.  Deleting a forest edge
     /// marks its component dirty (paper: "GreedyCC does not retain
     /// enough information to find a replacement edge" — but only for
-    /// that component).  Returns `true` when a previously-clean
-    /// component transitioned to dirty (the `dirty_components` metric).
-    pub fn on_delete(&mut self, u: u32, v: u32) -> bool {
+    /// that component).  Returns the number of previously-clean
+    /// components that transitioned to dirty (the `dirty_components`
+    /// metric; 0, 1, or — for a reordered delete — 2).
+    ///
+    /// Updates may arrive through concurrent ingest handles whose logs
+    /// drain in an order that is *not* a valid serialization of the
+    /// original stream: a delete can be observed before the insert it
+    /// cancels.  Such a delete reaches neither arm of the fast path —
+    /// the edge is not in the forest, and its endpoints may still be in
+    /// different DSU components.  Treating it as a no-op would be
+    /// unsound: the pending insert would later union the endpoints into
+    /// a clean component even though the true graph has no such edge.
+    /// Instead both endpoint components are marked dirty; dirtiness is
+    /// contagious through [`Self::on_insert`], so when the matching
+    /// insert arrives the merged component stays dirty and the next
+    /// query resolves it exactly from the sketches.
+    pub fn on_delete(&mut self, u: u32, v: u32) -> usize {
         if !self.forest_edges.remove(&(u.min(v), u.max(v))) {
-            return false; // non-forest deletion: partition unchanged
+            let (ru, rv) = (self.dsu.find(u), self.dsu.find(v));
+            if ru == rv {
+                return 0; // cycle-edge deletion: partition unchanged
+            }
+            // delete observed before its insert (multi-producer log
+            // reordering): conservatively dirty both sides
+            return self.dirty.insert(ru) as usize + self.dirty.insert(rv) as usize;
         }
         // u and v share a root by construction (the edge was in the forest)
-        self.dirty.insert(self.dsu.find(u))
+        self.dirty.insert(self.dsu.find(u)) as usize
     }
 
     /// Global connectivity answer in O(V).  `None` if any component is
@@ -220,7 +240,7 @@ mod tests {
         g.on_insert(0, 1);
         g.on_insert(1, 2);
         g.on_insert(0, 2); // cycle edge: not in forest
-        assert!(!g.on_delete(0, 2));
+        assert_eq!(g.on_delete(0, 2), 0);
         assert!(g.is_valid());
         assert!(g.components().unwrap().connected(0, 2));
     }
@@ -231,7 +251,7 @@ mod tests {
         g.on_insert(0, 1);
         g.on_insert(2, 3);
         g.on_insert(4, 5);
-        assert!(g.on_delete(0, 1), "first forest delete newly dirties");
+        assert_eq!(g.on_delete(0, 1), 1, "first forest delete newly dirties");
         assert!(!g.is_valid());
         assert_eq!(g.dirty_count(), 1);
         assert!(g.components().is_none());
@@ -246,8 +266,8 @@ mod tests {
         let mut g = GreedyCC::fresh(4);
         g.on_insert(0, 1);
         g.on_insert(1, 2);
-        assert!(g.on_delete(0, 1));
-        assert!(!g.on_delete(1, 2), "component already dirty");
+        assert_eq!(g.on_delete(0, 1), 1);
+        assert_eq!(g.on_delete(1, 2), 0, "component already dirty");
         assert_eq!(g.dirty_count(), 1);
     }
 
@@ -357,6 +377,69 @@ mod tests {
             }
             let pairs: Vec<(u32, u32)> =
                 (0..8).map(|_| arb_edge(rng, v)).collect();
+            if let Some(answers) = g.reachability(&pairs) {
+                for (&(a, b), got) in pairs.iter().zip(answers) {
+                    assert_eq!(got, d.connected(a, b), "pair ({a},{b})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn delete_before_insert_dirties_both_sides() {
+        // a delete observed before its insert (multi-producer log
+        // reordering) must not let the later insert build a clean —
+        // but false — forest edge
+        let mut g = GreedyCC::fresh(4);
+        assert_eq!(g.on_delete(0, 1), 2, "both singleton components dirty");
+        g.on_insert(0, 1); // the reordered insert arrives
+        assert!(!g.is_valid(), "canceled edge must not look clean");
+        assert!(g.components().is_none());
+        // untouched vertices stay clean and answerable
+        assert_eq!(g.reachability(&[(2, 3)]), Some(vec![false]));
+    }
+
+    #[test]
+    fn arbitrary_reorderings_never_certify_a_wrong_answer() {
+        // property: build a valid insert/delete stream, apply it in a
+        // random per-update permutation (the multi-producer drain
+        // order), and check every reachability answer GreedyCC is
+        // willing to give against a DSU over the true final edge set
+        Cases::new(25).run(|rng| {
+            let v = 4 + rng.next_below(32);
+            let mut live = std::collections::BTreeSet::new();
+            let mut stream: Vec<(bool, (u32, u32))> = Vec::new();
+            for _ in 0..rng.next_below(100) {
+                if !live.is_empty() && rng.next_below(3) == 0 {
+                    let i = rng.next_below(live.len() as u64) as usize;
+                    let e: (u32, u32) = *live.iter().nth(i).unwrap();
+                    live.remove(&e);
+                    stream.push((false, e));
+                } else {
+                    let e = arb_edge(rng, v);
+                    if live.insert(e) {
+                        stream.push((true, e));
+                    }
+                }
+            }
+            // random permutation (Fisher–Yates)
+            for i in (1..stream.len()).rev() {
+                let j = rng.next_below(i as u64 + 1) as usize;
+                stream.swap(i, j);
+            }
+            let mut g = GreedyCC::fresh(v);
+            for &(insert, (a, b)) in &stream {
+                if insert {
+                    g.on_insert(a, b);
+                } else {
+                    g.on_delete(a, b);
+                }
+            }
+            let mut d = Dsu::new(v as usize);
+            for &(a, b) in &live {
+                d.union(a, b);
+            }
+            let pairs: Vec<(u32, u32)> = (0..8).map(|_| arb_edge(rng, v)).collect();
             if let Some(answers) = g.reachability(&pairs) {
                 for (&(a, b), got) in pairs.iter().zip(answers) {
                     assert_eq!(got, d.connected(a, b), "pair ({a},{b})");

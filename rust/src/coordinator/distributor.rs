@@ -53,7 +53,7 @@ impl Distributor {
         let mut backend = match self.build_backend(&mut failed, &mut current_slot) {
             Ok(b) => b,
             Err(e) => {
-                eprintln!("distributor {}: backend init failed: {e:#}", self.shard);
+                crate::log_error!("distributor {}: backend init failed: {e:#}", self.shard);
                 self.abandon_shard();
                 return;
             }
@@ -141,7 +141,7 @@ impl Distributor {
                                 // backend survives, the batch does not
                                 Metrics::add(&self.metrics.batches_dropped, 1);
                                 self.barrier.complete();
-                                eprintln!("worker error (batch dropped): {e:#}");
+                                crate::log_warn!("worker error (batch dropped): {e:#}");
                             }
                         }
                     }
@@ -160,7 +160,7 @@ impl Distributor {
             self.reconcile_wire_bytes(&*backend, &mut wire_metered);
         }
         if let Err(e) = backend.finish() {
-            eprintln!("distributor {}: close handshake failed: {e:#}", self.shard);
+            crate::log_warn!("distributor {}: close handshake failed: {e:#}", self.shard);
         }
         self.reconcile_wire_bytes(&*backend, &mut wire_metered);
     }
@@ -199,7 +199,7 @@ impl Distributor {
             // a protocol-corrupt delta (version-skewed worker) must not
             // panic the distributor — that would strand the barrier.
             // Treat it as a metered lost batch instead.
-            eprintln!(
+            crate::log_warn!(
                 "distributor {}: delta for vertex {} has {} words, want {} — dropped",
                 self.shard,
                 c.vertex,
@@ -282,7 +282,7 @@ impl Distributor {
             ) {
                 Ok(conn) => return Ok((slot, conn)),
                 Err(e) => {
-                    eprintln!(
+                    crate::log_warn!(
                         "distributor {}: connect {} failed: {e:#}",
                         self.shard, addrs[slot]
                     );
@@ -322,7 +322,7 @@ impl Distributor {
         for c in scratch.drain(..) {
             self.merge(c);
         }
-        eprintln!(
+        crate::log_warn!(
             "distributor {}: worker connection died with {} unacknowledged batches",
             self.shard,
             unacked.len()
@@ -371,7 +371,7 @@ impl Distributor {
             }
             if n > 0 {
                 Metrics::add(&self.metrics.batches_requeued, n);
-                eprintln!(
+                crate::log_info!(
                     "distributor {}: requeued {n} batches to {}",
                     self.shard, addrs[slot]
                 );

@@ -1,8 +1,13 @@
-//! The main-node coordinator (paper §5, §6, App. E): stream ingestion
-//! through the pipeline hypertree, vertex-based batching, dispatch to
-//! worker backends via the Work Queue, sketch-delta merging, and query
-//! processing (GreedyCC fast path / sketch-Borůvka / k-connectivity
-//! certificates).
+//! The main-node coordinator layer (paper §5, §6, App. E): configuration
+//! types, the shard-affine work queues, the distributor threads, and the
+//! tiered query engine.
+//!
+//! The *public* surface moved to [`crate::session`]: build a
+//! [`crate::session::Landscape`] with `Landscape::builder()`, spawn
+//! [`crate::session::IngestHandle`]s for N concurrent producers, and
+//! query through [`crate::session::QueryHandle`].  The single-owner
+//! [`Coordinator`] remains as a deprecated thin shim over one session +
+//! one ingest handle so existing code keeps compiling for one release.
 //!
 //! Data flow (Fig. 2).  Every stage after batching is sharded by vertex
 //! (`shard = hash(v) % N`, one shard per distributor thread), so a batch
@@ -10,43 +15,40 @@
 //! the merge path never takes a global lock:
 //!
 //! ```text
-//! stream ──► GreedyCC (inline)
-//!        └─► pipeline hypertree ──► vertex-based batches ──► shard queues
-//!                                                              │ (1 per
-//!             sketch shard s  ◄── XOR merge ◄── deltas ◄───────┘  shard)
+//! producer 1 ─► IngestHandle ─┐ (thread-local levels + update log)
+//! producer … ─► IngestHandle ─┤
+//! producer N ─► IngestHandle ─┴► shared hypertree ──► vertex batches
+//!                                                        │ (1 queue
+//!             sketch shard s  ◄── XOR merge ◄── deltas ◄─┘  per shard)
 //!                                            (distributor s only)
 //! ```
 
-mod distributor;
+pub(crate) mod distributor;
 pub mod query;
 pub mod work_queue;
 
-use std::sync::Arc;
-use std::thread::JoinHandle;
-
 use anyhow::{anyhow, Result};
 
-use crate::connectivity::boruvka::{boruvka_components, boruvka_components_from};
-use crate::connectivity::greedycc::PartialSeed;
 use crate::connectivity::kconn::KConnectivity;
 use crate::connectivity::SpanningForest;
-use crate::hypertree::{BatchSink, Hypertree, HypertreeConfig, VertexBatch};
-use crate::gutter::GutterBuffer;
-use crate::metrics::{Metrics, MetricsSnapshot};
+use crate::hypertree::VertexBatch;
+use crate::metrics::MetricsSnapshot;
+use crate::session::{IngestHandle, Landscape, LandscapeBuilder};
 use crate::sketch::params::SketchParams;
 use crate::sketch::shard::ShardSpec;
-use crate::stream::update::{Update, UPDATE_WIRE_BYTES};
+use crate::stream::update::Update;
 use crate::stream::GraphStream;
 #[cfg(feature = "xla")]
 use crate::worker::XlaWorker;
 use crate::worker::{CubeWorker, NativeWorker, WorkerBackend, WorkerSeeds};
+
+pub use crate::session::IngestReport;
 pub use query::{QueryEngine, QueryTier};
-use work_queue::{FlushBarrier, ShardedWorkQueue};
 
 /// Build an in-process worker backend inside a distributor thread.
 /// `WorkerKind::Remote` never comes through here — the distributor
 /// builds a pipelined connection (with failover) for it instead.
-fn build_inline_backend(
+pub(crate) fn build_inline_backend(
     kind: &WorkerKind,
     params: SketchParams,
     graph_seed: u64,
@@ -91,6 +93,11 @@ pub enum BufferKind {
 }
 
 /// Coordinator configuration (defaults mirror §6 / App. E).
+///
+/// This is the underlying knob store for
+/// [`crate::session::LandscapeBuilder`]; prefer the builder, which
+/// validates every field with a typed
+/// [`crate::session::ConfigError`] instead of clamping or panicking.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     pub vertices: u64,
@@ -154,12 +161,6 @@ impl CoordinatorConfig {
     }
 }
 
-/// Update buffer: hypertree or gutter (ablation), behind one interface.
-enum Buffer {
-    Hyper(Arc<Hypertree>),
-    Gutter(Arc<GutterBuffer>),
-}
-
 /// One unit of shard-affine work for a distributor thread.
 pub(crate) enum WorkItem {
     /// A γ-full batch: worker backend → sketch delta → exclusive merge.
@@ -169,336 +170,116 @@ pub(crate) enum WorkItem {
     Local(VertexBatch),
 }
 
-/// Shared sink: every batch is routed to the shard queue of the
-/// distributor thread owning its vertex.  Underfull leaves travel the
-/// same shard-affine path as `WorkItem::Local` so that *all* sketch
-/// writes during ingestion happen on the owning thread — which is what
-/// makes the distributors' lock-free exclusive merge sound.
-struct QueueSink {
-    queue: Arc<ShardedWorkQueue<WorkItem>>,
-    spec: ShardSpec,
-    metrics: Arc<Metrics>,
-    barrier: Arc<FlushBarrier>,
-    /// Meter `batch_bytes_sent` here with the nominal 8+4n accounting.
-    /// True for in-process workers (nothing crosses a wire, the nominal
-    /// figure *is* the model); false for remote workers, where the
-    /// distributor meters the real framing-layer bytes instead.
-    meter_batch_bytes: bool,
-}
-
-impl QueueSink {
-    fn enqueue(&self, shard: usize, item: WorkItem) {
-        let (kind, vertex, len) = match &item {
-            WorkItem::Distribute(b) => ("distribute", b.vertex, b.others.len()),
-            WorkItem::Local(b) => ("local", b.vertex, b.others.len()),
-        };
-        self.barrier.register();
-        if !self.queue.push(shard, item) {
-            // the shard queue is closed: these updates will never reach
-            // a sketch, which silently corrupts every later query —
-            // meter and log instead of vanishing
-            self.barrier.complete();
-            Metrics::add(&self.metrics.batches_dropped, 1);
-            eprintln!(
-                "coordinator: DROPPED {kind} batch (vertex {vertex}, {len} \
-                 updates) on closed shard queue {shard}"
-            );
-        }
-    }
-}
-
-impl BatchSink for QueueSink {
-    fn shards(&self) -> ShardSpec {
-        self.spec
-    }
-
-    fn full_batch(&self, shard: usize, batch: VertexBatch) {
-        debug_assert_eq!(shard, self.spec.shard_of(batch.vertex));
-        Metrics::add(&self.metrics.batches_sent, 1);
-        if self.meter_batch_bytes {
-            Metrics::add(&self.metrics.batch_bytes_sent, batch.wire_bytes());
-        }
-        self.enqueue(shard, WorkItem::Distribute(batch));
-    }
-
-    fn local_batch(&self, shard: usize, vertex: u32, others: &[u32]) {
-        debug_assert_eq!(shard, self.spec.shard_of(vertex));
-        self.enqueue(
-            shard,
-            WorkItem::Local(VertexBatch {
-                vertex,
-                others: others.to_vec(),
-            }),
-        );
-    }
-}
-
-/// Report returned by [`Coordinator::ingest_all`].
-#[derive(Clone, Copy, Debug)]
-pub struct IngestReport {
-    pub updates: u64,
-    pub seconds: f64,
-}
-
-impl IngestReport {
-    pub fn rate(&self) -> f64 {
-        crate::util::timer::rate(self.updates, self.seconds)
-    }
-}
-
-/// The main node.
+/// The legacy single-owner facade: one session + one ingest handle
+/// behind the old `&mut self` surface.
+///
+/// Kept for one release so the session redesign is a migration, not a
+/// flag-day break.  Semantics match the old coordinator exactly (the
+/// shim's handle applies query maintenance and metric folding eagerly
+/// per update, so `query_plan` and the metrics are current after every
+/// `ingest`, and hypertree buffering behaves exactly as before), at the
+/// cost of two short uncontended mutex acquisitions per update that the
+/// session API amortizes away.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `Landscape::builder()` — the session API ingests from N \
+            concurrent producers and queries without `&mut`"
+)]
 pub struct Coordinator {
-    config: CoordinatorConfig,
-    params: SketchParams,
-    metrics: Arc<Metrics>,
-    kconn: Arc<KConnectivity>,
-    buffer: Buffer,
-    sink: Arc<QueueSink>,
-    queue: Arc<ShardedWorkQueue<WorkItem>>,
-    barrier: Arc<FlushBarrier>,
-    distributors: Vec<JoinHandle<()>>,
-    /// thread-local hypertree handle for the driver thread
-    local: Option<crate::hypertree::LocalIngest>,
-    query: QueryEngine,
+    // declared before `session`: the handle's Drop publishes its tail
+    // while the distributors are still alive
+    handle: IngestHandle,
+    session: Landscape,
 }
 
+#[allow(deprecated)]
 impl Coordinator {
+    /// Build the session and its single ingest handle.  Configuration
+    /// errors that the builder rejects with a typed
+    /// [`crate::session::ConfigError`] surface here as `anyhow` errors.
     pub fn new(config: CoordinatorConfig) -> Result<Self> {
-        let params = config.params();
-        let spec = config.shard_spec();
-        let metrics = Arc::new(Metrics::new());
-        let kconn = Arc::new(KConnectivity::with_shards(
-            params,
-            config.graph_seed,
-            config.k,
-            spec,
-        ));
-        let queue = Arc::new(ShardedWorkQueue::new(spec.count(), config.queue_capacity));
-        let barrier = Arc::new(FlushBarrier::new());
-
-        let buffer = match config.buffer {
-            BufferKind::Hypertree => Buffer::Hyper(Arc::new(Hypertree::new(
-                HypertreeConfig::for_vertices(config.vertices, config.leaf_capacity()),
-                metrics.clone(),
-            ))),
-            BufferKind::Gutter => Buffer::Gutter(Arc::new(GutterBuffer::new(
-                config.vertices,
-                config.leaf_capacity(),
-                spec,
-                metrics.clone(),
-            ))),
-        };
-
-        let sink = Arc::new(QueueSink {
-            queue: queue.clone(),
-            spec,
-            metrics: metrics.clone(),
-            barrier: barrier.clone(),
-            meter_batch_bytes: !matches!(config.worker, WorkerKind::Remote { .. }),
-        });
-
-        let mut coord = Self {
-            local: None,
-            query: QueryEngine::new(config.vertices, config.use_greedycc, metrics.clone()),
-            params,
-            metrics,
-            kconn,
-            buffer,
-            sink,
-            queue,
-            barrier,
-            distributors: Vec::new(),
-            config,
-        };
-        coord.spawn_distributors()?;
-        if let Buffer::Hyper(ref t) = coord.buffer {
-            coord.local = Some(t.local());
-        }
-        Ok(coord)
-    }
-
-    fn spawn_distributors(&mut self) -> Result<()> {
-        // one distributor per shard: thread `shard` is the only writer
-        // of sketch shard `shard` during ingestion, so its merges use
-        // the lock-free exclusive path.  The loop itself (interleaved
-        // submit/drain, out-of-order merge, remote failover) lives in
-        // `distributor::Distributor::run`.
-        for shard in 0..self.config.shard_spec().count() {
-            // construction data is Send — the backend itself is built
-            // inside the thread (PJRT handles are thread-bound)
-            let d = distributor::Distributor {
-                shard,
-                kind: self.config.worker.clone(),
-                params: self.params,
-                graph_seed: self.config.graph_seed,
-                k: self.config.k,
-                window: self.config.remote_window.max(1),
-                queue: self.queue.clone(),
-                kconn: self.kconn.clone(),
-                metrics: self.metrics.clone(),
-                barrier: self.barrier.clone(),
-            };
-            self.distributors.push(std::thread::spawn(move || d.run()));
-        }
-        Ok(())
+        let session = LandscapeBuilder::from_config(config)
+            .build()
+            .map_err(|e| anyhow!("invalid coordinator config: {e}"))?;
+        let handle = session.shim_handle();
+        Ok(Self { handle, session })
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        self.session.metrics()
     }
 
     pub fn params(&self) -> &SketchParams {
-        &self.params
+        self.session.params()
     }
 
     pub fn config(&self) -> &CoordinatorConfig {
-        &self.config
+        self.session.config()
     }
 
     /// Main-node sketch memory in bytes.
     pub fn sketch_bytes(&self) -> usize {
-        self.kconn.bytes()
+        self.session.sketch_bytes()
     }
 
     /// Ingest one stream update.
     pub fn ingest(&mut self, update: Update) {
-        Metrics::add(&self.metrics.updates_ingested, 1);
-        Metrics::add(&self.metrics.stream_bytes, UPDATE_WIRE_BYTES);
-
-        // uncontended (`&mut` + get_mut) — no lock on the hot path
-        self.query.on_update(&update);
-
-        match &self.buffer {
-            Buffer::Hyper(_) => {
-                let local = self.local.as_mut().expect("hypertree local handle");
-                local.insert(update.u, update.v, &*self.sink);
-                local.insert(update.v, update.u, &*self.sink);
-            }
-            Buffer::Gutter(g) => {
-                g.insert(update.u, update.v, &*self.sink);
-                g.insert(update.v, update.u, &*self.sink);
-            }
-        }
+        self.handle.ingest(update);
     }
 
     /// Ingest an entire stream, returning the throughput report.
     pub fn ingest_all<S: GraphStream>(&mut self, stream: S) -> IngestReport {
-        let sw = crate::util::timer::Stopwatch::new();
-        let mut n = 0u64;
-        for update in stream {
-            self.ingest(update);
-            n += 1;
-        }
-        IngestReport {
-            updates: n,
-            seconds: sw.elapsed_secs(),
-        }
+        self.handle.ingest_all(stream)
     }
 
-    /// The query barrier (§5.3): flush all pending updates — γ-full
-    /// leaves to workers, the rest locally — then sleep on the flush
-    /// barrier's condvar until every in-flight item has merged (the seed
-    /// design poll-slept here, quantizing query latency to 200 µs).
+    /// The query barrier (§5.3): publish this owner's buffered tail,
+    /// flush all pending updates — γ-full leaves to workers, the rest
+    /// locally — then sleep on the flush barrier's condvar until every
+    /// in-flight item has merged.
     pub fn flush_pending(&mut self) {
-        if let Some(local) = self.local.as_mut() {
-            local.flush(&*self.sink);
-        }
-        match &self.buffer {
-            Buffer::Hyper(t) => t.force_flush(self.config.gamma, &*self.sink),
-            Buffer::Gutter(g) => g.force_flush(self.config.gamma, &*self.sink),
-        }
-        self.barrier.wait_idle();
+        self.handle.flush();
+        self.session.flush();
     }
 
     /// The tier that would answer [`Self::connected_components`] now.
     pub fn query_plan(&self) -> QueryTier {
-        self.query.plan()
+        self.session.query_handle().query_plan()
     }
 
-    /// Global connectivity query, answered by the cheapest valid tier:
-    ///
-    /// * tier 0 — GreedyCC (all components clean): O(V), **no flush**;
-    /// * tier 1 — some components dirty: flush + Borůvka warm-started
-    ///   from the surviving forest, aggregating only dirty-region
-    ///   vertices;
-    /// * tier 2 — accelerator disabled: full flush + Borůvka.
+    /// Global connectivity query, answered by the cheapest valid tier
+    /// (see [`crate::session::QueryHandle::connected_components`]).
     pub fn connected_components(&mut self) -> SpanningForest {
-        if let Some(forest) = self.query.try_greedy() {
-            Metrics::add(&self.metrics.queries_greedy, 1);
-            return forest;
-        }
-        if let Some(seed) = self.query.partial_seed() {
-            return self.partial_connectivity_query(seed);
-        }
-        self.full_connectivity_query()
-    }
-
-    /// Tier 1: flush, then resolve only the dirty components against the
-    /// sketches; clean components ride along as contracted supernodes.
-    fn partial_connectivity_query(&mut self, seed: PartialSeed) -> SpanningForest {
-        self.flush_pending();
-        let result = boruvka_components_from(
-            &self.kconn.stores()[0],
-            seed.dsu,
-            seed.forest_edges,
-            &seed.dirty_vertices,
-        );
-        Metrics::add(&self.metrics.queries_partial, 1);
-        self.query.reseed(self.params.v, &result.forest);
-        result.forest
+        self.handle.flush();
+        self.session.query_handle().connected_components()
     }
 
     /// Force the full (flush + Borůvka) query path — tier 2.
     pub fn full_connectivity_query(&mut self) -> SpanningForest {
-        self.flush_pending();
-        let result = boruvka_components(&self.kconn.stores()[0]);
-        Metrics::add(&self.metrics.queries_full, 1);
-        self.query.reseed(self.params.v, &result.forest);
-        result.forest
+        self.handle.flush();
+        self.session.query_handle().full_connectivity_query()
     }
 
-    /// Batched reachability query (§5.3).  Tier 0 answers when no
-    /// queried pair touches a dirty component; otherwise the query
-    /// escalates exactly like [`Self::connected_components`].
+    /// Batched reachability query (§5.3).
     pub fn reachability(&mut self, pairs: &[(u32, u32)]) -> Vec<bool> {
-        if let Some(answers) = self.query.try_reachability(pairs) {
-            Metrics::add(&self.metrics.queries_greedy, 1);
-            return answers;
-        }
-        let forest = self.connected_components();
-        pairs
-            .iter()
-            .map(|&(a, b)| forest.connected(a, b))
-            .collect()
+        self.handle.flush();
+        self.session.query_handle().reachability(pairs)
     }
 
     /// k-edge-connectivity query: `Some(w)` when the min cut w < k,
     /// `None` meaning "at least k".
     pub fn k_connectivity(&mut self) -> Option<u64> {
-        self.flush_pending();
-        Metrics::add(&self.metrics.queries_full, 1);
-        self.kconn.query_capped_connectivity()
+        self.handle.flush();
+        self.session.query_handle().k_connectivity()
     }
 
     /// Access the underlying sketch copies (benches, tests).
     pub fn kconn(&self) -> &KConnectivity {
-        &self.kconn
-    }
-}
-
-impl Drop for Coordinator {
-    fn drop(&mut self) {
-        self.queue.close();
-        for h in self.distributors.drain(..) {
-            let _ = h.join();
-        }
-        // remote connections are owned by the (now-joined) distributor
-        // threads, which ended them with the SHUTDOWN → BYE handshake
-        // (or tore them down on failover) before exiting.
+        self.session.kconn()
     }
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::connectivity::dsu::Dsu;
@@ -532,6 +313,15 @@ mod tests {
             }
         }
         true
+    }
+
+    #[test]
+    fn shim_rejects_invalid_configs_instead_of_panicking() {
+        let mut cfg = small_config(64);
+        cfg.queue_capacity = 0;
+        assert!(Coordinator::new(cfg).is_err(), "typed rejection, no panic");
+        let cfg0 = CoordinatorConfig::for_vertices(0);
+        assert!(Coordinator::new(cfg0).is_err());
     }
 
     #[test]

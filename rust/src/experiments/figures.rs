@@ -4,7 +4,8 @@
 use crate::analysis::cluster_model::{measure_stage_costs, BufferingKind, KernelKind};
 use crate::analysis::{rambw, survey};
 use crate::benchkit::Table;
-use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::coordinator::CoordinatorConfig;
+use crate::session::Landscape;
 use crate::stream::datasets;
 use crate::stream::EdgeModel;
 use crate::util::rng::Xoshiro256;
@@ -16,7 +17,7 @@ use crate::util::timer::Stopwatch;
 pub fn fig1_survey() -> Table {
     let catalog = survey::synthesize_catalog(0x5EED);
     let summary = survey::summarize(&catalog);
-    eprintln!(
+    crate::log_info!(
         "survey: {}/{} datasets under the 16 GB adjacency-list frontier \
          (max {:.1} GiB)",
         summary.under_frontier,
@@ -50,7 +51,7 @@ pub fn fig3_scaling(quick: bool) -> Table {
 
     let costs = measure_stage_costs(v, samples, KernelKind::Cameo, BufferingKind::Hypertree);
     let (seq, rnd) = rambw::measure_defaults();
-    eprintln!(
+    crate::log_info!(
         "measured: main {:.0} ns/u, worker {:.0} ns/u, merge {:.1} ns/u; \
          RAM seq {:.2} GiB/s ({:.0} Mu/s), random {:.2} GiB/s ({:.0} Mu/s)",
         costs.main_per_update * 1e9,
@@ -87,7 +88,7 @@ pub fn fig3_scaling(quick: bool) -> Table {
         ]);
     }
     let sat = costs.saturation_workers_full(16, main_threads);
-    eprintln!(
+    crate::log_info!(
         "saturation at ~{} workers (36 main threads); speedup(40w vs 1w) = {:.1}x",
         sat,
         costs.predict_rate_full(40, 16, main_threads)
@@ -116,7 +117,7 @@ pub fn fig4_ablation(quick: bool) -> Table {
     );
     for (label, kernel, buffering) in configs {
         let costs = measure_stage_costs(v, samples, kernel, buffering);
-        eprintln!(
+        crate::log_info!(
             "{label}: main {:.0} ns/u, worker {:.0} ns/u",
             costs.main_per_update * 1e9,
             costs.worker_per_update * 1e9
@@ -149,7 +150,9 @@ pub fn fig5_query_bursts(quick: bool) -> Table {
     let v = d.model.num_vertices();
     let mut cfg = CoordinatorConfig::for_vertices(v);
     cfg.alpha = 1;
-    let mut coord = Coordinator::new(cfg).unwrap();
+    let session = Landscape::from_config(cfg).unwrap();
+    let mut ingest = session.ingest_handle();
+    let queries = session.query_handle();
 
     let mut t = Table::new(
         "Fig 5 — query latency within bursts (seconds)",
@@ -163,7 +166,7 @@ pub fn fig5_query_bursts(quick: bool) -> Table {
         // ingest a chunk of stream
         for _ in 0..burst_gap {
             match stream.next() {
-                Some(u) => coord.ingest(u),
+                Some(u) => ingest.ingest(u),
                 None => {
                     if burst == 0 {
                         // stream too short for even one burst: still query
@@ -175,6 +178,8 @@ pub fn fig5_query_bursts(quick: bool) -> Table {
                 }
             }
         }
+        // publish this producer's tail so the burst sees the full prefix
+        ingest.flush();
         // burst of 5 queries: 1 forced-full + 4 accelerated
         for q in 0..5u32 {
             let pairs: Vec<(u32, u32)> = (0..64)
@@ -186,13 +191,13 @@ pub fn fig5_query_bursts(quick: bool) -> Table {
                 .collect();
             let sw = Stopwatch::new();
             let kind = if q == 0 {
-                coord.full_connectivity_query();
+                queries.full_connectivity_query();
                 "global(full)"
             } else if q % 2 == 1 {
-                coord.connected_components();
+                queries.connected_components();
                 "global(greedy)"
             } else {
-                coord.reachability(&pairs);
+                queries.reachability(&pairs);
                 "reachability(greedy)"
             };
             t.row(vec![
@@ -253,16 +258,18 @@ pub fn measured_ingestion_rate(dataset: &str, max_updates: u64) -> (u64, f64) {
     let mut cfg = CoordinatorConfig::for_vertices(d.model.num_vertices());
     cfg.alpha = 2;
     cfg.use_greedycc = false;
-    let mut coord = Coordinator::new(cfg).unwrap();
+    let session = Landscape::from_config(cfg).unwrap();
+    let mut ingest = session.ingest_handle();
     let sw = Stopwatch::new();
     let mut n = 0u64;
     for u in d.stream() {
-        coord.ingest(u);
+        ingest.ingest(u);
         n += 1;
         if n >= max_updates {
             break;
         }
     }
-    coord.flush_pending(); // rate counts until sketches are current
+    ingest.flush();
+    session.flush(); // rate counts until sketches are current
     (n, sw.elapsed_secs())
 }

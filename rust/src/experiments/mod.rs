@@ -41,7 +41,7 @@ pub fn run_by_name(name: &str, quick: bool) -> bool {
                 "fig1", "table2", "table6", "fig3", "fig4", "fig5", "table3", "table4",
                 "fig16", "correctness",
             ] {
-                eprintln!("\n### running {exp} ###");
+                crate::log_info!("### running {exp} ###");
                 run_by_name(exp, quick);
             }
         }

@@ -5,7 +5,8 @@
 use crate::analysis::success_prob;
 use crate::baseline::Referee;
 use crate::benchkit::{fmt_bytes, fmt_rate, Table};
-use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::coordinator::CoordinatorConfig;
+use crate::session::Landscape;
 use crate::stream::datasets::{self, Dataset};
 use crate::stream::{count_edges, EdgeModel};
 use crate::util::timer::Stopwatch;
@@ -58,12 +59,14 @@ pub fn run_dataset(d: &Dataset, k: u32, max_updates: u64) -> RunResult {
     cfg.k = k;
     cfg.alpha = 1;
     cfg.use_greedycc = false; // measure the sketch path, as the paper does
-    let mut coord = Coordinator::new(cfg).unwrap();
+    let session = Landscape::from_config(cfg).unwrap();
+    let mut ingest = session.ingest_handle();
+    let queries = session.query_handle();
 
     let sw = Stopwatch::new();
     let mut n = 0u64;
     for u in d.stream() {
-        coord.ingest(u);
+        ingest.ingest(u);
         n += 1;
         if n >= max_updates {
             break;
@@ -71,23 +74,24 @@ pub fn run_dataset(d: &Dataset, k: u32, max_updates: u64) -> RunResult {
     }
     // the paper's metric: wall clock until all updates are *applied to
     // the sketches*, i.e. including the drain of in-flight batches
-    coord.flush_pending();
+    ingest.flush();
+    session.flush();
     let ingest_secs = sw.elapsed_secs();
 
     let qsw = Stopwatch::new();
     if k == 1 {
-        let _ = coord.full_connectivity_query();
+        let _ = queries.full_connectivity_query();
     } else {
-        let _ = coord.k_connectivity();
+        let _ = queries.k_connectivity();
     }
     let query_secs = qsw.elapsed_secs();
 
-    let m = coord.metrics();
+    let m = session.metrics();
     RunResult {
         updates: n,
         seconds: ingest_secs,
         comm_factor: m.communication_factor(),
-        sketch_bytes: coord.sketch_bytes(),
+        sketch_bytes: session.sketch_bytes(),
         query_secs,
         network_bytes: m.network_bytes(),
     }
@@ -115,7 +119,7 @@ pub fn table3_ingestion(quick: bool) -> Table {
     for name in names {
         let d = datasets::by_name(name).unwrap();
         let r = run_dataset(&d, 1, cap);
-        eprintln!(
+        crate::log_info!(
             "{name}: {} updates at {} (comm {:.2}x, sketch {})",
             r.updates,
             fmt_rate(r.updates as f64 / r.seconds),
@@ -150,7 +154,7 @@ pub fn table4_kconn(quick: bool) -> Table {
     );
     for k in [1u32, 2, 4, 8] {
         let r = run_dataset(&d, k, cap);
-        eprintln!(
+        crate::log_info!(
             "k={k}: rate {}, sketch {}, query {:.3}s, net {}",
             fmt_rate(r.updates as f64 / r.seconds),
             fmt_bytes(r.sketch_bytes as f64),
@@ -254,19 +258,21 @@ pub fn correctness(quick: bool) -> Table {
             cfg.graph_seed = 0xBEEF ^ (trial as u64) << 8;
             cfg.alpha = 1;
             cfg.use_greedycc = false;
-            let mut coord = Coordinator::new(cfg).unwrap();
+            let session = Landscape::from_config(cfg).unwrap();
+            let mut ingest = session.ingest_handle();
             let mut referee = Referee::new(v);
             let stream = crate::stream::dynamify::Dynamify::new(ModelRef(&*model), 3);
             for u in stream {
                 referee.apply(&u);
-                coord.ingest(u);
+                ingest.ingest(u);
             }
-            let forest = coord.full_connectivity_query();
+            ingest.flush();
+            let forest = session.query_handle().full_connectivity_query();
             if !Referee::same_partition(&forest.component, &referee.component_map()) {
                 failures += 1;
             }
         }
-        eprintln!("{name}: {failures}/{trials} failures");
+        crate::log_info!("{name}: {failures}/{trials} failures");
         t.row(vec![name.to_string(), trials.to_string(), failures.to_string()]);
     }
     t

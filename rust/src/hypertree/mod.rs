@@ -21,7 +21,7 @@
 
 pub mod node;
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::metrics::Metrics;
@@ -106,6 +106,8 @@ pub struct Hypertree {
     config: HypertreeConfig,
     groups: Vec<Mutex<GroupNode>>,
     metrics: Arc<Metrics>,
+    /// Number of [`LocalIngest`] handles currently alive.
+    live_locals: AtomicUsize,
 }
 
 impl Hypertree {
@@ -123,6 +125,7 @@ impl Hypertree {
             config,
             groups,
             metrics,
+            live_locals: AtomicUsize::new(0),
         }
     }
 
@@ -132,7 +135,13 @@ impl Hypertree {
 
     /// Create a per-thread ingestion handle.
     pub fn local(self: &Arc<Self>) -> LocalIngest {
+        self.live_locals.fetch_add(1, Ordering::Relaxed);
         LocalIngest::new(self.clone())
+    }
+
+    /// Number of [`LocalIngest`] handles currently alive.
+    pub fn live_locals(&self) -> usize {
+        self.live_locals.load(Ordering::Relaxed)
     }
 
     /// Total buffered bytes across global nodes + leaves (space audit).
@@ -209,6 +218,9 @@ pub struct LocalIngest {
     l1: Vec<Vec<(u32, u32)>>,
     /// scratch for grouping runs by destination group
     scratch: Vec<(u32, u32)>,
+    /// entries currently buffered in l0 + l1 (plain counter read by the
+    /// session's per-handle pending gauge through [`Self::buffered`])
+    buffered: usize,
 }
 
 impl LocalIngest {
@@ -222,6 +234,7 @@ impl LocalIngest {
             l0,
             l1,
             scratch: Vec::new(),
+            buffered: 0,
         }
     }
 
@@ -236,9 +249,16 @@ impl LocalIngest {
     #[inline]
     pub fn insert<S: BatchSink>(&mut self, dest: u32, other: u32, sink: &S) {
         self.l0.push((dest, other));
+        self.buffered += 1;
         if self.l0.len() >= self.tree.config.l0_capacity {
             self.flush_l0(sink);
         }
+    }
+
+    /// Entries currently buffered in this handle's thread-local levels
+    /// (invisible to queries until [`Self::flush`]).
+    pub fn buffered(&self) -> usize {
+        self.buffered
     }
 
     fn flush_l0<S: BatchSink>(&mut self, sink: &S) {
@@ -264,6 +284,7 @@ impl LocalIngest {
         // single lock acquisition per group
         self.scratch.clear();
         self.scratch.append(&mut self.l1[bucket]);
+        self.buffered -= self.scratch.len();
         let gs = self.tree.config.group_size as u32;
         self.scratch.sort_unstable_by_key(|&(d, _)| d / gs);
         let mut start = 0;
@@ -288,6 +309,22 @@ impl LocalIngest {
                 self.flush_l1_bucket(b, sink);
             }
         }
+        debug_assert_eq!(self.buffered, 0, "flush left entries behind");
+    }
+}
+
+impl Drop for LocalIngest {
+    fn drop(&mut self) {
+        // a handle must be flushed before it goes away — `Drop` has no
+        // sink to flush into, so anything still buffered is lost
+        if self.buffered > 0 {
+            crate::log_warn!(
+                "hypertree: LocalIngest dropped with {} unflushed entries \
+                 (call flush() before dropping the handle)",
+                self.buffered
+            );
+        }
+        self.tree.live_locals.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -491,6 +528,28 @@ mod tests {
                 assert_eq!((other - 1) % 61, b.vertex);
             }
         }
+    }
+
+    #[test]
+    fn local_handle_and_buffered_accounting() {
+        let t = tree(64, 10);
+        assert_eq!(t.live_locals(), 0);
+        let sink = Collect::default();
+        let mut a = t.local();
+        let mut b = t.local();
+        assert_eq!(t.live_locals(), 2);
+        a.insert(1, 2, &sink);
+        assert_eq!(a.buffered(), 1);
+        b.insert(3, 4, &sink);
+        assert_eq!(b.buffered(), 1);
+        a.flush(&sink);
+        assert_eq!(a.buffered(), 0, "flush drains the local levels");
+        assert_eq!(b.buffered(), 1, "b is untouched by a's flush");
+        b.flush(&sink);
+        assert_eq!(b.buffered(), 0);
+        drop(b);
+        drop(a);
+        assert_eq!(t.live_locals(), 0);
     }
 
     #[test]

@@ -33,16 +33,36 @@
 //!
 //! ## Quick start
 //!
+//! The public API is **session-based**: [`Landscape::builder`] validates
+//! the configuration (typed [`session::ConfigError`], no silent clamps),
+//! the session spawns any number of concurrent [`session::IngestHandle`]
+//! producers, and [`session::QueryHandle`] answers queries without `&mut`
+//! access to ingestion.
+//!
 //! ```no_run
-//! use landscape::coordinator::{Coordinator, CoordinatorConfig};
+//! use landscape::Landscape;
 //! use landscape::stream::{dynamify::Dynamify, erdos::ErdosRenyi};
 //!
-//! let gen = ErdosRenyi::new(1 << 10, 0.5, 7);
-//! let stream = Dynamify::new(gen, 3);
-//! let mut coord =
-//!     Coordinator::new(CoordinatorConfig::for_vertices(1 << 10)).unwrap();
-//! coord.ingest_all(stream);
-//! let cc = coord.connected_components();
+//! let session = Landscape::builder().vertices(1 << 10).build().unwrap();
+//!
+//! // N independent producers, each with its own Send ingest handle
+//! std::thread::scope(|scope| {
+//!     for producer in 0..4u64 {
+//!         let mut handle = session.ingest_handle();
+//!         scope.spawn(move || {
+//!             let gen = ErdosRenyi::new(1 << 10, 0.5, 7);
+//!             for (i, u) in Dynamify::new(gen, 3).enumerate() {
+//!                 if i as u64 % 4 == producer {
+//!                     handle.ingest(u);
+//!                 }
+//!             }
+//!         }); // dropping the handle publishes its tail
+//!     }
+//! });
+//!
+//! // read side: no &mut, cloneable across threads
+//! let queries = session.query_handle();
+//! let cc = queries.connected_components();
 //! println!("{} components", cc.num_components());
 //! ```
 
@@ -66,10 +86,12 @@ pub mod hypertree;
 pub mod metrics;
 pub mod net;
 pub mod runtime;
+pub mod session;
 pub mod sketch;
 pub mod stream;
 pub mod util;
 pub mod worker;
 
+pub use session::{ConfigError, IngestHandle, Landscape, LandscapeBuilder, QueryHandle};
 pub use sketch::params::SketchParams;
 pub use stream::update::{Update, UpdateKind};

@@ -3,20 +3,23 @@
 //! ```text
 //! landscape gen       --dataset kron11 --out stream.lstrm
 //! landscape ingest    --dataset kron11 [--worker native|cube|xla|remote]
-//!                     [--k 1] [--alpha 2] [--gamma 0.04] [--query]
+//!                     [--producers N] [--k 1] [--alpha 2] [--gamma 0.04] [--query]
 //! landscape worker    --listen 0.0.0.0:7011 [--connections N]
 //! landscape bench     <fig1|fig3|fig4|fig5|fig16|table2|table3|table4|
 //!                      table5|table6|correctness|all> [--full]
 //! landscape rambw     — RAM bandwidth probes
 //! ```
-
-// the stream-source closure tuple in cmd_ingest is clearer inline
-#![allow(clippy::type_complexity)]
+//!
+//! Log verbosity is controlled by `LANDSCAPE_LOG`
+//! (`off|error|warn|info|debug`, default `info`).
 
 use landscape::benchkit::{fmt_bytes, fmt_rate};
 use landscape::config::Args;
-use landscape::coordinator::{BufferKind, Coordinator, CoordinatorConfig, WorkerKind};
+use landscape::coordinator::{BufferKind, CoordinatorConfig, WorkerKind};
+use landscape::session::{IngestHandle, Landscape};
+use landscape::stream::update::Update;
 use landscape::stream::{datasets, file, EdgeModel, GraphStream};
+use landscape::{log_error, log_info};
 
 fn main() {
     let args = Args::from_env();
@@ -38,7 +41,8 @@ const HELP: &str = "landscape — distributed graph sketching (paper reproductio
 
 commands:
   gen     --dataset NAME --out FILE        write a stream file
-  ingest  --dataset NAME | --stream FILE   run the coordinator
+  ingest  --dataset NAME | --stream FILE   run an ingestion session
+          [--producers N: concurrent ingest handles (default 1)]
           [--worker native|cube|xla|remote] [--addrs host:port,..]
           [--window N: batches in flight per remote connection]
           [--k N] [--alpha N] [--gamma F] [--buffer hypertree|gutter]
@@ -47,6 +51,7 @@ commands:
   bench   EXPERIMENT [--full]              regenerate a paper table/figure
   rambw                                    RAM bandwidth probes
 
+env: LANDSCAPE_LOG=off|error|warn|info|debug (default info)
 datasets: kron10..13 erdos11..13 gnutella amazon googleplus webuk citeseer
 experiments: fig1 fig3 fig4 fig5 fig16 table2 table3 table4 table5 table6
              correctness all";
@@ -54,18 +59,18 @@ experiments: fig1 fig3 fig4 fig5 fig16 table2 table3 table4 table5 table6
 fn cmd_gen(args: &Args) -> i32 {
     let name = args.get_str("dataset", "kron10");
     let Some(d) = datasets::by_name(&name) else {
-        eprintln!("unknown dataset {name}");
+        log_error!("unknown dataset {name}");
         return 2;
     };
     let out = args.get_str("out", &format!("{name}.lstrm"));
-    eprintln!("generating {name} -> {out} ...");
+    log_info!("generating {name} -> {out} ...");
     match file::write_stream(std::path::Path::new(&out), d.stream()) {
         Ok(n) => {
-            eprintln!("wrote {n} updates ({})", fmt_bytes((n * 9 + 28) as f64));
+            log_info!("wrote {n} updates ({})", fmt_bytes((n * 9 + 28) as f64));
             0
         }
         Err(e) => {
-            eprintln!("error: {e}");
+            log_error!("error: {e}");
             1
         }
     }
@@ -83,7 +88,7 @@ fn build_config(args: &Args, vertices: u64) -> Option<CoordinatorConfig> {
         "hypertree" => BufferKind::Hypertree,
         "gutter" => BufferKind::Gutter,
         other => {
-            eprintln!("unknown buffer kind {other}");
+            log_error!("unknown buffer kind {other}");
             return None;
         }
     };
@@ -99,7 +104,7 @@ fn build_config(args: &Args, vertices: u64) -> Option<CoordinatorConfig> {
                 .collect(),
         },
         other => {
-            eprintln!("unknown worker kind {other}");
+            log_error!("unknown worker kind {other}");
             return None;
         }
     };
@@ -115,104 +120,187 @@ fn xla_worker_kind(args: &Args) -> Option<WorkerKind> {
 
 #[cfg(not(feature = "xla"))]
 fn xla_worker_kind(_args: &Args) -> Option<WorkerKind> {
-    eprintln!("worker kind `xla` requires a build with `--features xla`");
+    log_error!("worker kind `xla` requires a build with `--features xla`");
     None
+}
+
+/// Hand `payload` to the next surviving producer, round-robin.  A dead
+/// producer (closed channel) gives the chunk back via `SendError`; it
+/// is removed and the chunk re-dealt to a survivor.  With no survivors
+/// the chunk is dropped (lost work, reflected in the producers' own
+/// ingest counts).
+fn deal_chunk(
+    senders: &mut Vec<std::sync::mpsc::SyncSender<Vec<Update>>>,
+    next: &mut usize,
+    mut payload: Vec<Update>,
+) {
+    while !senders.is_empty() {
+        let idx = *next % senders.len();
+        match senders[idx].send(payload) {
+            Ok(()) => {
+                *next = (idx + 1) % senders.len();
+                return;
+            }
+            Err(err) => {
+                landscape::log_warn!(
+                    "producer {idx} died; re-dealing its {} buffered updates",
+                    err.0.len()
+                );
+                payload = err.0;
+                senders.remove(idx);
+            }
+        }
+    }
+}
+
+/// Drive `stream` through `producers` concurrent ingest handles: the
+/// main thread deals bounded chunks round-robin over per-producer
+/// channels, each producer thread owns one [`IngestHandle`].  Returns
+/// the number of updates that actually reached a handle (each producer
+/// reports its own count; a crashed producer contributes only what it
+/// finished, and its crash is logged rather than re-raised so the
+/// survivors' work is preserved).
+fn ingest_multi(
+    session: &Landscape,
+    stream: Box<dyn Iterator<Item = Update> + Send>,
+    producers: usize,
+    max_updates: u64,
+) -> u64 {
+    const CHUNK: usize = 1024;
+    std::thread::scope(|scope| {
+        let mut senders = Vec::with_capacity(producers);
+        let mut workers = Vec::with_capacity(producers);
+        for _ in 0..producers {
+            let (tx, rx) = std::sync::mpsc::sync_channel::<Vec<Update>>(8);
+            let mut handle: IngestHandle = session.ingest_handle();
+            workers.push(scope.spawn(move || {
+                let mut ingested = 0u64;
+                for chunk in rx {
+                    for u in chunk {
+                        handle.ingest(u);
+                        ingested += 1;
+                    }
+                }
+                // handle drop publishes the tail
+                ingested
+            }));
+            senders.push(tx);
+        }
+        let mut next = 0usize;
+        let mut chunk = Vec::with_capacity(CHUNK);
+        for u in stream.take(max_updates as usize) {
+            chunk.push(u);
+            if chunk.len() >= CHUNK {
+                let payload = std::mem::replace(&mut chunk, Vec::with_capacity(CHUNK));
+                deal_chunk(&mut senders, &mut next, payload);
+                if senders.is_empty() {
+                    landscape::log_error!("all producers died; abandoning the stream");
+                    break;
+                }
+            }
+        }
+        if !chunk.is_empty() {
+            deal_chunk(&mut senders, &mut next, chunk);
+        }
+        drop(senders); // close the channels so producers finish
+        // count what each producer really ingested; join errors are
+        // producer panics, already paid for with lost updates — log
+        // instead of re-raising so the run still reports honestly
+        let mut n = 0u64;
+        for (i, w) in workers.into_iter().enumerate() {
+            match w.join() {
+                Ok(ingested) => n += ingested,
+                Err(_) => landscape::log_error!("producer {i} panicked; its tail is lost"),
+            }
+        }
+        n
+    })
 }
 
 fn cmd_ingest(args: &Args) -> i32 {
     let max_updates = args.get_u64("max-updates", u64::MAX);
+    let producers = args.get_usize("producers", 1).max(1);
 
     // resolve the stream source
-    let (vertices, run): (u64, Box<dyn FnOnce(&mut Coordinator) -> u64>) =
+    let (vertices, stream): (u64, Box<dyn Iterator<Item = Update> + Send>) =
         if let Some(path) = args.get("stream") {
             let fs = match file::FileStream::open(std::path::Path::new(path)) {
                 Ok(f) => f,
                 Err(e) => {
-                    eprintln!("open {path}: {e}");
+                    log_error!("open {path}: {e}");
                     return 1;
                 }
             };
-            let v = fs.num_vertices();
-            (
-                v,
-                Box::new(move |coord: &mut Coordinator| {
-                    let mut n = 0u64;
-                    for u in fs {
-                        coord.ingest(u);
-                        n += 1;
-                        if n >= max_updates {
-                            break;
-                        }
-                    }
-                    n
-                }),
-            )
+            (fs.num_vertices(), Box::new(fs))
         } else {
             let name = args.get_str("dataset", "kron10");
             let Some(d) = datasets::by_name(&name) else {
-                eprintln!("unknown dataset {name}");
+                log_error!("unknown dataset {name}");
                 return 2;
             };
-            let v = d.model.num_vertices();
-            (
-                v,
-                Box::new(move |coord: &mut Coordinator| {
-                    let mut n = 0u64;
-                    for u in d.stream() {
-                        coord.ingest(u);
-                        n += 1;
-                        if n >= max_updates {
-                            break;
-                        }
-                    }
-                    n
-                }),
-            )
+            // the stream borrows the dataset model; leak it so the
+            // producer threads can hold it for the process lifetime
+            let d: &'static datasets::Dataset = Box::leak(Box::new(d));
+            (d.model.num_vertices(), Box::new(d.stream()))
         };
 
     let Some(cfg) = build_config(args, vertices) else {
         return 2;
     };
     let k = cfg.k;
-    eprintln!(
-        "coordinator: V={vertices}, k={k}, sketch/vertex {}",
+    log_info!(
+        "session: V={vertices}, k={k}, {producers} producer(s), sketch/vertex {}",
         fmt_bytes(cfg.params().bytes() as f64 * k as f64)
     );
-    let mut coord = match Coordinator::new(cfg) {
-        Ok(c) => c,
+    let session = match Landscape::from_config(cfg) {
+        Ok(s) => s,
         Err(e) => {
-            eprintln!("init: {e:#}");
+            log_error!("init: {e}");
             return 1;
         }
     };
 
     let sw = landscape::util::timer::Stopwatch::new();
-    let n = run(&mut coord);
-    coord.flush_pending();
+    let n = if producers == 1 {
+        // no channel overhead on the single-producer path
+        let mut handle = session.ingest_handle();
+        let mut n = 0u64;
+        for u in stream.take(max_updates as usize) {
+            handle.ingest(u);
+            n += 1;
+        }
+        drop(handle); // publish the tail
+        n
+    } else {
+        ingest_multi(&session, stream, producers, max_updates)
+    };
+    session.flush();
     let secs = sw.elapsed_secs();
-    let m = coord.metrics();
-    eprintln!(
-        "ingested {n} updates in {secs:.2}s ({}); comm factor {:.2}x; \
-         sketch {}; local updates {}",
+    let m = session.metrics();
+    log_info!(
+        "ingested {n} updates in {secs:.2}s ({}) across {} handle(s); \
+         comm factor {:.2}x; sketch {}; local updates {}",
         fmt_rate(n as f64 / secs),
+        m.handles_spawned,
         m.communication_factor(),
-        fmt_bytes(coord.sketch_bytes() as f64),
+        fmt_bytes(session.sketch_bytes() as f64),
         m.updates_local,
     );
 
     if args.get_bool("query") {
+        let queries = session.query_handle();
         let qsw = landscape::util::timer::Stopwatch::new();
         if k == 1 {
-            let forest = coord.full_connectivity_query();
-            eprintln!(
+            let forest = queries.full_connectivity_query();
+            log_info!(
                 "connectivity: {} components, {} forest edges ({:.3}s)",
                 forest.num_components(),
                 forest.edges.len(),
                 qsw.elapsed_secs()
             );
         } else {
-            let cut = coord.k_connectivity();
-            eprintln!(
+            let cut = queries.k_connectivity();
+            log_info!(
                 "k-connectivity: {} ({:.3}s)",
                 cut.map(|w| w.to_string()).unwrap_or_else(|| format!(">= {k}")),
                 qsw.elapsed_secs()
@@ -228,11 +316,11 @@ fn cmd_worker(args: &Args) -> i32 {
     let server = match landscape::worker::remote::WorkerServer::bind(&listen) {
         Ok(s) => s,
         Err(e) => {
-            eprintln!("bind {listen}: {e:#}");
+            log_error!("bind {listen}: {e:#}");
             return 1;
         }
     };
-    eprintln!(
+    log_info!(
         "worker listening on {} (stateless; serves {} connections)",
         server.local_addr().map(|a| a.to_string()).unwrap_or(listen),
         if connections == usize::MAX {
@@ -242,7 +330,7 @@ fn cmd_worker(args: &Args) -> i32 {
         }
     );
     if let Err(e) = server.serve(connections) {
-        eprintln!("serve: {e:#}");
+        log_error!("serve: {e:#}");
         return 1;
     }
     0
@@ -260,7 +348,7 @@ fn cmd_bench(args: &Args) -> i32 {
     if landscape::experiments::run_by_name(exp, quick) {
         0
     } else {
-        eprintln!("unknown experiment {exp}");
+        log_error!("unknown experiment {exp}");
         2
     }
 }

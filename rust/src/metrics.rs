@@ -48,6 +48,13 @@ pub struct Metrics {
     pub batches_requeued: AtomicU64,
     /// Remote-worker connection deaths observed by distributors.
     pub worker_failures: AtomicU64,
+    /// Ingest handles spawned from the session over its lifetime
+    /// (producer-parallelism audit: the session API's N-producer story).
+    pub handles_spawned: AtomicU64,
+    /// Bounded per-handle update logs drained into the query engine.
+    /// `updates_ingested / log_drains` ≈ the amortization factor keeping
+    /// GreedyCC maintenance off the cross-thread hot path.
+    pub log_drains: AtomicU64,
 }
 
 /// A plain-value copy of [`Metrics`].
@@ -69,6 +76,8 @@ pub struct MetricsSnapshot {
     pub remote_in_flight_peak: u64,
     pub batches_requeued: u64,
     pub worker_failures: u64,
+    pub handles_spawned: u64,
+    pub log_drains: u64,
 }
 
 impl Metrics {
@@ -105,6 +114,8 @@ impl Metrics {
             remote_in_flight_peak: self.remote_in_flight_peak.load(Ordering::Relaxed),
             batches_requeued: self.batches_requeued.load(Ordering::Relaxed),
             worker_failures: self.worker_failures.load(Ordering::Relaxed),
+            handles_spawned: self.handles_spawned.load(Ordering::Relaxed),
+            log_drains: self.log_drains.load(Ordering::Relaxed),
         }
     }
 }

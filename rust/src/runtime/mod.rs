@@ -219,7 +219,7 @@ mod tests {
     fn manifest_parses_and_covers_configs() {
         let dir = artifacts_dir();
         if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
+            crate::log_info!("skipping: artifacts not built");
             return;
         }
         let m = Manifest::load(&dir).unwrap();

@@ -1,0 +1,289 @@
+//! The two session handles: [`IngestHandle`] (write side, one per
+//! producer thread) and [`QueryHandle`] (read side, cloneable and
+//! `Sync`).
+
+use std::sync::atomic::Ordering as AtomicOrdering;
+use std::sync::Arc;
+
+use crate::connectivity::SpanningForest;
+use crate::coordinator::query::QueryTier;
+use crate::hypertree::LocalIngest;
+use crate::metrics::{Metrics, MetricsSnapshot};
+use crate::stream::update::{Update, UPDATE_WIRE_BYTES};
+use crate::stream::GraphStream;
+
+use super::{Buffer, IngestReport, SessionCore};
+
+/// An independent stream-ingestion handle (`Send`, one per producer
+/// thread).
+///
+/// The per-update path is lock-free from this thread's point of view:
+/// updates go into the handle's own thread-local hypertree levels (or
+/// the striped gutter, in ablation mode) and into a bounded private
+/// update log.  Cross-thread work happens only in amortized bulk — the
+/// hypertree's group-node cascades, the shard queues, and one
+/// mutex-guarded GreedyCC drain per full log.
+///
+/// Call [`IngestHandle::flush`] (or drop the handle) to *publish* its
+/// buffered tail; queries only reflect published updates.
+pub struct IngestHandle {
+    core: Arc<SessionCore>,
+    /// Thread-local hypertree levels (`None` in gutter mode, which
+    /// writes straight to the shared striped buffer).
+    local: Option<LocalIngest>,
+    /// Bounded private update log; drained into the query engine under
+    /// one amortized lock when full, at a flush, or on drop.  Kept
+    /// empty when the GreedyCC accelerator is disabled — the drain
+    /// would be a no-op, so the push would be pure hot-path overhead.
+    log: Vec<Update>,
+    log_capacity: usize,
+    /// Is the query engine consuming the log at all?
+    log_enabled: bool,
+    /// Shim mode (deprecated `Coordinator`): apply query maintenance
+    /// per update instead of logging, and fold metrics per update, so
+    /// the legacy surface's "current after every ingest" contract
+    /// holds.  Sound only because the shim is single-owner — no
+    /// concurrent query can re-seed between GreedyCC learning an
+    /// update and its sketch publication.
+    eager: bool,
+    /// Updates ingested through this handle over its lifetime.
+    ingested: u64,
+    /// Updates not yet folded into the shared metrics counters.
+    unmetered: u64,
+    /// Is this handle currently counted in the session's
+    /// `pending_handles` gauge (i.e. `buffered() > 0`)?
+    gauge_pending: bool,
+}
+
+impl IngestHandle {
+    pub(crate) fn new(core: Arc<SessionCore>, log_capacity: usize) -> Self {
+        Self::build(core, log_capacity, false)
+    }
+
+    /// Shim-mode constructor (see the `eager` field).
+    pub(crate) fn new_eager(core: Arc<SessionCore>) -> Self {
+        Self::build(core, 1, true)
+    }
+
+    fn build(core: Arc<SessionCore>, log_capacity: usize, eager: bool) -> Self {
+        core.handle_opened();
+        let local = match &core.buffer {
+            Buffer::Hyper(t) => Some(t.local()),
+            Buffer::Gutter(_) => None,
+        };
+        let log_enabled = core.query.enabled() && !eager;
+        Self {
+            core,
+            local,
+            log: Vec::with_capacity(if log_enabled { log_capacity } else { 0 }),
+            log_capacity,
+            log_enabled,
+            eager,
+            ingested: 0,
+            unmetered: 0,
+            gauge_pending: false,
+        }
+    }
+
+    /// Ingest one stream update.
+    #[inline]
+    pub fn ingest(&mut self, update: Update) {
+        self.ingested += 1;
+        self.unmetered += 1;
+        if self.log_enabled {
+            self.log.push(update);
+        }
+        // the sketch path is linear: inserts and deletes are the same
+        // XOR, so both endpoints enter the buffer regardless of kind
+        match &self.core.buffer {
+            Buffer::Hyper(_) => {
+                let local = self.local.as_mut().expect("hypertree local handle");
+                local.insert(update.u, update.v, &*self.core.sink);
+                local.insert(update.v, update.u, &*self.core.sink);
+            }
+            Buffer::Gutter(g) => {
+                g.insert(update.u, update.v, &*self.core.sink);
+                g.insert(update.v, update.u, &*self.core.sink);
+            }
+        }
+        if self.eager {
+            // legacy-shim semantics: GreedyCC and the metrics are
+            // current after every ingest (two short uncontended locks
+            // the session log amortizes away for real producers)
+            self.core.apply_log(std::slice::from_ref(&update));
+            self.fold_meter();
+        } else if self.log_enabled {
+            if self.log.len() >= self.log_capacity {
+                self.publish();
+            }
+        } else if self.unmetered >= self.log_capacity as u64 {
+            // no log to drain (accelerator off): still fold the ingest
+            // counters at the same cadence so metrics don't stall
+            // until the next flush
+            self.fold_meter();
+        }
+        self.sync_pending_gauge();
+    }
+
+    /// Publish in the only sound order: thread-local hypertree levels
+    /// into the shared tree *first*, then the update log into the query
+    /// engine.  The reverse would let GreedyCC learn an update whose
+    /// sketch entries are still invisible to a concurrent query's flush
+    /// barrier — that query's `reseed` would then rebuild GreedyCC from
+    /// sketches lacking the update and permanently discard the drained
+    /// knowledge, leaving later tier-0 answers stale even after this
+    /// handle flushes.  Publishing the buffers first keeps the
+    /// invariant "GreedyCC knowledge ⊆ shared-tree content", under
+    /// which a re-seed can only ever be *ahead* of the accelerator,
+    /// and post-re-seed drains re-apply safely (inserts re-union,
+    /// unclassifiable deletes conservatively dirty).
+    fn publish(&mut self) {
+        if let Some(local) = self.local.as_mut() {
+            local.flush(&*self.core.sink);
+        }
+        self.drain_log();
+    }
+
+    /// Ingest an entire stream, returning the throughput report.
+    pub fn ingest_all<S: GraphStream>(&mut self, stream: S) -> IngestReport {
+        let sw = crate::util::timer::Stopwatch::new();
+        let mut n = 0u64;
+        for update in stream {
+            self.ingest(update);
+            n += 1;
+        }
+        IngestReport {
+            updates: n,
+            seconds: sw.elapsed_secs(),
+        }
+    }
+
+    /// Publish everything this handle still buffers: drain the update
+    /// log into the query engine and push the thread-local hypertree
+    /// levels into the shared group nodes.  After `flush`, a session
+    /// query covers every update this handle has ingested, and the
+    /// shared metrics include this handle's counters.
+    pub fn flush(&mut self) {
+        self.publish();
+        self.sync_pending_gauge();
+    }
+
+    /// Updates ingested through this handle over its lifetime.
+    pub fn ingested(&self) -> u64 {
+        self.ingested
+    }
+
+    /// Entries currently buffered (unpublished) in this handle:
+    /// update-log entries awaiting the query engine plus thread-local
+    /// hypertree endpoint entries (two per update) awaiting the shared
+    /// tree.  `0` means this handle is fully published.
+    pub fn buffered(&self) -> usize {
+        self.log.len() + self.local.as_ref().map_or(0, |l| l.buffered())
+    }
+
+    /// Drain the bounded log: GreedyCC maintenance under one amortized
+    /// lock (serialized with the query path — see
+    /// `SessionCore::apply_log`), and the per-handle ingest counters
+    /// folded into the shared metrics.
+    pub(crate) fn drain_log(&mut self) {
+        if !self.log.is_empty() {
+            self.core.apply_log(&self.log);
+            Metrics::add(&self.core.metrics.log_drains, 1);
+            self.log.clear();
+        }
+        self.fold_meter();
+    }
+
+    /// Fold this handle's not-yet-published ingest counters into the
+    /// shared metrics.
+    fn fold_meter(&mut self) {
+        if self.unmetered > 0 {
+            Metrics::add(&self.core.metrics.updates_ingested, self.unmetered);
+            Metrics::add(
+                &self.core.metrics.stream_bytes,
+                self.unmetered * UPDATE_WIRE_BYTES,
+            );
+            self.unmetered = 0;
+        }
+    }
+
+    /// Keep the session's `pending_handles` gauge in step with whether
+    /// this handle holds unpublished updates.  One comparison per call;
+    /// an atomic only on the empty↔nonempty transition.
+    fn sync_pending_gauge(&mut self) {
+        let pending = self.buffered() > 0;
+        if pending != self.gauge_pending {
+            if pending {
+                self.core.pending_handles.fetch_add(1, AtomicOrdering::Relaxed);
+            } else {
+                self.core.pending_handles.fetch_sub(1, AtomicOrdering::Relaxed);
+            }
+            self.gauge_pending = pending;
+        }
+    }
+}
+
+impl Drop for IngestHandle {
+    fn drop(&mut self) {
+        self.flush();
+        self.core.handle_closed();
+    }
+}
+
+/// The read-side query surface: cloneable, `Sync`, and requiring no
+/// `&mut` access to ingestion.
+///
+/// Queries are serialized against each other inside the session (the
+/// tiered plan → flush → Borůvka → re-seed sequence is a
+/// read-modify-write of the accelerator), and each query runs the §5.3
+/// barrier over the shared pipeline first.  Results cover every
+/// *published* update — see the module-level consistency contract.
+#[derive(Clone)]
+pub struct QueryHandle {
+    core: Arc<SessionCore>,
+}
+
+impl QueryHandle {
+    pub(crate) fn new(core: Arc<SessionCore>) -> Self {
+        Self { core }
+    }
+
+    /// The tier that would answer [`Self::connected_components`] now.
+    pub fn query_plan(&self) -> QueryTier {
+        self.core.query_plan()
+    }
+
+    /// Global connectivity query, answered by the cheapest valid tier:
+    ///
+    /// * tier 0 — GreedyCC (all components clean): O(V), **no flush**;
+    /// * tier 1 — some components dirty: flush + Borůvka warm-started
+    ///   from the surviving forest, aggregating only dirty-region
+    ///   vertices;
+    /// * tier 2 — accelerator disabled: full flush + Borůvka.
+    pub fn connected_components(&self) -> SpanningForest {
+        self.core.connected_components()
+    }
+
+    /// Force the full (flush + Borůvka) query path — tier 2.
+    pub fn full_connectivity_query(&self) -> SpanningForest {
+        self.core.full_connectivity_query()
+    }
+
+    /// Batched reachability (§5.3).  Tier 0 answers when no queried
+    /// pair touches a dirty component; otherwise the query escalates
+    /// exactly like [`Self::connected_components`].
+    pub fn reachability(&self, pairs: &[(u32, u32)]) -> Vec<bool> {
+        self.core.reachability(pairs)
+    }
+
+    /// k-edge-connectivity query: `Some(w)` when the min cut w < k,
+    /// `None` meaning "at least k".
+    pub fn k_connectivity(&self) -> Option<u64> {
+        self.core.k_connectivity()
+    }
+
+    /// Snapshot of the session metrics.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.core.metrics.snapshot()
+    }
+}

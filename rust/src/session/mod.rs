@@ -1,0 +1,1039 @@
+//! The session-based public API (paper Fig. 2's many-producers /
+//! one-merge-path data flow, as an API shape).
+//!
+//! The previous surface was a single-owner `Coordinator` whose
+//! `ingest(&mut self)` serialized the entire front end on one driver
+//! thread — exactly the front-end bottleneck GraphZeppelin identifies
+//! for sketch-based stream systems, and an artificial one: every stage
+//! past the thread-local hypertree levels was already concurrent.  This
+//! module replaces it with a **session**:
+//!
+//! * [`Landscape::builder`] validates configuration up front (typed
+//!   [`ConfigError`] instead of silent clamps or panics deep inside the
+//!   distributor spawn path) and builds a shared [`Landscape`] session.
+//! * [`Landscape::ingest_handle`] spawns any number of independent
+//!   [`IngestHandle`]s — each is `Send`, owns its own thread-local
+//!   hypertree levels plus a bounded update log, and ingests without
+//!   taking a single cross-thread lock on the per-update path.
+//! * [`Landscape::query_handle`] gives a cloneable, `Sync`
+//!   [`QueryHandle`] answering connectivity / reachability /
+//!   k-connectivity queries without `&mut` access to ingestion.
+//!
+//! ## Consistency contract
+//!
+//! A query reflects every update that has been *published*: drained
+//! from its producer's handle by [`IngestHandle::flush`] (or by
+//! dropping the handle, which flushes).  Producers that have not
+//! flushed may be partially visible — the paper's query barrier (§5.3)
+//! drains the shared pipeline, not other threads' private buffers.
+//! [`Landscape::pending_producers`] reports how many handles still
+//! hold unpublished updates.
+//!
+//! ```no_run
+//! use landscape::session::Landscape;
+//! use landscape::stream::update::Update;
+//!
+//! let session = Landscape::builder().vertices(1 << 10).build().unwrap();
+//! std::thread::scope(|scope| {
+//!     for producer in 0..4u32 {
+//!         let mut handle = session.ingest_handle();
+//!         scope.spawn(move || {
+//!             for i in 0..250u32 {
+//!                 handle.ingest(Update::insert(producer * 250 + i, 1000 + i % 24));
+//!             }
+//!         }); // drop publishes the handle's tail
+//!     }
+//! });
+//! let queries = session.query_handle();
+//! println!("{} components", queries.connected_components().num_components());
+//! ```
+
+#![deny(missing_docs)]
+
+mod handle;
+
+pub use handle::{IngestHandle, QueryHandle};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::connectivity::boruvka::{boruvka_components, boruvka_components_from};
+use crate::connectivity::greedycc::PartialSeed;
+use crate::connectivity::kconn::KConnectivity;
+use crate::connectivity::SpanningForest;
+use crate::coordinator::query::{QueryEngine, QueryTier};
+use crate::coordinator::work_queue::{FlushBarrier, ShardedWorkQueue};
+use crate::coordinator::{distributor, BufferKind, CoordinatorConfig, WorkItem, WorkerKind};
+use crate::gutter::GutterBuffer;
+use crate::hypertree::{BatchSink, Hypertree, HypertreeConfig, VertexBatch};
+use crate::metrics::{Metrics, MetricsSnapshot};
+use crate::sketch::params::SketchParams;
+use crate::sketch::shard::ShardSpec;
+use crate::stream::update::Update;
+
+/// Default bounded size of each ingest handle's update log (updates
+/// buffered per handle before GreedyCC maintenance is applied under one
+/// amortized lock).
+pub const DEFAULT_UPDATE_LOG_CAPACITY: usize = 1024;
+
+/// A configuration rejected by [`LandscapeBuilder::build`].
+///
+/// Every variant names the invalid knob; the old surface either
+/// silently clamped these (`distributor_threads = 0` became 1) or
+/// panicked deep inside the distributor spawn path (`queue_capacity =
+/// 0` tripped an assert in `WorkQueue::new`; an empty remote address
+/// list abandoned every shard with metered drops).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ConfigError {
+    /// `vertices` was 0 — an empty graph has no sketch shape.
+    ZeroVertices,
+    /// `vertices` exceeded `u32::MAX`; endpoints are `u32` on the wire.
+    TooManyVertices(u64),
+    /// `k` was 0 — at least one sketch copy is needed.
+    ZeroK,
+    /// `columns` was 0 — sketches need at least one column.
+    ZeroColumns,
+    /// `alpha` was 0 — leaves would have zero capacity and every update
+    /// would recirculate forever.
+    ZeroAlpha,
+    /// `gamma` was outside `(0, 1]` (or NaN): the γ-fullness flush
+    /// policy needs a positive fraction of leaf capacity.
+    GammaOutOfRange(f64),
+    /// `distributor_threads` was 0 — no thread would ever drain the
+    /// work queues.
+    ZeroDistributorThreads,
+    /// `queue_capacity` was 0 — the bounded shard queues cannot hold a
+    /// single batch.
+    ZeroQueueCapacity,
+    /// `remote_window` was 0 — a remote connection could never have a
+    /// batch in flight.
+    ZeroRemoteWindow,
+    /// `update_log_capacity` was 0 — handles could never buffer an
+    /// update.
+    ZeroUpdateLogCapacity,
+    /// `WorkerKind::Remote` with an empty address list — there is no
+    /// worker to connect to.
+    NoRemoteWorkerAddrs,
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::ZeroVertices => write!(f, "vertices must be nonzero"),
+            ConfigError::TooManyVertices(v) => {
+                write!(f, "vertices = {v} exceeds u32::MAX (wire endpoints are u32)")
+            }
+            ConfigError::ZeroK => write!(f, "k (sketch copies) must be nonzero"),
+            ConfigError::ZeroColumns => write!(f, "columns must be nonzero"),
+            ConfigError::ZeroAlpha => write!(f, "alpha (batch-size factor) must be nonzero"),
+            ConfigError::GammaOutOfRange(g) => {
+                write!(f, "gamma = {g} is outside the valid flush-threshold range (0, 1]")
+            }
+            ConfigError::ZeroDistributorThreads => {
+                write!(f, "distributor_threads must be nonzero")
+            }
+            ConfigError::ZeroQueueCapacity => write!(f, "queue_capacity must be nonzero"),
+            ConfigError::ZeroRemoteWindow => write!(f, "remote_window must be nonzero"),
+            ConfigError::ZeroUpdateLogCapacity => {
+                write!(f, "update_log_capacity must be nonzero")
+            }
+            ConfigError::NoRemoteWorkerAddrs => {
+                write!(f, "WorkerKind::Remote requires at least one worker address")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Validated, typed construction of a [`Landscape`] session.
+///
+/// Defaults mirror [`CoordinatorConfig::for_vertices`] (paper §6 /
+/// App. E); `vertices` has no default and must be set.
+#[derive(Clone, Debug)]
+pub struct LandscapeBuilder {
+    cfg: CoordinatorConfig,
+    update_log_capacity: usize,
+}
+
+impl Default for LandscapeBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LandscapeBuilder {
+    /// A builder with paper-default knobs and `vertices` unset (0).
+    pub fn new() -> Self {
+        Self {
+            cfg: CoordinatorConfig::for_vertices(0),
+            update_log_capacity: DEFAULT_UPDATE_LOG_CAPACITY,
+        }
+    }
+
+    /// Start from an existing [`CoordinatorConfig`] (migration path).
+    pub fn from_config(cfg: CoordinatorConfig) -> Self {
+        Self {
+            cfg,
+            update_log_capacity: DEFAULT_UPDATE_LOG_CAPACITY,
+        }
+    }
+
+    /// Number of graph vertices (required; must be `1..=u32::MAX`).
+    pub fn vertices(mut self, v: u64) -> Self {
+        self.cfg.vertices = v;
+        self
+    }
+
+    /// Seed for the sketch hash functions.
+    pub fn graph_seed(mut self, seed: u64) -> Self {
+        self.cfg.graph_seed = seed;
+        self
+    }
+
+    /// k-connectivity copies (1 = plain connectivity).
+    pub fn k(mut self, k: u32) -> Self {
+        self.cfg.k = k;
+        self
+    }
+
+    /// Sketch columns per level.
+    pub fn columns(mut self, columns: u32) -> Self {
+        self.cfg.columns = columns;
+        self
+    }
+
+    /// Batch-size factor α (a leaf holds α× the delta's size in updates).
+    pub fn alpha(mut self, alpha: u32) -> Self {
+        self.cfg.alpha = alpha;
+        self
+    }
+
+    /// Query-flush fullness threshold γ ∈ (0, 1] (paper default 0.04).
+    pub fn gamma(mut self, gamma: f64) -> Self {
+        self.cfg.gamma = gamma;
+        self
+    }
+
+    /// Distributor threads (= sketch shards = shard queues).
+    pub fn distributor_threads(mut self, n: usize) -> Self {
+        self.cfg.distributor_threads = n;
+        self
+    }
+
+    /// Work-queue capacity in batches, per shard queue.
+    pub fn queue_capacity(mut self, n: usize) -> Self {
+        self.cfg.queue_capacity = n;
+        self
+    }
+
+    /// Which delta-computation backend the distributor threads use.
+    pub fn worker(mut self, worker: WorkerKind) -> Self {
+        self.cfg.worker = worker;
+        self
+    }
+
+    /// In-flight window per remote-worker connection.
+    pub fn remote_window(mut self, n: usize) -> Self {
+        self.cfg.remote_window = n;
+        self
+    }
+
+    /// Which update-buffering structure the main node uses.
+    pub fn buffer(mut self, buffer: BufferKind) -> Self {
+        self.cfg.buffer = buffer;
+        self
+    }
+
+    /// Enable or disable the GreedyCC query accelerator.
+    pub fn greedycc(mut self, enabled: bool) -> Self {
+        self.cfg.use_greedycc = enabled;
+        self
+    }
+
+    /// Bounded per-handle update-log size (updates buffered before
+    /// GreedyCC maintenance drains under one amortized lock).
+    pub fn update_log_capacity(mut self, n: usize) -> Self {
+        self.update_log_capacity = n;
+        self
+    }
+
+    /// Check every knob, returning the first violation.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let c = &self.cfg;
+        if c.vertices == 0 {
+            return Err(ConfigError::ZeroVertices);
+        }
+        if c.vertices > u32::MAX as u64 {
+            return Err(ConfigError::TooManyVertices(c.vertices));
+        }
+        if c.k == 0 {
+            return Err(ConfigError::ZeroK);
+        }
+        if c.columns == 0 {
+            return Err(ConfigError::ZeroColumns);
+        }
+        if c.alpha == 0 {
+            return Err(ConfigError::ZeroAlpha);
+        }
+        if !(c.gamma > 0.0 && c.gamma <= 1.0) {
+            return Err(ConfigError::GammaOutOfRange(c.gamma));
+        }
+        if c.distributor_threads == 0 {
+            return Err(ConfigError::ZeroDistributorThreads);
+        }
+        if c.queue_capacity == 0 {
+            return Err(ConfigError::ZeroQueueCapacity);
+        }
+        if c.remote_window == 0 {
+            return Err(ConfigError::ZeroRemoteWindow);
+        }
+        if self.update_log_capacity == 0 {
+            return Err(ConfigError::ZeroUpdateLogCapacity);
+        }
+        if let WorkerKind::Remote { addrs } = &c.worker {
+            if addrs.is_empty() {
+                return Err(ConfigError::NoRemoteWorkerAddrs);
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate and build the session.
+    pub fn build(self) -> Result<Landscape, ConfigError> {
+        self.validate()?;
+        Ok(Landscape::spawn(self.cfg, self.update_log_capacity))
+    }
+}
+
+/// Report returned by [`IngestHandle::ingest_all`].
+#[derive(Clone, Copy, Debug)]
+pub struct IngestReport {
+    /// Stream updates ingested by this call.
+    pub updates: u64,
+    /// Wall-clock seconds spent ingesting.
+    pub seconds: f64,
+}
+
+impl IngestReport {
+    /// Updates per second.
+    pub fn rate(&self) -> f64 {
+        crate::util::timer::rate(self.updates, self.seconds)
+    }
+}
+
+/// Update buffer: hypertree or gutter (ablation), behind one interface.
+pub(crate) enum Buffer {
+    /// The pipeline hypertree (the paper's design).
+    Hyper(Arc<Hypertree>),
+    /// GraphZeppelin-style gutters (ablation baseline).
+    Gutter(Arc<GutterBuffer>),
+}
+
+/// Shared sink: every batch is routed to the shard queue of the
+/// distributor thread owning its vertex.  Underfull leaves travel the
+/// same shard-affine path as `WorkItem::Local` so that *all* sketch
+/// writes during ingestion happen on the owning thread — which is what
+/// makes the distributors' lock-free exclusive merge sound.
+pub(crate) struct QueueSink {
+    queue: Arc<ShardedWorkQueue<WorkItem>>,
+    spec: ShardSpec,
+    metrics: Arc<Metrics>,
+    barrier: Arc<FlushBarrier>,
+    /// Meter `batch_bytes_sent` here with the nominal 8+4n accounting.
+    /// True for in-process workers (nothing crosses a wire, the nominal
+    /// figure *is* the model); false for remote workers, where the
+    /// distributor meters the real framing-layer bytes instead.
+    meter_batch_bytes: bool,
+}
+
+impl QueueSink {
+    fn enqueue(&self, shard: usize, item: WorkItem) {
+        let (kind, vertex, len) = match &item {
+            WorkItem::Distribute(b) => ("distribute", b.vertex, b.others.len()),
+            WorkItem::Local(b) => ("local", b.vertex, b.others.len()),
+        };
+        self.barrier.register();
+        if !self.queue.push(shard, item) {
+            // the shard queue is closed: these updates will never reach
+            // a sketch, which silently corrupts every later query —
+            // meter and log instead of vanishing
+            self.barrier.complete();
+            Metrics::add(&self.metrics.batches_dropped, 1);
+            crate::log_warn!(
+                "session: DROPPED {kind} batch (vertex {vertex}, {len} \
+                 updates) on closed shard queue {shard}"
+            );
+        }
+    }
+}
+
+impl BatchSink for QueueSink {
+    fn shards(&self) -> ShardSpec {
+        self.spec
+    }
+
+    fn full_batch(&self, shard: usize, batch: VertexBatch) {
+        debug_assert_eq!(shard, self.spec.shard_of(batch.vertex));
+        Metrics::add(&self.metrics.batches_sent, 1);
+        if self.meter_batch_bytes {
+            Metrics::add(&self.metrics.batch_bytes_sent, batch.wire_bytes());
+        }
+        self.enqueue(shard, WorkItem::Distribute(batch));
+    }
+
+    fn local_batch(&self, shard: usize, vertex: u32, others: &[u32]) {
+        debug_assert_eq!(shard, self.spec.shard_of(vertex));
+        self.enqueue(
+            shard,
+            WorkItem::Local(VertexBatch {
+                vertex,
+                others: others.to_vec(),
+            }),
+        );
+    }
+}
+
+/// Everything the handles share: the engine room behind the session.
+pub(crate) struct SessionCore {
+    pub(crate) config: CoordinatorConfig,
+    pub(crate) params: SketchParams,
+    pub(crate) metrics: Arc<Metrics>,
+    pub(crate) kconn: Arc<KConnectivity>,
+    pub(crate) buffer: Buffer,
+    pub(crate) sink: Arc<QueueSink>,
+    queue: Arc<ShardedWorkQueue<WorkItem>>,
+    barrier: Arc<FlushBarrier>,
+    pub(crate) query: QueryEngine,
+    /// Serializes tiered queries (plan → flush → Borůvka → re-seed is a
+    /// read-modify-write of the accelerator state) *and* handle log
+    /// drains: a drain landing between a query's seed snapshot and its
+    /// re-seed would be wiped by the wholesale `reseed`, so
+    /// [`SessionCore::apply_log`] takes this lock too.
+    query_serial: Mutex<()>,
+    pub(crate) update_log_capacity: usize,
+    active_handles: AtomicUsize,
+    /// Live handles currently holding *unpublished* updates (private
+    /// log entries or thread-local hypertree entries).  Maintained by
+    /// the handles on the empty↔nonempty edge.
+    pub(crate) pending_handles: AtomicUsize,
+}
+
+impl SessionCore {
+    /// The query barrier (§5.3) over the *shared* pipeline: force-flush
+    /// the buffer (γ-full leaves to workers, the rest locally), then
+    /// sleep on the flush barrier's condvar until every in-flight item
+    /// has merged.  Does not — cannot — drain other threads' unflushed
+    /// ingest handles.
+    ///
+    /// Liveness: the barrier waits for an instant of *global* pipeline
+    /// idleness (a simple counter-based "cut" would be unsound with
+    /// out-of-order remote completion), so under sustained full-rate
+    /// concurrent ingestion a query may wait for a lull.  Producers
+    /// wanting a prompt, consistent snapshot should pause or flush
+    /// around the query — see the ROADMAP item on a per-item cut
+    /// barrier.
+    pub(crate) fn flush_shared(&self) {
+        match &self.buffer {
+            Buffer::Hyper(t) => t.force_flush(self.config.gamma, &*self.sink),
+            Buffer::Gutter(g) => g.force_flush(self.config.gamma, &*self.sink),
+        }
+        self.barrier.wait_idle();
+    }
+
+    /// The tier that would answer a global connectivity query now.
+    pub(crate) fn query_plan(&self) -> QueryTier {
+        self.query.plan()
+    }
+
+    /// Tiered global connectivity query (see `QueryEngine` for the tier
+    /// table).
+    pub(crate) fn connected_components(&self) -> SpanningForest {
+        let _serial = self.query_serial.lock().unwrap();
+        if let Some(forest) = self.query.try_greedy() {
+            Metrics::add(&self.metrics.queries_greedy, 1);
+            return forest;
+        }
+        if let Some(seed) = self.query.partial_seed() {
+            return self.partial_query_locked(seed);
+        }
+        self.full_query_locked()
+    }
+
+    /// Forced tier-2 (flush + full Borůvka) query.
+    pub(crate) fn full_connectivity_query(&self) -> SpanningForest {
+        let _serial = self.query_serial.lock().unwrap();
+        self.full_query_locked()
+    }
+
+    /// Batched reachability: tier 0 answers when no queried pair
+    /// touches a dirty component; otherwise escalate like a global
+    /// query.
+    pub(crate) fn reachability(&self, pairs: &[(u32, u32)]) -> Vec<bool> {
+        let _serial = self.query_serial.lock().unwrap();
+        if let Some(answers) = self.query.try_reachability(pairs) {
+            Metrics::add(&self.metrics.queries_greedy, 1);
+            return answers;
+        }
+        let forest = if let Some(seed) = self.query.partial_seed() {
+            self.partial_query_locked(seed)
+        } else {
+            self.full_query_locked()
+        };
+        pairs.iter().map(|&(a, b)| forest.connected(a, b)).collect()
+    }
+
+    /// k-edge-connectivity: `Some(w)` when the min cut w < k, `None`
+    /// meaning "at least k".
+    pub(crate) fn k_connectivity(&self) -> Option<u64> {
+        let _serial = self.query_serial.lock().unwrap();
+        self.flush_shared();
+        Metrics::add(&self.metrics.queries_full, 1);
+        self.kconn.query_capped_connectivity()
+    }
+
+    /// Tier 1 with `query_serial` already held: flush, then resolve only
+    /// the dirty components; clean components ride along contracted.
+    fn partial_query_locked(&self, seed: PartialSeed) -> SpanningForest {
+        self.flush_shared();
+        let result = boruvka_components_from(
+            &self.kconn.stores()[0],
+            seed.dsu,
+            seed.forest_edges,
+            &seed.dirty_vertices,
+        );
+        Metrics::add(&self.metrics.queries_partial, 1);
+        self.query.reseed(self.params.v, &result.forest);
+        result.forest
+    }
+
+    /// Tier 2 with `query_serial` already held.
+    fn full_query_locked(&self) -> SpanningForest {
+        self.flush_shared();
+        let result = boruvka_components(&self.kconn.stores()[0]);
+        Metrics::add(&self.metrics.queries_full, 1);
+        self.query.reseed(self.params.v, &result.forest);
+        result.forest
+    }
+
+    /// Drain one handle's update log into the query engine.
+    ///
+    /// Serialized with the query path (`query_serial`): `reseed`
+    /// replaces GreedyCC wholesale from the freshly computed forest, so
+    /// a drain interleaving between a query's `partial_seed`/`try_greedy`
+    /// snapshot and its `reseed` would be silently discarded — and a
+    /// later tier-0 query would certify a stale partition.  Drains are
+    /// amortized (one per full log), so the lock is off the per-update
+    /// hot path; a drain may briefly block behind a running query.
+    pub(crate) fn apply_log(&self, updates: &[Update]) {
+        let _serial = self.query_serial.lock().unwrap();
+        self.query.apply_log(updates);
+    }
+
+    pub(crate) fn handle_opened(&self) {
+        self.active_handles.fetch_add(1, Ordering::Relaxed);
+        Metrics::add(&self.metrics.handles_spawned, 1);
+    }
+
+    pub(crate) fn handle_closed(&self) {
+        self.active_handles.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// A shared ingestion + query session over one sketched graph.
+///
+/// Build with [`Landscape::builder`]; spawn any number of
+/// [`IngestHandle`]s (one per producer thread) and [`QueryHandle`]s.
+/// Dropping the session closes the shard queues and joins the
+/// distributor threads; handles outliving the session take the metered
+/// drop path instead of wedging.
+pub struct Landscape {
+    core: Arc<SessionCore>,
+    distributors: Vec<JoinHandle<()>>,
+}
+
+impl Landscape {
+    /// Start building a session (see [`LandscapeBuilder`]).
+    pub fn builder() -> LandscapeBuilder {
+        LandscapeBuilder::new()
+    }
+
+    /// Validate an existing [`CoordinatorConfig`] and build a session
+    /// from it (the migration path from the deprecated `Coordinator`).
+    pub fn from_config(config: CoordinatorConfig) -> Result<Self, ConfigError> {
+        LandscapeBuilder::from_config(config).build()
+    }
+
+    /// Construct the engine room.  `config` has been validated.
+    fn spawn(config: CoordinatorConfig, update_log_capacity: usize) -> Self {
+        let params = config.params();
+        let spec = config.shard_spec();
+        let metrics = Arc::new(Metrics::new());
+        let kconn = Arc::new(KConnectivity::with_shards(
+            params,
+            config.graph_seed,
+            config.k,
+            spec,
+        ));
+        let queue = Arc::new(ShardedWorkQueue::new(spec.count(), config.queue_capacity));
+        let barrier = Arc::new(FlushBarrier::new());
+
+        let buffer = match config.buffer {
+            BufferKind::Hypertree => Buffer::Hyper(Arc::new(Hypertree::new(
+                HypertreeConfig::for_vertices(config.vertices, config.leaf_capacity()),
+                metrics.clone(),
+            ))),
+            BufferKind::Gutter => Buffer::Gutter(Arc::new(GutterBuffer::new(
+                config.vertices,
+                config.leaf_capacity(),
+                spec,
+                metrics.clone(),
+            ))),
+        };
+
+        let sink = Arc::new(QueueSink {
+            queue: queue.clone(),
+            spec,
+            metrics: metrics.clone(),
+            barrier: barrier.clone(),
+            meter_batch_bytes: !matches!(config.worker, WorkerKind::Remote { .. }),
+        });
+
+        let core = Arc::new(SessionCore {
+            query: QueryEngine::new(config.vertices, config.use_greedycc, metrics.clone()),
+            params,
+            metrics,
+            kconn,
+            buffer,
+            sink,
+            queue,
+            barrier,
+            query_serial: Mutex::new(()),
+            update_log_capacity,
+            active_handles: AtomicUsize::new(0),
+            pending_handles: AtomicUsize::new(0),
+            config,
+        });
+
+        // one distributor per shard: thread `shard` is the only writer
+        // of sketch shard `shard` during ingestion, so its merges use
+        // the lock-free exclusive path.  The loop itself (interleaved
+        // submit/drain, out-of-order merge, remote failover) lives in
+        // `coordinator::distributor::Distributor::run`.
+        let mut distributors = Vec::new();
+        for shard in 0..core.config.shard_spec().count() {
+            // construction data is Send — the backend itself is built
+            // inside the thread (PJRT handles are thread-bound)
+            let d = distributor::Distributor {
+                shard,
+                kind: core.config.worker.clone(),
+                params: core.params,
+                graph_seed: core.config.graph_seed,
+                k: core.config.k,
+                window: core.config.remote_window.max(1),
+                queue: core.queue.clone(),
+                kconn: core.kconn.clone(),
+                metrics: core.metrics.clone(),
+                barrier: core.barrier.clone(),
+            };
+            distributors.push(std::thread::spawn(move || d.run()));
+        }
+
+        Self { core, distributors }
+    }
+
+    /// Spawn an independent ingestion handle (one per producer thread).
+    ///
+    /// Each handle owns its own thread-local hypertree levels and a
+    /// bounded update log, so its per-update path takes no cross-thread
+    /// lock; shared group nodes and the shard queues absorb the
+    /// cross-thread hand-off in bulk.
+    pub fn ingest_handle(&self) -> IngestHandle {
+        IngestHandle::new(self.core.clone(), self.core.update_log_capacity)
+    }
+
+    /// A cloneable, thread-safe read-side handle for queries.
+    pub fn query_handle(&self) -> QueryHandle {
+        QueryHandle::new(self.core.clone())
+    }
+
+    /// Eager-maintenance handle for the deprecated `Coordinator` shim:
+    /// query-engine state and metrics stay current after every ingest,
+    /// exactly like the old single-owner surface.
+    pub(crate) fn shim_handle(&self) -> IngestHandle {
+        IngestHandle::new_eager(self.core.clone())
+    }
+
+    /// Flush the shared pipeline and wait until every published update
+    /// has reached a sketch (§5.3's query barrier).  Producers'
+    /// unflushed handles are not (and cannot be) drained here — see the
+    /// module-level consistency contract.  The barrier needs a moment
+    /// of pipeline idleness, so under sustained full-rate concurrent
+    /// ingestion it may wait for a lull.
+    pub fn flush(&self) {
+        self.core.flush_shared();
+    }
+
+    /// Number of live ingest handles still holding unpublished updates
+    /// — entries in a private update log awaiting the query engine, or
+    /// thread-local hypertree entries awaiting the shared tree.  `0`
+    /// means a [`Landscape::flush`] barrier covers every ingested
+    /// update.
+    pub fn pending_producers(&self) -> usize {
+        self.core.pending_handles.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the session metrics.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.core.metrics.snapshot()
+    }
+
+    /// The sketch shape parameters.
+    pub fn params(&self) -> &SketchParams {
+        &self.core.params
+    }
+
+    /// The validated configuration this session was built from.
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.core.config
+    }
+
+    /// Main-node sketch memory in bytes.
+    pub fn sketch_bytes(&self) -> usize {
+        self.core.kconn.bytes()
+    }
+
+    /// Access the underlying sketch copies (benches, tests).
+    pub fn kconn(&self) -> &KConnectivity {
+        &self.core.kconn
+    }
+}
+
+impl Drop for Landscape {
+    fn drop(&mut self) {
+        self.core.queue.close();
+        for h in self.distributors.drain(..) {
+            let _ = h.join();
+        }
+        // remote connections are owned by the (now-joined) distributor
+        // threads, which ended them with the SHUTDOWN → BYE handshake
+        // (or tore them down on failover) before exiting.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::connectivity::dsu::Dsu;
+    use crate::stream::dynamify::Dynamify;
+    use crate::stream::erdos::ErdosRenyi;
+    use crate::stream::update::Update;
+    use crate::stream::{edge_list, VecStream};
+
+    fn assert_send<T: Send>() {}
+    fn assert_sync<T: Sync>() {}
+
+    #[test]
+    fn handles_cross_threads() {
+        assert_send::<IngestHandle>();
+        assert_send::<QueryHandle>();
+        assert_sync::<QueryHandle>();
+        assert_send::<Landscape>();
+        assert_sync::<Landscape>();
+    }
+
+    #[test]
+    fn builder_rejects_zero_vertices() {
+        assert_eq!(
+            Landscape::builder().vertices(0).build().err(),
+            Some(ConfigError::ZeroVertices)
+        );
+        // unset vertices is the same rejection
+        assert_eq!(
+            Landscape::builder().build().err(),
+            Some(ConfigError::ZeroVertices)
+        );
+    }
+
+    #[test]
+    fn builder_rejects_oversized_vertices() {
+        assert_eq!(
+            Landscape::builder().vertices(1 << 33).build().err(),
+            Some(ConfigError::TooManyVertices(1 << 33))
+        );
+    }
+
+    #[test]
+    fn builder_rejects_zero_k() {
+        assert_eq!(
+            Landscape::builder().vertices(16).k(0).build().err(),
+            Some(ConfigError::ZeroK)
+        );
+    }
+
+    #[test]
+    fn builder_rejects_zero_columns() {
+        assert_eq!(
+            Landscape::builder().vertices(16).columns(0).build().err(),
+            Some(ConfigError::ZeroColumns)
+        );
+    }
+
+    #[test]
+    fn builder_rejects_zero_alpha() {
+        assert_eq!(
+            Landscape::builder().vertices(16).alpha(0).build().err(),
+            Some(ConfigError::ZeroAlpha)
+        );
+    }
+
+    #[test]
+    fn builder_rejects_bad_gamma() {
+        for gamma in [0.0, -0.5, 1.5, f64::NAN] {
+            let err = Landscape::builder()
+                .vertices(16)
+                .gamma(gamma)
+                .build()
+                .err()
+                .expect("gamma must be rejected");
+            assert!(
+                matches!(err, ConfigError::GammaOutOfRange(_)),
+                "gamma {gamma}: got {err:?}"
+            );
+        }
+        // the boundary γ = 1.0 is valid (flush only exactly-full leaves)
+        assert!(Landscape::builder().vertices(16).gamma(1.0).build().is_ok());
+    }
+
+    #[test]
+    fn builder_rejects_zero_distributors() {
+        assert_eq!(
+            Landscape::builder()
+                .vertices(16)
+                .distributor_threads(0)
+                .build()
+                .err(),
+            Some(ConfigError::ZeroDistributorThreads)
+        );
+    }
+
+    #[test]
+    fn builder_rejects_zero_queue_capacity() {
+        assert_eq!(
+            Landscape::builder()
+                .vertices(16)
+                .queue_capacity(0)
+                .build()
+                .err(),
+            Some(ConfigError::ZeroQueueCapacity)
+        );
+    }
+
+    #[test]
+    fn builder_rejects_zero_remote_window() {
+        assert_eq!(
+            Landscape::builder()
+                .vertices(16)
+                .remote_window(0)
+                .build()
+                .err(),
+            Some(ConfigError::ZeroRemoteWindow)
+        );
+    }
+
+    #[test]
+    fn builder_rejects_zero_log_capacity() {
+        assert_eq!(
+            Landscape::builder()
+                .vertices(16)
+                .update_log_capacity(0)
+                .build()
+                .err(),
+            Some(ConfigError::ZeroUpdateLogCapacity)
+        );
+    }
+
+    #[test]
+    fn builder_rejects_empty_remote_addrs() {
+        assert_eq!(
+            Landscape::builder()
+                .vertices(16)
+                .worker(WorkerKind::Remote { addrs: vec![] })
+                .build()
+                .err(),
+            Some(ConfigError::NoRemoteWorkerAddrs)
+        );
+    }
+
+    #[test]
+    fn config_errors_display_the_offending_knob() {
+        let msg = ConfigError::GammaOutOfRange(2.0).to_string();
+        assert!(msg.contains("gamma"), "{msg}");
+        let msg = ConfigError::NoRemoteWorkerAddrs.to_string();
+        assert!(msg.contains("address"), "{msg}");
+    }
+
+    fn small_session(v: u64) -> Landscape {
+        Landscape::builder()
+            .vertices(v)
+            .alpha(1)
+            .distributor_threads(2)
+            .update_log_capacity(64)
+            .build()
+            .unwrap()
+    }
+
+    fn ref_partition(v: u64, edges: &[(u32, u32)]) -> Vec<u32> {
+        let mut d = Dsu::new(v as usize);
+        for &(a, b) in edges {
+            d.union(a, b);
+        }
+        d.component_map()
+    }
+
+    fn same_partition(a: &[u32], b: &[u32]) -> bool {
+        crate::baseline::Referee::same_partition(a, b)
+    }
+
+    /// Split `stream` round-robin over `producers` threads, each with
+    /// its own handle, and return the final queried partition.
+    fn multi_producer_partition(
+        session: &Landscape,
+        updates: &[Update],
+        producers: usize,
+    ) -> SpanningForest {
+        std::thread::scope(|scope| {
+            for p in 0..producers {
+                let mut handle = session.ingest_handle();
+                let chunk: Vec<Update> = updates
+                    .iter()
+                    .copied()
+                    .skip(p)
+                    .step_by(producers)
+                    .collect();
+                scope.spawn(move || {
+                    for u in chunk {
+                        handle.ingest(u);
+                    }
+                    // handle drop publishes the tail
+                });
+            }
+        });
+        assert_eq!(session.pending_producers(), 0);
+        session.query_handle().connected_components()
+    }
+
+    #[test]
+    fn four_producers_match_single_producer_and_referee() {
+        // the acceptance scenario: the same stream through 1 and 4
+        // handles must produce identical partitions, equal to the DSU
+        // referee, with zero dropped batches
+        let v = 256u64;
+        let model = ErdosRenyi::new(v, 0.1, 4242);
+        let want = ref_partition(v, &edge_list(&model));
+        let updates: Vec<Update> = Dynamify::new(model, 3).collect();
+
+        let single = small_session(v);
+        let sf = multi_producer_partition(&single, &updates, 1);
+        assert!(same_partition(&sf.component, &want));
+        assert_eq!(single.metrics().batches_dropped, 0);
+
+        let quad = small_session(v);
+        let qf = multi_producer_partition(&quad, &updates, 4);
+        assert!(same_partition(&qf.component, &sf.component));
+        assert!(same_partition(&qf.component, &want));
+        let m = quad.metrics();
+        assert_eq!(m.batches_dropped, 0);
+        assert_eq!(m.handles_spawned, 4);
+        assert_eq!(m.updates_ingested, updates.len() as u64);
+    }
+
+    #[test]
+    fn query_handle_needs_no_mut_and_is_cloneable() {
+        let session = small_session(64);
+        let mut h = session.ingest_handle();
+        h.ingest_all(VecStream::new(
+            64,
+            vec![
+                Update::insert(0, 1),
+                Update::insert(1, 2),
+                Update::insert(4, 5),
+            ],
+        ));
+        h.flush();
+        let q1 = session.query_handle();
+        let q2 = q1.clone();
+        // queries from two handles, no &mut anywhere
+        assert_eq!(q1.reachability(&[(0, 2), (0, 4)]), vec![true, false]);
+        assert!(q2.connected_components().connected(4, 5));
+        assert_eq!(session.metrics().batches_dropped, 0);
+    }
+
+    #[test]
+    fn queries_run_while_a_producer_is_still_ingesting() {
+        // a query between two ingest phases of a live (unflushed-later)
+        // handle must not deadlock and must see the published prefix
+        let session = small_session(64);
+        let mut h = session.ingest_handle();
+        h.ingest(Update::insert(0, 1));
+        h.flush();
+        let q = session.query_handle();
+        assert!(q.connected_components().connected(0, 1));
+        // keep ingesting on the same handle afterwards
+        h.ingest(Update::insert(1, 2));
+        h.flush();
+        assert!(q.connected_components().connected(0, 2));
+    }
+
+    #[test]
+    fn metrics_fold_per_handle_counts_at_drain() {
+        let session = Landscape::builder()
+            .vertices(64)
+            .update_log_capacity(4)
+            .build()
+            .unwrap();
+        let mut h = session.ingest_handle();
+        assert_eq!(session.pending_producers(), 0);
+        for i in 0..10u32 {
+            h.ingest(Update::insert(i, i + 1));
+        }
+        assert_eq!(session.pending_producers(), 1, "handle holds a tail");
+        // 10 updates with a capacity-4 log: 2 automatic drains so far
+        let m = session.metrics();
+        assert_eq!(m.updates_ingested, 8, "only drained updates are folded");
+        assert_eq!(m.log_drains, 2);
+        h.flush();
+        assert_eq!(session.pending_producers(), 0, "flush publishes the tail");
+        let m = session.metrics();
+        assert_eq!(m.updates_ingested, 10);
+        assert_eq!(m.log_drains, 3);
+        assert_eq!(m.stream_bytes, 90);
+    }
+
+    #[test]
+    fn k_connectivity_via_query_handle() {
+        // two K6s joined by 2 edges: min cut 2 < k=3
+        let v = 12u64;
+        let mut edges = Vec::new();
+        for a in 0..6u32 {
+            for b in (a + 1)..6 {
+                edges.push(Update::insert(a, b));
+                edges.push(Update::insert(a + 6, b + 6));
+            }
+        }
+        edges.push(Update::insert(0, 6));
+        edges.push(Update::insert(1, 7));
+        let session = Landscape::builder()
+            .vertices(v)
+            .alpha(1)
+            .distributor_threads(2)
+            .k(3)
+            .build()
+            .unwrap();
+        let mut h = session.ingest_handle();
+        h.ingest_all(VecStream::new(v, edges));
+        h.flush();
+        assert_eq!(session.query_handle().k_connectivity(), Some(2));
+    }
+}

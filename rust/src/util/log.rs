@@ -1,0 +1,149 @@
+//! A tiny leveled logging facility gated by the `LANDSCAPE_LOG`
+//! environment variable — the offline environment vendors no `log` /
+//! `env_logger`, and the production ingest paths must not write to
+//! stderr unconditionally.
+//!
+//! `LANDSCAPE_LOG` accepts `off`, `error`, `warn`, `info` (the default)
+//! or `debug`; everything at or above the configured severity prints to
+//! stderr with a `landscape[LEVEL]` prefix.  The filter is read once,
+//! lazily, on the first log call.
+//!
+//! Call sites use the crate-root macros, which format lazily — when the
+//! level is filtered out, the format arguments are never evaluated into
+//! a string:
+//!
+//! ```
+//! landscape::log_warn!("dropped {} batches on shard {}", 3, 1);
+//! landscape::log_info!("ingested {} updates", 1_000_000);
+//! ```
+
+use std::sync::OnceLock;
+
+/// Log severity, ordered from most to least severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unrecoverable or data-affecting failures (lost batches, dead
+    /// backends).  Only `LANDSCAPE_LOG=off` silences these.
+    Error = 0,
+    /// Recoverable anomalies worth surfacing (failover, requeues,
+    /// protocol skew).
+    Warn = 1,
+    /// Progress and result reporting (the CLI's normal chatter).
+    Info = 2,
+    /// High-volume diagnostics (per-connection, per-flush detail).
+    Debug = 3,
+}
+
+impl Level {
+    fn label(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+        }
+    }
+}
+
+/// `None` = everything off.
+static FILTER: OnceLock<Option<Level>> = OnceLock::new();
+
+fn parse_filter(raw: Option<&str>) -> Option<Level> {
+    match raw.map(|s| s.trim().to_ascii_lowercase()).as_deref() {
+        Some("off") | Some("none") | Some("0") => None,
+        Some("error") => Some(Level::Error),
+        Some("warn") | Some("warning") => Some(Level::Warn),
+        Some("debug") | Some("trace") => Some(Level::Debug),
+        // `info` explicitly, unset, or unrecognized: the default
+        _ => Some(Level::Info),
+    }
+}
+
+fn filter() -> Option<Level> {
+    *FILTER.get_or_init(|| {
+        let raw = std::env::var("LANDSCAPE_LOG").ok();
+        parse_filter(raw.as_deref())
+    })
+}
+
+/// Is `level` currently emitted?  Useful to skip expensive diagnostics
+/// entirely.
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    matches!(filter(), Some(max) if level <= max)
+}
+
+/// Emit one log line (used by the `log_*!` macros; prefer those).
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("landscape[{}] {}", level.label(), args);
+    }
+}
+
+/// Log at [`Level::Error`] severity.
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        // check the filter BEFORE touching the arguments, so filtered
+        // sites never evaluate expression operands
+        if $crate::util::log::enabled($crate::util::log::Level::Error) {
+            $crate::util::log::log($crate::util::log::Level::Error, format_args!($($arg)*));
+        }
+    };
+}
+
+/// Log at [`Level::Warn`] severity.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Warn) {
+            $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($arg)*));
+        }
+    };
+}
+
+/// Log at [`Level::Info`] severity.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Info) {
+            $crate::util::log::log($crate::util::log::Level::Info, format_args!($($arg)*));
+        }
+    };
+}
+
+/// Log at [`Level::Debug`] severity.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Debug) {
+            $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filter_parsing() {
+        assert_eq!(parse_filter(Some("off")), None);
+        assert_eq!(parse_filter(Some("0")), None);
+        assert_eq!(parse_filter(Some("error")), Some(Level::Error));
+        assert_eq!(parse_filter(Some("WARN")), Some(Level::Warn));
+        assert_eq!(parse_filter(Some(" warn ")), Some(Level::Warn));
+        assert_eq!(parse_filter(Some("info")), Some(Level::Info));
+        assert_eq!(parse_filter(Some("debug")), Some(Level::Debug));
+        // unset and junk both default to info
+        assert_eq!(parse_filter(None), Some(Level::Info));
+        assert_eq!(parse_filter(Some("verbose")), Some(Level::Info));
+    }
+
+    #[test]
+    fn severity_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+}

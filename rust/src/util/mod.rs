@@ -3,6 +3,7 @@
 //! and a seeded property-testing harness used across the test suite.
 
 pub mod json;
+pub mod log;
 pub mod rng;
 pub mod testkit;
 pub mod timer;

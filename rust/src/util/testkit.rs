@@ -42,7 +42,7 @@ impl Cases {
                 prop(&mut rng)
             }));
             if let Err(panic) = result {
-                eprintln!(
+                crate::log_error!(
                     "property failed at case {i}/{} — replay with \
                      Cases::one({seed:#x})",
                     self.n

@@ -466,7 +466,7 @@ fn reader_loop(shared: &PipeShared, mut reader: BufReader<TcpStream>) {
                         shared.cv.notify_all();
                     }
                     Some(b) => {
-                        eprintln!(
+                        crate::log_warn!(
                             "remote: delta seq {seq} for wrong vertex (sent {}, got \
                              {vertex})",
                             b.vertex
@@ -478,7 +478,7 @@ fn reader_loop(shared: &PipeShared, mut reader: BufReader<TcpStream>) {
                         return;
                     }
                     None => {
-                        eprintln!("remote: delta for unknown seq {seq}");
+                        crate::log_warn!("remote: delta for unknown seq {seq}");
                         drop(st);
                         shared.mark_dead();
                         return;
@@ -494,12 +494,12 @@ fn reader_loop(shared: &PipeShared, mut reader: BufReader<TcpStream>) {
                 return;
             }
             Ok(Message::Error { code, reason }) => {
-                eprintln!("remote: worker reported error {code}: {reason}");
+                crate::log_warn!("remote: worker reported error {code}: {reason}");
                 shared.mark_dead();
                 return;
             }
             Ok(other) => {
-                eprintln!("remote: unexpected frame {other:?}");
+                crate::log_warn!("remote: unexpected frame {other:?}");
                 shared.mark_dead();
                 return;
             }
@@ -572,7 +572,7 @@ impl WorkerServer {
                 // off briefly and give up after a bounded run of them.
                 Err(e) => {
                     accept_failures += 1;
-                    eprintln!("worker: accept failed ({accept_failures} in a row): {e}");
+                    crate::log_warn!("worker: accept failed ({accept_failures} in a row): {e}");
                     if accept_failures >= 64 {
                         for h in handles.drain(..) {
                             let _ = h.join();
@@ -587,12 +587,12 @@ impl WorkerServer {
             // the kernel nagles small DELTA frames behind the previous
             // reply's ACK
             if let Err(e) = stream.set_nodelay(true) {
-                eprintln!("worker: TCP_NODELAY failed (continuing): {e}");
+                crate::log_debug!("worker: TCP_NODELAY failed (continuing): {e}");
             }
             let opts = self.opts.clone();
             handles.push(std::thread::spawn(move || {
                 if let Err(e) = handle_connection(stream, opts) {
-                    eprintln!("worker connection error: {e:#}");
+                    crate::log_warn!("worker connection error: {e:#}");
                 }
             }));
             served += 1;
@@ -652,7 +652,7 @@ fn handle_connection(stream: TcpStream, opts: ServeOptions) -> Result<()> {
             // connection to end (coordinator died, failover kicked in):
             // log-and-continue serving other connections, not an error
             Err(e) => {
-                eprintln!("worker: client disconnected mid-stream ({e}); closing");
+                crate::log_warn!("worker: client disconnected mid-stream ({e}); closing");
                 break;
             }
         };
@@ -664,7 +664,7 @@ fn handle_connection(stream: TcpStream, opts: ServeOptions) -> Result<()> {
         if is_data && crash_now {
             // injected crash: drop the connection with this frame's
             // batches unanswered (no BYE)
-            eprintln!("worker: injected crash after {answered} answered batches");
+            crate::log_info!("worker: injected crash after {answered} answered batches");
             break;
         }
         match msg {

@@ -1,0 +1,142 @@
+//! Concurrent multi-producer ingest: a randomly generated valid
+//! insert/delete stream is randomly split across 1 / 2 / 4
+//! `IngestHandle`s driven from separate threads, for both the pipeline
+//! hypertree and the gutter (ablation) buffer.  The final queried
+//! partition must equal the from-scratch DSU referee every time, with
+//! `batches_dropped == 0` — no update may be lost or double-applied no
+//! matter how the producers' logs interleave.
+
+use landscape::baseline::Referee;
+use landscape::connectivity::dsu::Dsu;
+use landscape::coordinator::BufferKind;
+use landscape::stream::update::Update;
+use landscape::util::rng::Xoshiro256;
+use landscape::util::testkit::{arb_edge, Cases};
+use landscape::Landscape;
+
+fn session(v: u64, buffer: BufferKind) -> Landscape {
+    Landscape::builder()
+        .vertices(v)
+        .alpha(1)
+        .distributor_threads(2)
+        .buffer(buffer)
+        // small log so drains genuinely interleave across producers
+        .update_log_capacity(16)
+        .build()
+        .unwrap()
+}
+
+/// A valid random insert/delete stream plus its final live edge set.
+fn random_stream(rng: &mut Xoshiro256, v: u64) -> (Vec<Update>, Vec<(u32, u32)>) {
+    let mut live = std::collections::BTreeSet::new();
+    let mut stream = Vec::new();
+    for _ in 0..(60 + rng.next_below(120)) {
+        if !live.is_empty() && rng.next_below(3) == 0 {
+            let i = rng.next_below(live.len() as u64) as usize;
+            let e: (u32, u32) = *live.iter().nth(i).unwrap();
+            live.remove(&e);
+            stream.push(Update::delete(e.0, e.1));
+        } else {
+            let e = arb_edge(rng, v);
+            if live.insert(e) {
+                stream.push(Update::insert(e.0, e.1));
+            }
+        }
+    }
+    (stream, live.into_iter().collect())
+}
+
+/// Randomly deal the stream over `producers` threads (order preserved
+/// within each producer, arbitrary interleaving between them), ingest
+/// concurrently, and return the queried partition.
+fn concurrent_partition(
+    rng: &mut Xoshiro256,
+    v: u64,
+    updates: &[Update],
+    producers: usize,
+    buffer: BufferKind,
+) -> Vec<u32> {
+    let mut chunks: Vec<Vec<Update>> = vec![Vec::new(); producers];
+    for &u in updates {
+        chunks[rng.next_below(producers as u64) as usize].push(u);
+    }
+    let session = session(v, buffer);
+    std::thread::scope(|scope| {
+        for chunk in chunks {
+            let mut handle = session.ingest_handle();
+            scope.spawn(move || {
+                for u in chunk {
+                    handle.ingest(u);
+                }
+                // handle drop publishes the tail
+            });
+        }
+    });
+    assert_eq!(session.pending_producers(), 0, "all producers published");
+    let forest = session.query_handle().connected_components();
+    let m = session.metrics();
+    assert_eq!(m.batches_dropped, 0, "no update may vanish at the queue");
+    assert_eq!(m.handles_spawned, producers as u64);
+    assert_eq!(m.updates_ingested, updates.len() as u64);
+    forest.component
+}
+
+fn check_buffer(buffer: BufferKind) {
+    Cases::new(6).run(|rng| {
+        let v = 8 + rng.next_below(40);
+        let (updates, live) = random_stream(rng, v);
+        let mut d = Dsu::from_edges(v as usize, &live);
+        let want = d.component_map();
+        for producers in [1usize, 2, 4] {
+            let got = concurrent_partition(rng, v, &updates, producers, buffer);
+            assert!(
+                Referee::same_partition(&got, &want),
+                "{buffer:?} with {producers} producers diverges from the DSU referee",
+            );
+        }
+    });
+}
+
+#[test]
+fn random_splits_match_dsu_referee_hypertree() {
+    check_buffer(BufferKind::Hypertree);
+}
+
+#[test]
+fn random_splits_match_dsu_referee_gutter() {
+    check_buffer(BufferKind::Gutter);
+}
+
+/// The acceptance scenario at a fixed seed: a denser stream through 4
+/// producers must reproduce the single-producer partition exactly.
+#[test]
+fn four_producer_partition_is_identical_to_single_producer() {
+    let v = 128u64;
+    let mut rng = Xoshiro256::new(0xC0FFEE);
+    let (updates, live) = {
+        // build a denser stream than the property cases
+        let mut live = std::collections::BTreeSet::new();
+        let mut stream = Vec::new();
+        for _ in 0..2000 {
+            if !live.is_empty() && rng.next_below(3) == 0 {
+                let i = rng.next_below(live.len() as u64) as usize;
+                let e: (u32, u32) = *live.iter().nth(i).unwrap();
+                live.remove(&e);
+                stream.push(Update::delete(e.0, e.1));
+            } else {
+                let e = arb_edge(&mut rng, v);
+                if live.insert(e) {
+                    stream.push(Update::insert(e.0, e.1));
+                }
+            }
+        }
+        (stream, live.into_iter().collect::<Vec<(u32, u32)>>())
+    };
+    let mut d = Dsu::from_edges(v as usize, &live);
+    let want = d.component_map();
+
+    let single = concurrent_partition(&mut rng, v, &updates, 1, BufferKind::Hypertree);
+    let quad = concurrent_partition(&mut rng, v, &updates, 4, BufferKind::Hypertree);
+    assert!(Referee::same_partition(&single, &want));
+    assert!(Referee::same_partition(&quad, &single));
+}

@@ -5,16 +5,19 @@
 
 use landscape::baseline::Referee;
 use landscape::connectivity::dsu::Dsu;
-use landscape::coordinator::{Coordinator, CoordinatorConfig, QueryTier};
+use landscape::coordinator::QueryTier;
 use landscape::stream::update::Update;
 use landscape::stream::VecStream;
 use landscape::util::testkit::{arb_edge, Cases};
+use landscape::Landscape;
 
-fn small_config(v: u64) -> CoordinatorConfig {
-    let mut c = CoordinatorConfig::for_vertices(v);
-    c.alpha = 1;
-    c.distributor_threads = 2;
-    c
+fn small_session(v: u64) -> Landscape {
+    Landscape::builder()
+        .vertices(v)
+        .alpha(1)
+        .distributor_threads(2)
+        .build()
+        .unwrap()
 }
 
 fn same_partition(a: &[u32], b: &[u32]) -> bool {
@@ -25,7 +28,9 @@ fn same_partition(a: &[u32], b: &[u32]) -> bool {
 fn random_interleavings_match_dsu_reference_on_every_tier() {
     Cases::new(8).run(|rng| {
         let v = 8 + rng.next_below(40);
-        let mut coord = Coordinator::new(small_config(v)).unwrap();
+        let session = small_session(v);
+        let mut producer = session.ingest_handle();
+        let reader = session.query_handle();
         let mut live: std::collections::BTreeSet<(u32, u32)> =
             std::collections::BTreeSet::new();
         let mut queries = 0u64;
@@ -36,35 +41,37 @@ fn random_interleavings_match_dsu_reference_on_every_tier() {
                 let i = rng.next_below(live.len() as u64) as usize;
                 let e = *live.iter().nth(i).unwrap();
                 live.remove(&e);
-                coord.ingest(Update::delete(e.0, e.1));
+                producer.ingest(Update::delete(e.0, e.1));
             } else {
                 let e = arb_edge(rng, v);
                 if live.insert(e) {
-                    coord.ingest(Update::insert(e.0, e.1));
+                    producer.ingest(Update::insert(e.0, e.1));
                 }
             }
 
             if step % 13 == 5 {
                 queries += 1;
+                producer.flush(); // publish before querying
                 let edges: Vec<(u32, u32)> = live.iter().copied().collect();
                 let mut d = Dsu::from_edges(v as usize, &edges);
-                let forest = coord.connected_components();
+                let forest = reader.connected_components();
                 assert!(
                     same_partition(&forest.component, &d.component_map()),
                     "partition diverges at step {step} (tier accounting: {:?})",
-                    coord.metrics()
+                    session.metrics()
                 );
             }
         }
 
         // final query + accounting
         queries += 1;
+        producer.flush();
         let edges: Vec<(u32, u32)> = live.iter().copied().collect();
         let mut d = Dsu::from_edges(v as usize, &edges);
-        let forest = coord.connected_components();
+        let forest = reader.connected_components();
         assert!(same_partition(&forest.component, &d.component_map()));
 
-        let m = coord.metrics();
+        let m = session.metrics();
         // with the accelerator on, tier 2 is never needed: every query is
         // answered by GreedyCC or the partial tier
         assert_eq!(m.queries_full, 0, "tiered path must never fall to full");
@@ -77,7 +84,9 @@ fn random_interleavings_match_dsu_reference_on_every_tier() {
 #[test]
 fn non_forest_deletes_keep_the_query_on_tier_zero() {
     let v = 32u64;
-    let mut coord = Coordinator::new(small_config(v)).unwrap();
+    let session = small_session(v);
+    let mut producer = session.ingest_handle();
+    let reader = session.query_handle();
     let mut updates = Vec::new();
     // a triangle fan: edges (0,i) form the forest, (i,i+1) are cycles
     for i in 1..10u32 {
@@ -90,12 +99,13 @@ fn non_forest_deletes_keep_the_query_on_tier_zero() {
     for i in 1..9u32 {
         updates.push(Update::delete(i, i + 1));
     }
-    coord.ingest_all(VecStream::new(v, updates));
+    producer.ingest_all(VecStream::new(v, updates));
+    producer.flush();
 
-    assert_eq!(coord.query_plan(), QueryTier::Greedy);
-    let before = coord.metrics();
-    let forest = coord.connected_components();
-    let after = coord.metrics();
+    assert_eq!(reader.query_plan(), QueryTier::Greedy);
+    let before = session.metrics();
+    let forest = reader.connected_components();
+    let after = session.metrics();
 
     assert_eq!(after.queries_full, before.queries_full, "no full query");
     assert_eq!(after.queries_full, 0);
@@ -109,26 +119,29 @@ fn non_forest_deletes_keep_the_query_on_tier_zero() {
 #[test]
 fn forest_delete_partial_query_then_back_to_tier_zero() {
     let v = 64u64;
-    let mut coord = Coordinator::new(small_config(v)).unwrap();
+    let session = small_session(v);
+    let mut producer = session.ingest_handle();
+    let reader = session.query_handle();
     let mut updates: Vec<Update> = (0..31).map(|i| Update::insert(i, i + 1)).collect();
     updates.push(Update::delete(15, 16)); // forest edge mid-path
-    coord.ingest_all(VecStream::new(v, updates));
+    producer.ingest_all(VecStream::new(v, updates));
+    producer.flush();
 
-    assert_eq!(coord.query_plan(), QueryTier::Partial);
-    let forest = coord.connected_components();
+    assert_eq!(reader.query_plan(), QueryTier::Partial);
+    let forest = reader.connected_components();
     assert!(forest.connected(0, 15));
     assert!(forest.connected(16, 31));
     assert!(!forest.connected(15, 16));
 
-    let m = coord.metrics();
+    let m = session.metrics();
     assert_eq!(m.queries_partial, 1);
     assert_eq!(m.queries_full, 0);
     assert_eq!(m.dirty_components, 1);
     assert_eq!(m.batches_dropped, 0);
 
     // the partial query re-seeded GreedyCC: next query is free again
-    assert_eq!(coord.query_plan(), QueryTier::Greedy);
-    let again = coord.connected_components();
-    assert_eq!(coord.metrics().queries_greedy, 1);
+    assert_eq!(reader.query_plan(), QueryTier::Greedy);
+    let again = reader.connected_components();
+    assert_eq!(session.metrics().queries_greedy, 1);
     assert!(!again.connected(15, 16));
 }

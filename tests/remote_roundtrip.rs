@@ -8,7 +8,7 @@
 use std::sync::atomic::Ordering;
 
 use landscape::connectivity::dsu::Dsu;
-use landscape::coordinator::{Coordinator, CoordinatorConfig, WorkerKind};
+use landscape::coordinator::{CoordinatorConfig, WorkerKind};
 use landscape::net::Message;
 use landscape::sketch::params::SketchParams;
 use landscape::stream::dynamify::Dynamify;
@@ -16,6 +16,7 @@ use landscape::stream::erdos::ErdosRenyi;
 use landscape::stream::edge_list;
 use landscape::worker::remote::{RemoteWorker, ServeOptions, WorkerServer};
 use landscape::worker::WorkerBackend;
+use landscape::Landscape;
 
 fn same_partition(a: &[u32], b: &[u32]) -> bool {
     let mut fwd = std::collections::HashMap::new();
@@ -56,18 +57,22 @@ fn remote_ingest_matches_native_and_obeys_communication_bound() {
     native_cfg.alpha = 1;
     native_cfg.distributor_threads = 2;
     native_cfg.use_greedycc = false;
-    let mut native = Coordinator::new(native_cfg).unwrap();
-    native.ingest_all(Dynamify::new(model, 3)); // ErdosRenyi is Copy
-    let native_forest = native.full_connectivity_query();
+    let native = Landscape::from_config(native_cfg).unwrap();
+    let mut native_ingest = native.ingest_handle();
+    native_ingest.ingest_all(Dynamify::new(model, 3)); // ErdosRenyi is Copy
+    native_ingest.flush();
+    let native_forest = native.query_handle().full_connectivity_query();
 
     // remote run: in-process TCP worker server on an ephemeral port
     let server = WorkerServer::bind("127.0.0.1:0").unwrap();
     let addr = server.local_addr().unwrap().to_string();
     let server_thread = std::thread::spawn(move || server.serve(2));
 
-    let mut coord = Coordinator::new(config(v, addr)).unwrap();
-    coord.ingest_all(Dynamify::new(model, 3));
-    let forest = coord.full_connectivity_query();
+    let session = Landscape::from_config(config(v, addr)).unwrap();
+    let mut ingest = session.ingest_handle();
+    ingest.ingest_all(Dynamify::new(model, 3));
+    ingest.flush();
+    let forest = session.query_handle().full_connectivity_query();
 
     assert!(
         same_partition(&forest.component, &native_forest.component),
@@ -79,10 +84,10 @@ fn remote_ingest_matches_native_and_obeys_communication_bound() {
     );
 
     // Theorem 5.2: network bytes <= (3 + 1/(gamma*alpha)) x stream bytes,
-    // metered at the batch/delta layer by the coordinator.
-    let m = coord.metrics();
+    // metered at the batch/delta layer by the session.
+    let m = session.metrics();
     assert!(m.stream_bytes > 0 && m.network_bytes() > 0);
-    let bound = (3.0 + 1.0 / (coord.config().gamma * coord.config().alpha as f64))
+    let bound = (3.0 + 1.0 / (session.config().gamma * session.config().alpha as f64))
         * m.stream_bytes as f64;
     assert!(
         (m.network_bytes() as f64) < bound,
@@ -90,7 +95,8 @@ fn remote_ingest_matches_native_and_obeys_communication_bound() {
         m.network_bytes()
     );
 
-    drop(coord); // closes both connections so the server thread exits
+    drop(ingest);
+    drop(session); // closes both connections so the server thread exits
     let _ = server_thread.join();
 }
 
@@ -135,11 +141,13 @@ fn worker_failover_requeues_unacked_batches_with_zero_drops() {
     cfg.worker = WorkerKind::Remote {
         addrs: vec![flaky_addr, healthy_addr],
     };
-    let mut coord = Coordinator::new(cfg).unwrap();
-    coord.ingest_all(Dynamify::new(model, 3));
-    let forest = coord.full_connectivity_query();
+    let session = Landscape::from_config(cfg).unwrap();
+    let mut ingest = session.ingest_handle();
+    ingest.ingest_all(Dynamify::new(model, 3));
+    ingest.flush();
+    let forest = session.query_handle().full_connectivity_query();
 
-    let m = coord.metrics();
+    let m = session.metrics();
     assert_eq!(m.batches_dropped, 0, "failover must not lose a single batch");
     assert!(
         m.worker_failures >= 1,
@@ -154,7 +162,8 @@ fn worker_failover_requeues_unacked_batches_with_zero_drops() {
         "partition after failover diverges from the exact reference"
     );
 
-    drop(coord); // closes the surviving connections so the servers exit
+    drop(ingest);
+    drop(session); // closes the surviving connections so the servers exit
     let _ = flaky_thread.join();
     let _ = healthy_thread.join();
 }

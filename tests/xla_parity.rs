@@ -11,7 +11,7 @@
 use std::path::PathBuf;
 
 use landscape::connectivity::dsu::Dsu;
-use landscape::coordinator::{Coordinator, CoordinatorConfig, WorkerKind};
+use landscape::coordinator::{CoordinatorConfig, WorkerKind};
 use landscape::runtime::Runtime;
 use landscape::sketch::params::{encode_edge, SketchParams};
 use landscape::sketch::seeds::SketchSeeds;
@@ -20,6 +20,7 @@ use landscape::stream::dynamify::Dynamify;
 use landscape::stream::erdos::ErdosRenyi;
 use landscape::stream::{edge_list, EdgeModel};
 use landscape::util::rng::Xoshiro256;
+use landscape::Landscape;
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts"));
@@ -109,9 +110,11 @@ fn coordinator_in_xla_mode_computes_correct_components() {
     cfg.distributor_threads = 1;
     cfg.worker = WorkerKind::Xla { artifact_dir: dir };
     cfg.use_greedycc = false;
-    let mut coord = Coordinator::new(cfg).unwrap();
-    coord.ingest_all(Dynamify::new(model, 3));
-    let forest = coord.connected_components();
+    let session = Landscape::from_config(cfg).unwrap();
+    let mut ingest = session.ingest_handle();
+    ingest.ingest_all(Dynamify::new(model, 3));
+    ingest.flush();
+    let forest = session.query_handle().connected_components();
 
     for a in 0..v as u32 {
         for b in (a + 1)..(v as u32).min(a + 4) {
