@@ -5,8 +5,11 @@
 //! hypertree vs gutter ingestion, multi-producer session ingest
 //! (`ingest_producers_{1,2,4}`), sketch-delta merge, work-queue
 //! handoff, lockstep vs pipelined remote transport under injected
-//! latency, Borůvka queries, GreedyCC ops, adjacency-matrix bit flips,
-//! and RAM bandwidth — everything EXPERIMENTS.md §Perf tracks.
+//! latency, Borůvka queries, query latency idle vs under sustained
+//! never-idle ingest (`query_latency_idle` vs
+//! `query_latency_under_load_p{1,4}` — the epoch cut barrier's win),
+//! GreedyCC ops, adjacency-matrix bit flips, and RAM bandwidth —
+//! everything EXPERIMENTS.md §Perf tracks.
 
 use std::sync::Arc;
 
@@ -265,6 +268,7 @@ fn main() {
     // live in.  ns_per_op is per batch: lockstep pays one full latency
     // per batch, the pipelined rows shrink roughly with W.
     {
+        use landscape::coordinator::work_queue::EpochBarrier;
         use landscape::worker::remote::{
             PipelinedRemote, RemoteWorker, ServeOptions, WorkerServer,
         };
@@ -297,6 +301,7 @@ fn main() {
         row("remote_lockstep_lat500us", s.median / nbatches as f64);
         lockstep.shutdown();
 
+        let tickets = EpochBarrier::new();
         for w in [1usize, 4, 16] {
             let mut p = PipelinedRemote::connect(&addr, params, 42, 1, w).unwrap();
             let mut token = 0u64;
@@ -307,6 +312,7 @@ fn main() {
                     token += 1;
                     p.submit(PendingBatch {
                         token,
+                        ticket: tickets.register(),
                         vertex: 0,
                         others: batch_others.clone(),
                     })
@@ -419,6 +425,73 @@ fn main() {
                 );
             });
             row(&format!("query_partial_d{d}_v2^{vexp}"), s.median);
+        }
+    }
+
+    // query latency vs the epoch cut barrier: a forced tier-2 query on
+    // an idle session vs the same query while 1 / 4 producers stream at
+    // full rate without ever pausing.  Under the retired idle-waiting
+    // barrier the loaded rows could block unboundedly (the query waited
+    // for a lull in the pipeline); with epoch cuts they track the idle
+    // row plus only the work in flight at cut time.
+    {
+        use landscape::util::testkit::{churn_chord, cycle_graph};
+        use landscape::Landscape;
+        use std::sync::atomic::{AtomicBool, Ordering};
+
+        let qv = 1u64 << 12;
+        let span = 16u32;
+        let ncycles = (qv as u32) / span;
+        for producers in [0usize, 1, 4] {
+            let session = Landscape::builder()
+                .vertices(qv)
+                .alpha(1)
+                .distributor_threads(2)
+                .greedycc(false) // isolate the cut + sketch-read path
+                .build()
+                .unwrap();
+            // base graph: disjoint cycles, fully published before timing
+            {
+                let mut h = session.ingest_handle();
+                for u in cycle_graph(ncycles, span) {
+                    h.ingest(u);
+                }
+                h.flush();
+            }
+            session.flush();
+
+            let stop = AtomicBool::new(false);
+            let median = std::thread::scope(|scope| {
+                for p in 0..producers {
+                    let mut h = session.ingest_handle();
+                    let stop = &stop;
+                    // partition-invariant churn: toggle producer-disjoint
+                    // chords inside the cycles, publishing every round so
+                    // the shared pipeline is never idle
+                    scope.spawn(move || {
+                        let mut i = 0u32;
+                        while !stop.load(Ordering::Acquire) {
+                            let (x, y) = churn_chord((i % ncycles) * span, p, span);
+                            h.ingest(Update::insert(x, y));
+                            h.ingest(Update::delete(x, y));
+                            h.flush();
+                            i += 1;
+                        }
+                    });
+                }
+                let q = session.query_handle();
+                let s = bench(1, 5, || {
+                    let _ = q.full_connectivity_query();
+                });
+                stop.store(true, Ordering::Release);
+                s.median
+            });
+            let name = if producers == 0 {
+                "query_latency_idle".to_string()
+            } else {
+                format!("query_latency_under_load_p{producers}")
+            };
+            row(&name, median);
         }
     }
 

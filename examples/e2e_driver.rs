@@ -25,6 +25,12 @@
 //! in-process worker servers with injected reply latency, a window of
 //! batches in flight, out-of-order delta completion, and a mid-stream
 //! worker crash absorbed by failover — checked against the exact referee.
+//!
+//! `--scenario snapshot` runs only the epoch-cut scenario: pinned
+//! snapshots and forced tier-2 queries racing sustained, never-idle
+//! 4-producer ingest, each answer checked against the DSU referee and
+//! held to a promptness bound (the retired idle-waiting barrier hangs
+//! here).
 
 use landscape::baseline::Referee;
 use landscape::benchkit::{fmt_bytes, fmt_rate};
@@ -274,6 +280,146 @@ fn stage_remote() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The snapshot scenario (CI-sized): queries racing sustained,
+/// never-idle 4-producer ingest.  A base graph of disjoint cycles is
+/// published; the producers then churn partition-invariant chords
+/// (insert→delete inside a cycle, producer-disjoint chord sets,
+/// publishing every round) so the shared pipeline never goes idle.
+/// The main thread meanwhile takes pinned [`landscape::Snapshot`]s and
+/// forced tier-2 queries — each must return promptly (bounded by
+/// in-flight work at cut time, not by the stream, which never ends on
+/// its own) and match the DSU referee of the base graph.  Under the
+/// retired idle-waiting barrier this scenario hangs.
+fn stage_snapshot() -> anyhow::Result<()> {
+    use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+    use std::time::{Duration, Instant};
+
+    let producers = 4usize;
+    let cycles = 32u32;
+    let span = 32u32;
+    let v = (cycles * span) as u64;
+    let rounds = 8usize;
+
+    let session = Landscape::builder()
+        .vertices(v)
+        .alpha(1)
+        .distributor_threads(2)
+        .update_log_capacity(64)
+        .build()?;
+
+    let base = landscape::util::testkit::cycle_graph(cycles, span);
+    let mut referee = Referee::new(v);
+    for u in &base {
+        referee.apply(u);
+    }
+    let want = referee.component_map();
+
+    let stop = AtomicBool::new(false);
+    let published = AtomicUsize::new(0);
+    let churned = AtomicU64::new(0);
+    let mut max_snap = Duration::ZERO;
+    let mut max_full = Duration::ZERO;
+    let mismatch = std::thread::scope(|scope| {
+        for p in 0..producers {
+            let mut handle = session.ingest_handle();
+            let chunk: Vec<Update> = base
+                .iter()
+                .copied()
+                .skip(p)
+                .step_by(producers)
+                .collect();
+            let (stop, published, churned) = (&stop, &published, &churned);
+            scope.spawn(move || {
+                for u in chunk {
+                    handle.ingest(u);
+                }
+                handle.flush();
+                published.fetch_add(1, Ordering::Release);
+                // never-idle phase: toggle this producer's chords,
+                // publishing every round so batches keep flowing
+                let mut n = 0u64;
+                let mut i = 0u32;
+                while !stop.load(Ordering::Acquire) {
+                    let (x, y) =
+                        landscape::util::testkit::churn_chord((i % cycles) * span, p, span);
+                    handle.ingest(Update::insert(x, y));
+                    handle.ingest(Update::delete(x, y));
+                    handle.flush();
+                    n += 2;
+                    i += 1;
+                }
+                churned.fetch_add(n, Ordering::Relaxed);
+            });
+        }
+
+        while published.load(Ordering::Acquire) < producers {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+
+        // record the first mismatch instead of asserting mid-scope: a
+        // panic before `stop` is set would wedge the scope behind the
+        // still-spinning producers
+        let mut mismatch: Option<String> = None;
+        let queries = session.query_handle();
+        for round in 0..rounds {
+            // pinned snapshot: cheap cut, bounded wait, referee-correct
+            let t0 = Instant::now();
+            let snap = queries.snapshot();
+            let sf = snap.connected_components();
+            max_snap = max_snap.max(t0.elapsed());
+            if !Referee::same_partition(&sf.component, &want) && mismatch.is_none() {
+                mismatch = Some(format!("snapshot round {round}"));
+            }
+
+            // forced tier-2 on a fresh cut: the worst-case barrier path
+            let t0 = Instant::now();
+            let ff = queries.full_connectivity_query();
+            max_full = max_full.max(t0.elapsed());
+            if !Referee::same_partition(&ff.component, &want) && mismatch.is_none() {
+                mismatch = Some(format!("tier-2 round {round}"));
+            }
+        }
+        stop.store(true, Ordering::Release);
+        mismatch
+    });
+
+    if let Some(at) = mismatch {
+        panic!("{at}: partition mismatch under load");
+    }
+    let m = session.metrics();
+    println!(
+        "[snapshot] {rounds} snapshot + {rounds} tier-2 queries while {} \
+         producers churned {} updates without pausing: max snapshot \
+         latency {:.6}s, max tier-2 latency {:.6}s, {} cuts (epoch {}), \
+         total cut-wait {:.6}s, {} dropped — MATCH",
+        producers,
+        churned.load(Ordering::Relaxed),
+        max_snap.as_secs_f64(),
+        max_full.as_secs_f64(),
+        m.cuts_taken,
+        m.epoch_current,
+        m.cut_wait_us as f64 / 1e6,
+        m.batches_dropped,
+    );
+    assert_eq!(m.batches_dropped, 0, "snapshot scenario dropped batches");
+    assert!(
+        m.cuts_taken >= rounds as u64 * 2,
+        "every snapshot and tier-2 query must take its own cut"
+    );
+    assert!(
+        m.epoch_current >= rounds as u64,
+        "cuts must advance the epoch"
+    );
+    // the hang this scenario regression-tests manifested as an unbounded
+    // stall; any sane bound proves promptness on CI hardware
+    assert!(
+        max_snap < Duration::from_secs(20) && max_full < Duration::from_secs(20),
+        "query under sustained load exceeded the promptness bound \
+         (snapshot {max_snap:?}, tier-2 {max_full:?})"
+    );
+    Ok(())
+}
+
 /// The value following `--scenario`, if any.
 fn scenario_arg() -> Option<String> {
     let mut args = std::env::args();
@@ -289,11 +435,13 @@ fn main() -> anyhow::Result<()> {
     match scenario_arg().as_deref() {
         Some("query") => return stage0_query_tiers(),
         Some("remote") => return stage_remote(),
-        Some(other) => anyhow::bail!("unknown scenario {other} (query|remote)"),
+        Some("snapshot") => return stage_snapshot(),
+        Some(other) => anyhow::bail!("unknown scenario {other} (query|remote|snapshot)"),
         None => {}
     }
 
     stage0_query_tiers()?;
+    stage_snapshot()?;
     stage1_xla()?;
 
     // ---- stage 2: full run, native + remote TCP workers ----

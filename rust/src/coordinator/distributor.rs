@@ -14,7 +14,7 @@
 //! `batches_dropped`.
 
 use std::collections::HashSet;
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 use anyhow::{bail, Result};
 
@@ -25,7 +25,7 @@ use crate::sketch::params::{encode_edge, SketchParams};
 use crate::worker::remote::PipelinedRemote;
 use crate::worker::{Completion, InlineSubmit, PendingBatch, SubmitBackend};
 
-use super::work_queue::{FlushBarrier, ShardedWorkQueue};
+use super::work_queue::{EpochBarrier, ShardedWorkQueue, Ticket};
 use super::{build_inline_backend, WorkItem, WorkerKind};
 
 /// Everything a distributor thread needs, bundled so the spawn site
@@ -41,7 +41,11 @@ pub(crate) struct Distributor {
     pub queue: Arc<ShardedWorkQueue<WorkItem>>,
     pub kconn: Arc<KConnectivity>,
     pub metrics: Arc<Metrics>,
-    pub barrier: Arc<FlushBarrier>,
+    pub barrier: Arc<EpochBarrier>,
+    /// Shared with the session's query path: a merge holds it shared so
+    /// a concurrent sketch read (which holds it exclusively, *after*
+    /// its cut has retired) never observes a torn multi-word delta.
+    pub merge_gate: Arc<RwLock<()>>,
 }
 
 impl Distributor {
@@ -106,12 +110,17 @@ impl Distributor {
             };
 
             match item {
-                WorkItem::Local(batch) => self.apply_local(&batch),
-                WorkItem::Distribute(batch) => {
+                WorkItem::Local(ticket, batch) => self.apply_local(ticket, &batch),
+                WorkItem::Distribute(ticket, batch) => {
                     let token = next_token;
                     next_token += 1;
+                    // the epoch ticket rides inside the PendingBatch, so
+                    // it survives window buffering, the wire, and any
+                    // failover resubmission — a requeued batch retires
+                    // against its ORIGINAL epoch, never the current one
                     let pending = PendingBatch {
                         token,
+                        ticket,
                         vertex: batch.vertex,
                         others: batch.others,
                     };
@@ -140,7 +149,7 @@ impl Distributor {
                                 // per-batch computation error: the
                                 // backend survives, the batch does not
                                 Metrics::add(&self.metrics.batches_dropped, 1);
-                                self.barrier.complete();
+                                self.barrier.complete(ticket);
                                 crate::log_warn!("worker error (batch dropped): {e:#}");
                             }
                         }
@@ -191,7 +200,8 @@ impl Distributor {
         alive
     }
 
-    /// XOR-merge one completed delta into this distributor's shard.
+    /// XOR-merge one completed delta into this distributor's shard and
+    /// retire its epoch ticket.
     fn merge(&self, c: Completion) {
         let words = self.params.words();
         let k = self.k as usize;
@@ -207,12 +217,17 @@ impl Distributor {
                 words * k
             );
             Metrics::add(&self.metrics.batches_dropped, 1);
-            self.barrier.complete();
+            self.barrier.complete(c.ticket);
             return;
         }
-        for copy in 0..k {
-            self.kconn.stores()[copy]
-                .merge_delta_exclusive(c.vertex, &c.delta[copy * words..(copy + 1) * words]);
+        {
+            // batch-granular atomicity for concurrent readers: the gate
+            // is uncontended except while a query is reading the store
+            let _merging = self.merge_gate.read().unwrap();
+            for copy in 0..k {
+                let delta = &c.delta[copy * words..(copy + 1) * words];
+                self.kconn.stores()[copy].merge_delta_exclusive(c.vertex, delta);
+            }
         }
         Metrics::add(&self.metrics.deltas_merged, 1);
         if c.wire_bytes > 0 {
@@ -221,21 +236,24 @@ impl Distributor {
             // bytes that crossed a wire)
             Metrics::add(&self.metrics.delta_bytes_received, c.wire_bytes);
         }
-        self.barrier.complete();
+        self.barrier.complete(c.ticket);
     }
 
     /// §5.3's hybrid policy: underfull leaves apply per-update on the
     /// shard owner, no delta overhead.
-    fn apply_local(&self, batch: &VertexBatch) {
+    fn apply_local(&self, ticket: Ticket, batch: &VertexBatch) {
         let v = self.params.v;
-        for &other in &batch.others {
-            let idx = encode_edge(batch.vertex, other, v);
-            for store in self.kconn.stores() {
-                store.apply_local(batch.vertex, idx);
+        {
+            let _merging = self.merge_gate.read().unwrap();
+            for &other in &batch.others {
+                let idx = encode_edge(batch.vertex, other, v);
+                for store in self.kconn.stores() {
+                    store.apply_local(batch.vertex, idx);
+                }
             }
         }
         Metrics::add(&self.metrics.updates_local, batch.others.len() as u64);
-        self.barrier.complete();
+        self.barrier.complete(ticket);
     }
 
     fn build_backend(
@@ -329,7 +347,7 @@ impl Distributor {
         );
         let WorkerKind::Remote { addrs } = &self.kind else {
             // inline backends never report dead(); defensive
-            self.drop_batches(unacked.len());
+            self.drop_batches(&unacked);
             self.abandon_shard();
             return false;
         };
@@ -385,31 +403,34 @@ impl Distributor {
             return true;
         }
         // no worker survived: everything unacknowledged is lost work
-        self.drop_batches(unacked.len());
+        self.drop_batches(&unacked);
         self.abandon_shard();
         false
     }
 
-    fn drop_batches(&self, n: usize) {
-        if n == 0 {
+    /// Meter lost batches and retire each one's epoch ticket, so no cut
+    /// waits forever on work that can no longer complete.
+    fn drop_batches(&self, batches: &[PendingBatch]) {
+        if batches.is_empty() {
             return;
         }
-        Metrics::add(&self.metrics.batches_dropped, n as u64);
-        for _ in 0..n {
-            self.barrier.complete();
+        Metrics::add(&self.metrics.batches_dropped, batches.len() as u64);
+        for b in batches {
+            self.barrier.complete(b.ticket);
         }
     }
 
     /// Fail-fast shard teardown (PR 2): close the shard queue first so
     /// later pushes fail immediately and take QueueSink's metered drop
-    /// path instead of wedging the flush barrier, then drain and meter
-    /// what already got in — all of it is lost work.
+    /// path instead of wedging the epoch barrier, then drain and meter
+    /// what already got in — all of it is lost work, retired against
+    /// whatever epoch each item was registered in.
     fn abandon_shard(&self) {
         self.queue.close_shard(self.shard);
         while let Some(item) = self.queue.pop(self.shard) {
-            drop(item);
+            let (WorkItem::Distribute(ticket, _) | WorkItem::Local(ticket, _)) = item;
             Metrics::add(&self.metrics.batches_dropped, 1);
-            self.barrier.complete();
+            self.barrier.complete(ticket);
         }
     }
 }

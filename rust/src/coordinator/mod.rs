@@ -161,13 +161,18 @@ impl CoordinatorConfig {
     }
 }
 
-/// One unit of shard-affine work for a distributor thread.
+/// One unit of shard-affine work for a distributor thread, carrying the
+/// epoch-barrier [`work_queue::Ticket`] minted when it was enqueued.
+/// The ticket stays with the work through its whole asynchronous
+/// lifetime (queue → submit → out-of-order completion, surviving
+/// failover resubmission) and is retired exactly once at the merge or
+/// the metered drop.
 pub(crate) enum WorkItem {
     /// A γ-full batch: worker backend → sketch delta → exclusive merge.
-    Distribute(VertexBatch),
+    Distribute(work_queue::Ticket, VertexBatch),
     /// An underfull leaf at flush time: per-update local application on
     /// the shard owner (§5.3's hybrid policy — no delta overhead).
-    Local(VertexBatch),
+    Local(work_queue::Ticket, VertexBatch),
 }
 
 /// The legacy single-owner facade: one session + one ingest handle
@@ -234,8 +239,11 @@ impl Coordinator {
 
     /// The query barrier (§5.3): publish this owner's buffered tail,
     /// flush all pending updates — γ-full leaves to workers, the rest
-    /// locally — then sleep on the flush barrier's condvar until every
-    /// in-flight item has merged.
+    /// locally — then take a stream cut and sleep until every item
+    /// registered before it has merged.  As the single owner of both
+    /// ingestion and queries, this is exactly the legacy "wait until
+    /// the pipeline drains" semantics (nothing else can register work
+    /// behind the cut).
     pub fn flush_pending(&mut self) {
         self.handle.flush();
         self.session.flush();

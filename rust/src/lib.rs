@@ -92,6 +92,9 @@ pub mod stream;
 pub mod util;
 pub mod worker;
 
-pub use session::{ConfigError, IngestHandle, Landscape, LandscapeBuilder, QueryHandle};
+pub use coordinator::work_queue::Cut;
+pub use session::{
+    ConfigError, IngestHandle, Landscape, LandscapeBuilder, QueryHandle, Snapshot,
+};
 pub use sketch::params::SketchParams;
 pub use stream::update::{Update, UpdateKind};

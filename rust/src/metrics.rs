@@ -55,6 +55,18 @@ pub struct Metrics {
     /// `updates_ingested / log_drains` ≈ the amortization factor keeping
     /// GreedyCC maintenance off the cross-thread hot path.
     pub log_drains: AtomicU64,
+    /// The epoch barrier's currently open epoch (a monotone gauge,
+    /// raised at every cut): how many stream cuts the session has
+    /// lived through.
+    pub epoch_current: AtomicU64,
+    /// Stream cuts taken (queries, snapshots, and explicit flushes each
+    /// take one; `cuts_taken == epoch_current` unless a barrier besides
+    /// the session's is in play).
+    pub cuts_taken: AtomicU64,
+    /// Total microseconds spent blocked in `wait_for(cut)` — the
+    /// read-side latency actually paid to the barrier, bounded by
+    /// in-flight work at cut time rather than by stream length.
+    pub cut_wait_us: AtomicU64,
 }
 
 /// A plain-value copy of [`Metrics`].
@@ -78,6 +90,9 @@ pub struct MetricsSnapshot {
     pub worker_failures: u64,
     pub handles_spawned: u64,
     pub log_drains: u64,
+    pub epoch_current: u64,
+    pub cuts_taken: u64,
+    pub cut_wait_us: u64,
 }
 
 impl Metrics {
@@ -116,6 +131,9 @@ impl Metrics {
             worker_failures: self.worker_failures.load(Ordering::Relaxed),
             handles_spawned: self.handles_spawned.load(Ordering::Relaxed),
             log_drains: self.log_drains.load(Ordering::Relaxed),
+            epoch_current: self.epoch_current.load(Ordering::Relaxed),
+            cuts_taken: self.cuts_taken.load(Ordering::Relaxed),
+            cut_wait_us: self.cut_wait_us.load(Ordering::Relaxed),
         }
     }
 }

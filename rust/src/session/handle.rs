@@ -1,12 +1,14 @@
-//! The two session handles: [`IngestHandle`] (write side, one per
-//! producer thread) and [`QueryHandle`] (read side, cloneable and
-//! `Sync`).
+//! The session handles: [`IngestHandle`] (write side, one per producer
+//! thread), [`QueryHandle`] (read side, cloneable and `Sync`), and
+//! [`Snapshot`] (a pinned stream cut the read side can query while
+//! producers keep streaming).
 
 use std::sync::atomic::Ordering as AtomicOrdering;
 use std::sync::Arc;
 
 use crate::connectivity::SpanningForest;
 use crate::coordinator::query::QueryTier;
+use crate::coordinator::work_queue::Cut;
 use crate::hypertree::LocalIngest;
 use crate::metrics::{Metrics, MetricsSnapshot};
 use crate::stream::update::{Update, UPDATE_WIRE_BYTES};
@@ -128,8 +130,8 @@ impl IngestHandle {
     /// Publish in the only sound order: thread-local hypertree levels
     /// into the shared tree *first*, then the update log into the query
     /// engine.  The reverse would let GreedyCC learn an update whose
-    /// sketch entries are still invisible to a concurrent query's flush
-    /// barrier — that query's `reseed` would then rebuild GreedyCC from
+    /// sketch entries can still fall outside a concurrent query's cut
+    /// — that query's `reseed` would then rebuild GreedyCC from
     /// sketches lacking the update and permanently discard the drained
     /// knowledge, leaving later tier-0 answers stale even after this
     /// handle flushes.  Publishing the buffers first keeps the
@@ -234,10 +236,14 @@ impl Drop for IngestHandle {
 /// `&mut` access to ingestion.
 ///
 /// Queries are serialized against each other inside the session (the
-/// tiered plan → flush → Borůvka → re-seed sequence is a
-/// read-modify-write of the accelerator), and each query runs the §5.3
-/// barrier over the shared pipeline first.  Results cover every
+/// tiered plan → cut → Borůvka → re-seed sequence is a
+/// read-modify-write of the accelerator), and each escalating query
+/// takes **its own stream cut** and waits only for work registered
+/// before it — never for pipeline idleness, so queries stay prompt
+/// under sustained concurrent ingestion.  Results cover every
 /// *published* update — see the module-level consistency contract.
+/// [`QueryHandle::snapshot`] pins a cut once and lets several queries
+/// share it.
 #[derive(Clone)]
 pub struct QueryHandle {
     core: Arc<SessionCore>,
@@ -282,8 +288,85 @@ impl QueryHandle {
         self.core.k_connectivity()
     }
 
+    /// Pin a stream cut *now* and return a [`Snapshot`] whose queries
+    /// answer over it.
+    ///
+    /// Taking the snapshot is cheap (a buffer force-flush plus an epoch
+    /// advance — no waiting); the first query on it waits for the
+    /// pinned cut to retire, bounded by the work that was in flight at
+    /// cut time, and later queries find it already retired.  Producers
+    /// keep streaming throughout — their post-cut updates land in later
+    /// epochs and never delay this snapshot.
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            cut: self.core.cut_shared(),
+            core: self.core.clone(),
+        }
+    }
+
     /// Snapshot of the session metrics.
     pub fn metrics(&self) -> MetricsSnapshot {
         self.core.metrics.snapshot()
+    }
+}
+
+/// A pinned stream cut: a cheap consistency token whose queries answer
+/// over **all updates published before the cut** while producers keep
+/// streaming.
+///
+/// The guarantee is one-sided, exactly like the session's (see the
+/// module-level consistency contract): every update published before
+/// [`QueryHandle::snapshot`] was called is covered; updates published
+/// after it *may* also be visible (sketch merges keep landing behind
+/// the cut and are never rolled back).  What the snapshot buys is
+/// liveness — the wait is bounded by the in-flight work at cut time,
+/// never by how long the producers keep going.
+///
+/// Clone freely; clones share the same cut.  Queries on a snapshot are
+/// serialized with the session's other queries, and never re-seed the
+/// tier-0 accelerator (a pinned read may be older than what the
+/// accelerator already knows, and must not fold back into live query
+/// state) — so snapshots cannot make later queries staler, only the
+/// stream can.
+#[derive(Clone)]
+pub struct Snapshot {
+    core: Arc<SessionCore>,
+    cut: Cut,
+}
+
+impl Snapshot {
+    /// The pinned cut token (e.g. to `Landscape::wait_for` it
+    /// explicitly, or to correlate with `metrics().epoch_current`).
+    pub fn cut(&self) -> Cut {
+        self.cut
+    }
+
+    /// The epoch this snapshot pins (every update published before the
+    /// cut was registered in an epoch ≤ this).
+    pub fn epoch(&self) -> u64 {
+        self.cut.epoch()
+    }
+
+    /// Global connectivity over the pinned cut, answered by the
+    /// cheapest valid tier (tier 0 needs no waiting at all; tiers 1–2
+    /// wait for the pinned cut instead of taking a new one).
+    pub fn connected_components(&self) -> SpanningForest {
+        self.core.connected_components_at(Some(self.cut))
+    }
+
+    /// Forced tier-2 (full Borůvka) query over the pinned cut.
+    pub fn full_connectivity_query(&self) -> SpanningForest {
+        self.core.full_connectivity_query_at(Some(self.cut))
+    }
+
+    /// Batched reachability over the pinned cut.
+    pub fn reachability(&self, pairs: &[(u32, u32)]) -> Vec<bool> {
+        self.core.reachability_at(pairs, Some(self.cut))
+    }
+
+    /// k-edge-connectivity over the pinned cut: `Some(w)` when the min
+    /// cut w < k, `None` meaning "at least k".
+    pub fn k_connectivity(&self) -> Option<u64> {
+        self.core.k_connectivity_at(Some(self.cut))
     }
 }

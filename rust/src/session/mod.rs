@@ -25,9 +25,18 @@
 //! from its producer's handle by [`IngestHandle::flush`] (or by
 //! dropping the handle, which flushes).  Producers that have not
 //! flushed may be partially visible — the paper's query barrier (§5.3)
-//! drains the shared pipeline, not other threads' private buffers.
+//! covers the shared pipeline, not other threads' private buffers.
 //! [`Landscape::pending_producers`] reports how many handles still
 //! hold unpublished updates.
+//!
+//! The barrier itself is an **epoch cut**, not a quiescence point: a
+//! query (or an explicit [`Landscape::cut`] / [`QueryHandle::snapshot`])
+//! closes the current epoch and waits only for work registered before
+//! the cut, so it returns promptly even while producers keep streaming
+//! at full rate.  The guarantee is one-sided: the answer covers *at
+//! least* every update published before the cut, and may additionally
+//! include updates published after it (the sketch path keeps merging
+//! behind the cut; nothing is rolled back).
 //!
 //! ```no_run
 //! use landscape::session::Landscape;
@@ -52,18 +61,19 @@
 
 mod handle;
 
-pub use handle::{IngestHandle, QueryHandle};
+pub use handle::{IngestHandle, QueryHandle, Snapshot};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::connectivity::boruvka::{boruvka_components, boruvka_components_from};
 use crate::connectivity::greedycc::PartialSeed;
 use crate::connectivity::kconn::KConnectivity;
 use crate::connectivity::SpanningForest;
 use crate::coordinator::query::{QueryEngine, QueryTier};
-use crate::coordinator::work_queue::{FlushBarrier, ShardedWorkQueue};
+use crate::coordinator::work_queue::{Cut, EpochBarrier, ShardedWorkQueue};
 use crate::coordinator::{distributor, BufferKind, CoordinatorConfig, WorkItem, WorkerKind};
 use crate::gutter::GutterBuffer;
 use crate::hypertree::{BatchSink, Hypertree, HypertreeConfig, VertexBatch};
@@ -340,7 +350,7 @@ pub(crate) struct QueueSink {
     queue: Arc<ShardedWorkQueue<WorkItem>>,
     spec: ShardSpec,
     metrics: Arc<Metrics>,
-    barrier: Arc<FlushBarrier>,
+    barrier: Arc<EpochBarrier>,
     /// Meter `batch_bytes_sent` here with the nominal 8+4n accounting.
     /// True for in-process workers (nothing crosses a wire, the nominal
     /// figure *is* the model); false for remote workers, where the
@@ -349,17 +359,27 @@ pub(crate) struct QueueSink {
 }
 
 impl QueueSink {
-    fn enqueue(&self, shard: usize, item: WorkItem) {
-        let (kind, vertex, len) = match &item {
-            WorkItem::Distribute(b) => ("distribute", b.vertex, b.others.len()),
-            WorkItem::Local(b) => ("local", b.vertex, b.others.len()),
+    /// Register the batch with the epoch barrier (minting the ticket
+    /// that travels with it to the merge) and push it onto its shard
+    /// queue.
+    fn enqueue(&self, shard: usize, local: bool, batch: VertexBatch) {
+        let (kind, vertex, len) = (
+            if local { "local" } else { "distribute" },
+            batch.vertex,
+            batch.others.len(),
+        );
+        let ticket = self.barrier.register();
+        let item = if local {
+            WorkItem::Local(ticket, batch)
+        } else {
+            WorkItem::Distribute(ticket, batch)
         };
-        self.barrier.register();
         if !self.queue.push(shard, item) {
             // the shard queue is closed: these updates will never reach
             // a sketch, which silently corrupts every later query —
-            // meter and log instead of vanishing
-            self.barrier.complete();
+            // meter and log instead of vanishing (and retire the ticket
+            // so no cut waits on work that will never run)
+            self.barrier.complete(ticket);
             Metrics::add(&self.metrics.batches_dropped, 1);
             crate::log_warn!(
                 "session: DROPPED {kind} batch (vertex {vertex}, {len} \
@@ -380,17 +400,18 @@ impl BatchSink for QueueSink {
         if self.meter_batch_bytes {
             Metrics::add(&self.metrics.batch_bytes_sent, batch.wire_bytes());
         }
-        self.enqueue(shard, WorkItem::Distribute(batch));
+        self.enqueue(shard, false, batch);
     }
 
     fn local_batch(&self, shard: usize, vertex: u32, others: &[u32]) {
         debug_assert_eq!(shard, self.spec.shard_of(vertex));
         self.enqueue(
             shard,
-            WorkItem::Local(VertexBatch {
+            true,
+            VertexBatch {
                 vertex,
                 others: others.to_vec(),
-            }),
+            },
         );
     }
 }
@@ -404,7 +425,7 @@ pub(crate) struct SessionCore {
     pub(crate) buffer: Buffer,
     pub(crate) sink: Arc<QueueSink>,
     queue: Arc<ShardedWorkQueue<WorkItem>>,
-    barrier: Arc<FlushBarrier>,
+    barrier: Arc<EpochBarrier>,
     pub(crate) query: QueryEngine,
     /// Serializes tiered queries (plan → flush → Borůvka → re-seed is a
     /// read-modify-write of the accelerator state) *and* handle log
@@ -412,6 +433,27 @@ pub(crate) struct SessionCore {
     /// re-seed would be wiped by the wholesale `reseed`, so
     /// [`SessionCore::apply_log`] takes this lock too.
     query_serial: Mutex<()>,
+    /// Keeps sketch reads torn-write-free now that queries run while
+    /// distributors keep merging: each distributor holds the gate
+    /// *shared* for the duration of one batch merge (multi-word XOR),
+    /// and a query holds it *exclusively* for the duration of its
+    /// sketch read.  Taken only after [`SessionCore::wait_for_cut`]
+    /// returns, so it never waits on pre-cut work — it just holds
+    /// post-cut merges off the store for the O(read) critical section,
+    /// guaranteeing every delta is either fully visible or fully
+    /// invisible to the read.
+    ///
+    /// The atomicity is **batch-granular**, not update-granular: an
+    /// update enters the buffers once per endpoint, and its two
+    /// per-vertex batches can straddle the read, leaving a post-cut
+    /// update visible at one endpoint only.  That is sound: a
+    /// half-visible entry cannot decode as a fabricated edge (level
+    /// checksums reject torn combinations), so at worst it adds bucket
+    /// collisions of the same kind any real extra edge adds — which the
+    /// multi-level/multi-column sketch tolerates w.h.p. by design —
+    /// while every *pre-cut* update is fully merged at both endpoints
+    /// before the read begins (that is what `wait_for_cut` waited for).
+    merge_gate: Arc<RwLock<()>>,
     pub(crate) update_log_capacity: usize,
     active_handles: AtomicUsize,
     /// Live handles currently holding *unpublished* updates (private
@@ -421,25 +463,50 @@ pub(crate) struct SessionCore {
 }
 
 impl SessionCore {
-    /// The query barrier (§5.3) over the *shared* pipeline: force-flush
-    /// the buffer (γ-full leaves to workers, the rest locally), then
-    /// sleep on the flush barrier's condvar until every in-flight item
-    /// has merged.  Does not — cannot — drain other threads' unflushed
-    /// ingest handles.
+    /// Take a stream cut over the *shared* pipeline (§5.3's query
+    /// boundary, as an explicit cut instead of a quiescence point):
+    /// force-flush the buffer (γ-full leaves to workers, the rest
+    /// locally), then advance the epoch barrier.  Cheap — no waiting
+    /// happens here.  The returned [`Cut`] covers every update
+    /// *published* before this call; pass it to
+    /// [`SessionCore::wait_for_cut`] before reading the sketches.
     ///
-    /// Liveness: the barrier waits for an instant of *global* pipeline
-    /// idleness (a simple counter-based "cut" would be unsound with
-    /// out-of-order remote completion), so under sustained full-rate
-    /// concurrent ingestion a query may wait for a lull.  Producers
-    /// wanting a prompt, consistent snapshot should pause or flush
-    /// around the query — see the ROADMAP item on a per-item cut
-    /// barrier.
-    pub(crate) fn flush_shared(&self) {
+    /// Does not — cannot — drain other threads' unflushed ingest
+    /// handles; their unpublished tails land in later epochs.
+    pub(crate) fn cut_shared(&self) -> Cut {
         match &self.buffer {
             Buffer::Hyper(t) => t.force_flush(self.config.gamma, &*self.sink),
             Buffer::Gutter(g) => g.force_flush(self.config.gamma, &*self.sink),
         }
-        self.barrier.wait_idle();
+        let cut = self.barrier.cut();
+        Metrics::add(&self.metrics.cuts_taken, 1);
+        Metrics::raise(&self.metrics.epoch_current, cut.epoch() + 1);
+        cut
+    }
+
+    /// Block until every work item registered before `cut` has merged.
+    ///
+    /// Liveness: bounded by the work in flight at cut time — producers
+    /// registering work *after* the cut never extend the wait, so
+    /// queries return promptly even under sustained full-rate
+    /// multi-producer ingestion (the lull-waiting `wait_idle` design
+    /// this replaces could block indefinitely there).
+    pub(crate) fn wait_for_cut(&self, cut: Cut) {
+        let t0 = Instant::now();
+        self.barrier.wait_for(cut);
+        Metrics::add(
+            &self.metrics.cut_wait_us,
+            t0.elapsed().as_micros() as u64,
+        );
+    }
+
+    /// The cut-then-wait barrier: settle `pinned` if given (snapshot
+    /// queries re-wait on their pinned cut — free once retired —
+    /// instead of flushing again), else take a fresh cut and wait for
+    /// it.
+    fn settle(&self, pinned: Option<Cut>) {
+        let cut = pinned.unwrap_or_else(|| self.cut_shared());
+        self.wait_for_cut(cut);
     }
 
     /// The tier that would answer a global connectivity query now.
@@ -450,36 +517,58 @@ impl SessionCore {
     /// Tiered global connectivity query (see `QueryEngine` for the tier
     /// table).
     pub(crate) fn connected_components(&self) -> SpanningForest {
+        self.connected_components_at(None)
+    }
+
+    /// Tiered global connectivity query over `pinned` (a snapshot's
+    /// cut) when given, else over a fresh cut.
+    ///
+    /// Tier 0 needs no barrier in either mode: GreedyCC learns an
+    /// update at its log drain, which happens *after* the update's
+    /// sketch publication (see `IngestHandle::publish`), so by the time
+    /// a cut is taken every update it covers that tier 0 would answer
+    /// from is already in the accelerator.
+    pub(crate) fn connected_components_at(&self, pinned: Option<Cut>) -> SpanningForest {
         let _serial = self.query_serial.lock().unwrap();
         if let Some(forest) = self.query.try_greedy() {
             Metrics::add(&self.metrics.queries_greedy, 1);
             return forest;
         }
         if let Some(seed) = self.query.partial_seed() {
-            return self.partial_query_locked(seed);
+            return self.partial_query_locked(seed, pinned);
         }
-        self.full_query_locked()
+        self.full_query_locked(pinned)
     }
 
-    /// Forced tier-2 (flush + full Borůvka) query.
+    /// Forced tier-2 (cut + full Borůvka) query.
     pub(crate) fn full_connectivity_query(&self) -> SpanningForest {
+        self.full_connectivity_query_at(None)
+    }
+
+    /// Forced tier-2 query over `pinned` when given, else a fresh cut.
+    pub(crate) fn full_connectivity_query_at(&self, pinned: Option<Cut>) -> SpanningForest {
         let _serial = self.query_serial.lock().unwrap();
-        self.full_query_locked()
+        self.full_query_locked(pinned)
     }
 
     /// Batched reachability: tier 0 answers when no queried pair
     /// touches a dirty component; otherwise escalate like a global
     /// query.
     pub(crate) fn reachability(&self, pairs: &[(u32, u32)]) -> Vec<bool> {
+        self.reachability_at(pairs, None)
+    }
+
+    /// Batched reachability over `pinned` when given, else a fresh cut.
+    pub(crate) fn reachability_at(&self, pairs: &[(u32, u32)], pinned: Option<Cut>) -> Vec<bool> {
         let _serial = self.query_serial.lock().unwrap();
         if let Some(answers) = self.query.try_reachability(pairs) {
             Metrics::add(&self.metrics.queries_greedy, 1);
             return answers;
         }
         let forest = if let Some(seed) = self.query.partial_seed() {
-            self.partial_query_locked(seed)
+            self.partial_query_locked(seed, pinned)
         } else {
-            self.full_query_locked()
+            self.full_query_locked(pinned)
         };
         pairs.iter().map(|&(a, b)| forest.connected(a, b)).collect()
     }
@@ -487,33 +576,67 @@ impl SessionCore {
     /// k-edge-connectivity: `Some(w)` when the min cut w < k, `None`
     /// meaning "at least k".
     pub(crate) fn k_connectivity(&self) -> Option<u64> {
+        self.k_connectivity_at(None)
+    }
+
+    /// k-edge-connectivity over `pinned` when given, else a fresh cut.
+    pub(crate) fn k_connectivity_at(&self, pinned: Option<Cut>) -> Option<u64> {
         let _serial = self.query_serial.lock().unwrap();
-        self.flush_shared();
+        self.settle(pinned);
         Metrics::add(&self.metrics.queries_full, 1);
+        let _read = self.merge_gate.write().unwrap();
         self.kconn.query_capped_connectivity()
     }
 
-    /// Tier 1 with `query_serial` already held: flush, then resolve only
-    /// the dirty components; clean components ride along contracted.
-    fn partial_query_locked(&self, seed: PartialSeed) -> SpanningForest {
-        self.flush_shared();
-        let result = boruvka_components_from(
-            &self.kconn.stores()[0],
-            seed.dsu,
-            seed.forest_edges,
-            &seed.dirty_vertices,
-        );
+    /// Re-seed the accelerator from a freshly computed forest — but
+    /// only for fresh-cut queries.
+    ///
+    /// A fresh-cut query force-flushed and waited just before its
+    /// sketch read, so the read covers everything published — a
+    /// superset of GreedyCC's knowledge (publish order is
+    /// buffers-then-log), and the re-seed can only be ahead, never
+    /// lossy.  A *pinned* (snapshot) query gives no such guarantee: an
+    /// update published after the snapshot's cut can be in GreedyCC
+    /// (its log drained) while its batch still sits unflushed in the
+    /// shared tree, invisible to the pinned read — re-seeding would
+    /// silently discard it forever and let a later tier-0 query certify
+    /// a stale partition.  Snapshot queries therefore leave the
+    /// accelerator untouched (dirt persists, costing at most a future
+    /// re-escalation — a latency trade, never a wrong answer).
+    fn maybe_reseed(&self, pinned: Option<Cut>, forest: &SpanningForest) {
+        if pinned.is_none() {
+            self.query.reseed(self.params.v, forest);
+        }
+    }
+
+    /// Tier 1 with `query_serial` already held: settle the cut, then
+    /// resolve only the dirty components; clean components ride along
+    /// contracted.
+    fn partial_query_locked(&self, seed: PartialSeed, pinned: Option<Cut>) -> SpanningForest {
+        self.settle(pinned);
+        let result = {
+            let _read = self.merge_gate.write().unwrap();
+            boruvka_components_from(
+                &self.kconn.stores()[0],
+                seed.dsu,
+                seed.forest_edges,
+                &seed.dirty_vertices,
+            )
+        };
         Metrics::add(&self.metrics.queries_partial, 1);
-        self.query.reseed(self.params.v, &result.forest);
+        self.maybe_reseed(pinned, &result.forest);
         result.forest
     }
 
     /// Tier 2 with `query_serial` already held.
-    fn full_query_locked(&self) -> SpanningForest {
-        self.flush_shared();
-        let result = boruvka_components(&self.kconn.stores()[0]);
+    fn full_query_locked(&self, pinned: Option<Cut>) -> SpanningForest {
+        self.settle(pinned);
+        let result = {
+            let _read = self.merge_gate.write().unwrap();
+            boruvka_components(&self.kconn.stores()[0])
+        };
         Metrics::add(&self.metrics.queries_full, 1);
-        self.query.reseed(self.params.v, &result.forest);
+        self.maybe_reseed(pinned, &result.forest);
         result.forest
     }
 
@@ -577,7 +700,7 @@ impl Landscape {
             spec,
         ));
         let queue = Arc::new(ShardedWorkQueue::new(spec.count(), config.queue_capacity));
-        let barrier = Arc::new(FlushBarrier::new());
+        let barrier = Arc::new(EpochBarrier::new());
 
         let buffer = match config.buffer {
             BufferKind::Hypertree => Buffer::Hyper(Arc::new(Hypertree::new(
@@ -610,6 +733,7 @@ impl Landscape {
             queue,
             barrier,
             query_serial: Mutex::new(()),
+            merge_gate: Arc::new(RwLock::new(())),
             update_log_capacity,
             active_handles: AtomicUsize::new(0),
             pending_handles: AtomicUsize::new(0),
@@ -636,6 +760,7 @@ impl Landscape {
                 kconn: core.kconn.clone(),
                 metrics: core.metrics.clone(),
                 barrier: core.barrier.clone(),
+                merge_gate: core.merge_gate.clone(),
             };
             distributors.push(std::thread::spawn(move || d.run()));
         }
@@ -665,14 +790,34 @@ impl Landscape {
         IngestHandle::new_eager(self.core.clone())
     }
 
-    /// Flush the shared pipeline and wait until every published update
-    /// has reached a sketch (§5.3's query barrier).  Producers'
-    /// unflushed handles are not (and cannot be) drained here — see the
-    /// module-level consistency contract.  The barrier needs a moment
-    /// of pipeline idleness, so under sustained full-rate concurrent
-    /// ingestion it may wait for a lull.
+    /// Take a stream cut and wait for it: on return, every update
+    /// *published* before this call has reached a sketch (§5.3's query
+    /// barrier).  Producers' unflushed handles are not (and cannot be)
+    /// drained here — see the module-level consistency contract.
+    ///
+    /// The wait is bounded by the work in flight at the cut, not by the
+    /// stream: producers that keep publishing during the call land in
+    /// later epochs and never extend it.  Equivalent to
+    /// `wait_for(cut())`.
     pub fn flush(&self) {
-        self.core.flush_shared();
+        let cut = self.core.cut_shared();
+        self.core.wait_for_cut(cut);
+    }
+
+    /// Take a stream cut *without waiting*: force-flush the shared
+    /// buffer and advance the epoch, returning a [`Cut`] token covering
+    /// every update published before this call.  Pair with
+    /// [`Landscape::wait_for`] — or hand the waiting to a query via
+    /// [`QueryHandle::snapshot`], which takes its own cut.
+    pub fn cut(&self) -> Cut {
+        self.core.cut_shared()
+    }
+
+    /// Block until every update covered by `cut` has reached a sketch.
+    /// Returns immediately if the cut has already retired; work
+    /// published after the cut never extends the wait.
+    pub fn wait_for(&self, cut: Cut) {
+        self.core.wait_for_cut(cut);
     }
 
     /// Number of live ingest handles still holding unpublished updates

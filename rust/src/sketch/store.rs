@@ -19,8 +19,12 @@
 //!   is the sole writer of the vertex's shard, which the coordinator's
 //!   shard-affine batch routing guarantees during ingestion.
 //!
-//! Queries only run after the ingestion barrier (the pipeline is drained
-//! first, paper §5.3), so readers never race writers.
+//! Queries run behind an **epoch cut** (paper §5.3, as an explicit
+//! stream cut rather than a drained-pipeline instant): a reader first
+//! waits for every pre-cut delta to merge, then holds the session's
+//! merge gate exclusively for the read, so post-cut merges — which keep
+//! flowing while producers stream — are observed batch-atomically,
+//! never torn mid-delta.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -147,7 +151,9 @@ impl SketchStore {
     }
 
     /// Snapshot one level of vertex `u` into `out` (length
-    /// `words_per_level`).  Only sound after the ingestion barrier.
+    /// `words_per_level`).  Only sound while no writer is mid-delta on
+    /// `u`'s shard (the session guarantees this by reading under the
+    /// exclusive side of its merge gate, after its cut has retired).
     pub fn read_level_into(&self, u: u32, level: u32, out: &mut [u64]) {
         let wpl = self.params.words_per_level();
         debug_assert_eq!(out.len(), wpl);

@@ -82,6 +82,39 @@ pub fn arb_edge_set(
     set.into_iter().collect()
 }
 
+/// The standard base graph for query-under-sustained-load scenarios:
+/// `cycles` disjoint cycles of `span` vertices each (vertices
+/// `c*span .. (c+1)*span`).  A cycle stays connected when any single
+/// chord is added or removed, which is what makes the chord churn of
+/// [`churn_chord`] partition-invariant.
+pub fn cycle_graph(cycles: u32, span: u32) -> Vec<crate::stream::update::Update> {
+    use crate::stream::update::Update;
+    let mut base = Vec::with_capacity((cycles * span) as usize);
+    for c in 0..cycles {
+        let b = c * span;
+        for i in 0..span - 1 {
+            base.push(Update::insert(b + i, b + i + 1));
+        }
+        base.push(Update::insert(b, b + span - 1));
+    }
+    base
+}
+
+/// Producer `p`'s churn chord inside the [`cycle_graph`] cycle starting
+/// at vertex `base`: `(base+1+p, base+1+p+span/2)`.
+///
+/// Chord sets are disjoint across producers (each `p` gets its own
+/// endpoints), both endpoints lie strictly inside the cycle, and a
+/// chord never disconnects anything whether present or absent — so a
+/// stream of `insert(chord); delete(chord)` toggles, interleaved
+/// arbitrarily across producers and merged in any order, leaves the
+/// partition equal to the base graph's at every instant.  Requires
+/// `p + 1 < span / 2`.
+pub fn churn_chord(base: u32, p: usize, span: u32) -> (u32, u32) {
+    debug_assert!((p as u32) + 1 < span / 2, "chord endpoints must stay in-cycle");
+    (base + 1 + p as u32, base + 1 + p as u32 + span / 2)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

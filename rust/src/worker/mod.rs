@@ -25,6 +25,7 @@ pub mod remote;
 
 use anyhow::Result;
 
+use crate::coordinator::work_queue::Ticket;
 use crate::sketch::params::{encode_edge, SketchParams};
 use crate::sketch::seeds::SketchSeeds;
 use crate::sketch::{CameoSketch, CubeSketch};
@@ -48,19 +49,28 @@ pub trait WorkerBackend {
 }
 
 /// A batch handed to a [`SubmitBackend`], tagged with the distributor's
-/// completion token (which doubles as the wire sequence number).
+/// completion token (which doubles as the wire sequence number) and the
+/// epoch-barrier ticket minted when the batch was enqueued.
+///
+/// The ticket is opaque to backends: they carry it from submission to
+/// completion unchanged, so however late or out of order a batch
+/// completes — including after a failover resubmission to a different
+/// worker — it retires against the epoch it was *registered* in, which
+/// is what keeps query cuts sound.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PendingBatch {
     pub token: u64,
+    pub ticket: Ticket,
     pub vertex: u32,
     pub others: Vec<u32>,
 }
 
 /// A finished batch: the k concatenated sketch deltas for the batch
-/// submitted under `token`.
+/// submitted under `token`, echoing the submitted batch's epoch ticket.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Completion {
     pub token: u64,
+    pub ticket: Ticket,
     pub vertex: u32,
     pub delta: Vec<u64>,
     /// Exact bytes of the DELTA frame this completion arrived in
@@ -158,6 +168,7 @@ impl SubmitBackend for InlineSubmit {
             .process(batch.vertex, &batch.others, &mut delta)?;
         self.ready.push(Completion {
             token: batch.token,
+            ticket: batch.ticket,
             vertex: batch.vertex,
             delta,
             wire_bytes: 0,
@@ -347,9 +358,12 @@ mod tests {
     fn inline_submit_completes_at_submission() {
         let s = seeds(64, 2);
         let words = s.params.words();
+        let barrier = crate::coordinator::work_queue::EpochBarrier::new();
+        let ticket = barrier.register();
         let mut b = InlineSubmit::new(Box::new(NativeWorker::new(s.clone())));
         b.submit(PendingBatch {
             token: 7,
+            ticket,
             vertex: 0,
             others: vec![1, 2],
         })
@@ -360,6 +374,7 @@ mod tests {
         assert_eq!(b.in_flight(), 0);
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].token, 7);
+        assert_eq!(out[0].ticket, ticket, "completions echo the epoch ticket");
         assert_eq!(out[0].wire_bytes, 0, "inline backends meter no network");
         assert_eq!(out[0].delta.len(), 2 * words);
         let native = NativeWorker::new(s);

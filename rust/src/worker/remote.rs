@@ -457,6 +457,7 @@ fn reader_loop(shared: &PipeShared, mut reader: BufReader<TcpStream>) {
                     Some(b) if b.vertex == vertex => {
                         st.completed.push_back(Completion {
                             token: seq,
+                            ticket: b.ticket,
                             vertex,
                             delta,
                             wire_bytes: wire,
@@ -767,9 +768,16 @@ fn sender_loop(mut writer: BufWriter<TcpStream>, rx: mpsc::Receiver<QueuedReply>
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::work_queue::{EpochBarrier, Ticket};
     use crate::sketch::params::encode_edge;
     use crate::sketch::seeds::SketchSeeds;
     use crate::sketch::CameoSketch;
+
+    /// A throwaway epoch ticket: the transport carries tickets opaquely,
+    /// so standalone backend tests mint each from its own barrier.
+    fn ticket() -> Ticket {
+        EpochBarrier::new().register()
+    }
 
     #[test]
     fn remote_worker_round_trip_matches_native() {
@@ -826,6 +834,7 @@ mod tests {
         for (token, vertex, others) in &batches {
             p.submit(PendingBatch {
                 token: *token,
+                ticket: ticket(),
                 vertex: *vertex,
                 others: others.clone(),
             })
@@ -861,11 +870,13 @@ mod tests {
         let mut p = PipelinedRemote::connect(&addr, params, 7, 2, 16).unwrap();
         let b1 = PendingBatch {
             token: 1,
+            ticket: ticket(),
             vertex: 0,
             others: vec![1, 2, 3],
         };
         let b2 = PendingBatch {
             token: 2,
+            ticket: ticket(),
             vertex: 4,
             others: vec![5],
         };
@@ -929,6 +940,7 @@ mod tests {
         // first batch is answered; the second triggers the crash
         p.submit(PendingBatch {
             token: 1,
+            ticket: ticket(),
             vertex: 0,
             others: vec![1],
         })
@@ -941,8 +953,10 @@ mod tests {
         }
         assert_eq!(got.len(), 1);
 
+        let crash_ticket = ticket();
         p.submit(PendingBatch {
             token: 2,
+            ticket: crash_ticket,
             vertex: 3,
             others: vec![4, 5],
         })
@@ -963,6 +977,10 @@ mod tests {
         assert_eq!(unacked.len(), 1);
         assert_eq!(unacked[0].token, 2);
         assert_eq!(unacked[0].others, vec![4, 5]);
+        assert_eq!(
+            unacked[0].ticket, crash_ticket,
+            "a recovered batch must keep its original epoch ticket"
+        );
         server_thread.join().unwrap().unwrap();
     }
 
@@ -999,6 +1017,7 @@ mod tests {
         for i in 0..n {
             p.submit(PendingBatch {
                 token: i + 1,
+                ticket: ticket(),
                 vertex: i as u32,
                 others: vec![i as u32 + 1],
             })

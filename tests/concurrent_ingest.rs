@@ -11,7 +11,7 @@ use landscape::connectivity::dsu::Dsu;
 use landscape::coordinator::BufferKind;
 use landscape::stream::update::Update;
 use landscape::util::rng::Xoshiro256;
-use landscape::util::testkit::{arb_edge, Cases};
+use landscape::util::testkit::{arb_edge, churn_chord, cycle_graph, Cases};
 use landscape::Landscape;
 
 fn session(v: u64, buffer: BufferKind) -> Landscape {
@@ -105,6 +105,148 @@ fn random_splits_match_dsu_referee_hypertree() {
 #[test]
 fn random_splits_match_dsu_referee_gutter() {
     check_buffer(BufferKind::Gutter);
+}
+
+/// Liveness regression (the epoch-barrier redesign's acceptance
+/// scenario): a global connectivity query issued during sustained,
+/// never-idle 4-producer ingest must return promptly — bounded by the
+/// work in flight at cut time, not by stream length — and match the
+/// DSU referee.
+///
+/// Under the retired `wait_idle` barrier this hung: the query waited
+/// for an instant of global pipeline idleness, and four producers
+/// flushing every iteration never provide one.
+///
+/// Correctness setup: a base graph of disjoint cycles is published
+/// first; the churn phase then inserts/deletes only *chords* inside
+/// those cycles (each producer owns a disjoint chord set, toggled
+/// strictly insert→delete).  At every possible merge state each chord
+/// is either present or absent, and either way the partition equals the
+/// base partition — so the one-sided snapshot guarantee ("covers all
+/// updates published before the cut, may include later ones") still
+/// pins the full answer.
+#[test]
+fn query_under_sustained_load_returns_promptly_and_correctly() {
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::time::{Duration, Instant};
+
+    let producers = 4usize;
+    let cycles = 8u32;
+    let span = 16u32; // vertices per cycle
+    let v = (cycles * span) as u64;
+
+    let session = Landscape::builder()
+        .vertices(v)
+        .alpha(1)
+        .distributor_threads(2)
+        // no GreedyCC: its amortized log drains share a lock with the
+        // query path, which would make producers pause behind a running
+        // query — with it off, the producers NEVER stop publishing, so
+        // the retired idle-waiting barrier would hang here forever
+        .greedycc(false)
+        .build()
+        .unwrap();
+
+    // base graph: `cycles` disjoint cycles (removing any one chord can
+    // never disconnect anything)
+    let base = cycle_graph(cycles, span);
+    let mut d = Dsu::new(v as usize);
+    for u in &base {
+        d.union(u.u, u.v);
+    }
+    let want = d.component_map();
+
+    let stop = AtomicBool::new(false);
+    let published = AtomicUsize::new(0);
+    let results = std::thread::scope(|scope| {
+        for p in 0..producers {
+            let mut handle = session.ingest_handle();
+            let chunk: Vec<Update> = base
+                .iter()
+                .copied()
+                .skip(p)
+                .step_by(producers)
+                .collect();
+            // producer p toggles its own disjoint in-cycle chord set
+            let chords: Vec<(u32, u32)> = (0..cycles)
+                .map(|c| churn_chord(c * span, p, span))
+                .collect();
+            let stop = &stop;
+            let published = &published;
+            scope.spawn(move || {
+                for u in chunk {
+                    handle.ingest(u);
+                }
+                handle.flush();
+                published.fetch_add(1, Ordering::Release);
+                // sustained full-rate phase: never idle until told to
+                // stop, flushing every round so the shared pipeline
+                // (queues + in-flight batches) is continuously busy
+                let mut i = 0usize;
+                while !stop.load(Ordering::Acquire) {
+                    let (a, b) = chords[i % chords.len()];
+                    handle.ingest(Update::insert(a, b));
+                    handle.ingest(Update::delete(a, b));
+                    handle.flush();
+                    i += 1;
+                }
+            });
+        }
+
+        // wait until every producer has published the base graph (the
+        // churn keeps running the whole time)
+        while published.load(Ordering::Acquire) < producers {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+
+        // run both query flavours while the load is live; assert only
+        // after stopping the producers, so a failure can't wedge the
+        // scope behind still-spinning churn threads
+        let t0 = Instant::now();
+        let forest = session.query_handle().full_connectivity_query();
+        let direct_latency = t0.elapsed();
+
+        // same via a pinned snapshot: cheap cut, bounded wait, correct
+        let t0 = Instant::now();
+        let snap = session.query_handle().snapshot();
+        let sf = snap.connected_components();
+        let snap_latency = t0.elapsed();
+
+        stop.store(true, Ordering::Release);
+        (forest, direct_latency, sf, snap_latency)
+    });
+
+    let (forest, direct_latency, sf, snap_latency) = results;
+
+    // the old barrier could wait forever (the pipeline is never idle);
+    // the cut barrier is bounded by in-flight work at cut time, so even
+    // a generous ceiling proves the hang cannot recur
+    let deadline = Duration::from_secs(20);
+    assert!(
+        direct_latency < deadline,
+        "query under sustained load took {direct_latency:?}"
+    );
+    assert!(
+        snap_latency < deadline,
+        "snapshot query under sustained load took {snap_latency:?}"
+    );
+    assert!(
+        Referee::same_partition(&forest.component, &want),
+        "query under sustained load diverges from the DSU referee"
+    );
+    assert!(
+        Referee::same_partition(&sf.component, &want),
+        "snapshot under sustained load diverges from the DSU referee"
+    );
+
+    let m = session.metrics();
+    assert_eq!(m.batches_dropped, 0, "no update may vanish at the queue");
+    assert!(m.cuts_taken >= 2, "both queries must have taken cuts");
+    assert!(
+        m.epoch_current >= 2,
+        "the epoch must advance with every cut (got {})",
+        m.epoch_current
+    );
 }
 
 /// The acceptance scenario at a fixed seed: a denser stream through 4
