@@ -14,7 +14,7 @@
 use std::sync::Arc;
 
 use landscape::baseline::AdjacencyMatrix;
-use landscape::benchkit::{bench, fmt_rate, Table};
+use landscape::benchkit::{bench, fmt_rate, BenchArgs, Stats, Table};
 use landscape::coordinator::work_queue::WorkQueue;
 use landscape::hypertree::{BatchSink, Hypertree, HypertreeConfig, VertexBatch};
 use landscape::metrics::Metrics;
@@ -54,12 +54,19 @@ impl MutexStore {
     }
 }
 
+/// `bench` with warmup/iteration counts scaled by `--quick`.
+fn sbench<F: FnMut()>(args: &BenchArgs, warmup: usize, iters: usize, f: F) -> Stats {
+    let (w, i) = args.scale(warmup, iters);
+    bench(w, i, f)
+}
+
 fn main() {
+    let args = BenchArgs::parse();
     let v = 1u64 << 12;
     let params = SketchParams::for_vertices(v);
     let seeds = SketchSeeds::derive(&params, 42);
     let mut rng = Xoshiro256::new(9);
-    let n = 100_000usize;
+    let n = if args.quick { 20_000usize } else { 100_000usize };
     let edges: Vec<(u32, u32)> = (0..n)
         .map(|_| {
             let a = rng.next_below(v - 1) as u32;
@@ -83,14 +90,14 @@ fn main() {
 
     // sketch update kernels
     let mut buckets = vec![0u64; params.words()];
-    let s = bench(1, 5, || {
+    let s = sbench(&args, 1, 5, || {
         for &idx in &indices {
             CameoSketch::apply_update(&mut buckets, &params, &seeds, idx);
         }
     });
     row("cameo_update", s.median / n as f64);
 
-    let s = bench(1, 3, || {
+    let s = sbench(&args, 1, 3, || {
         for &idx in &indices[..n / 4] {
             CubeSketch::apply_update(&mut buckets, &params, &seeds, idx);
         }
@@ -99,13 +106,13 @@ fn main() {
 
     // batched delta (the worker hot path) — level-major loop (§Perf #1)
     let mut delta = vec![0u64; params.words()];
-    let s = bench(1, 5, || {
+    let s = sbench(&args, 1, 5, || {
         CameoSketch::delta_of_batch_into(&mut delta, &params, &seeds, &indices);
     });
     row("cameo_delta_batch(level-major)", s.median / n as f64);
 
     // the pre-optimization variant: update-major via apply_update
-    let s = bench(1, 5, || {
+    let s = sbench(&args, 1, 5, || {
         delta.fill(0);
         for &idx in &indices {
             CameoSketch::apply_update(&mut delta, &params, &seeds, idx);
@@ -115,10 +122,41 @@ fn main() {
 
     // merge (the main-node hot path)
     let store = SketchStore::new(params, 42);
-    let s = bench(1, 20, || {
+    let s = sbench(&args, 1, 20, || {
         store.merge_delta(0, &delta);
     });
     row("delta_merge_per_word", s.median / params.words() as f64);
+
+    // merge kernels head-to-head: the 8-way unrolled u64-chunk kernel
+    // (`CameoSketch::merge`) vs its scalar reference
+    // (`CameoSketch::merge_scalar`) across sketch sizes.  ns_per_op is
+    // per merged word; BENCH_micro.json pins these rows so
+    // `tools/bench_compare` flags kernel regressions (and the
+    // scalar-vs-unrolled ratio documents the unrolling win).
+    for vexp in [10u32, 14, 17] {
+        let kv = 1u64 << vexp;
+        let kparams = SketchParams::for_vertices(kv);
+        let words = kparams.words();
+        let mut krng = Xoshiro256::new(5 + vexp as u64);
+        let mut acc: Vec<u64> = (0..words).map(|_| krng.next_u64()).collect();
+        let kdelta: Vec<u64> = (0..words).map(|_| krng.next_u64()).collect();
+        let reps = 64usize;
+        let per_op = (reps * words) as f64;
+
+        let s = sbench(&args, 1, 20, || {
+            for _ in 0..reps {
+                CameoSketch::merge_scalar(&mut acc, &kdelta);
+            }
+        });
+        row(&format!("merge_scalar_v2^{vexp}"), s.median / per_op);
+
+        let s = sbench(&args, 1, 20, || {
+            for _ in 0..reps {
+                CameoSketch::merge(&mut acc, &kdelta);
+            }
+        });
+        row(&format!("merge_unrolled_v2^{vexp}"), s.median / per_op);
+    }
 
     // merge path, multi-threaded: the sharded lock-free store (each
     // thread XOR-merges into its own shard, as the coordinator's
@@ -131,7 +169,7 @@ fn main() {
         let total_words = (threads * merges_per_thread * params.words()) as f64;
 
         let sharded = SketchStore::with_shards(params, 42, spec);
-        let s = bench(1, 5, || {
+        let s = sbench(&args, 1, 5, || {
             std::thread::scope(|scope| {
                 for t in 0..threads {
                     let sharded = &sharded;
@@ -152,7 +190,7 @@ fn main() {
         row(&format!("merge_sharded_t{threads}"), s.median / total_words);
 
         let mutexed = MutexStore::new(&params);
-        let s = bench(1, 5, || {
+        let s = sbench(&args, 1, 5, || {
             std::thread::scope(|scope| {
                 for t in 0..threads {
                     let mutexed = &mutexed;
@@ -180,7 +218,7 @@ fn main() {
     ));
     let mut local = tree.local();
     let sink = NullSink;
-    let s = bench(1, 5, || {
+    let s = sbench(&args, 1, 5, || {
         for &(a, b) in &edges {
             local.insert(a, b, &sink);
             local.insert(b, a, &sink);
@@ -195,7 +233,7 @@ fn main() {
         ShardSpec::new(64),
         metrics,
     );
-    let s = bench(1, 5, || {
+    let s = sbench(&args, 1, 5, || {
         for &(a, b) in &edges {
             gutter.insert(a, b, &sink);
             gutter.insert(b, a, &sink);
@@ -213,7 +251,7 @@ fn main() {
         use landscape::Landscape;
 
         let pv = 1u64 << 14;
-        let n_up = 200_000usize;
+        let n_up = if args.quick { 40_000usize } else { 200_000usize };
         let mut prng = Xoshiro256::new(77);
         let ups: Vec<Update> = (0..n_up)
             .map(|_| {
@@ -232,7 +270,7 @@ fn main() {
                 .greedycc(false) // isolate the front-end path
                 .build()
                 .unwrap();
-            let s = bench(1, 3, || {
+            let s = sbench(&args, 1, 3, || {
                 std::thread::scope(|scope| {
                     for chunk in &chunks {
                         let mut h = session.ingest_handle();
@@ -254,9 +292,9 @@ fn main() {
 
     // work-queue handoff
     let q: WorkQueue<u64> = WorkQueue::new(1024);
-    let s = bench(1, 10, || {
+    let s = sbench(&args, 1, 10, || {
         for i in 0..512u64 {
-            q.push(i);
+            q.push(i).unwrap();
         }
         while q.try_pop().is_some() {}
     });
@@ -292,7 +330,7 @@ fn main() {
 
         let lockstep = RemoteWorker::connect(&addr, params, 42, 1).unwrap();
         let mut out = Vec::new();
-        let s = bench(1, 3, || {
+        let s = sbench(&args, 1, 3, || {
             for _ in 0..nbatches {
                 out.clear();
                 lockstep.process(0, &batch_others, &mut out).unwrap();
@@ -306,7 +344,7 @@ fn main() {
             let mut p = PipelinedRemote::connect(&addr, params, 42, 1, w).unwrap();
             let mut token = 0u64;
             let mut comps = Vec::new();
-            let s = bench(1, 3, || {
+            let s = sbench(&args, 1, 3, || {
                 let mut done = 0u64;
                 for _ in 0..nbatches {
                     token += 1;
@@ -340,7 +378,7 @@ fn main() {
     // adjacency-matrix bit flip (the §2.1 comparison)
     let mut m = AdjacencyMatrix::new(v);
     let ups: Vec<Update> = edges.iter().map(|&(a, b)| Update::insert(a, b)).collect();
-    let s = bench(1, 10, || {
+    let s = sbench(&args, 1, 10, || {
         for u in &ups {
             m.apply(u);
         }
@@ -355,7 +393,7 @@ fn main() {
         qstore.apply_local(a, idx);
         qstore.apply_local(b, idx);
     }
-    let s = bench(1, 3, || {
+    let s = sbench(&args, 1, 3, || {
         let _ = landscape::connectivity::boruvka::boruvka_components(&qstore);
     });
     row("boruvka_query_total", s.median);
@@ -402,7 +440,7 @@ fn main() {
         // tier-2 baseline at the 1-dirty state (the acceptance
         // comparison: one forest-edge delete, full vs partial)
         delete_paths(1, &mut surviving);
-        let s = bench(1, 3, || {
+        let s = sbench(&args, 1, 3, || {
             let _ = landscape::connectivity::boruvka::boruvka_components(&qstore);
         });
         row(&format!("query_full_v2^{vexp}"), s.median);
@@ -410,7 +448,7 @@ fn main() {
         for d in [1u32, 8, 64] {
             delete_paths(d, &mut surviving);
             let active: Vec<u32> = (0..d * span).collect();
-            let s = bench(1, 3, || {
+            let s = sbench(&args, 1, 3, || {
                 // the clones mirror the real partial tier's seed
                 // construction cost (partial_seed rebuilds its DSU per
                 // query), so the row is end-to-end honest
@@ -480,7 +518,7 @@ fn main() {
                     });
                 }
                 let q = session.query_handle();
-                let s = bench(1, 5, || {
+                let s = sbench(&args, 1, 5, || {
                     let _ = q.full_connectivity_query();
                 });
                 stop.store(true, Ordering::Release);
@@ -497,7 +535,7 @@ fn main() {
 
     // GreedyCC ops
     let mut g = landscape::connectivity::greedycc::GreedyCC::fresh(v);
-    let s = bench(1, 5, || {
+    let s = sbench(&args, 1, 5, || {
         for &(a, b) in &edges {
             g.on_insert(a, b);
         }
@@ -510,4 +548,9 @@ fn main() {
     row("ram_random_write_8B", 8.0 / (rnd.gib_per_sec() * (1u64 << 30) as f64));
 
     landscape::experiments::emit(&t, "micro_hot_paths");
+    if let Some(path) = &args.json {
+        // the bench-trajectory format: diff against the committed
+        // BENCH_micro.json with `tools/bench_compare`
+        t.emit_json(path);
+    }
 }

@@ -1,0 +1,125 @@
+"""tools/bench_compare contract tests: the committed-trajectory diff.
+
+The tool is the enforcement half of BENCH_micro.json — CI's bench-smoke
+job runs it against a fresh `--json` bench run.  These tests pin the
+exit-code contract with the committed baseline itself plus synthetic
+current runs, so a tool regression can't silently turn the bench gate
+into a no-op.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+TOOL = os.path.join(REPO_ROOT, "tools", "bench_compare")
+BASELINE = os.path.join(REPO_ROOT, "BENCH_micro.json")
+
+
+def run_compare(*argv):
+    return subprocess.run(
+        [sys.executable, TOOL, *argv],
+        capture_output=True,
+        text=True,
+        cwd=REPO_ROOT,
+    )
+
+
+@pytest.fixture()
+def baseline_doc():
+    with open(BASELINE, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def write_doc(tmp_path, doc):
+    p = tmp_path / "current.json"
+    p.write_text(json.dumps(doc), encoding="utf-8")
+    return str(p)
+
+
+def test_baseline_pins_the_unrolling_win(baseline_doc):
+    """The committed rows must show >= 1.5x scalar-vs-unrolled at V=2^14."""
+    rows = {r["path"]: r for r in baseline_doc["rows"]}
+    scalar = float(rows["merge_scalar_v2^14"]["ns_per_op"])
+    unrolled = float(rows["merge_unrolled_v2^14"]["ns_per_op"])
+    assert scalar / unrolled >= 1.5
+
+
+def test_identical_run_passes():
+    r = run_compare("--current", BASELINE)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_twenty_percent_regression_fails(tmp_path, baseline_doc):
+    """A synthetic 20% ns_per_op regression must exit nonzero."""
+    for row in baseline_doc["rows"]:
+        if row["path"] == "merge_unrolled_v2^14":
+            row["ns_per_op"] = str(float(row["ns_per_op"]) * 1.2)
+    r = run_compare("--current", write_doc(tmp_path, baseline_doc))
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "merge_unrolled_v2^14" in r.stdout
+
+
+def test_regression_within_threshold_passes(tmp_path, baseline_doc):
+    """The same 20% slip passes when the caller widens the tolerance."""
+    for row in baseline_doc["rows"]:
+        if row["path"] == "merge_unrolled_v2^14":
+            row["ns_per_op"] = str(float(row["ns_per_op"]) * 1.2)
+    r = run_compare(
+        "--current", write_doc(tmp_path, baseline_doc), "--threshold", "0.25"
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_improvement_passes_and_is_reported(tmp_path, baseline_doc):
+    for row in baseline_doc["rows"]:
+        row["ns_per_op"] = str(float(row["ns_per_op"]) * 0.5)
+    r = run_compare("--current", write_doc(tmp_path, baseline_doc))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "improvements:" in r.stdout
+
+
+def test_unpinned_rows_never_fail(tmp_path, baseline_doc):
+    """Rows only in the current run (new benches) are notes, not failures."""
+    baseline_doc["rows"].append(
+        {"path": "brand_new_bench", "ns_per_op": "999.0", "rate": "1.00 M/s"}
+    )
+    r = run_compare("--current", write_doc(tmp_path, baseline_doc))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "not pinned in baseline" in r.stdout
+
+
+def test_missing_baseline_rows_never_fail(tmp_path, baseline_doc):
+    """A quick-mode run that skipped rows must not fail the gate."""
+    baseline_doc["rows"] = baseline_doc["rows"][:2]
+    r = run_compare("--current", write_doc(tmp_path, baseline_doc))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "missing from current run" in r.stdout
+
+
+def test_malformed_input_exits_2(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text("{not json", encoding="utf-8")
+    r = run_compare("--current", str(p))
+    assert r.returncode == 2
+
+
+def test_update_rewrites_pinned_rows(tmp_path, baseline_doc):
+    """--update refreshes pinned values in place, keeping provenance."""
+    base_copy = tmp_path / "baseline.json"
+    base_copy.write_text(json.dumps(baseline_doc), encoding="utf-8")
+    current = json.loads(json.dumps(baseline_doc))
+    for row in current["rows"]:
+        if row["path"] == "merge_scalar_v2^14":
+            row["ns_per_op"] = "0.9"
+    r = run_compare(
+        "--baseline", str(base_copy), "--current", write_doc(tmp_path, current), "--update"
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    updated = json.loads(base_copy.read_text(encoding="utf-8"))
+    rows = {r["path"]: r for r in updated["rows"]}
+    assert rows["merge_scalar_v2^14"]["ns_per_op"] == "0.9"
+    assert "provenance" in updated

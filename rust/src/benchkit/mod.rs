@@ -79,6 +79,47 @@ pub fn fmt_bytes(bytes: f64) -> String {
     }
 }
 
+/// Command-line options shared by the bench targets (`harness = false`
+/// binaries see their own argv): `--json PATH` additionally writes the
+/// results table as JSON — the committed-trajectory format that
+/// `tools/bench_compare` diffs against `BENCH_micro.json` (see
+/// docs/PERFORMANCE.md) — and `--quick` shrinks inputs and iteration
+/// counts for the CI bench-smoke job.
+#[derive(Clone, Debug, Default)]
+pub struct BenchArgs {
+    /// Write the results table as JSON to this path after the run.
+    pub json: Option<std::path::PathBuf>,
+    /// CI smoke mode: fewer warmup/timed iterations, smaller inputs.
+    pub quick: bool,
+}
+
+impl BenchArgs {
+    /// Parse `std::env::args()`.  Unrecognized arguments are ignored so
+    /// the flags coexist with whatever cargo's bench harness forwards.
+    pub fn parse() -> Self {
+        let mut out = Self::default();
+        let mut args = std::env::args().skip(1);
+        while let Some(a) = args.next() {
+            match a.as_str() {
+                "--json" => out.json = args.next().map(std::path::PathBuf::from),
+                "--quick" => out.quick = true,
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// `(warmup, iters)` for full runs; quick mode drops warmup and caps
+    /// timed iterations at 2 so the smoke job finishes in seconds.
+    pub fn scale(&self, warmup: usize, iters: usize) -> (usize, usize) {
+        if self.quick {
+            (0, iters.min(2))
+        } else {
+            (warmup, iters)
+        }
+    }
+}
+
 /// An aligned results table that also serializes to CSV — every bench
 /// target prints one of these so table regeneration is copy-pasteable.
 pub struct Table {
@@ -142,6 +183,49 @@ impl Table {
         out
     }
 
+    /// JSON rendering: `{"title", "headers", "rows": [{header: cell}]}`.
+    /// Cells stay the same strings as the CSV — consumers parse numeric
+    /// columns themselves (`tools/bench_compare` reads `ns_per_op`), so
+    /// adding a column never breaks the committed-baseline diff.
+    pub fn to_json(&self) -> String {
+        let esc = crate::util::json::escape;
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"title\": \"{}\",\n", esc(&self.title)));
+        out.push_str("  \"headers\": [");
+        out.push_str(
+            &self
+                .headers
+                .iter()
+                .map(|h| format!("\"{}\"", esc(h)))
+                .collect::<Vec<_>>()
+                .join(", "),
+        );
+        out.push_str("],\n  \"rows\": [\n");
+        for (i, row) in self.rows.iter().enumerate() {
+            let fields = self
+                .headers
+                .iter()
+                .zip(row)
+                .map(|(h, c)| format!("\"{}\": \"{}\"", esc(h), esc(c)))
+                .collect::<Vec<_>>()
+                .join(", ");
+            let sep = if i + 1 < self.rows.len() { "," } else { "" };
+            out.push_str(&format!("    {{{fields}}}{sep}\n"));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write [`Table::to_json`] to `path`, creating parent directories.
+    pub fn emit_json(&self, path: &std::path::Path) {
+        if let Some(dir) = path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        if let Err(e) = std::fs::write(path, self.to_json()) {
+            crate::log_warn!("benchkit: writing {} failed: {e}", path.display());
+        }
+    }
+
     /// Print text to stderr, CSV to stdout, and optionally save CSV.
     pub fn emit(&self, csv_path: Option<&std::path::Path>) {
         crate::log_info!("{}", self.render());
@@ -195,5 +279,33 @@ mod tests {
     #[should_panic]
     fn arity_mismatch_panics() {
         Table::new("t", &["a"]).row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn table_json_round_trips_through_the_parser() {
+        let mut t = Table::new("micro", &["path", "ns_per_op"]);
+        t.row(vec!["merge \"q\"".into(), "1.5".into()]);
+        t.row(vec!["cameo".into(), "2.0".into()]);
+        let parsed = crate::util::json::Json::parse(&t.to_json()).unwrap();
+        assert_eq!(parsed.get("title").unwrap().as_str().unwrap(), "micro");
+        let rows = parsed.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(
+            rows[0].get("path").unwrap().as_str().unwrap(),
+            "merge \"q\""
+        );
+        assert_eq!(rows[1].get("ns_per_op").unwrap().as_str().unwrap(), "2.0");
+    }
+
+    #[test]
+    fn quick_mode_caps_iterations() {
+        let full = BenchArgs::default();
+        assert_eq!(full.scale(3, 20), (3, 20));
+        let quick = BenchArgs {
+            quick: true,
+            ..Default::default()
+        };
+        assert_eq!(quick.scale(3, 20), (0, 2));
+        assert_eq!(quick.scale(3, 1), (0, 1));
     }
 }

@@ -25,6 +25,7 @@ use crate::sketch::params::{encode_edge, SketchParams};
 use crate::worker::remote::PipelinedRemote;
 use crate::worker::{Completion, InlineSubmit, PendingBatch, SubmitBackend};
 
+use super::arena::BatchArena;
 use super::work_queue::{EpochBarrier, ShardedWorkQueue, Ticket};
 use super::{build_inline_backend, WorkItem, WorkerKind};
 
@@ -46,6 +47,10 @@ pub(crate) struct Distributor {
     /// a concurrent sketch read (which holds it exclusively, *after*
     /// its cut has retired) never observes a torn multi-word delta.
     pub merge_gate: Arc<RwLock<()>>,
+    /// Shared with `QueueSink`: batch buffers are recycled here once
+    /// their work completes (delta merged, applied locally, or dropped)
+    /// so the producer side can reuse them instead of allocating.
+    pub arena: Arc<BatchArena>,
 }
 
 impl Distributor {
@@ -110,7 +115,10 @@ impl Distributor {
             };
 
             match item {
-                WorkItem::Local(ticket, batch) => self.apply_local(ticket, &batch),
+                WorkItem::Local(ticket, batch) => {
+                    self.apply_local(ticket, &batch);
+                    self.arena.recycle(self.shard, batch.others);
+                }
                 WorkItem::Distribute(ticket, batch) => {
                     let token = next_token;
                     next_token += 1;
@@ -200,9 +208,12 @@ impl Distributor {
         alive
     }
 
-    /// XOR-merge one completed delta into this distributor's shard and
-    /// retire its epoch ticket.
+    /// XOR-merge one completed delta into this distributor's shard,
+    /// retire its epoch ticket, and recycle its batch buffer.
     fn merge(&self, c: Completion) {
+        // the batch's endpoint buffer rode along for exactly this
+        // moment: its work is done, recycle it for the producer side
+        self.arena.recycle(self.shard, c.others);
         let words = self.params.words();
         let k = self.k as usize;
         if c.delta.len() != words * k {
@@ -347,7 +358,7 @@ impl Distributor {
         );
         let WorkerKind::Remote { addrs } = &self.kind else {
             // inline backends never report dead(); defensive
-            self.drop_batches(&unacked);
+            self.drop_batches(unacked);
             self.abandon_shard();
             return false;
         };
@@ -403,20 +414,22 @@ impl Distributor {
             return true;
         }
         // no worker survived: everything unacknowledged is lost work
-        self.drop_batches(&unacked);
+        self.drop_batches(unacked);
         self.abandon_shard();
         false
     }
 
-    /// Meter lost batches and retire each one's epoch ticket, so no cut
-    /// waits forever on work that can no longer complete.
-    fn drop_batches(&self, batches: &[PendingBatch]) {
+    /// Meter lost batches, retire each one's epoch ticket (so no cut
+    /// waits forever on work that can no longer complete), and recycle
+    /// their buffers — lost work, not lost memory.
+    fn drop_batches(&self, batches: Vec<PendingBatch>) {
         if batches.is_empty() {
             return;
         }
         Metrics::add(&self.metrics.batches_dropped, batches.len() as u64);
         for b in batches {
             self.barrier.complete(b.ticket);
+            self.arena.recycle(self.shard, b.others);
         }
     }
 
@@ -428,9 +441,10 @@ impl Distributor {
     fn abandon_shard(&self) {
         self.queue.close_shard(self.shard);
         while let Some(item) = self.queue.pop(self.shard) {
-            let (WorkItem::Distribute(ticket, _) | WorkItem::Local(ticket, _)) = item;
+            let (WorkItem::Distribute(ticket, batch) | WorkItem::Local(ticket, batch)) = item;
             Metrics::add(&self.metrics.batches_dropped, 1);
             self.barrier.complete(ticket);
+            self.arena.recycle(self.shard, batch.others);
         }
     }
 }

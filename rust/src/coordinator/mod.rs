@@ -23,6 +23,7 @@
 //!                                            (distributor s only)
 //! ```
 
+pub mod arena;
 pub(crate) mod distributor;
 pub mod query;
 pub mod work_queue;

@@ -56,22 +56,25 @@ impl<T> WorkQueue<T> {
     }
 
     /// Blocking push (backpressure: waits while the producer list is at
-    /// capacity).  Returns false if the queue has been closed.
-    pub fn push(&self, item: T) -> bool {
+    /// capacity).  If the queue has been closed the item is handed back
+    /// as `Err(item)` so the caller can reclaim any resources it carries
+    /// (the session sink recycles the rejected batch's buffer into the
+    /// [`crate::coordinator::arena::BatchArena`]).
+    pub fn push(&self, item: T) -> Result<(), T> {
         let mut p = self.producer.lock().unwrap();
         while p.len() >= self.capacity {
             if self.closed.load(Ordering::Acquire) {
-                return false;
+                return Err(item);
             }
             p = self.not_full.wait(p).unwrap();
         }
         if self.closed.load(Ordering::Acquire) {
-            return false;
+            return Err(item);
         }
         p.push_back(item);
         drop(p);
         self.not_empty.notify_one();
-        true
+        Ok(())
     }
 
     /// Blocking pop.  Returns `None` once the queue is closed *and*
@@ -415,8 +418,10 @@ impl<T> ShardedWorkQueue<T> {
         self.queues.len()
     }
 
-    /// Blocking push onto shard `shard`'s queue; false once closed.
-    pub fn push(&self, shard: usize, item: T) -> bool {
+    /// Blocking push onto shard `shard`'s queue; once the shard is
+    /// closed the item comes back as `Err(item)` (see
+    /// [`WorkQueue::push`]).
+    pub fn push(&self, shard: usize, item: T) -> Result<(), T> {
         self.queues[shard].push(item)
     }
 
@@ -468,7 +473,7 @@ mod tests {
     fn fifo_single_thread() {
         let q = WorkQueue::new(16);
         for i in 0..10 {
-            assert!(q.push(i));
+            assert!(q.push(i).is_ok());
         }
         for i in 0..10 {
             assert_eq!(q.try_pop(), Some(i));
@@ -479,13 +484,13 @@ mod tests {
     #[test]
     fn close_drains_then_none() {
         let q = WorkQueue::new(4);
-        q.push(1);
-        q.push(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
         q.close();
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), None);
-        assert!(!q.push(3), "push after close must fail");
+        assert_eq!(q.push(3), Err(3), "push after close hands the item back");
     }
 
     #[test]
@@ -500,7 +505,7 @@ mod tests {
             let q2 = q.clone();
             handles.push(std::thread::spawn(move || {
                 for i in 0..per_producer {
-                    assert!(q2.push(p * per_producer + i));
+                    assert!(q2.push(p * per_producer + i).is_ok());
                 }
             }));
         }
@@ -533,8 +538,8 @@ mod tests {
         let q: ShardedWorkQueue<u64> = ShardedWorkQueue::new(4, 2);
         assert_eq!(q.shards(), 4);
         for shard in 0..4 {
-            assert!(q.push(shard, shard as u64 * 10));
-            assert!(q.push(shard, shard as u64 * 10 + 1));
+            assert!(q.push(shard, shard as u64 * 10).is_ok());
+            assert!(q.push(shard, shard as u64 * 10 + 1).is_ok());
         }
         assert_eq!(q.len(), 8);
         // each shard pops only its own items, in FIFO order
@@ -545,17 +550,20 @@ mod tests {
         }
         assert!(q.is_empty());
         q.close();
-        assert!(!q.push(0, 9), "push after close must fail");
+        assert_eq!(q.push(0, 9), Err(9), "push after close hands the item back");
         assert_eq!(q.pop(1), None);
     }
 
     #[test]
     fn sharded_full_shard_does_not_block_others() {
         let q: Arc<ShardedWorkQueue<u64>> = Arc::new(ShardedWorkQueue::new(2, 1));
-        assert!(q.push(0, 1)); // shard 0 now at capacity
+        assert!(q.push(0, 1).is_ok()); // shard 0 now at capacity
         let q2 = q.clone();
         let other = std::thread::spawn(move || q2.push(1, 2));
-        assert!(other.join().unwrap(), "shard 1 must accept while 0 is full");
+        assert!(
+            other.join().unwrap().is_ok(),
+            "shard 1 must accept while 0 is full"
+        );
         assert_eq!(q.try_pop(1), Some(2));
         assert_eq!(q.try_pop(0), Some(1));
     }
@@ -563,10 +571,10 @@ mod tests {
     #[test]
     fn close_shard_fails_only_that_shards_pushes() {
         let q: ShardedWorkQueue<u64> = ShardedWorkQueue::new(2, 4);
-        assert!(q.push(0, 1));
+        assert!(q.push(0, 1).is_ok());
         q.close_shard(0);
-        assert!(!q.push(0, 2), "closed shard must reject pushes");
-        assert!(q.push(1, 3), "other shards keep accepting");
+        assert_eq!(q.push(0, 2), Err(2), "closed shard must reject pushes");
+        assert!(q.push(1, 3).is_ok(), "other shards keep accepting");
         // closed shard still drains what got in before the close
         assert_eq!(q.pop(0), Some(1));
         assert_eq!(q.pop(0), None);
@@ -576,14 +584,14 @@ mod tests {
     #[test]
     fn backpressure_blocks_until_pop() {
         let q = Arc::new(WorkQueue::new(2));
-        q.push(1);
-        q.push(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
         let q2 = q.clone();
         let pusher = std::thread::spawn(move || q2.push(3));
         std::thread::sleep(Duration::from_millis(20));
         assert!(!pusher.is_finished(), "push should block at capacity");
         assert_eq!(q.pop(), Some(1));
-        assert!(pusher.join().unwrap());
+        assert!(pusher.join().unwrap().is_ok());
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), Some(3));
     }

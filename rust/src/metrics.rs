@@ -1,6 +1,8 @@
 //! Shared atomic counters for ingestion, communication, and query
 //! accounting — the quantities the paper's tables report.
 
+#![deny(missing_docs)]
+
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Global coordinator metrics.  All counters are monotonic; snapshot
@@ -69,37 +71,62 @@ pub struct Metrics {
     pub cut_wait_us: AtomicU64,
 }
 
-/// A plain-value copy of [`Metrics`].
+/// A plain-value copy of [`Metrics`] — each field mirrors the counter
+/// of the same name (see the field docs there for semantics).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct MetricsSnapshot {
+    /// See [`Metrics::updates_ingested`].
     pub updates_ingested: u64,
+    /// See [`Metrics::stream_bytes`].
     pub stream_bytes: u64,
+    /// See [`Metrics::batch_bytes_sent`].
     pub batch_bytes_sent: u64,
+    /// See [`Metrics::delta_bytes_received`].
     pub delta_bytes_received: u64,
+    /// See [`Metrics::batches_sent`].
     pub batches_sent: u64,
+    /// See [`Metrics::updates_local`].
     pub updates_local: u64,
+    /// See [`Metrics::deltas_merged`].
     pub deltas_merged: u64,
+    /// See [`Metrics::queries_full`].
     pub queries_full: u64,
+    /// See [`Metrics::queries_partial`].
     pub queries_partial: u64,
+    /// See [`Metrics::queries_greedy`].
     pub queries_greedy: u64,
+    /// See [`Metrics::dirty_components`].
     pub dirty_components: u64,
+    /// See [`Metrics::batches_dropped`].
     pub batches_dropped: u64,
+    /// See [`Metrics::hypertree_moves`].
     pub hypertree_moves: u64,
+    /// See [`Metrics::remote_in_flight_peak`].
     pub remote_in_flight_peak: u64,
+    /// See [`Metrics::batches_requeued`].
     pub batches_requeued: u64,
+    /// See [`Metrics::worker_failures`].
     pub worker_failures: u64,
+    /// See [`Metrics::handles_spawned`].
     pub handles_spawned: u64,
+    /// See [`Metrics::log_drains`].
     pub log_drains: u64,
+    /// See [`Metrics::epoch_current`].
     pub epoch_current: u64,
+    /// See [`Metrics::cuts_taken`].
     pub cuts_taken: u64,
+    /// See [`Metrics::cut_wait_us`].
     pub cut_wait_us: u64,
 }
 
 impl Metrics {
+    /// Fresh counters, all zero.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Add `n` to `counter` (relaxed: counters are statistics, never
+    /// synchronization).
     #[inline]
     pub fn add(counter: &AtomicU64, n: u64) {
         counter.fetch_add(n, Ordering::Relaxed);
@@ -111,6 +138,8 @@ impl Metrics {
         counter.fetch_max(n, Ordering::Relaxed);
     }
 
+    /// A consistent-enough plain-value copy (each counter loaded
+    /// relaxed; cross-counter invariants are only exact at quiescence).
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             updates_ingested: self.updates_ingested.load(Ordering::Relaxed),

@@ -267,6 +267,39 @@ impl Message {
     }
 }
 
+/// Append a BATCH2 frame to a scatter buffer, byte-identical to
+/// `Message::Batch2 { seq, vertex, others }.write_to(..)` — the
+/// pipelined client pre-serializes frames from *borrowed* batches so
+/// MULTIBATCH assembly never clones payloads or re-encodes per batch.
+pub fn encode_batch2_into(buf: &mut Vec<u8>, seq: u64, vertex: u32, others: &[u32]) {
+    buf.push(4u8);
+    buf.extend_from_slice(&seq.to_le_bytes());
+    buf.extend_from_slice(&vertex.to_le_bytes());
+    extend_u32s(buf, others);
+}
+
+/// Append a MULTIBATCH frame header (tag + entry count) to a scatter
+/// buffer; follow with `count` [`encode_seq_batch_into`] entries for a
+/// frame byte-identical to `Message::MultiBatch { .. }.write_to(..)`.
+pub fn encode_multibatch_header_into(buf: &mut Vec<u8>, count: u32) {
+    buf.push(6u8);
+    buf.extend_from_slice(&count.to_le_bytes());
+}
+
+/// Append one MULTIBATCH entry (see [`encode_multibatch_header_into`]).
+pub fn encode_seq_batch_into(buf: &mut Vec<u8>, seq: u64, vertex: u32, others: &[u32]) {
+    buf.extend_from_slice(&seq.to_le_bytes());
+    buf.extend_from_slice(&vertex.to_le_bytes());
+    extend_u32s(buf, others);
+}
+
+fn extend_u32s(buf: &mut Vec<u8>, xs: &[u32]) {
+    buf.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
 fn read_count<R: Read>(r: &mut R, what: &str) -> Result<usize> {
     let n = read_u32(r)? as usize;
     if n > (1 << 28) {
@@ -440,6 +473,49 @@ mod tests {
             eight.wire_bytes() < singles(&make(8)),
             "coalescing must save bytes for a window-sized burst"
         );
+    }
+
+    #[test]
+    fn scatter_encoders_match_message_framing() {
+        // the pre-serialized scatter path must emit byte-identical
+        // frames (and therefore identical wire_bytes accounting) to the
+        // Message-based writer it replaces on the pipelined hot path
+        let b2 = Message::Batch2 {
+            seq: 77,
+            vertex: 3,
+            others: vec![1, 2, u32::MAX],
+        };
+        let mut want = Vec::new();
+        b2.write_to(&mut want).unwrap();
+        let mut got = Vec::new();
+        encode_batch2_into(&mut got, 77, 3, &[1, 2, u32::MAX]);
+        assert_eq!(got, want);
+        assert_eq!(got.len() as u64, b2.wire_bytes());
+
+        let entries = vec![
+            SeqBatch {
+                seq: 1,
+                vertex: 0,
+                others: vec![4, 5],
+            },
+            SeqBatch {
+                seq: 2,
+                vertex: 9,
+                others: vec![],
+            },
+        ];
+        let multi = Message::MultiBatch {
+            batches: entries.clone(),
+        };
+        let mut want = Vec::new();
+        multi.write_to(&mut want).unwrap();
+        let mut got = Vec::new();
+        encode_multibatch_header_into(&mut got, entries.len() as u32);
+        for e in &entries {
+            encode_seq_batch_into(&mut got, e.seq, e.vertex, &e.others);
+        }
+        assert_eq!(got, want);
+        assert_eq!(got.len() as u64, multi.wire_bytes());
     }
 
     #[test]

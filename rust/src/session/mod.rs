@@ -72,6 +72,7 @@ use crate::connectivity::boruvka::{boruvka_components, boruvka_components_from};
 use crate::connectivity::greedycc::PartialSeed;
 use crate::connectivity::kconn::KConnectivity;
 use crate::connectivity::SpanningForest;
+use crate::coordinator::arena::BatchArena;
 use crate::coordinator::query::{QueryEngine, QueryTier};
 use crate::coordinator::work_queue::{Cut, EpochBarrier, ShardedWorkQueue};
 use crate::coordinator::{distributor, BufferKind, CoordinatorConfig, WorkItem, WorkerKind};
@@ -351,6 +352,10 @@ pub(crate) struct QueueSink {
     spec: ShardSpec,
     metrics: Arc<Metrics>,
     barrier: Arc<EpochBarrier>,
+    /// Batch buffers recycled by the distributors once their work
+    /// completes; `local_batch` draws from here instead of allocating a
+    /// fresh `Vec` per underfull leaf.
+    arena: Arc<BatchArena>,
     /// Meter `batch_bytes_sent` here with the nominal 8+4n accounting.
     /// True for in-process workers (nothing crosses a wire, the nominal
     /// figure *is* the model); false for remote workers, where the
@@ -374,13 +379,15 @@ impl QueueSink {
         } else {
             WorkItem::Distribute(ticket, batch)
         };
-        if !self.queue.push(shard, item) {
+        if let Err(item) = self.queue.push(shard, item) {
             // the shard queue is closed: these updates will never reach
             // a sketch, which silently corrupts every later query —
             // meter and log instead of vanishing (and retire the ticket
             // so no cut waits on work that will never run)
             self.barrier.complete(ticket);
             Metrics::add(&self.metrics.batches_dropped, 1);
+            let (WorkItem::Distribute(_, batch) | WorkItem::Local(_, batch)) = item;
+            self.arena.recycle(shard, batch.others);
             crate::log_warn!(
                 "session: DROPPED {kind} batch (vertex {vertex}, {len} \
                  updates) on closed shard queue {shard}"
@@ -405,14 +412,13 @@ impl BatchSink for QueueSink {
 
     fn local_batch(&self, shard: usize, vertex: u32, others: &[u32]) {
         debug_assert_eq!(shard, self.spec.shard_of(vertex));
-        self.enqueue(
-            shard,
-            true,
-            VertexBatch {
-                vertex,
-                others: others.to_vec(),
-            },
-        );
+        // Draw the batch buffer from the per-shard arena instead of
+        // allocating: at full ingest rate this path runs once per leaf
+        // flush, and the buffer rides the whole pipeline before coming
+        // back via `Completion::others`.
+        let mut buf = self.arena.acquire(shard);
+        buf.extend_from_slice(others);
+        self.enqueue(shard, true, VertexBatch { vertex, others: buf });
     }
 }
 
@@ -701,6 +707,7 @@ impl Landscape {
         ));
         let queue = Arc::new(ShardedWorkQueue::new(spec.count(), config.queue_capacity));
         let barrier = Arc::new(EpochBarrier::new());
+        let arena = Arc::new(BatchArena::new(spec.count()));
 
         let buffer = match config.buffer {
             BufferKind::Hypertree => Buffer::Hyper(Arc::new(Hypertree::new(
@@ -720,6 +727,7 @@ impl Landscape {
             spec,
             metrics: metrics.clone(),
             barrier: barrier.clone(),
+            arena: arena.clone(),
             meter_batch_bytes: !matches!(config.worker, WorkerKind::Remote { .. }),
         });
 
@@ -761,6 +769,7 @@ impl Landscape {
                 metrics: core.metrics.clone(),
                 barrier: core.barrier.clone(),
                 merge_gate: core.merge_gate.clone(),
+                arena: arena.clone(),
             };
             distributors.push(std::thread::spawn(move || d.run()));
         }

@@ -121,8 +121,45 @@ impl CameoSketch {
     }
 
     /// XOR-merge `delta` into `acc` (linearity: S(x)+S(y) = S(x+y)).
+    ///
+    /// Hot-path kernel: 8-way unrolled over u64 chunks so the compiler
+    /// emits eight independent load/XOR/store chains per iteration
+    /// (auto-vectorizable, no nightly features).  Bit-for-bit identical
+    /// to [`Self::merge_scalar`] for every length and alignment — the
+    /// `unrolled_merge_matches_scalar_reference` property test holds the
+    /// two together, including non-multiple-of-8 tails.
     #[inline]
     pub fn merge(acc: &mut [u64], delta: &[u64]) {
+        debug_assert_eq!(acc.len(), delta.len());
+        let mut ac = acc.chunks_exact_mut(8);
+        let mut dc = delta.chunks_exact(8);
+        for (a, d) in (&mut ac).zip(&mut dc) {
+            let [a0, a1, a2, a3, a4, a5, a6, a7] = a else {
+                unreachable!()
+            };
+            let [d0, d1, d2, d3, d4, d5, d6, d7] = d else {
+                unreachable!()
+            };
+            *a0 ^= *d0;
+            *a1 ^= *d1;
+            *a2 ^= *d2;
+            *a3 ^= *d3;
+            *a4 ^= *d4;
+            *a5 ^= *d5;
+            *a6 ^= *d6;
+            *a7 ^= *d7;
+        }
+        for (a, d) in ac.into_remainder().iter_mut().zip(dc.remainder()) {
+            *a ^= *d;
+        }
+    }
+
+    /// The scalar reference implementation of [`Self::merge`], retained
+    /// as the correctness oracle for the unrolled kernel and as the
+    /// `merge_scalar_*` baseline rows of `benches/micro_hot_paths.rs`
+    /// (tracked in the committed `BENCH_micro.json` trajectory).
+    #[inline]
+    pub fn merge_scalar(acc: &mut [u64], delta: &[u64]) {
         debug_assert_eq!(acc.len(), delta.len());
         for (a, d) in acc.iter_mut().zip(delta) {
             *a ^= *d;
@@ -244,6 +281,25 @@ mod tests {
             let dab = CameoSketch::delta_of_batch(&params, &seeds, &iab);
             CameoSketch::merge(&mut da, &db);
             assert_eq!(da, dab);
+        });
+    }
+
+    #[test]
+    fn unrolled_merge_matches_scalar_reference() {
+        // the unrolled kernel must be bit-for-bit the scalar fold for
+        // every length (incl. 0 and non-multiple-of-8 tails) and for
+        // every sub-slice alignment of a larger buffer
+        Cases::new(60).run(|rng| {
+            let len = (rng.next_u64() % 40) as usize;
+            let off = (rng.next_u64() % 9) as usize;
+            let total = off + len;
+            let base: Vec<u64> = (0..total).map(|_| rng.next_u64()).collect();
+            let delta: Vec<u64> = (0..total).map(|_| rng.next_u64()).collect();
+            let mut a = base.clone();
+            let mut b = base.clone();
+            CameoSketch::merge(&mut a[off..], &delta[off..]);
+            CameoSketch::merge_scalar(&mut b[off..], &delta[off..]);
+            assert_eq!(a, b, "len {len} offset {off}");
         });
     }
 

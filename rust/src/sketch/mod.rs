@@ -12,6 +12,8 @@
 //! Everything is linear over XOR, which is what lets Landscape compute
 //! deltas remotely and merge them on the main node (paper §5.2).
 
+#![deny(missing_docs)]
+
 pub mod cameo;
 pub mod cube;
 pub mod params;

@@ -76,6 +76,13 @@ pub struct Completion {
     /// Exact bytes of the DELTA frame this completion arrived in
     /// (0 for in-process backends — no network traffic to meter).
     pub wire_bytes: u64,
+    /// The submitted batch's endpoint buffer, handed back so the
+    /// distributor can recycle it into the
+    /// [`crate::coordinator::arena::BatchArena`] once the delta has
+    /// merged.  Backends move it from the [`PendingBatch`] (inline at
+    /// submission; the pipelined reader when the DELTA2 arrives) — the
+    /// payload is never cloned to make the round trip.
+    pub others: Vec<u32>,
 }
 
 /// The pipelined counterpart of [`WorkerBackend`]: batches are
@@ -172,6 +179,7 @@ impl SubmitBackend for InlineSubmit {
             vertex: batch.vertex,
             delta,
             wire_bytes: 0,
+            others: batch.others,
         });
         Ok(())
     }
@@ -376,6 +384,11 @@ mod tests {
         assert_eq!(out[0].token, 7);
         assert_eq!(out[0].ticket, ticket, "completions echo the epoch ticket");
         assert_eq!(out[0].wire_bytes, 0, "inline backends meter no network");
+        assert_eq!(
+            out[0].others,
+            vec![1, 2],
+            "the batch buffer rides back for arena recycling"
+        );
         assert_eq!(out[0].delta.len(), 2 * words);
         let native = NativeWorker::new(s);
         let mut want = Vec::new();

@@ -20,7 +20,7 @@
 //!   worker ([`crate::worker::SubmitBackend::take_unacked`]).
 
 use std::collections::{HashMap, VecDeque};
-use std::io::{BufReader, BufWriter};
+use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
@@ -29,7 +29,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::net::{delta2_wire_bytes, Message, SeqBatch};
+use crate::net::{
+    delta2_wire_bytes, encode_batch2_into, encode_multibatch_header_into, encode_seq_batch_into,
+    Message,
+};
 use crate::sketch::params::SketchParams;
 use crate::worker::{
     Completion, NativeWorker, PendingBatch, SubmitBackend, WorkerBackend, WorkerSeeds,
@@ -162,6 +165,10 @@ pub struct PipelinedRemote {
     sock: TcpStream,
     /// Submitted but not yet framed onto the wire (coalescing buffer).
     write_buf: Vec<PendingBatch>,
+    /// Reusable scatter buffer: each flush pre-serializes the whole
+    /// BATCH2/MULTIBATCH frame here from *borrowed* batches, so frame
+    /// assembly never clones a payload and the wire sees one write.
+    frame_buf: Vec<u8>,
     window: usize,
     bytes_sent: u64,
     reader: Option<std::thread::JoinHandle<()>>,
@@ -204,6 +211,7 @@ impl PipelinedRemote {
             writer,
             sock,
             write_buf: Vec::new(),
+            frame_buf: Vec::new(),
             window: window.max(1),
             bytes_sent,
             reader: Some(reader),
@@ -288,44 +296,44 @@ impl SubmitBackend for PipelinedRemote {
         if self.shared.is_dead() {
             bail!("remote worker connection is dead");
         }
-        let batches: Vec<PendingBatch> = self.write_buf.drain(..).collect();
-        // register as on-the-wire *before* writing: a torn write leaves
-        // every batch in the unacknowledged set for requeueing
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            for b in &batches {
-                st.pending.insert(b.token, b.clone());
+        // pre-serialize the whole frame into the reusable scatter buffer
+        // from *borrowed* batches — no payload clone, no Message
+        // construction, no per-batch re-encoding.  The encoders are
+        // byte-identical to the Message framing (asserted in net's
+        // `scatter_encoders_match_message_framing`), so the byte meter
+        // below stays exact.
+        self.frame_buf.clear();
+        if self.write_buf.len() == 1 {
+            let b = &self.write_buf[0];
+            encode_batch2_into(&mut self.frame_buf, b.token, b.vertex, &b.others);
+        } else {
+            encode_multibatch_header_into(&mut self.frame_buf, self.write_buf.len() as u32);
+            for b in &self.write_buf {
+                encode_seq_batch_into(&mut self.frame_buf, b.token, b.vertex, &b.others);
             }
         }
-        // the clones above went to the pending map; the frame takes the
-        // originals, so each payload is copied exactly once
-        let msg = if batches.len() == 1 {
-            let b = batches.into_iter().next().unwrap();
-            Message::Batch2 {
-                seq: b.token,
-                vertex: b.vertex,
-                others: b.others,
+        // register as on-the-wire *before* writing: a torn write leaves
+        // every batch in the unacknowledged set for requeueing.  The
+        // batches move (not clone) into the pending map — the frame was
+        // already serialized above.
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            for b in self.write_buf.drain(..) {
+                st.pending.insert(b.token, b);
             }
-        } else {
-            Message::MultiBatch {
-                batches: batches
-                    .into_iter()
-                    .map(|b| SeqBatch {
-                        seq: b.token,
-                        vertex: b.vertex,
-                        others: b.others,
-                    })
-                    .collect(),
-            }
-        };
-        match msg.write_to(&mut self.writer) {
-            Ok(n) => {
-                self.bytes_sent += n;
+        }
+        match self
+            .writer
+            .write_all(&self.frame_buf)
+            .and_then(|()| self.writer.flush())
+        {
+            Ok(()) => {
+                self.bytes_sent += self.frame_buf.len() as u64;
                 Ok(())
             }
             Err(e) => {
                 self.shared.mark_dead();
-                Err(e)
+                Err(e.into())
             }
         }
     }
@@ -461,6 +469,9 @@ fn reader_loop(shared: &PipeShared, mut reader: BufReader<TcpStream>) {
                             vertex,
                             delta,
                             wire_bytes: wire,
+                            // hand the batch buffer back for arena
+                            // recycling once the delta merges
+                            others: b.others,
                         });
                         drop(st);
                         shared.bytes_received.fetch_add(wire, Ordering::Relaxed);
@@ -769,6 +780,7 @@ fn sender_loop(mut writer: BufWriter<TcpStream>, rx: mpsc::Receiver<QueuedReply>
 mod tests {
     use super::*;
     use crate::coordinator::work_queue::{EpochBarrier, Ticket};
+    use crate::net::SeqBatch;
     use crate::sketch::params::encode_edge;
     use crate::sketch::seeds::SketchSeeds;
     use crate::sketch::CameoSketch;
@@ -854,6 +866,10 @@ mod tests {
             let (_, vertex, others) = batches.iter().find(|b| b.0 == c.token).unwrap();
             assert_eq!(c.vertex, *vertex);
             assert_eq!(c.delta, native_delta(params, 42, 1, *vertex, others));
+            assert_eq!(
+                &c.others, others,
+                "the batch buffer rides back with its completion"
+            );
         }
         assert_eq!(p.in_flight(), 0);
         p.finish().unwrap();
