@@ -1,6 +1,6 @@
 # Convenience targets referenced by docs and test skip messages.
 
-.PHONY: build test fixtures artifacts fmt clippy ci
+.PHONY: build test fixtures artifacts fmt clippy lint miri tsan ci
 
 build:
 	cargo build --release --workspace
@@ -14,7 +14,21 @@ fmt:
 clippy:
 	cargo clippy --workspace --all-targets -- -D warnings
 
-ci: fmt clippy build test
+# Invariant lint pass over rust/src (see docs/INVARIANTS.md).
+lint:
+	cargo run --release -p landscape --bin landscape_lint
+
+# Interpreter pass over the unsafe/atomic core.  Requires
+# `rustup +nightly component add miri`.  The filter matches CI and
+# deliberately excludes the arena double-recycle test (forged-alias UB).
+miri:
+	MIRIFLAGS=-Zmiri-disable-isolation cargo +nightly miri test -p landscape --lib sketch:: work_queue
+
+# Best-effort data-race pass; requires nightly + rust-src.
+tsan:
+	RUSTFLAGS=-Zsanitizer=thread cargo +nightly test -Z build-std --target x86_64-unknown-linux-gnu -p landscape --test concurrent_ingest
+
+ci: fmt clippy lint build test
 	python -m pytest python/tests -q
 
 # Cross-language golden fixtures (pure numpy; no jax needed).

@@ -1,0 +1,748 @@
+//! `landscape-lint` — the project's own invariant lint pass.
+//!
+//! The pipeline's correctness rests on contracts no general-purpose tool
+//! checks: relaxed-atomic merges are sound *only* in the single-writer
+//! sketch kernels, the leveled `util::log` facility must not be bypassed
+//! with bare `eprintln!`, and the hot-path modules must not hide panics
+//! (`unwrap`/`expect`) or stalls (`thread::sleep`) without an explicit,
+//! reviewed justification.  This binary walks `rust/src` and enforces
+//! those rules mechanically (see `docs/INVARIANTS.md` for the catalog
+//! and the companion dynamic detectors).
+//!
+//! Rules:
+//!
+//! 1. **relaxed-ordering** — `Ordering::Relaxed` is allowed only in
+//!    `sketch/store.rs` (the single-writer XOR kernels).  Everywhere
+//!    else each use needs `// lint: allow(relaxed-ordering) — <reason>`
+//!    on the same or the preceding line.
+//! 2. **eprintln** — `eprintln!` is banned outside `util/log.rs` (the
+//!    facility that implements the `log_*!` macros); justify exceptions
+//!    with `// lint: allow(eprintln) — <reason>`.
+//! 3. **hot-path-unwrap / thread-sleep** — `.unwrap()`, `.expect(` and
+//!    `thread::sleep` are banned in the hot-path module trees
+//!    (`sketch/`, `coordinator/`, `worker/`, `session/`, `gutter/`,
+//!    `hypertree/`) outside `#[cfg(test)]` blocks.  The lock-poisoning
+//!    idiom (`.lock()`, `.read()`, `.write()`, `.wait(..)`,
+//!    `.wait_timeout(..)` immediately followed by `.unwrap()`) is
+//!    exempt: propagating a poisoned lock IS the invariant — a panic
+//!    that happened while the lock was held must not be swallowed.
+//!    Everything else needs `// lint: allow(hot-path-unwrap) — <reason>`
+//!    (or `thread-sleep`).
+//! 4. **missing-docs-attr** — the modules CI documents as
+//!    `#![deny(missing_docs)]` must actually carry the attribute.
+//!
+//! An allow directive must carry a reason: `// lint: allow(<tag>)`
+//! followed by at least a few words.  Directives are recognized in line
+//! comments only (`//`), not block comments.
+//!
+//! Scope notes: `#[cfg(test)]` blocks are exempt from rules 1–3 (the
+//! dynamic detectors, Miri and TSan cover test-only races), and string
+//! literals / comments never match a rule pattern (the scanner strips
+//! them first).  The tracker assumes the repo convention of a single
+//! trailing `#[cfg(test)] mod tests { .. }` per file — an armed
+//! `#[cfg(test)]` attribute captures everything from the next opening
+//! brace to its matching close.
+//!
+//! Exit status: 0 when the tree is clean, 1 when any violation is
+//! found.  Stdlib-only by design (the `tools/bench_compare` precedent):
+//! it must build in the offline workspace and run as a required CI job.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Hot-path module trees for rule 3 (relative to the source root, with
+/// trailing slash so `worker/` does not match `workers_util/`).
+const HOT_PATH_DIRS: &[&str] = &[
+    "sketch/",
+    "coordinator/",
+    "worker/",
+    "session/",
+    "gutter/",
+    "hypertree/",
+];
+
+/// Files where `Ordering::Relaxed` is allowed without justification:
+/// the single-writer-per-shard XOR merge kernels.
+const RELAXED_WHITELIST: &[&str] = &["sketch/store.rs"];
+
+/// Files where `eprintln!` is allowed without justification: the
+/// logging facility itself.
+const EPRINTLN_WHITELIST: &[&str] = &["util/log.rs"];
+
+/// Files CI relies on carrying `#![deny(missing_docs)]` (the cargo-doc
+/// `-D warnings` gate only fires for modules that opt in).  Inner
+/// attributes cover child modules, so `sketch/mod.rs` covers the whole
+/// `sketch/` subtree and `session/mod.rs` covers `session/handle.rs`.
+const MISSING_DOCS_REQUIRED: &[&str] = &[
+    "sketch/mod.rs",
+    "coordinator/work_queue.rs",
+    "session/mod.rs",
+    "metrics.rs",
+];
+
+/// Receiver methods whose `Result` is the lock-poisoning propagation
+/// idiom (see module docs): `.unwrap()`/`.expect(` directly on these is
+/// not a rule-3 violation.
+const LOCK_FAMILY: &[&str] = &["lock", "read", "write", "wait", "wait_timeout"];
+
+/// Which rule a violation belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Rule {
+    RelaxedOrdering,
+    Eprintln,
+    HotPathUnwrap,
+    ThreadSleep,
+    MissingDocsAttr,
+}
+
+impl Rule {
+    /// The rule's display name, also its `lint: allow(..)` tag.
+    fn tag(self) -> &'static str {
+        match self {
+            Rule::RelaxedOrdering => "relaxed-ordering",
+            Rule::Eprintln => "eprintln",
+            Rule::HotPathUnwrap => "hot-path-unwrap",
+            Rule::ThreadSleep => "thread-sleep",
+            Rule::MissingDocsAttr => "missing-docs-attr",
+        }
+    }
+}
+
+/// One rule violation at a source location.
+#[derive(Debug)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: Rule,
+    message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file,
+            self.line,
+            self.rule.tag(),
+            self.message
+        )
+    }
+}
+
+/// One source line after the scanner pass: executable code with string
+/// and comment contents removed, plus any line-comment text.
+#[derive(Debug, Default)]
+struct ScannedLine {
+    code: String,
+    comment: String,
+}
+
+/// Split `src` into per-line (code, comment) pairs.  String literal
+/// contents (plain, byte, raw), char literals, and comment bodies are
+/// removed from `code`, so rule patterns never match inside them; line
+/// comments are preserved verbatim in `comment` for `lint: allow`
+/// detection.  Strings and block comments may span lines.
+fn scan_source(src: &str) -> Vec<ScannedLine> {
+    #[derive(PartialEq)]
+    enum State {
+        Normal,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(u32),
+    }
+    let b = src.as_bytes();
+    let mut lines = Vec::new();
+    let mut cur = ScannedLine::default();
+    let mut state = State::Normal;
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            if state == State::LineComment {
+                state = State::Normal;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Normal => {
+                if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    state = State::LineComment;
+                    cur.comment.push_str("//");
+                    i += 2;
+                } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    state = State::BlockComment(1);
+                    i += 2;
+                } else if c == b'"' {
+                    state = State::Str;
+                    cur.code.push('"');
+                    i += 1;
+                } else if c == b'b' && i + 1 < b.len() && b[i + 1] == b'"' {
+                    state = State::Str;
+                    cur.code.push_str("b\"");
+                    i += 2;
+                } else if (c == b'r' && i + 1 < b.len())
+                    || (c == b'b' && i + 2 < b.len() && b[i + 1] == b'r')
+                {
+                    // possible raw (byte) string: r"..", r#".."#, br".."
+                    let start = if c == b'b' { i + 2 } else { i + 1 };
+                    let mut j = start;
+                    while j < b.len() && b[j] == b'#' {
+                        j += 1;
+                    }
+                    if j < b.len() && b[j] == b'"' && (c == b'b' || start == i + 1) {
+                        state = State::RawStr((j - start) as u32);
+                        cur.code.push('"');
+                        i = j + 1;
+                    } else {
+                        cur.code.push(c as char);
+                        i += 1;
+                    }
+                } else if c == b'\'' {
+                    // char literal or lifetime tick
+                    if i + 1 < b.len() && b[i + 1] == b'\\' {
+                        // escaped char literal: skip to the closing quote
+                        let mut j = i + 2;
+                        if j < b.len() {
+                            j += 1; // the escaped character itself
+                        }
+                        while j < b.len() && b[j] != b'\'' {
+                            j += 1;
+                        }
+                        cur.code.push_str("' '");
+                        i = j + 1;
+                    } else if i + 2 < b.len() && b[i + 2] == b'\'' {
+                        cur.code.push_str("' '");
+                        i += 3;
+                    } else {
+                        // a lifetime ('a, 'static): keep the tick
+                        cur.code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    // non-ASCII bytes only occur inside strings/comments
+                    // in this codebase; pass ASCII through for matching
+                    cur.code.push(c as char);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                // preserve comment bytes (allow directives are ASCII;
+                // reasons may contain UTF-8 dashes — keep bytes lossily)
+                if c.is_ascii() {
+                    cur.comment.push(c as char);
+                }
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    state = if depth == 1 {
+                        State::Normal
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    state = State::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == b'\\' {
+                    // skip the escaped character (incl. \" and \\) — but
+                    // leave an escaped newline (string continuation) for
+                    // the top-level line handling so line numbers stay true
+                    i += 1;
+                    if i < b.len() && b[i] != b'\n' {
+                        i += 1;
+                    }
+                } else if c == b'"' {
+                    state = State::Normal;
+                    cur.code.push('"');
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == b'"' {
+                    let n = hashes as usize;
+                    if b.len() >= i + 1 + n && b[i + 1..i + 1 + n].iter().all(|&h| h == b'#') {
+                        state = State::Normal;
+                        cur.code.push('"');
+                        i += 1 + n;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines.push(cur);
+    lines
+}
+
+/// Does `comment` (or a neighboring line's comment, checked by the
+/// caller) carry `lint: allow(<tag>)` with a non-trivial reason?
+fn has_allow(comment: &str, tag: &str) -> bool {
+    let needle = format!("lint: allow({tag})");
+    match comment.find(&needle) {
+        None => false,
+        Some(pos) => {
+            let rest = &comment[pos + needle.len()..];
+            // the justification must actually say something
+            rest.chars().filter(|c| c.is_alphanumeric()).count() >= 3
+        }
+    }
+}
+
+/// Is the text immediately before an `.unwrap()` / `.expect(` a call to
+/// one of the lock-poisoning-family methods?  `prefix` is the squashed
+/// (whitespace-free) statement text up to the match.
+fn lock_family_receiver(prefix: &str) -> bool {
+    let b = prefix.as_bytes();
+    if b.last() != Some(&b')') {
+        return false;
+    }
+    // walk back over the balanced argument list to the opening paren
+    let mut depth = 0i32;
+    let mut i = b.len();
+    while i > 0 {
+        i -= 1;
+        match b[i] {
+            b')' => depth += 1,
+            b'(' => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    if depth != 0 || i == 0 {
+        return false;
+    }
+    let head = &prefix[..i];
+    LOCK_FAMILY
+        .iter()
+        .any(|m| head.ends_with(&format!(".{m}")))
+}
+
+/// Remove all whitespace (for cross-line statement matching).
+fn squash(s: &str) -> String {
+    s.chars().filter(|c| !c.is_whitespace()).collect()
+}
+
+/// Lint one file's source.  `rel` is the path relative to the source
+/// root, with forward slashes.
+fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
+    let scanned = scan_source(src);
+    let mut viols = Vec::new();
+
+    let in_hot_path = HOT_PATH_DIRS.iter().any(|d| rel.starts_with(d));
+    let relaxed_ok = RELAXED_WHITELIST.contains(&rel);
+    let eprintln_ok = EPRINTLN_WHITELIST.contains(&rel);
+
+    let mut in_test = false;
+    let mut test_armed = false;
+    let mut depth = 0i64;
+
+    for (idx, line) in scanned.iter().enumerate() {
+        let lineno = idx + 1;
+        let code = line.code.as_str();
+        let opens = code.matches('{').count() as i64;
+        let closes = code.matches('}').count() as i64;
+
+        if in_test {
+            depth += opens - closes;
+            if depth <= 0 {
+                in_test = false;
+            }
+            continue;
+        }
+        if code.contains("#[cfg(test)]") || code.contains("#[cfg(all(test") {
+            test_armed = true;
+        }
+        if test_armed && opens > 0 {
+            depth = opens - closes;
+            test_armed = false;
+            if depth > 0 {
+                in_test = true;
+            }
+            continue; // the opening line itself belongs to the test block
+        }
+
+        let allowed = |tag: &str| -> bool {
+            has_allow(&line.comment, tag)
+                || (idx > 0 && has_allow(&scanned[idx - 1].comment, tag))
+        };
+
+        if code.contains("Ordering::Relaxed")
+            && !relaxed_ok
+            && !allowed(Rule::RelaxedOrdering.tag())
+        {
+            viols.push(Violation {
+                file: rel.to_string(),
+                line: lineno,
+                rule: Rule::RelaxedOrdering,
+                message: "relaxed atomic ordering outside the sketch/store.rs \
+                          single-writer kernels; justify with \
+                          `// lint: allow(relaxed-ordering) — <reason>`"
+                    .to_string(),
+            });
+        }
+
+        if code.contains("eprintln!") && !eprintln_ok && !allowed(Rule::Eprintln.tag()) {
+            viols.push(Violation {
+                file: rel.to_string(),
+                line: lineno,
+                rule: Rule::Eprintln,
+                message: "bare eprintln! bypasses the leveled util::log facility; \
+                          use log_error!/log_warn!/log_info!/log_debug! or justify \
+                          with `// lint: allow(eprintln) — <reason>`"
+                    .to_string(),
+            });
+        }
+
+        if in_hot_path {
+            if code.contains("thread::sleep") && !allowed(Rule::ThreadSleep.tag()) {
+                viols.push(Violation {
+                    file: rel.to_string(),
+                    line: lineno,
+                    rule: Rule::ThreadSleep,
+                    message: "thread::sleep on a hot-path module; use the queue/barrier \
+                              condvars, or justify with \
+                              `// lint: allow(thread-sleep) — <reason>`"
+                        .to_string(),
+                });
+            }
+            // cross-line statement context for chained-call idioms
+            let squashed = squash(code);
+            let mut prev_ctx = String::new();
+            for prev in &scanned[idx.saturating_sub(4)..idx] {
+                prev_ctx.push_str(&squash(&prev.code));
+            }
+            for pat in [".unwrap()", ".expect("] {
+                let mut flagged = false;
+                let mut search = 0usize;
+                while let Some(off) = squashed[search..].find(pat) {
+                    let pos = search + off;
+                    let mut prefix = prev_ctx.clone();
+                    prefix.push_str(&squashed[..pos]);
+                    if !lock_family_receiver(&prefix)
+                        && !allowed(Rule::HotPathUnwrap.tag())
+                        && !flagged
+                    {
+                        viols.push(Violation {
+                            file: rel.to_string(),
+                            line: lineno,
+                            rule: Rule::HotPathUnwrap,
+                            message: format!(
+                                "`{pat}` on a hot-path module (panic-on-Err is only \
+                                 acceptable for lock poisoning); handle the error, or \
+                                 justify with `// lint: allow(hot-path-unwrap) — <reason>`"
+                            ),
+                        });
+                        flagged = true;
+                    }
+                    search = pos + pat.len();
+                }
+            }
+        }
+    }
+    viols
+}
+
+/// Recursively collect every `.rs` file under `dir`, sorted.
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` and check the required
+/// `#![deny(missing_docs)]` attributes.  Violations come back sorted by
+/// (file, line).
+fn lint_root(root: &Path) -> std::io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    let mut viols = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(path)?;
+        viols.extend(lint_file(&rel, &src));
+        if MISSING_DOCS_REQUIRED.contains(&rel.as_str())
+            && !scan_source(&src)
+                .iter()
+                .any(|l| l.code.contains("#![deny(missing_docs)]"))
+        {
+            viols.push(Violation {
+                file: rel,
+                line: 1,
+                rule: Rule::MissingDocsAttr,
+                message: "this module is listed in CI as #![deny(missing_docs)] but \
+                          does not carry the attribute"
+                    .to_string(),
+            });
+        }
+    }
+    viols.sort_by(|a, b| a.file.cmp(&b.file).then(a.line.cmp(&b.line)));
+    Ok(viols)
+}
+
+fn default_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+fn main() -> ExitCode {
+    let mut root = default_root();
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => {
+                    println!("landscape-lint: --root needs a directory argument");
+                    return ExitCode::FAILURE;
+                }
+            },
+            "--help" | "-h" => {
+                println!(
+                    "landscape-lint [--root DIR]\n\
+                     Project invariant lint (see docs/INVARIANTS.md).\n\
+                     Default root: {}",
+                    default_root().display()
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                println!("landscape-lint: unknown argument `{other}` (try --help)");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    let viols = match lint_root(&root) {
+        Ok(v) => v,
+        Err(e) => {
+            println!("landscape-lint: cannot read {}: {e}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    if viols.is_empty() {
+        println!("landscape-lint: clean ({})", root.display());
+        return ExitCode::SUCCESS;
+    }
+    for v in &viols {
+        println!("{v}");
+    }
+    println!(
+        "landscape-lint: {} violation(s) in {} — see docs/INVARIANTS.md for \
+         the rules and the `// lint: allow(<tag>) — <reason>` escape hatch",
+        viols.len(),
+        root.display()
+    );
+    ExitCode::FAILURE
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(name: &str) -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("..")
+            .join("tests")
+            .join("lint_fixtures")
+            .join(name)
+    }
+
+    fn rules(viols: &[Violation]) -> Vec<Rule> {
+        viols.iter().map(|v| v.rule).collect()
+    }
+
+    // ---- scanner ----
+
+    #[test]
+    fn scanner_strips_string_contents() {
+        let lines = scan_source("let x = \"Ordering::Relaxed .unwrap()\";\n");
+        assert_eq!(lines[0].code, "let x = \"\";");
+        assert!(lines[0].comment.is_empty());
+    }
+
+    #[test]
+    fn scanner_strips_raw_strings_and_keeps_code() {
+        let lines = scan_source("let v = Json::parse(r#\"{\"a\": 1}\"#).unwrap();\n");
+        assert_eq!(lines[0].code, "let v = Json::parse(\"\").unwrap();");
+    }
+
+    #[test]
+    fn scanner_handles_multiline_strings() {
+        let src = "log_warn!(\n    \"line one {x} \\\n     eprintln! inside\"\n);\n";
+        let lines = scan_source(src);
+        assert_eq!(lines[1].code.trim(), "\"");
+        assert_eq!(lines[2].code.trim(), "\"");
+        assert!(!lines.iter().any(|l| l.code.contains("eprintln!")));
+    }
+
+    #[test]
+    fn scanner_separates_line_comments() {
+        let lines = scan_source("foo(); // lint: allow(eprintln) — the reason\n");
+        assert_eq!(lines[0].code, "foo(); ");
+        assert!(has_allow(&lines[0].comment, "eprintln"));
+    }
+
+    #[test]
+    fn scanner_handles_char_literals_and_lifetimes() {
+        let lines = scan_source("fn f<'a>(c: char) -> bool { c == '{' || c == '\\'' }\n");
+        // the brace inside the char literal must not leak into code
+        let braces = lines[0].code.matches('{').count();
+        assert_eq!(braces, 1, "only the fn body brace: {:?}", lines[0].code);
+    }
+
+    #[test]
+    fn scanner_strips_block_comments() {
+        let lines = scan_source("a(); /* eprintln! \n still comment */ b();\n");
+        assert_eq!(lines[0].code, "a(); ");
+        assert_eq!(lines[1].code, " b();");
+    }
+
+    // ---- rule mechanics on inline sources ----
+
+    #[test]
+    fn relaxed_ordering_flagged_outside_whitelist() {
+        let src = "fn f(c: &AtomicU64) { c.fetch_add(1, Ordering::Relaxed); }\n";
+        assert_eq!(
+            rules(&lint_file("coordinator/foo.rs", src)),
+            vec![Rule::RelaxedOrdering]
+        );
+        assert!(lint_file("sketch/store.rs", src).is_empty());
+    }
+
+    #[test]
+    fn relaxed_ordering_allow_comment_needs_a_reason() {
+        let justified = "// lint: allow(relaxed-ordering) — statistics only\n\
+                         c.fetch_add(1, Ordering::Relaxed);\n";
+        assert!(lint_file("metrics.rs", justified).is_empty());
+        let bare = "// lint: allow(relaxed-ordering)\n\
+                    c.fetch_add(1, Ordering::Relaxed);\n";
+        assert_eq!(rules(&lint_file("metrics.rs", bare)), vec![Rule::RelaxedOrdering]);
+    }
+
+    #[test]
+    fn lock_poisoning_idiom_is_exempt() {
+        let src = "fn f(&self) { let g = self.state.lock().unwrap(); g.run(); }\n";
+        assert!(lint_file("coordinator/foo.rs", src).is_empty());
+        // chained across lines, condvar wait with nested parens
+        let chained = "let (g, _t) = self\n    .cv\n    .wait_timeout(st, Duration::from_millis(50))\n    .unwrap();\n";
+        assert!(lint_file("worker/foo.rs", chained).is_empty());
+    }
+
+    #[test]
+    fn non_lock_unwrap_in_hot_path_is_flagged() {
+        let src = "fn f(s: &str) -> u32 { s.parse().unwrap() }\n";
+        assert_eq!(
+            rules(&lint_file("gutter/foo.rs", src)),
+            vec![Rule::HotPathUnwrap]
+        );
+        // the same code outside the hot-path trees is fine
+        assert!(lint_file("analysis/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_blocks_are_exempt() {
+        let src = "fn prod() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       #[test]\n\
+                       fn t() { \"1\".parse::<u32>().unwrap(); std::thread::sleep(d); }\n\
+                   }\n";
+        assert!(lint_file("session/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn thread_sleep_flagged_in_hot_path_production_code() {
+        let src = "fn f() { std::thread::sleep(Duration::from_millis(1)); }\n";
+        assert_eq!(
+            rules(&lint_file("worker/foo.rs", src)),
+            vec![Rule::ThreadSleep]
+        );
+    }
+
+    // ---- fixture trees (one seeded violation per rule; clean tree) ----
+
+    #[test]
+    fn clean_fixture_tree_is_clean() {
+        let viols = lint_root(&fixture("clean")).unwrap();
+        assert!(viols.is_empty(), "unexpected: {viols:?}");
+    }
+
+    #[test]
+    fn relaxed_ordering_fixture_is_flagged() {
+        let viols = lint_root(&fixture("relaxed_ordering")).unwrap();
+        assert_eq!(rules(&viols), vec![Rule::RelaxedOrdering], "{viols:?}");
+    }
+
+    #[test]
+    fn eprintln_fixture_is_flagged() {
+        let viols = lint_root(&fixture("eprintln")).unwrap();
+        assert_eq!(rules(&viols), vec![Rule::Eprintln], "{viols:?}");
+    }
+
+    #[test]
+    fn hot_path_unwrap_fixture_is_flagged() {
+        let viols = lint_root(&fixture("hot_path_unwrap")).unwrap();
+        assert_eq!(rules(&viols), vec![Rule::HotPathUnwrap], "{viols:?}");
+    }
+
+    #[test]
+    fn thread_sleep_fixture_is_flagged() {
+        let viols = lint_root(&fixture("thread_sleep")).unwrap();
+        assert_eq!(rules(&viols), vec![Rule::ThreadSleep], "{viols:?}");
+    }
+
+    #[test]
+    fn missing_docs_fixture_is_flagged() {
+        let viols = lint_root(&fixture("missing_docs")).unwrap();
+        assert_eq!(rules(&viols), vec![Rule::MissingDocsAttr], "{viols:?}");
+    }
+
+    // ---- the real tree lints clean (the acceptance criterion; also
+    // checked at the process level by tests/lint_selftest.rs) ----
+
+    #[test]
+    fn real_source_tree_is_clean() {
+        let viols = lint_root(&default_root()).unwrap();
+        assert!(
+            viols.is_empty(),
+            "rust/src has lint violations:\n{}",
+            viols
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}

@@ -83,6 +83,17 @@ impl BatchArena {
         }
         buf.clear();
         let mut pool = self.pools[shard % self.pools.len()].lock().unwrap();
+        // double-recycle detector: the same allocation entering the pool
+        // twice means two owners believed they held the buffer — the
+        // second "owner" is an alias of pooled (soon re-acquired) memory.
+        // Checked under the pool lock so the comparison set is exact.
+        #[cfg(debug_assertions)]
+        assert!(
+            pool.iter().all(|p| p.as_ptr() != buf.as_ptr()),
+            "double-recycle: this buffer's allocation is already pooled for \
+             shard {} — two owners of one batch buffer; see docs/INVARIANTS.md",
+            shard % self.pools.len()
+        );
         if pool.len() < MAX_POOLED_PER_SHARD {
             pool.push(buf);
         }
@@ -168,6 +179,28 @@ mod tests {
         assert!(back.capacity() >= 3);
         unsafe { back.set_len(3) };
         assert_eq!(back, vec![POISON, POISON, POISON]);
+    }
+
+    /// The double-recycle detector: forging a second owner of a pooled
+    /// allocation (via a raw-pointer alias — the only way past move
+    /// semantics) must trip the debug assert instead of letting the
+    /// arena hand one allocation to two future batches.  Not run under
+    /// Miri (the deliberate alias is the crime being detected).
+    #[test]
+    #[cfg(debug_assertions)]
+    fn double_recycle_is_detected_in_debug() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let arena = BatchArena::new(1);
+        let mut buf = arena.acquire(0);
+        buf.extend_from_slice(&[1, 2, 3]);
+        // the aliasing second owner that move semantics would forbid
+        let alias = unsafe { std::ptr::read(&buf) };
+        arena.recycle(0, buf);
+        let result = catch_unwind(AssertUnwindSafe(|| arena.recycle(0, alias)));
+        assert!(result.is_err(), "second recycle of one allocation must panic");
+        // the alias was freed during the unwind, so the pooled copy now
+        // dangles: leak the arena rather than double-free on drop
+        std::mem::forget(arena);
     }
 
     #[test]

@@ -76,6 +76,7 @@ impl QueryEngine {
         let Some(m) = self.greedy.as_mut() else {
             return;
         };
+        // lint: allow(hot-path-unwrap) — Mutex::get_mut: same poisoning-propagation policy as lock().unwrap(), without locking
         let g = m.get_mut().unwrap();
         match update.kind {
             UpdateKind::Insert => g.on_insert(update.u, update.v),

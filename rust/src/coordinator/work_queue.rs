@@ -24,6 +24,8 @@
 
 #![deny(missing_docs)]
 
+#[cfg(debug_assertions)]
+use std::collections::HashSet;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex};
@@ -163,6 +165,13 @@ impl<T> WorkQueue<T> {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Ticket {
     epoch: u64,
+    /// Debug-only process-unique registration id, the key of the
+    /// barrier's live-ticket set: [`EpochBarrier::complete`] panics on a
+    /// second retirement of the same id, and dropping a barrier with
+    /// live ids panics (a registered item was abandoned without its
+    /// drop-path completion).  See docs/INVARIANTS.md.
+    #[cfg(debug_assertions)]
+    id: u64,
 }
 
 impl Ticket {
@@ -201,6 +210,12 @@ struct EpochState {
     /// Unretired ticket counts for epochs `low ..= low + len - 1`;
     /// never empty (the last slot is the currently open epoch).
     outstanding: VecDeque<u64>,
+    /// Debug-only ids of every registered-but-unretired ticket.
+    #[cfg(debug_assertions)]
+    live: HashSet<u64>,
+    /// Debug-only next registration id.
+    #[cfg(debug_assertions)]
+    next_id: u64,
 }
 
 impl EpochState {
@@ -290,6 +305,10 @@ impl EpochBarrier {
             state: Mutex::new(EpochState {
                 low: 0,
                 outstanding: VecDeque::from([0]),
+                #[cfg(debug_assertions)]
+                live: HashSet::new(),
+                #[cfg(debug_assertions)]
+                next_id: 0,
             }),
             retired: Condvar::new(),
         }
@@ -299,9 +318,19 @@ impl EpochBarrier {
     /// with the currently open epoch).
     pub fn register(&self) -> Ticket {
         let mut st = self.state.lock().unwrap();
+        // lint: allow(hot-path-unwrap) — `outstanding` is never empty by the EpochState invariant (the open epoch always has a slot)
         *st.outstanding.back_mut().unwrap() += 1;
+        #[cfg(debug_assertions)]
+        let id = {
+            let id = st.next_id;
+            st.next_id += 1;
+            st.live.insert(id);
+            id
+        };
         Ticket {
             epoch: st.current(),
+            #[cfg(debug_assertions)]
+            id,
         }
     }
 
@@ -310,6 +339,15 @@ impl EpochBarrier {
     /// oldest unretired epoch (the low-watermark advances).
     pub fn complete(&self, ticket: Ticket) {
         let mut st = self.state.lock().unwrap();
+        #[cfg(debug_assertions)]
+        if !st.live.remove(&ticket.id) {
+            panic!(
+                "ticket-retire-exactly-once violation: second complete() of \
+                 ticket id {} (epoch {}) — a batch's drop path and its merge \
+                 path both retired it; see docs/INVARIANTS.md",
+                ticket.id, ticket.epoch
+            );
+        }
         if ticket.epoch < st.low {
             // a second complete() for an already-retired epoch would
             // corrupt a *later* epoch's count; refuse it loudly instead
@@ -393,6 +431,31 @@ impl EpochBarrier {
     )]
     pub fn wait_idle(&self) {
         self.wait_for(self.cut());
+    }
+}
+
+/// Debug-only leaked-ticket detector: a barrier dropped while tickets
+/// are still live means some registered work item was abandoned without
+/// its drop-path `complete()` — the next `wait_for` on such a barrier
+/// would have hung forever.  Skipped mid-unwind (the leak is usually a
+/// casualty of the original panic, which must stay the headline) and on
+/// a poisoned mutex (same situation).
+#[cfg(debug_assertions)]
+impl Drop for EpochBarrier {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            return;
+        }
+        if let Ok(st) = self.state.get_mut() {
+            if !st.live.is_empty() {
+                panic!(
+                    "epoch barrier dropped with {} live ticket(s): every \
+                     register() must be matched by exactly one complete() on \
+                     every exit path — see docs/INVARIANTS.md",
+                    st.live.len()
+                );
+            }
+        }
     }
 }
 
@@ -743,6 +806,34 @@ mod tests {
         for w in waiters {
             w.join().unwrap();
         }
+    }
+
+    /// The exactly-once retirement detector: a second complete() of the
+    /// same ticket must panic in debug builds instead of silently
+    /// stealing a sibling ticket's epoch count (which would let a cut
+    /// retire while that sibling's delta is still on the wire).
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "ticket-retire-exactly-once violation")]
+    fn double_complete_panics_in_debug() {
+        let b = EpochBarrier::new();
+        let t = b.register();
+        // the sibling whose count a double-complete would corrupt
+        let _sibling = b.register();
+        b.complete(t);
+        b.complete(t);
+    }
+
+    /// The leaked-ticket detector: dropping a barrier while a ticket is
+    /// registered but never completed must panic in debug builds — the
+    /// next wait_for on that barrier would have hung forever.
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "live ticket")]
+    fn leaked_ticket_panics_on_drop_in_debug() {
+        let b = EpochBarrier::new();
+        let _leaked = b.register();
+        drop(b);
     }
 
     #[test]

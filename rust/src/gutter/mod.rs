@@ -62,9 +62,7 @@ impl GutterBuffer {
             gutter.reserve_exact(self.leaf_capacity);
         }
         gutter.push(other);
-        self.metrics
-            .hypertree_moves
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Metrics::add(&self.metrics.hypertree_moves, 1);
         if gutter.len() >= self.leaf_capacity {
             let full = std::mem::take(gutter);
             drop(gutters);

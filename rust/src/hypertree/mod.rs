@@ -135,12 +135,14 @@ impl Hypertree {
 
     /// Create a per-thread ingestion handle.
     pub fn local(self: &Arc<Self>) -> LocalIngest {
+        // lint: allow(relaxed-ordering) — diagnostic gauge of live handles; never used to synchronize teardown
         self.live_locals.fetch_add(1, Ordering::Relaxed);
         LocalIngest::new(self.clone())
     }
 
     /// Number of [`LocalIngest`] handles currently alive.
     pub fn live_locals(&self) -> usize {
+        // lint: allow(relaxed-ordering) — diagnostic gauge read; stale values are acceptable by contract
         self.live_locals.load(Ordering::Relaxed)
     }
 
@@ -162,9 +164,7 @@ impl Hypertree {
     fn push_group_run<S: BatchSink>(&self, group: usize, run: &[(u32, u32)], sink: &S) {
         let mut node = self.groups[group].lock().unwrap();
         let base = (group * self.config.group_size) as u32;
-        self.metrics
-            .hypertree_moves
-            .fetch_add(run.len() as u64, Ordering::Relaxed);
+        Metrics::add(&self.metrics.hypertree_moves, run.len() as u64);
         node.append(run, base);
         if node.buffered() >= self.config.group_capacity {
             self.flush_group_node(&mut node, base, sink);
@@ -172,9 +172,7 @@ impl Hypertree {
     }
 
     fn flush_group_node<S: BatchSink>(&self, node: &mut GroupNode, base: u32, sink: &S) {
-        self.metrics
-            .hypertree_moves
-            .fetch_add(node.buffered() as u64, Ordering::Relaxed);
+        Metrics::add(&self.metrics.hypertree_moves, node.buffered() as u64);
         let spec = sink.shards();
         node.flush_to_leaves(base, self.config.leaf_capacity, &mut |vertex, others| {
             sink.full_batch(spec.shard_of(vertex), VertexBatch { vertex, others });
@@ -262,10 +260,7 @@ impl LocalIngest {
     }
 
     fn flush_l0<S: BatchSink>(&mut self, sink: &S) {
-        self.tree
-            .metrics
-            .hypertree_moves
-            .fetch_add(self.l0.len() as u64, Ordering::Relaxed);
+        Metrics::add(&self.tree.metrics.hypertree_moves, self.l0.len() as u64);
         // move entries into their level-1 bucket; flush buckets that fill
         let cap = self.tree.config.l1_capacity;
         for i in 0..self.l0.len() {
@@ -324,6 +319,7 @@ impl Drop for LocalIngest {
                 self.buffered
             );
         }
+        // lint: allow(relaxed-ordering) — diagnostic gauge of live handles; never used to synchronize teardown
         self.tree.live_locals.fetch_sub(1, Ordering::Relaxed);
     }
 }

@@ -30,6 +30,7 @@ fn main() {
         Some("bench") => cmd_bench(&args),
         Some("rambw") => cmd_rambw(),
         _ => {
+            // lint: allow(eprintln) — CLI usage text must reach stderr unconditionally, outside any log level/filter
             eprintln!("{}", HELP);
             2
         }
@@ -338,6 +339,7 @@ fn cmd_worker(args: &Args) -> i32 {
 
 fn cmd_bench(args: &Args) -> i32 {
     let Some(exp) = args.positional.first() else {
+        // lint: allow(eprintln) — CLI usage text must reach stderr unconditionally, outside any log level/filter
         eprintln!(
             "usage: landscape bench <{}> [--full]",
             landscape::experiments::EXPERIMENTS.join("|")

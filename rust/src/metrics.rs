@@ -129,40 +129,49 @@ impl Metrics {
     /// synchronization).
     #[inline]
     pub fn add(counter: &AtomicU64, n: u64) {
+        // lint: allow(relaxed-ordering) — statistics counter; carries no synchronization role, readers tolerate staleness
         counter.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Raise `counter` to at least `n` (peak/high-watermark gauges).
     #[inline]
     pub fn raise(counter: &AtomicU64, n: u64) {
+        // lint: allow(relaxed-ordering) — statistics gauge; carries no synchronization role, readers tolerate staleness
         counter.fetch_max(n, Ordering::Relaxed);
+    }
+
+    /// The single relaxed-read site every snapshot field goes through.
+    #[inline]
+    fn rd(counter: &AtomicU64) -> u64 {
+        // lint: allow(relaxed-ordering) — statistics read; cross-counter consistency is only promised at quiescence
+        counter.load(Ordering::Relaxed)
     }
 
     /// A consistent-enough plain-value copy (each counter loaded
     /// relaxed; cross-counter invariants are only exact at quiescence).
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
-            updates_ingested: self.updates_ingested.load(Ordering::Relaxed),
-            stream_bytes: self.stream_bytes.load(Ordering::Relaxed),
-            batch_bytes_sent: self.batch_bytes_sent.load(Ordering::Relaxed),
-            delta_bytes_received: self.delta_bytes_received.load(Ordering::Relaxed),
-            batches_sent: self.batches_sent.load(Ordering::Relaxed),
-            updates_local: self.updates_local.load(Ordering::Relaxed),
-            deltas_merged: self.deltas_merged.load(Ordering::Relaxed),
-            queries_full: self.queries_full.load(Ordering::Relaxed),
-            queries_partial: self.queries_partial.load(Ordering::Relaxed),
-            queries_greedy: self.queries_greedy.load(Ordering::Relaxed),
-            dirty_components: self.dirty_components.load(Ordering::Relaxed),
-            batches_dropped: self.batches_dropped.load(Ordering::Relaxed),
-            hypertree_moves: self.hypertree_moves.load(Ordering::Relaxed),
-            remote_in_flight_peak: self.remote_in_flight_peak.load(Ordering::Relaxed),
-            batches_requeued: self.batches_requeued.load(Ordering::Relaxed),
-            worker_failures: self.worker_failures.load(Ordering::Relaxed),
-            handles_spawned: self.handles_spawned.load(Ordering::Relaxed),
-            log_drains: self.log_drains.load(Ordering::Relaxed),
-            epoch_current: self.epoch_current.load(Ordering::Relaxed),
-            cuts_taken: self.cuts_taken.load(Ordering::Relaxed),
-            cut_wait_us: self.cut_wait_us.load(Ordering::Relaxed),
+            updates_ingested: Self::rd(&self.updates_ingested),
+            stream_bytes: Self::rd(&self.stream_bytes),
+            batch_bytes_sent: Self::rd(&self.batch_bytes_sent),
+            delta_bytes_received: Self::rd(&self.delta_bytes_received),
+            batches_sent: Self::rd(&self.batches_sent),
+            updates_local: Self::rd(&self.updates_local),
+            deltas_merged: Self::rd(&self.deltas_merged),
+            queries_full: Self::rd(&self.queries_full),
+            queries_partial: Self::rd(&self.queries_partial),
+            queries_greedy: Self::rd(&self.queries_greedy),
+            dirty_components: Self::rd(&self.dirty_components),
+            batches_dropped: Self::rd(&self.batches_dropped),
+            hypertree_moves: Self::rd(&self.hypertree_moves),
+            remote_in_flight_peak: Self::rd(&self.remote_in_flight_peak),
+            batches_requeued: Self::rd(&self.batches_requeued),
+            worker_failures: Self::rd(&self.worker_failures),
+            handles_spawned: Self::rd(&self.handles_spawned),
+            log_drains: Self::rd(&self.log_drains),
+            epoch_current: Self::rd(&self.epoch_current),
+            cuts_taken: Self::rd(&self.cuts_taken),
+            cut_wait_us: Self::rd(&self.cut_wait_us),
         }
     }
 }

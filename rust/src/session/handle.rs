@@ -99,6 +99,7 @@ impl IngestHandle {
         // XOR, so both endpoints enter the buffer regardless of kind
         match &self.core.buffer {
             Buffer::Hyper(_) => {
+                // lint: allow(hot-path-unwrap) — constructor invariant: `local` is Some iff the buffer is Buffer::Hyper
                 let local = self.local.as_mut().expect("hypertree local handle");
                 local.insert(update.u, update.v, &*self.core.sink);
                 local.insert(update.v, update.u, &*self.core.sink);
@@ -216,8 +217,10 @@ impl IngestHandle {
         let pending = self.buffered() > 0;
         if pending != self.gauge_pending {
             if pending {
+                // lint: allow(relaxed-ordering) — advisory pending-producers gauge; flush() is the real barrier
                 self.core.pending_handles.fetch_add(1, AtomicOrdering::Relaxed);
             } else {
+                // lint: allow(relaxed-ordering) — advisory pending-producers gauge; flush() is the real barrier
                 self.core.pending_handles.fetch_sub(1, AtomicOrdering::Relaxed);
             }
             self.gauge_pending = pending;

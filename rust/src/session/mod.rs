@@ -661,11 +661,13 @@ impl SessionCore {
     }
 
     pub(crate) fn handle_opened(&self) {
+        // lint: allow(relaxed-ordering) — diagnostic gauge of live handles; never used to synchronize teardown
         self.active_handles.fetch_add(1, Ordering::Relaxed);
         Metrics::add(&self.metrics.handles_spawned, 1);
     }
 
     pub(crate) fn handle_closed(&self) {
+        // lint: allow(relaxed-ordering) — diagnostic gauge of live handles; never used to synchronize teardown
         self.active_handles.fetch_sub(1, Ordering::Relaxed);
     }
 }
@@ -835,6 +837,7 @@ impl Landscape {
     /// means a [`Landscape::flush`] barrier covers every ingested
     /// update.
     pub fn pending_producers(&self) -> usize {
+        // lint: allow(relaxed-ordering) — advisory gauge; flush() provides the actual barrier, this only reports
         self.core.pending_handles.load(Ordering::Relaxed)
     }
 

@@ -47,6 +47,43 @@ pub struct SketchStore {
     seeds: SketchSeeds,
     spec: ShardSpec,
     shards: Vec<Vec<AtomicU64>>,
+    /// Debug-only per-shard writer-ownership tags (0 = free, else the
+    /// owning thread's [`thread_tag`]).  The exclusive merge kernels
+    /// claim their shard's tag for the duration of the call, turning a
+    /// violated single-writer-per-shard contract — which in release
+    /// silently loses updates — into an immediate panic under
+    /// `cargo test` / Miri / TSan.  See docs/INVARIANTS.md.
+    #[cfg(debug_assertions)]
+    writer_tags: Vec<AtomicU64>,
+}
+
+/// A process-unique nonzero tag for the calling thread (debug builds),
+/// used by the shard writer-ownership detector.
+#[cfg(debug_assertions)]
+fn thread_tag() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TAG: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TAG.with(|t| *t)
+}
+
+/// Debug-mode claim on a shard's writer tag; releases on drop (including
+/// panic unwind, so one detector firing cannot wedge later tests).
+#[cfg(debug_assertions)]
+struct WriterGuard<'a> {
+    tags: &'a [AtomicU64],
+    shard: usize,
+    claimed: bool,
+}
+
+#[cfg(debug_assertions)]
+impl Drop for WriterGuard<'_> {
+    fn drop(&mut self) {
+        if self.claimed {
+            self.tags[self.shard].store(0, Ordering::Release);
+        }
+    }
 }
 
 impl SketchStore {
@@ -72,6 +109,37 @@ impl SketchStore {
             params,
             spec,
             shards,
+            #[cfg(debug_assertions)]
+            writer_tags: (0..spec.count()).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Claim debug-mode write ownership of `shard` until the returned
+    /// guard drops.  Re-entrant on the owning thread; panics if another
+    /// thread currently holds the shard — the single-writer-per-shard
+    /// contract of the exclusive merge kernels has been violated.
+    #[cfg(debug_assertions)]
+    fn writer_guard(&self, shard: usize) -> WriterGuard<'_> {
+        let tag = thread_tag();
+        let claimed = match self.writer_tags[shard].compare_exchange(
+            0,
+            tag,
+            Ordering::Acquire,
+            Ordering::Acquire,
+        ) {
+            Ok(_) => true,
+            Err(prev) if prev == tag => false, // same thread, nested call
+            Err(prev) => panic!(
+                "single-writer-per-shard violation: shard {shard} is owned by \
+                 thread tag {prev} but thread tag {tag} entered an exclusive \
+                 merge; route same-shard batches to one distributor or use \
+                 merge_delta (atomic fetch_xor) — see docs/INVARIANTS.md"
+            ),
+        };
+        WriterGuard {
+            tags: &self.writer_tags,
+            shard,
+            claimed,
         }
     }
 
@@ -188,6 +256,8 @@ impl SketchStore {
     /// [`Self::merge_delta_exclusive_scalar`] (property-tested).
     pub fn merge_delta_exclusive(&self, u: u32, delta: &[u64]) {
         debug_assert_eq!(delta.len(), self.params.words());
+        #[cfg(debug_assertions)]
+        let _owner = self.writer_guard(self.spec.shard_of(u));
         let (shard, base) = self.locate(u);
         let dst = &shard[base..base + delta.len()];
         let mut dc = delta.chunks_exact(8);
@@ -227,6 +297,8 @@ impl SketchStore {
     /// oracle for the unrolled kernel (same single-writer contract).
     pub fn merge_delta_exclusive_scalar(&self, u: u32, delta: &[u64]) {
         debug_assert_eq!(delta.len(), self.params.words());
+        #[cfg(debug_assertions)]
+        let _owner = self.writer_guard(self.spec.shard_of(u));
         let (shard, base) = self.locate(u);
         for (i, &d) in delta.iter().enumerate() {
             if d != 0 {
@@ -500,6 +572,46 @@ mod tests {
                 }
             }
         });
+    }
+
+    /// The debug writer-ownership detector: while one thread holds a
+    /// shard's writer claim (as a distributor does for the duration of
+    /// an exclusive merge), a second thread entering an exclusive merge
+    /// on the same shard must panic loudly instead of silently losing
+    /// updates to the plain load/XOR/store race.
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "single-writer-per-shard violation")]
+    fn two_writer_exclusive_merge_panics_in_debug() {
+        use std::sync::mpsc;
+        let v = 32u64;
+        let params = SketchParams::for_vertices(v);
+        let s = std::sync::Arc::new(SketchStore::new(params, 3));
+        let delta = vec![1u64; params.words()];
+
+        let (claimed_tx, claimed_rx) = mpsc::channel();
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        let holder = {
+            let s = s.clone();
+            std::thread::spawn(move || {
+                // pose as the shard's owning distributor, mid-merge
+                let _owner = s.writer_guard(0);
+                claimed_tx.send(()).unwrap();
+                // hold the claim until the main thread has observed the
+                // detector firing
+                let _ = done_rx.recv();
+            })
+        };
+        claimed_rx.recv().unwrap();
+        // second concurrent writer on shard 0: the detector must fire;
+        // catch it so the holder can be joined (keeps Miri happy), then
+        // re-raise for #[should_panic]
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            s.merge_delta_exclusive(0, &delta)
+        }));
+        drop(done_tx);
+        holder.join().unwrap();
+        std::panic::resume_unwind(result.expect_err("detector did not fire"));
     }
 
     /// Deterministic sharding invariant: merging the same delta set into

@@ -96,6 +96,7 @@ impl WorkerBackend for RemoteWorker {
             others: others.to_vec(),
         };
         let sent = batch.write_to(&mut conn.writer)?;
+        // lint: allow(relaxed-ordering) — wire-byte meter (Theorem 5.2 accounting), no synchronization role
         self.bytes_sent.fetch_add(sent, Ordering::Relaxed);
         match Message::read_from(&mut conn.reader)? {
             Message::Delta {
@@ -105,15 +106,14 @@ impl WorkerBackend for RemoteWorker {
                 if rv != vertex {
                     bail!("delta for wrong vertex: sent {vertex}, got {rv}");
                 }
-                self.bytes_received.fetch_add(
-                    Message::Delta {
-                        vertex: rv,
-                        delta: Vec::new(),
-                    }
-                    .wire_bytes()
-                        + delta.len() as u64 * 8,
-                    Ordering::Relaxed,
-                );
+                let wire = Message::Delta {
+                    vertex: rv,
+                    delta: Vec::new(),
+                }
+                .wire_bytes()
+                    + delta.len() as u64 * 8;
+                // lint: allow(relaxed-ordering) — wire-byte meter (Theorem 5.2 accounting), no synchronization role
+                self.bytes_received.fetch_add(wire, Ordering::Relaxed);
                 out.extend_from_slice(&delta);
                 Ok(())
             }
@@ -226,6 +226,7 @@ impl PipelinedRemote {
 
     /// Exact bytes received at the framing layer (DELTA2 frames + BYE).
     pub fn bytes_received(&self) -> u64 {
+        // lint: allow(relaxed-ordering) — wire-byte meter read; reconciled exactly at shutdown, stale reads fine
         self.shared.bytes_received.load(Ordering::Relaxed)
     }
 
@@ -474,6 +475,7 @@ fn reader_loop(shared: &PipeShared, mut reader: BufReader<TcpStream>) {
                             others: b.others,
                         });
                         drop(st);
+                        // lint: allow(relaxed-ordering) — wire-byte meter (Theorem 5.2 accounting), no synchronization role
                         shared.bytes_received.fetch_add(wire, Ordering::Relaxed);
                         shared.cv.notify_all();
                     }
@@ -498,9 +500,9 @@ fn reader_loop(shared: &PipeShared, mut reader: BufReader<TcpStream>) {
                 }
             }
             Ok(Message::Bye) => {
-                shared
-                    .bytes_received
-                    .fetch_add(Message::Bye.wire_bytes(), Ordering::Relaxed);
+                let bye = Message::Bye.wire_bytes();
+                // lint: allow(relaxed-ordering) — wire-byte meter (Theorem 5.2 accounting), no synchronization role
+                shared.bytes_received.fetch_add(bye, Ordering::Relaxed);
                 shared.state.lock().unwrap().saw_bye = true;
                 shared.cv.notify_all();
                 return;
@@ -591,6 +593,7 @@ impl WorkerServer {
                         }
                         return Err(e.into());
                     }
+                    // lint: allow(thread-sleep) — accept-failure backoff on the server control path, never on ingest; bounded at 64 tries
                     std::thread::sleep(Duration::from_millis(10));
                     continue;
                 }
@@ -765,6 +768,7 @@ fn sender_loop(mut writer: BufWriter<TcpStream>, rx: mpsc::Receiver<QueuedReply>
         if let Some(t) = due {
             let now = Instant::now();
             if t > now {
+                // lint: allow(thread-sleep) — deliberate injected-latency test rig (--latency-ms) holding a reply until its due time
                 std::thread::sleep(t - now);
             }
         }
@@ -786,9 +790,14 @@ mod tests {
     use crate::sketch::CameoSketch;
 
     /// A throwaway epoch ticket: the transport carries tickets opaquely,
-    /// so standalone backend tests mint each from its own barrier.
+    /// so standalone backend tests mint them from one process-lived
+    /// barrier that is never dropped — tickets here are intentionally
+    /// never completed, which the barrier's debug leaked-ticket detector
+    /// would (correctly) flag on drop.
     fn ticket() -> Ticket {
-        EpochBarrier::new().register()
+        use std::sync::OnceLock;
+        static BARRIER: OnceLock<EpochBarrier> = OnceLock::new();
+        BARRIER.get_or_init(EpochBarrier::new).register()
     }
 
     #[test]

@@ -1,0 +1,66 @@
+// Fixture: every rule exemption the lint must honor, in one hot-path
+// file.  This tree must lint clean.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+pub struct Q {
+    state: Mutex<u64>,
+    cv: Condvar,
+    // lint: allow(relaxed-ordering) — statistics counter, carries no
+    // synchronization role; readers tolerate stale values
+    hits: AtomicU64,
+}
+
+impl Q {
+    pub fn poll(&self) -> u64 {
+        // the lock-poisoning idiom is exempt: propagating a panic that
+        // happened while the lock was held is the invariant
+        let mut g = self.state.lock().unwrap();
+        let (g2, _timeout) = self
+            .cv
+            .wait_timeout(g, Duration::from_millis(50))
+            .unwrap();
+        g = g2;
+        self.hits.fetch_add(1, Ordering::Relaxed); // lint: allow(relaxed-ordering) — stats only
+        *g
+    }
+
+    pub fn spin_hint(&self) {
+        // lint: allow(thread-sleep) — test-rig backoff path, bounded at 1ms
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    pub fn len_of(&self, s: &str) -> usize {
+        // lint: allow(hot-path-unwrap) — s is validated by the caller, so a failure here is a programming error worth a loud panic
+        s.parse::<usize>().unwrap()
+    }
+
+    pub fn strings_do_not_match(&self) -> &'static str {
+        // patterns inside string literals must never fire
+        "Ordering::Relaxed eprintln! .unwrap() thread::sleep"
+    }
+
+    pub fn raw_strings_either(&self) -> &'static str {
+        r#"{"eprintln!": ".unwrap()", "ordering": "Ordering::Relaxed"}"#
+    }
+
+    pub fn char_literals(&self, c: char) -> bool {
+        c == '{' || c == '}' || c == '\''
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_blocks_are_fully_exempt() {
+        // unwrap, expect, sleep: all fine under #[cfg(test)]
+        let n: u32 = "7".parse().unwrap();
+        let m: u32 = "8".parse().expect("parses");
+        std::thread::sleep(std::time::Duration::from_millis(0));
+        assert_eq!(n + m, 15);
+    }
+}

@@ -1,0 +1,6 @@
+//! Fixture: a file on the missing-docs required list that carries the
+//! attribute, as CI expects.
+#![deny(missing_docs)]
+
+/// A documented item.
+pub fn documented() {}

@@ -1,0 +1,6 @@
+// Fixture: sketch/store.rs is the whitelisted home of relaxed atomics —
+// the single-writer XOR merge kernels need no per-site justification.
+
+pub fn merge_word(slot: &core::sync::atomic::AtomicU64, delta: u64) {
+    slot.fetch_xor(delta, core::sync::atomic::Ordering::Relaxed);
+}

@@ -1,0 +1,6 @@
+// Fixture: util/log.rs is the logging facility itself — the one place
+// a bare eprintln! is the implementation, not a bypass.
+
+pub fn emit(line: &str) {
+    eprintln!("{line}");
+}

@@ -1,0 +1,5 @@
+// Fixture: one bare eprintln! outside util/log.rs.
+
+pub fn report(err: &str) {
+    eprintln!("landscape: {err}");
+}

@@ -1,0 +1,6 @@
+// Fixture: one unjustified unwrap on a hot-path module (not the
+// lock-poisoning idiom).
+
+pub fn shard_of(s: &str) -> usize {
+    s.parse::<usize>().unwrap()
+}

@@ -1,0 +1,4 @@
+// Fixture: metrics.rs is on the CI #![deny(missing_docs)] list but the
+// attribute is absent here.
+
+pub fn undocumented_surface() {}

@@ -1,0 +1,7 @@
+// Fixture: one unjustified relaxed atomic outside sketch/store.rs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+}

@@ -1,0 +1,7 @@
+// Fixture: one unjustified thread::sleep on a hot-path module.
+
+use std::time::Duration;
+
+pub fn backoff() {
+    std::thread::sleep(Duration::from_millis(5));
+}

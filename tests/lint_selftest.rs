@@ -1,0 +1,85 @@
+//! Process-level self-test for `landscape-lint` (see
+//! `docs/INVARIANTS.md`).
+//!
+//! The unit tests inside `rust/src/bin/landscape_lint.rs` exercise the
+//! scanner and rules in-process; this test runs the compiled binary the
+//! way CI does and checks its exit codes: zero on the clean fixture
+//! tree AND on the real `rust/src` (the self-hosting acceptance
+//! criterion), nonzero — with the seeded diagnostic on stdout — for
+//! each per-rule violation fixture.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+fn fixtures() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("tests")
+        .join("lint_fixtures")
+}
+
+fn run_lint(root: &Path) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_landscape_lint"))
+        .arg("--root")
+        .arg(root)
+        .output()
+        .expect("spawn landscape_lint")
+}
+
+fn assert_flags(tree: &str, rule_tag: &str) {
+    let out = run_lint(&fixtures().join(tree));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        !out.status.success(),
+        "lint exited 0 on seeded fixture `{tree}`:\n{stdout}"
+    );
+    assert!(
+        stdout.contains(&format!("[{rule_tag}]")),
+        "fixture `{tree}` did not report [{rule_tag}]:\n{stdout}"
+    );
+    assert_eq!(
+        stdout.matches(": [").count(),
+        1,
+        "fixture `{tree}` should seed exactly one violation:\n{stdout}"
+    );
+}
+
+#[test]
+fn clean_fixture_tree_exits_zero() {
+    let out = run_lint(&fixtures().join("clean"));
+    assert!(
+        out.status.success(),
+        "lint flagged the clean fixture tree:\n{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+}
+
+#[test]
+fn real_source_tree_exits_zero() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let out = run_lint(&src);
+    assert!(
+        out.status.success(),
+        "landscape-lint must pass on rust/src (fix the violation or add a \
+         justified `// lint: allow` — docs/INVARIANTS.md):\n{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+}
+
+#[test]
+fn seeded_violations_exit_nonzero() {
+    assert_flags("relaxed_ordering", "relaxed-ordering");
+    assert_flags("eprintln", "eprintln");
+    assert_flags("hot_path_unwrap", "hot-path-unwrap");
+    assert_flags("thread_sleep", "thread-sleep");
+    assert_flags("missing_docs", "missing-docs-attr");
+}
+
+#[test]
+fn unknown_flag_exits_nonzero() {
+    let out = Command::new(env!("CARGO_BIN_EXE_landscape_lint"))
+        .arg("--no-such-flag")
+        .output()
+        .expect("spawn landscape_lint");
+    assert!(!out.status.success());
+}
