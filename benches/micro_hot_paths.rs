@@ -290,6 +290,58 @@ fn main() {
         }
     }
 
+    // hybrid vs sketch-only ingest across stream density (the hybrid
+    // vertex tier's headline): erdos-style G(V, E) insert streams at
+    // V=2^14 with expected degree d ≈ 4 / 32 / 256 (p·V = d), pushed
+    // through a full session once with the tier off
+    // (`hybrid_threshold(0)`: every vertex a sketch from birth) and
+    // once with it on (threshold 8).  At d=4 nearly every vertex stays
+    // in its exact tier — an update costs a short sorted-vec toggle
+    // instead of levels×columns×rows of hashing — so the hybrid row
+    // should win outright; by d=256 nearly everything is promoted and
+    // the two rows converge.  ns_per_op is per update end-to-end
+    // (handle create → ingest → publish → flush barrier).
+    {
+        use landscape::Landscape;
+        use std::collections::HashSet;
+
+        let hv = 1u64 << 14;
+        let densities: &[u64] = if args.quick { &[4, 32] } else { &[4, 32, 256] };
+        for &d in densities {
+            // G(V, E) with E = dV/2 distinct uniform edges ⇒ expected
+            // degree d, matching G(V, p) at p·V = d
+            let target = (hv * d / 2) as usize;
+            let mut hrng = Xoshiro256::new(1000 + d);
+            let mut seen = HashSet::with_capacity(target);
+            let mut hups: Vec<Update> = Vec::with_capacity(target);
+            while hups.len() < target {
+                let a = hrng.next_below(hv - 1) as u32;
+                let b = a + 1 + hrng.next_below(hv - 1 - a as u64) as u32;
+                if seen.insert((a, b)) {
+                    hups.push(Update::insert(a, b));
+                }
+            }
+            for (name, threshold) in [("sketch_only", 0u32), ("hybrid", 8)] {
+                let session = Landscape::builder()
+                    .vertices(hv)
+                    .distributor_threads(2)
+                    .greedycc(false) // isolate the representation cost
+                    .hybrid_threshold(threshold)
+                    .build()
+                    .unwrap();
+                let s = sbench(&args, 1, 3, || {
+                    let mut h = session.ingest_handle();
+                    for &u in &hups {
+                        h.ingest(u);
+                    }
+                    h.flush();
+                    session.flush();
+                });
+                row(&format!("ingest_{name}_d{d}"), s.median / target as f64);
+            }
+        }
+    }
+
     // work-queue handoff
     let q: WorkQueue<u64> = WorkQueue::new(1024);
     let s = sbench(&args, 1, 10, || {

@@ -31,6 +31,13 @@
 //! 4-producer ingest, each answer checked against the DSU referee and
 //! held to a promptness bound (the retired idle-waiting barrier hangs
 //! here).
+//!
+//! `--scenario sparse` runs only the hybrid vertex-tier scenario: the
+//! skewed kron10 stream through a session with the adaptive
+//! sparse/dense representation on, followed by a targeted deletion
+//! phase — promotions AND demotions must both be metered, every answer
+//! must match the exact referee, and the resident store bytes are
+//! reported against the analytic all-sketch figure.
 
 use landscape::baseline::Referee;
 use landscape::benchkit::{fmt_bytes, fmt_rate};
@@ -420,6 +427,131 @@ fn stage_snapshot() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The hybrid vertex-tier scenario (CI-sized): the kron10 stream —
+/// Kronecker degrees are heavily skewed, so the hybrid store holds a
+/// genuine mix of exact and promoted vertices — through a session with
+/// the adaptive representation on, then a targeted deletion phase.
+///
+/// The promotion threshold is sized from the deterministic edge model:
+/// the lowest-degree vertex with degree in `5..=64` becomes the
+/// demotion target, and `threshold = degree - 1` guarantees that (a)
+/// the stream promotes it, (b) its demotion shadow (bounded by its
+/// degree, which sits under the shadow cap) stays tracked, and (c)
+/// deleting its edges afterwards drops it below the hysteresis floor —
+/// so the run must meter promotions *and* demotions, deterministically.
+/// Queries mid-stream and after the deletions are checked against the
+/// exact referee, and the resident store footprint is compared against
+/// the analytic all-sketch figure.
+fn stage_sparse() -> anyhow::Result<()> {
+    let d = datasets::by_name("kron10").unwrap();
+    let v = d.model.num_vertices();
+
+    // final-graph degrees, straight from the deterministic edge model
+    let edges = landscape::stream::edge_list(&d.model);
+    let mut degree = vec![0u32; v as usize];
+    for &(a, b) in &edges {
+        degree[a as usize] += 1;
+        degree[b as usize] += 1;
+    }
+    let (target, tdeg) = degree
+        .iter()
+        .enumerate()
+        .filter(|&(_, &dg)| (5..=64).contains(&dg))
+        .map(|(u, &dg)| (u as u32, dg))
+        .min_by_key(|&(_, dg)| dg)
+        .expect("kron10 has no vertex with final degree in 5..=64");
+    let threshold = tdeg - 1;
+
+    let session = Landscape::builder()
+        .vertices(v)
+        .alpha(1)
+        .distributor_threads(2)
+        .hybrid_threshold(threshold)
+        .build()?;
+    let mut producer = session.ingest_handle();
+    let queries = session.query_handle();
+    let mut referee = Referee::new(v);
+
+    let stream = d.stream();
+    let total = stream.len_hint().unwrap_or(0);
+    let sw = Stopwatch::new();
+    let mut n = 0u64;
+    for u in stream {
+        referee.apply(&u);
+        producer.ingest(u);
+        n += 1;
+        // a mid-stream query while tiers are mixed and still churning
+        if n == total / 2 {
+            producer.flush();
+            let forest = queries.connected_components();
+            assert!(
+                Referee::same_partition(&forest.component, &referee.component_map()),
+                "sparse scenario: mid-stream partition mismatch"
+            );
+        }
+    }
+    producer.flush();
+    session.flush();
+    let ingest_secs = sw.elapsed_secs();
+
+    let forest = queries.connected_components();
+    assert!(
+        Referee::same_partition(&forest.component, &referee.component_map()),
+        "sparse scenario: post-stream partition mismatch"
+    );
+    let m = session.metrics();
+    println!(
+        "[sparse] kron10 ({} updates in {:.2}s, {}) with hybrid threshold \
+         {threshold}: {} exact / {} sketched vertices, {} promotions, \
+         resident store {} + {} exact vs {} all-sketch",
+        n,
+        ingest_secs,
+        fmt_rate(n as f64 / ingest_secs),
+        m.vertices_exact,
+        m.vertices_sketched,
+        m.promotions,
+        fmt_bytes(m.store_sketch_bytes as f64),
+        fmt_bytes(m.store_exact_bytes as f64),
+        fmt_bytes(
+            (v as usize * session.params().words() * 8 * session.config().k as usize) as f64
+        ),
+    );
+    assert!(m.promotions > 0, "skewed kron degrees must promote vertices");
+    assert_eq!(
+        m.vertices_exact + m.vertices_sketched,
+        v,
+        "every vertex sits in exactly one tier"
+    );
+
+    // deletion phase: strip the target vertex bare — its tracked shadow
+    // shrinks below the hysteresis floor, forcing a demotion
+    for &(a, b) in edges.iter().filter(|&&(a, b)| a == target || b == target) {
+        let u = Update::delete(a, b);
+        referee.apply(&u);
+        producer.ingest(u);
+    }
+    producer.flush();
+    let forest = queries.connected_components();
+    assert!(
+        Referee::same_partition(&forest.component, &referee.component_map()),
+        "sparse scenario: post-deletion partition mismatch"
+    );
+    let m = session.metrics();
+    println!(
+        "[sparse] deleted all {tdeg} edges of vertex {target}: {} demotions, \
+         {} exact / {} sketched vertices, {} exact-delta wire bytes, \
+         {} dropped — MATCH",
+        m.demotions, m.vertices_exact, m.vertices_sketched, m.exact_bytes, m.batches_dropped,
+    );
+    assert!(m.demotions > 0, "the stripped target must demote");
+    assert!(
+        m.vertices_exact >= 1,
+        "the demoted target must sit in the exact tier"
+    );
+    assert_eq!(m.batches_dropped, 0, "sparse scenario dropped batches");
+    Ok(())
+}
+
 /// The value following `--scenario`, if any.
 fn scenario_arg() -> Option<String> {
     let mut args = std::env::args();
@@ -436,12 +568,16 @@ fn main() -> anyhow::Result<()> {
         Some("query") => return stage0_query_tiers(),
         Some("remote") => return stage_remote(),
         Some("snapshot") => return stage_snapshot(),
-        Some(other) => anyhow::bail!("unknown scenario {other} (query|remote|snapshot)"),
+        Some("sparse") => return stage_sparse(),
+        Some(other) => {
+            anyhow::bail!("unknown scenario {other} (query|remote|snapshot|sparse)")
+        }
         None => {}
     }
 
     stage0_query_tiers()?;
     stage_snapshot()?;
+    stage_sparse()?;
     stage1_xla()?;
 
     // ---- stage 2: full run, native + remote TCP workers ----

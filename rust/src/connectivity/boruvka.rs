@@ -71,6 +71,25 @@ pub fn boruvka_components_from(
     let mut agg: Vec<u64> = Vec::new();
     let mut slot_of_root: Vec<u32> = vec![u32::MAX; v];
 
+    // Hybrid exact pre-pass (arXiv 2605.15173): cold vertices expose
+    // their exact edge sets, which are unioned directly — no ℓ₀ decode,
+    // no failure probability.  After this pass every crossing edge with
+    // at least one exact endpoint is already merged, so the sketch
+    // rounds below only ever need to sample promoted↔promoted edges.
+    // Dense-mode stores report no exact vertices and skip this entirely.
+    let mut exact_buf: Vec<u64> = Vec::new();
+    for &u in active {
+        exact_buf.clear();
+        if store.exact_indices_into(u, &mut exact_buf) {
+            for &idx in &exact_buf {
+                let (a, b) = decode_edge(idx, params.v);
+                if dsu.union(a, b) {
+                    forest_edges.push((a.min(b), a.max(b)));
+                }
+            }
+        }
+    }
+
     for level in 0..params.levels {
         if active.is_empty() || dsu.num_components() == 1 {
             break;
@@ -89,7 +108,29 @@ pub fn boruvka_components_from(
         agg.resize(roots.len() * wpl, 0);
         for &u in active {
             let slot = slot_of_root[dsu.find(u) as usize] as usize;
-            store.xor_level_into(u, level, &mut agg[slot * wpl..(slot + 1) * wpl]);
+            let agg_slice = &mut agg[slot * wpl..(slot + 1) * wpl];
+            exact_buf.clear();
+            if store.exact_indices_into(u, &mut exact_buf) {
+                // compensation: an exact vertex stores no sketch words,
+                // so apply its edges' level contributions here.  The
+                // aggregate then equals the textbook cut sketch —
+                // promoted↔exact edges internal to this supernode cancel
+                // against the promoted endpoint's stored copy, and no
+                // crossing edge survives with an exact endpoint (the
+                // pre-pass merged those), so what remains is exactly
+                // the promoted↔promoted cut.
+                for &idx in &exact_buf {
+                    CameoSketch::apply_update_level(
+                        agg_slice,
+                        &params,
+                        store.seeds(),
+                        level,
+                        idx,
+                    );
+                }
+            } else {
+                store.xor_level_into(u, level, agg_slice);
+            }
         }
 
         // sample one crossing edge per component

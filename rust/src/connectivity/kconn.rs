@@ -12,6 +12,7 @@ use crate::connectivity::mincut;
 use crate::sketch::params::{encode_edge, SketchParams};
 use crate::sketch::seeds::SketchSeeds;
 use crate::sketch::shard::ShardSpec;
+use crate::sketch::store::{HybridConfig, TierTransitions};
 use crate::sketch::SketchStore;
 
 /// k parallel sketch copies + certificate extraction.
@@ -51,13 +52,29 @@ impl KConnectivity {
         k: u32,
         spec: ShardSpec,
     ) -> Self {
+        Self::with_shards_hybrid(params, graph_seed, k, spec, None)
+    }
+
+    /// Like [`Self::with_shards`], with the hybrid sparse/dense vertex
+    /// tier enabled on every copy when `hybrid` is `Some`.  All copies
+    /// share one configuration and see identical toggle sequences, so
+    /// their tier states stay mirrored — transition metering can read
+    /// copy 0 alone.
+    pub fn with_shards_hybrid(
+        params: SketchParams,
+        graph_seed: u64,
+        k: u32,
+        spec: ShardSpec,
+        hybrid: Option<HybridConfig>,
+    ) -> Self {
         assert!(k >= 1);
         let stores = (0..k)
             .map(|copy| {
-                SketchStore::with_shards(
+                SketchStore::with_shards_hybrid(
                     params,
                     SketchSeeds::copy_seed(graph_seed, copy),
                     spec,
+                    hybrid,
                 )
             })
             .collect();
@@ -78,17 +95,43 @@ impl KConnectivity {
     }
 
     /// Apply one edge update locally to all k copies (both endpoints).
-    pub fn apply_local(&self, u: u32, v: u32) {
+    ///
+    /// This is an **ingest**-path write: in hybrid mode it evaluates
+    /// promotion/demotion and reports copy-0's transitions (all copies
+    /// mirror each other, so metering one avoids k-fold counting).
+    pub fn apply_local(&self, u: u32, v: u32) -> TierTransitions {
         let idx = encode_edge(u, v, self.params().v);
-        for s in &self.stores {
-            s.apply_local(u, idx);
-            s.apply_local(v, idx);
+        let mut t = TierTransitions::default();
+        for (copy, s) in self.stores.iter().enumerate() {
+            let mut ct = s.ingest_index(u, idx);
+            ct.absorb(s.ingest_index(v, idx));
+            if copy == 0 {
+                t = ct;
+            }
         }
+        t
     }
 
-    /// Total sketch bytes (k × the connectivity footprint, Thm 5.4).
+    /// Total resident bytes across all k copies (k × the connectivity
+    /// footprint, Thm 5.4; in hybrid mode, what is actually allocated).
     pub fn bytes(&self) -> usize {
         self.stores.iter().map(|s| s.bytes()).sum()
+    }
+
+    /// Resident CAMEO sketch bytes across all k copies.
+    pub fn sketch_bytes(&self) -> usize {
+        self.stores.iter().map(|s| s.sketch_bytes()).sum()
+    }
+
+    /// Resident exact-set bytes across all k copies (hybrid only).
+    pub fn exact_bytes(&self) -> usize {
+        self.stores.iter().map(|s| s.exact_bytes()).sum()
+    }
+
+    /// `(exact, sketched)` vertex counts, read from copy 0 (all copies
+    /// mirror each other's tier state).
+    pub fn tier_counts(&self) -> (u64, u64) {
+        self.stores[0].tier_counts()
     }
 
     /// Extract the k-connectivity certificate.
@@ -246,5 +289,46 @@ mod tests {
         let k1 = KConnectivity::new(p, 1, 1);
         let k4 = KConnectivity::new(p, 1, 4);
         assert_eq!(k4.bytes(), 4 * k1.bytes());
+    }
+
+    /// The full certificate query cycle (extract → delete → extract →
+    /// restore) over a mixed-tier hybrid store must agree with the dense
+    /// path, and repeated queries must see restored state.
+    #[test]
+    fn hybrid_kconn_matches_dense_certificate() {
+        let v = 24u64;
+        let p = SketchParams::for_vertices(v);
+        // two K6s joined by one bridge: min cut 1 < k=2
+        let mut edges = Vec::new();
+        for a in 0..6u32 {
+            for b in (a + 1)..6 {
+                edges.push((a, b));
+                edges.push((a + 8, b + 8));
+            }
+        }
+        edges.push((0, 8));
+        let dense = KConnectivity::new(p, 5, 2);
+        let hybrid = KConnectivity::with_shards_hybrid(
+            p,
+            5,
+            2,
+            ShardSpec::SINGLE,
+            Some(HybridConfig {
+                threshold: 3,
+                floor: 1,
+            }),
+        );
+        for &(a, b) in &edges {
+            dense.apply_local(a, b);
+            hybrid.apply_local(a, b);
+        }
+        let (exact, sketched) = hybrid.tier_counts();
+        assert!(sketched >= 12, "clique members promote, got {exact}/{sketched}");
+        assert_eq!(
+            dense.query_capped_connectivity(),
+            hybrid.query_capped_connectivity()
+        );
+        // repeated hybrid queries see exactly restored state
+        assert_eq!(hybrid.query_capped_connectivity(), Some(1));
     }
 }

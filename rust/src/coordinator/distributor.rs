@@ -22,6 +22,7 @@ use crate::connectivity::kconn::KConnectivity;
 use crate::hypertree::VertexBatch;
 use crate::metrics::Metrics;
 use crate::sketch::params::{encode_edge, SketchParams};
+use crate::sketch::store::TierTransitions;
 use crate::worker::remote::PipelinedRemote;
 use crate::worker::{Completion, InlineSubmit, PendingBatch, SubmitBackend};
 
@@ -39,6 +40,10 @@ pub(crate) struct Distributor {
     pub k: u32,
     /// In-flight window per remote connection (inline kinds ignore it).
     pub window: usize,
+    /// Hybrid vertex-tier threshold forwarded to the worker backend
+    /// (HELLO field for remote, `NativeWorker::with_threshold` inline);
+    /// 0 = sketch-only.
+    pub hybrid_threshold: u32,
     pub queue: Arc<ShardedWorkQueue<WorkItem>>,
     pub kconn: Arc<KConnectivity>,
     pub metrics: Arc<Metrics>,
@@ -210,13 +215,17 @@ impl Distributor {
 
     /// XOR-merge one completed delta into this distributor's shard,
     /// retire its epoch ticket, and recycle its batch buffer.
+    ///
+    /// Two flavors arrive: sketch deltas (`k × words` of XOR words) and,
+    /// in hybrid mode, exact deltas (raw parity-reduced edge indices for
+    /// a cold vertex — the same seed-independent list serves all k
+    /// copies).
     fn merge(&self, c: Completion) {
-        // the batch's endpoint buffer rode along for exactly this
-        // moment: its work is done, recycle it for the producer side
-        self.arena.recycle(self.shard, c.others);
         let words = self.params.words();
         let k = self.k as usize;
-        if c.delta.len() != words * k {
+        // exact deltas are variable-length by design; only sketch deltas
+        // carry the fixed k×words layout worth validating
+        if !c.exact && c.delta.len() != words * k {
             // a protocol-corrupt delta (version-skewed worker) must not
             // panic the distributor — that would strand the barrier.
             // Treat it as a metered lost batch instead.
@@ -228,41 +237,79 @@ impl Distributor {
                 words * k
             );
             Metrics::add(&self.metrics.batches_dropped, 1);
+            self.arena.recycle(self.shard, c.others);
             self.barrier.complete(c.ticket);
             return;
         }
+        let mut transitions = TierTransitions::default();
         {
             // batch-granular atomicity for concurrent readers: the gate
             // is uncontended except while a query is reading the store
             let _merging = self.merge_gate.read().unwrap();
             for copy in 0..k {
-                let delta = &c.delta[copy * words..(copy + 1) * words];
-                self.kconn.stores()[copy].merge_delta_exclusive(c.vertex, delta);
+                let t = if c.exact {
+                    self.kconn.stores()[copy].merge_exact_delta(c.vertex, &c.delta)
+                } else {
+                    let delta = &c.delta[copy * words..(copy + 1) * words];
+                    // the batch's endpoint list rides along so the shadow
+                    // set stays current across a sketch merge
+                    self.kconn.stores()[copy].merge_sketch_delta(c.vertex, delta, &c.others)
+                };
+                if copy == 0 {
+                    // all copies mirror tier state; meter copy 0 only
+                    transitions = t;
+                }
             }
         }
+        self.meter_transitions(transitions);
+        // the endpoint buffer's work is done, recycle it for producers
+        self.arena.recycle(self.shard, c.others);
         Metrics::add(&self.metrics.deltas_merged, 1);
         if c.wire_bytes > 0 {
             // real network traffic, metered byte-exactly at the framing
             // layer (inline backends report 0 — Theorem 5.2 counts only
             // bytes that crossed a wire)
             Metrics::add(&self.metrics.delta_bytes_received, c.wire_bytes);
+            if c.exact {
+                // compact-frame share of the delta leg (Theorem 5.2's
+                // win from the hybrid tier is exactly this gap)
+                Metrics::add(&self.metrics.exact_bytes, c.wire_bytes);
+            }
         }
         self.barrier.complete(c.ticket);
+    }
+
+    /// Fold copy-0 tier transitions into the session counters.
+    fn meter_transitions(&self, t: TierTransitions) {
+        if t.promotions > 0 {
+            Metrics::add(&self.metrics.promotions, t.promotions);
+        }
+        if t.demotions > 0 {
+            Metrics::add(&self.metrics.demotions, t.demotions);
+        }
     }
 
     /// §5.3's hybrid policy: underfull leaves apply per-update on the
     /// shard owner, no delta overhead.
     fn apply_local(&self, ticket: Ticket, batch: &VertexBatch) {
         let v = self.params.v;
+        let mut transitions = TierTransitions::default();
         {
             let _merging = self.merge_gate.read().unwrap();
             for &other in &batch.others {
                 let idx = encode_edge(batch.vertex, other, v);
-                for store in self.kconn.stores() {
-                    store.apply_local(batch.vertex, idx);
+                for (copy, store) in self.kconn.stores().iter().enumerate() {
+                    // ingest-path write: hybrid stores evaluate
+                    // promotion/demotion here (copy 0 is metered; all
+                    // copies mirror tier state)
+                    let t = store.ingest_index(batch.vertex, idx);
+                    if copy == 0 {
+                        transitions.absorb(t);
+                    }
                 }
             }
         }
+        self.meter_transitions(transitions);
         Metrics::add(&self.metrics.updates_local, batch.others.len() as u64);
         self.barrier.complete(ticket);
     }
@@ -283,6 +330,7 @@ impl Distributor {
                 self.params,
                 self.graph_seed,
                 self.k,
+                self.hybrid_threshold,
             )?))),
         }
     }
@@ -302,12 +350,13 @@ impl Distributor {
             if failed.contains(&slot) {
                 continue;
             }
-            match PipelinedRemote::connect(
+            match PipelinedRemote::connect_hybrid(
                 &addrs[slot],
                 self.params,
                 self.graph_seed,
                 self.k,
                 self.window,
+                self.hybrid_threshold,
             ) {
                 Ok(conn) => return Ok((slot, conn)),
                 Err(e) => {

@@ -54,10 +54,14 @@ pub(crate) fn build_inline_backend(
     params: SketchParams,
     graph_seed: u64,
     k: u32,
+    hybrid_threshold: u32,
 ) -> Result<Box<dyn WorkerBackend>> {
     let seeds = WorkerSeeds::derive(params, graph_seed, k);
     Ok(match kind {
-        WorkerKind::Native => Box::new(NativeWorker::new(seeds)),
+        // only the native kernel computes exact deltas; Cube/Xla always
+        // return sketch deltas and the store force-promotes cold
+        // vertices on merge, so correctness never depends on the worker
+        WorkerKind::Native => Box::new(NativeWorker::with_threshold(seeds, hybrid_threshold)),
         WorkerKind::Cube => Box::new(CubeWorker::new(seeds)),
         #[cfg(feature = "xla")]
         WorkerKind::Xla { artifact_dir } => Box::new(XlaWorker::load(artifact_dir, seeds)?),
@@ -123,6 +127,16 @@ pub struct CoordinatorConfig {
     pub remote_window: usize,
     pub buffer: BufferKind,
     pub use_greedycc: bool,
+    /// Hybrid vertex-tier promotion threshold: a vertex stays an exact
+    /// neighbor set until its set exceeds this many surviving edge
+    /// indices, then promotes to a CAMEO sketch.  0 disables the hybrid
+    /// tier (every vertex gets a dense sketch block up front).
+    pub hybrid_threshold: u32,
+    /// Demotion hysteresis floor: a promoted vertex whose tracked
+    /// neighbor set shrinks below this demotes back to exact.  0 means
+    /// "derive as `hybrid_threshold / 2`"; must stay strictly below the
+    /// threshold (validated by the builder).
+    pub hybrid_demote_floor: u32,
 }
 
 impl CoordinatorConfig {
@@ -140,7 +154,27 @@ impl CoordinatorConfig {
             remote_window: 8,
             buffer: BufferKind::Hypertree,
             use_greedycc: true,
+            hybrid_threshold: 0,
+            hybrid_demote_floor: 0,
         }
+    }
+
+    /// The effective hybrid configuration: `None` when the tier is
+    /// disabled, otherwise the threshold plus the (possibly derived)
+    /// demotion floor.
+    pub fn hybrid(&self) -> Option<crate::sketch::store::HybridConfig> {
+        if self.hybrid_threshold == 0 {
+            return None;
+        }
+        let floor = if self.hybrid_demote_floor == 0 {
+            self.hybrid_threshold / 2
+        } else {
+            self.hybrid_demote_floor
+        };
+        Some(crate::sketch::store::HybridConfig {
+            threshold: self.hybrid_threshold,
+            floor,
+        })
     }
 
     pub fn params(&self) -> SketchParams {

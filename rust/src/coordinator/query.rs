@@ -18,6 +18,13 @@
 //! the engine re-seeds itself from the fresh forest, returning every
 //! component to tier 0.
 //!
+//! With the hybrid vertex tier on (`LandscapeBuilder::hybrid_threshold`),
+//! the tier-1/2 Borůvka runs consume cold vertices' exact neighbor sets
+//! *directly* — their edges union into the DSU up front with no ℓ₀
+//! decoding and no failure probability — and fall through to sketch
+//! sampling only for promoted vertices (see
+//! `crate::connectivity::boruvka`'s exact pre-pass).
+//!
 //! Locking contract: the ingest hot path (332M updates/s in the paper)
 //! never locks per update.  A single exclusive owner may call
 //! [`QueryEngine::on_update`] through `&mut self` and `Mutex::get_mut`

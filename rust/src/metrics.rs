@@ -69,6 +69,26 @@ pub struct Metrics {
     /// read-side latency actually paid to the barrier, bounded by
     /// in-flight work at cut time rather than by stream length.
     pub cut_wait_us: AtomicU64,
+    /// Hybrid-tier promotions: exact vertices whose observed degree
+    /// crossed the threshold and were replayed into a fresh sketch
+    /// block (counted on copy 0; all copies transition together).
+    pub promotions: AtomicU64,
+    /// Hybrid-tier demotions: promoted vertices whose tracked neighbor
+    /// set shrank below the hysteresis floor and fell back to exact.
+    pub demotions: AtomicU64,
+    /// Bytes of EXACTDELTA2 frames received workers → main (a subset of
+    /// `delta_bytes_received`: the compact-frame share of the delta leg).
+    pub exact_bytes: AtomicU64,
+    /// Gauge: vertices currently in the exact tier (copy 0; refreshed
+    /// from store truth when a metrics snapshot is taken).
+    pub vertices_exact: AtomicU64,
+    /// Gauge: vertices currently holding a sketch block (copy 0).  In
+    /// sketch-only mode this is all of them.
+    pub vertices_sketched: AtomicU64,
+    /// Gauge: resident CAMEO sketch bytes across all k copies.
+    pub store_sketch_bytes: AtomicU64,
+    /// Gauge: resident exact-set bytes across all k copies (hybrid only).
+    pub store_exact_bytes: AtomicU64,
 }
 
 /// A plain-value copy of [`Metrics`] — each field mirrors the counter
@@ -117,6 +137,20 @@ pub struct MetricsSnapshot {
     pub cuts_taken: u64,
     /// See [`Metrics::cut_wait_us`].
     pub cut_wait_us: u64,
+    /// See [`Metrics::promotions`].
+    pub promotions: u64,
+    /// See [`Metrics::demotions`].
+    pub demotions: u64,
+    /// See [`Metrics::exact_bytes`].
+    pub exact_bytes: u64,
+    /// See [`Metrics::vertices_exact`].
+    pub vertices_exact: u64,
+    /// See [`Metrics::vertices_sketched`].
+    pub vertices_sketched: u64,
+    /// See [`Metrics::store_sketch_bytes`].
+    pub store_sketch_bytes: u64,
+    /// See [`Metrics::store_exact_bytes`].
+    pub store_exact_bytes: u64,
 }
 
 impl Metrics {
@@ -131,6 +165,14 @@ impl Metrics {
     pub fn add(counter: &AtomicU64, n: u64) {
         // lint: allow(relaxed-ordering) — statistics counter; carries no synchronization role, readers tolerate staleness
         counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Overwrite a gauge with `n` (point-in-time values refreshed from
+    /// store truth, e.g. the hybrid tier counts).
+    #[inline]
+    pub fn set(counter: &AtomicU64, n: u64) {
+        // lint: allow(relaxed-ordering) — statistics gauge; carries no synchronization role, readers tolerate staleness
+        counter.store(n, Ordering::Relaxed);
     }
 
     /// Raise `counter` to at least `n` (peak/high-watermark gauges).
@@ -172,6 +214,13 @@ impl Metrics {
             epoch_current: Self::rd(&self.epoch_current),
             cuts_taken: Self::rd(&self.cuts_taken),
             cut_wait_us: Self::rd(&self.cut_wait_us),
+            promotions: Self::rd(&self.promotions),
+            demotions: Self::rd(&self.demotions),
+            exact_bytes: Self::rd(&self.exact_bytes),
+            vertices_exact: Self::rd(&self.vertices_exact),
+            vertices_sketched: Self::rd(&self.vertices_sketched),
+            store_sketch_bytes: Self::rd(&self.store_sketch_bytes),
+            store_exact_bytes: Self::rd(&self.store_exact_bytes),
         }
     }
 }
@@ -217,6 +266,14 @@ mod tests {
         Metrics::raise(&m.remote_in_flight_peak, 2);
         Metrics::raise(&m.remote_in_flight_peak, 9);
         assert_eq!(m.snapshot().remote_in_flight_peak, 9);
+    }
+
+    #[test]
+    fn set_overwrites_a_gauge() {
+        let m = Metrics::new();
+        Metrics::set(&m.vertices_exact, 100);
+        Metrics::set(&m.vertices_exact, 7);
+        assert_eq!(m.snapshot().vertices_exact, 7, "gauges move both ways");
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //! Frames (all little-endian):
 //!
 //! ```text
-//! HELLO      tag=0  u64 vertices, u32 columns, u64 graph_seed, u32 k
+//! HELLO      tag=0  u64 vertices, u32 columns, u64 graph_seed, u32 k, u32 threshold
 //! BATCH      tag=1  u32 vertex, u32 count, count×u32 other-endpoints
 //! DELTA      tag=2  u32 vertex, u32 words, words×u64 delta
 //! SHUTDOWN   tag=3
@@ -26,7 +26,15 @@
 //! MULTIBATCH tag=6  u32 count, count×(u64 seq, u32 vertex, u32 n, n×u32)
 //! ERROR      tag=7  u32 code, u32 len, len×u8 utf-8 reason
 //! BYE        tag=8
+//! EXACTDELTA2 tag=9 u64 seq, u32 vertex, u32 count, count×u64 edge-indices
 //! ```
+//!
+//! HELLO's `threshold` is the hybrid handshake (0 = sketch deltas
+//! only): batches whose odd-parity index count is ≤ threshold are
+//! answered with an EXACTDELTA2 — the raw surviving edge indices, one
+//! copy-independent list — instead of a DELTA2 of k sketch deltas.
+//! Exact frames are byte-metered like any other delta leg, so Theorem
+//! 5.2's communication accounting stays exact under the hybrid scheme.
 //!
 //! BATCH/BATCH2 payloads are the batch's **other endpoints** (`u32`
 //! each); the worker reconstructs the `u64` edge indices itself via
@@ -60,6 +68,9 @@ pub enum Message {
         columns: u32,
         graph_seed: u64,
         k: u32,
+        /// Hybrid handshake: answer batches with ≤ this many odd-parity
+        /// indices as EXACTDELTA2 frames (0 = always sketch deltas).
+        threshold: u32,
     },
     Batch {
         vertex: u32,
@@ -85,6 +96,14 @@ pub enum Message {
     },
     /// v2: a burst of sequence-tagged batches in one frame.
     MultiBatch { batches: Vec<SeqBatch> },
+    /// v2 hybrid: an exact-set delta for the batch submitted under
+    /// `seq` — the batch's odd-parity encoded edge indices, valid for
+    /// every sketch copy (indices are seed-independent).
+    ExactDelta2 {
+        seq: u64,
+        vertex: u32,
+        indices: Vec<u64>,
+    },
     /// v2: fatal protocol/backend error; the sender closes after this.
     Error { code: u32, reason: String },
     /// v2: clean-close acknowledgement — the worker has answered every
@@ -97,11 +116,16 @@ pub fn delta2_wire_bytes(words: usize) -> u64 {
     1 + 8 + 4 + 4 + words as u64 * 8
 }
 
+/// Exact wire size of an EXACTDELTA2 frame carrying `count` indices.
+pub fn exact_delta2_wire_bytes(count: usize) -> u64 {
+    1 + 8 + 4 + 4 + count as u64 * 8
+}
+
 impl Message {
     /// Serialized size in bytes (tag + header + payload).
     pub fn wire_bytes(&self) -> u64 {
         match self {
-            Message::Hello { .. } => 1 + 8 + 4 + 8 + 4,
+            Message::Hello { .. } => 1 + 8 + 4 + 8 + 4 + 4,
             Message::Batch { others, .. } => 1 + 4 + 4 + others.len() as u64 * 4,
             Message::Delta { delta, .. } => 1 + 4 + 4 + delta.len() as u64 * 8,
             Message::Shutdown => 1,
@@ -110,6 +134,7 @@ impl Message {
             Message::MultiBatch { batches } => {
                 1 + 4 + batches.iter().map(SeqBatch::entry_bytes).sum::<u64>()
             }
+            Message::ExactDelta2 { indices, .. } => exact_delta2_wire_bytes(indices.len()),
             Message::Error { reason, .. } => 1 + 4 + 4 + reason.len() as u64,
             Message::Bye => 1,
         }
@@ -123,12 +148,14 @@ impl Message {
                 columns,
                 graph_seed,
                 k,
+                threshold,
             } => {
                 w.write_all(&[0u8])?;
                 w.write_all(&vertices.to_le_bytes())?;
                 w.write_all(&columns.to_le_bytes())?;
                 w.write_all(&graph_seed.to_le_bytes())?;
                 w.write_all(&k.to_le_bytes())?;
+                w.write_all(&threshold.to_le_bytes())?;
             }
             Message::Batch { vertex, others } => {
                 w.write_all(&[1u8])?;
@@ -168,6 +195,16 @@ impl Message {
                     write_u32s(w, &b.others)?;
                 }
             }
+            Message::ExactDelta2 {
+                seq,
+                vertex,
+                indices,
+            } => {
+                w.write_all(&[9u8])?;
+                w.write_all(&seq.to_le_bytes())?;
+                w.write_all(&vertex.to_le_bytes())?;
+                write_u64s(w, indices)?;
+            }
             Message::Error { code, reason } => {
                 w.write_all(&[7u8])?;
                 w.write_all(&code.to_le_bytes())?;
@@ -192,11 +229,13 @@ impl Message {
                 let columns = read_u32(r)?;
                 let graph_seed = read_u64(r)?;
                 let k = read_u32(r)?;
+                let threshold = read_u32(r)?;
                 Ok(Message::Hello {
                     vertices,
                     columns,
                     graph_seed,
                     k,
+                    threshold,
                 })
             }
             1 => {
@@ -262,6 +301,16 @@ impl Message {
                 })
             }
             8 => Ok(Message::Bye),
+            9 => {
+                let seq = read_u64(r)?;
+                let vertex = read_u32(r)?;
+                let count = read_count(r, "exactdelta2")?;
+                Ok(Message::ExactDelta2 {
+                    seq,
+                    vertex,
+                    indices: read_u64s(r, count)?,
+                })
+            }
             t => Err(anyhow!("unknown frame tag {t}")),
         }
     }
@@ -373,6 +422,7 @@ mod tests {
             columns: 3,
             graph_seed: 0xDEAD,
             k: 4,
+            threshold: 8,
         });
         roundtrip(Message::Batch {
             vertex: 9,
@@ -421,6 +471,16 @@ mod tests {
             reason: "bad frame".into(),
         });
         roundtrip(Message::Bye);
+        roundtrip(Message::ExactDelta2 {
+            seq: 11,
+            vertex: 3,
+            indices: vec![1, u64::MAX, 42],
+        });
+        roundtrip(Message::ExactDelta2 {
+            seq: 12,
+            vertex: 5,
+            indices: vec![],
+        });
     }
 
     #[test]
@@ -433,6 +493,21 @@ mod tests {
             };
             assert_eq!(msg.wire_bytes(), delta2_wire_bytes(words));
         }
+    }
+
+    #[test]
+    fn exact_delta2_wire_bytes_helper_is_exact() {
+        for count in [0usize, 1, 9] {
+            let msg = Message::ExactDelta2 {
+                seq: 5,
+                vertex: 1,
+                indices: vec![7u64; count],
+            };
+            assert_eq!(msg.wire_bytes(), exact_delta2_wire_bytes(count));
+        }
+        // a cold vertex's exact reply is far smaller than any sketch
+        // delta: count ≤ threshold indices vs k × words() u64 words
+        assert!(exact_delta2_wire_bytes(8) < delta2_wire_bytes(100));
     }
 
     #[test]

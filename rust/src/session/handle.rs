@@ -307,9 +307,10 @@ impl QueryHandle {
         }
     }
 
-    /// Snapshot of the session metrics.
+    /// Snapshot of the session metrics (store-derived gauges refreshed
+    /// from the sketch stores at this call).
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.core.metrics.snapshot()
+        self.core.metrics_snapshot()
     }
 }
 

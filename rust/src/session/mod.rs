@@ -126,6 +126,13 @@ pub enum ConfigError {
     /// `WorkerKind::Remote` with an empty address list — there is no
     /// worker to connect to.
     NoRemoteWorkerAddrs,
+    /// `hybrid_demote_floor` was set while `hybrid_threshold` was 0 —
+    /// a demotion floor is meaningless without the hybrid tier.
+    HybridFloorWithoutThreshold,
+    /// `hybrid_demote_floor` ≥ `hybrid_threshold` — the hysteresis band
+    /// would be empty (or inverted) and vertices would oscillate between
+    /// tiers on every update at the boundary.
+    HybridFloorTooHigh(u32, u32),
 }
 
 impl std::fmt::Display for ConfigError {
@@ -151,6 +158,19 @@ impl std::fmt::Display for ConfigError {
             }
             ConfigError::NoRemoteWorkerAddrs => {
                 write!(f, "WorkerKind::Remote requires at least one worker address")
+            }
+            ConfigError::HybridFloorWithoutThreshold => {
+                write!(
+                    f,
+                    "hybrid_demote_floor requires hybrid_threshold to be nonzero"
+                )
+            }
+            ConfigError::HybridFloorTooHigh(floor, threshold) => {
+                write!(
+                    f,
+                    "hybrid_demote_floor = {floor} must stay strictly below \
+                     hybrid_threshold = {threshold} (hysteresis band)"
+                )
             }
         }
     }
@@ -270,6 +290,24 @@ impl LandscapeBuilder {
         self
     }
 
+    /// Hybrid vertex-tier promotion threshold: vertices hold a compact
+    /// exact neighbor set until it exceeds `t` surviving edges, then
+    /// promote to a CAMEO sketch block (0 — the default — disables the
+    /// hybrid tier entirely).
+    pub fn hybrid_threshold(mut self, t: u32) -> Self {
+        self.cfg.hybrid_threshold = t;
+        self
+    }
+
+    /// Demotion hysteresis floor: a promoted vertex whose tracked
+    /// neighbor set shrinks below `f` demotes back to exact.  0 derives
+    /// `hybrid_threshold / 2`; any explicit value must stay strictly
+    /// below the threshold.
+    pub fn hybrid_demote_floor(mut self, f: u32) -> Self {
+        self.cfg.hybrid_demote_floor = f;
+        self
+    }
+
     /// Check every knob, returning the first violation.
     pub fn validate(&self) -> Result<(), ConfigError> {
         let c = &self.cfg;
@@ -307,6 +345,15 @@ impl LandscapeBuilder {
             if addrs.is_empty() {
                 return Err(ConfigError::NoRemoteWorkerAddrs);
             }
+        }
+        if c.hybrid_threshold == 0 && c.hybrid_demote_floor != 0 {
+            return Err(ConfigError::HybridFloorWithoutThreshold);
+        }
+        if c.hybrid_threshold > 0 && c.hybrid_demote_floor >= c.hybrid_threshold {
+            return Err(ConfigError::HybridFloorTooHigh(
+                c.hybrid_demote_floor,
+                c.hybrid_threshold,
+            ));
         }
         Ok(())
     }
@@ -660,6 +707,26 @@ impl SessionCore {
         self.query.apply_log(updates);
     }
 
+    /// Refresh the store-derived gauges from sketch-store truth, then
+    /// snapshot.  The gauges (tier populations, resident bytes) are
+    /// point-in-time facts owned by the stores, not monotone counters —
+    /// reading them through here keeps every metrics surface consistent
+    /// without a background refresher thread.
+    pub(crate) fn metrics_snapshot(&self) -> MetricsSnapshot {
+        let (exact, sketched) = self.kconn.tier_counts();
+        Metrics::set(&self.metrics.vertices_exact, exact);
+        Metrics::set(&self.metrics.vertices_sketched, sketched);
+        Metrics::set(
+            &self.metrics.store_sketch_bytes,
+            self.kconn.sketch_bytes() as u64,
+        );
+        Metrics::set(
+            &self.metrics.store_exact_bytes,
+            self.kconn.exact_bytes() as u64,
+        );
+        self.metrics.snapshot()
+    }
+
     pub(crate) fn handle_opened(&self) {
         // lint: allow(relaxed-ordering) — diagnostic gauge of live handles; never used to synchronize teardown
         self.active_handles.fetch_add(1, Ordering::Relaxed);
@@ -701,11 +768,12 @@ impl Landscape {
         let params = config.params();
         let spec = config.shard_spec();
         let metrics = Arc::new(Metrics::new());
-        let kconn = Arc::new(KConnectivity::with_shards(
+        let kconn = Arc::new(KConnectivity::with_shards_hybrid(
             params,
             config.graph_seed,
             config.k,
             spec,
+            config.hybrid(),
         ));
         let queue = Arc::new(ShardedWorkQueue::new(spec.count(), config.queue_capacity));
         let barrier = Arc::new(EpochBarrier::new());
@@ -766,6 +834,7 @@ impl Landscape {
                 graph_seed: core.config.graph_seed,
                 k: core.config.k,
                 window: core.config.remote_window.max(1),
+                hybrid_threshold: core.config.hybrid_threshold,
                 queue: core.queue.clone(),
                 kconn: core.kconn.clone(),
                 metrics: core.metrics.clone(),
@@ -841,9 +910,11 @@ impl Landscape {
         self.core.pending_handles.load(Ordering::Relaxed)
     }
 
-    /// Snapshot of the session metrics.
+    /// Snapshot of the session metrics (store-derived gauges — tier
+    /// populations and resident bytes — are refreshed from the sketch
+    /// stores at this call).
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.core.metrics.snapshot()
+        self.core.metrics_snapshot()
     }
 
     /// The sketch shape parameters.
@@ -1024,6 +1095,52 @@ mod tests {
     }
 
     #[test]
+    fn builder_rejects_floor_without_threshold() {
+        assert_eq!(
+            Landscape::builder()
+                .vertices(16)
+                .hybrid_demote_floor(2)
+                .build()
+                .err(),
+            Some(ConfigError::HybridFloorWithoutThreshold)
+        );
+    }
+
+    #[test]
+    fn builder_rejects_floor_at_or_above_threshold() {
+        for floor in [8u32, 9] {
+            assert_eq!(
+                Landscape::builder()
+                    .vertices(16)
+                    .hybrid_threshold(8)
+                    .hybrid_demote_floor(floor)
+                    .build()
+                    .err(),
+                Some(ConfigError::HybridFloorTooHigh(floor, 8))
+            );
+        }
+        // a strict floor is fine, and 0 derives threshold/2
+        assert!(Landscape::builder()
+            .vertices(16)
+            .hybrid_threshold(8)
+            .hybrid_demote_floor(7)
+            .build()
+            .is_ok());
+        let session = Landscape::builder()
+            .vertices(16)
+            .hybrid_threshold(8)
+            .build()
+            .unwrap();
+        assert_eq!(
+            session.config().hybrid(),
+            Some(crate::sketch::store::HybridConfig {
+                threshold: 8,
+                floor: 4
+            })
+        );
+    }
+
+    #[test]
     fn config_errors_display_the_offending_knob() {
         let msg = ConfigError::GammaOutOfRange(2.0).to_string();
         assert!(msg.contains("gamma"), "{msg}");
@@ -1166,6 +1283,39 @@ mod tests {
         assert_eq!(m.updates_ingested, 10);
         assert_eq!(m.log_drains, 3);
         assert_eq!(m.stream_bytes, 90);
+    }
+
+    #[test]
+    fn hybrid_session_matches_referee_and_meters_tiers() {
+        // a sparse-ish stream through the full pipeline with the hybrid
+        // tier on: answers must match the DSU referee, the gauges must
+        // reflect a mixed-tier store, and nothing may drop
+        let v = 256u64;
+        let model = ErdosRenyi::new(v, 0.04, 71);
+        let want = ref_partition(v, &edge_list(&model));
+        let updates: Vec<Update> = Dynamify::new(model, 3).collect();
+        let session = Landscape::builder()
+            .vertices(v)
+            .alpha(1)
+            .distributor_threads(2)
+            .hybrid_threshold(6)
+            .build()
+            .unwrap();
+        let forest = multi_producer_partition(&session, &updates, 2);
+        assert!(same_partition(&forest.component, &want));
+        let m = session.metrics();
+        assert_eq!(m.batches_dropped, 0);
+        assert_eq!(
+            m.vertices_exact + m.vertices_sketched,
+            v,
+            "every vertex sits in exactly one tier"
+        );
+        assert!(
+            m.vertices_exact > 0,
+            "a p=0.04 stream must leave cold vertices exact"
+        );
+        assert!(m.promotions >= m.vertices_sketched, "promoted vertices were metered");
+        assert!(m.store_sketch_bytes > 0 || m.vertices_sketched == 0);
     }
 
     #[test]

@@ -33,13 +33,126 @@
 //! merge gate exclusively for the read, so post-cut merges — which keep
 //! flowing while producers stream — are observed batch-atomically,
 //! never torn mid-delta.
+//!
+//! **Hybrid sparse/dense tier** (arXiv 2605.15173): with a
+//! [`HybridConfig`], every vertex starts as a compact *exact* sorted
+//! set of encoded edge indices (XOR-toggle semantics — present iff
+//! toggled an odd number of times, so insert/delete streams need no
+//! separate bookkeeping).  Once the set outgrows `threshold`, the shard
+//! owner *promotes* the vertex: the exact set is replayed into a
+//! freshly allocated CAMEO block (same seeds, so worker deltas keep
+//! merging bit-identically) and retained as a *demotion shadow*;
+//! deletions that shrink the shadow below `floor` demote the vertex
+//! back to exact.  The dense per-shard arrays stay empty in hybrid
+//! mode — sketch blocks are allocated per promoted vertex only, which
+//! is where the order-of-magnitude memory win on sparse streams comes
+//! from.  Hybrid slots live behind one mutex per shard; the mutex is
+//! never contended in the pipeline (writes come only from the shard's
+//! own distributor thread, reads hold the session merge gate
+//! exclusively), it simply makes the plain non-atomic slot contents
+//! data-race-free without adding relaxed atomics outside the kernels.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::sketch::params::SketchParams;
 use crate::sketch::seeds::SketchSeeds;
 use crate::sketch::shard::ShardSpec;
 use crate::sketch::CameoSketch;
+
+/// Configuration for the hybrid sparse/dense vertex representation.
+///
+/// A vertex stays as a compact exact edge set until its observed degree
+/// exceeds `threshold` (promotion to a full CAMEO sketch); deletions
+/// that shrink its tracked set below `floor` demote it back.  Keeping
+/// `floor < threshold` gives the hysteresis band that prevents a vertex
+/// oscillating at the boundary from flapping between tiers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HybridConfig {
+    /// Promote once a vertex's exact set holds more than this many edges.
+    pub threshold: u32,
+    /// Demote a sketched vertex once its tracked set shrinks below this.
+    pub floor: u32,
+}
+
+/// Promotion/demotion counts produced by one hybrid write operation
+/// (always zero when the store runs dense-only).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierTransitions {
+    /// Exact → sketched transitions performed by the operation.
+    pub promotions: u64,
+    /// Sketched → exact transitions performed by the operation.
+    pub demotions: u64,
+}
+
+impl TierTransitions {
+    /// Accumulate another operation's transition counts.
+    pub fn absorb(&mut self, other: TierTransitions) {
+        self.promotions += other.promotions;
+        self.demotions += other.demotions;
+    }
+}
+
+/// The demotion shadow of a promoted vertex: the exact edge set kept
+/// current alongside the sketch so a demotion can restore it without a
+/// sketch decode.  Dropped once it outgrows [`shadow_cap`] — a vertex
+/// that hot keeps its sketch for the rest of this promotion.
+enum Shadow {
+    Tracked(Vec<u64>),
+    Dropped,
+}
+
+/// Per-vertex representation state in hybrid mode.
+enum SlotState {
+    /// Cold: sorted encoded edge indices, XOR-toggle semantics.
+    Exact(Vec<u64>),
+    /// Hot: a full CAMEO block (`params.words()` plain words) plus the
+    /// demotion shadow.  Invariant: while the shadow is `Tracked`, the
+    /// block is bit-identical to the sketch of the shadow set — every
+    /// toggle lands on both, so demotion is a plain state swap.
+    Sketched {
+        words: Box<[u64]>,
+        shadow: Shadow,
+    },
+}
+
+struct HybridShard {
+    slots: Vec<SlotState>,
+}
+
+struct HybridState {
+    cfg: HybridConfig,
+    /// One mutex per shard.  Never contended in the pipeline: writes
+    /// come only from the shard's own distributor thread (the
+    /// single-writer contract) and queries hold the session merge gate
+    /// exclusively, which excludes every writer.  The lock exists to
+    /// make the plain (non-atomic) slot contents data-race-free without
+    /// introducing relaxed atomics outside the sketch kernels.
+    shards: Vec<Mutex<HybridShard>>,
+}
+
+/// XOR-toggle `idx` in a sorted set: insert if absent, remove if present.
+fn toggle_sorted(set: &mut Vec<u64>, idx: u64) {
+    match set.binary_search(&idx) {
+        Ok(pos) => {
+            set.remove(pos);
+        }
+        Err(pos) => set.insert(pos, idx),
+    }
+}
+
+/// Above this many tracked entries the demotion shadow is dropped: the
+/// vertex is clearly hot and on insert-heavy streams the shadow would
+/// otherwise grow without bound next to the fixed-size sketch.
+fn shadow_cap(cfg: &HybridConfig) -> usize {
+    (cfg.threshold as usize * 4).max(64)
+}
+
+/// Lock a hybrid shard, tolerating poison (a panicking writer leaves
+/// slot contents valid — every mutation is complete before unlock).
+fn lock_shard(m: &Mutex<HybridShard>) -> std::sync::MutexGuard<'_, HybridShard> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
 
 /// The main node's graph sketch: V vertex sketches across N shards.
 pub struct SketchStore {
@@ -47,6 +160,9 @@ pub struct SketchStore {
     seeds: SketchSeeds,
     spec: ShardSpec,
     shards: Vec<Vec<AtomicU64>>,
+    /// `Some` enables the hybrid sparse/dense tier; the dense `shards`
+    /// arrays above are then empty and all state lives here.
+    hybrid: Option<HybridState>,
     /// Debug-only per-shard writer-ownership tags (0 = free, else the
     /// owning thread's [`thread_tag`]).  The exclusive merge kernels
     /// claim their shard's tag for the duration of the call, turning a
@@ -95,23 +211,57 @@ impl SketchStore {
 
     /// Allocate an all-zero graph sketch partitioned per `spec`.
     pub fn with_shards(params: SketchParams, graph_seed: u64, spec: ShardSpec) -> Self {
+        Self::with_shards_hybrid(params, graph_seed, spec, None)
+    }
+
+    /// Allocate a graph sketch partitioned per `spec`, with the hybrid
+    /// sparse/dense tier enabled when `hybrid` is `Some`.  In hybrid
+    /// mode every vertex starts exact and the dense arrays stay empty —
+    /// sketch blocks are allocated lazily, per promoted vertex.
+    pub fn with_shards_hybrid(
+        params: SketchParams,
+        graph_seed: u64,
+        spec: ShardSpec,
+        hybrid: Option<HybridConfig>,
+    ) -> Self {
         let words = params.words();
-        let shards = (0..spec.count())
-            .map(|s| {
-                let total = spec.shard_len(s, params.v) * words;
-                let mut shard = Vec::with_capacity(total);
-                shard.resize_with(total, || AtomicU64::new(0));
-                shard
-            })
-            .collect();
+        let shards: Vec<Vec<AtomicU64>> = if hybrid.is_some() {
+            (0..spec.count()).map(|_| Vec::new()).collect()
+        } else {
+            (0..spec.count())
+                .map(|s| {
+                    let total = spec.shard_len(s, params.v) * words;
+                    let mut shard = Vec::with_capacity(total);
+                    shard.resize_with(total, || AtomicU64::new(0));
+                    shard
+                })
+                .collect()
+        };
+        let hybrid = hybrid.map(|cfg| HybridState {
+            cfg,
+            shards: (0..spec.count())
+                .map(|s| {
+                    let slots = (0..spec.shard_len(s, params.v))
+                        .map(|_| SlotState::Exact(Vec::new()))
+                        .collect();
+                    Mutex::new(HybridShard { slots })
+                })
+                .collect(),
+        });
         Self {
             seeds: SketchSeeds::derive(&params, graph_seed),
             params,
             spec,
             shards,
+            hybrid,
             #[cfg(debug_assertions)]
             writer_tags: (0..spec.count()).map(|_| AtomicU64::new(0)).collect(),
         }
+    }
+
+    /// The hybrid configuration, when the sparse/dense tier is enabled.
+    pub fn hybrid_config(&self) -> Option<HybridConfig> {
+        self.hybrid.as_ref().map(|h| h.cfg)
     }
 
     /// Claim debug-mode write ownership of `shard` until the returned
@@ -160,20 +310,95 @@ impl SketchStore {
         self.spec
     }
 
-    /// Total bytes of sketch storage (the paper's Θ(V log³ V) term).
+    /// Total resident bytes of vertex storage: sketch words plus exact
+    /// sets.  Dense mode reports the paper's full Θ(V log³ V) term;
+    /// hybrid mode reports what is actually allocated, which is the
+    /// measurable memory claim the density-sweep benches make.
     pub fn bytes(&self) -> usize {
-        self.shards.iter().map(|s| s.len() * 8).sum()
+        self.sketch_bytes() + self.exact_bytes()
+    }
+
+    /// Bytes of CAMEO sketch words currently resident (dense mode: the
+    /// full eager allocation; hybrid: promoted vertices only).
+    pub fn sketch_bytes(&self) -> usize {
+        match &self.hybrid {
+            None => self.shards.iter().map(|s| s.len() * 8).sum(),
+            Some(h) => {
+                let block = self.params.words() * 8;
+                h.shards
+                    .iter()
+                    .map(|m| {
+                        let g = lock_shard(m);
+                        g.slots
+                            .iter()
+                            .filter(|s| matches!(s, SlotState::Sketched { .. }))
+                            .count()
+                            * block
+                    })
+                    .sum()
+            }
+        }
+    }
+
+    /// Bytes of exact-set storage currently resident (hybrid only:
+    /// cold vertices' sorted index arrays plus demotion shadows).
+    pub fn exact_bytes(&self) -> usize {
+        let Some(h) = &self.hybrid else { return 0 };
+        h.shards
+            .iter()
+            .map(|m| {
+                let g = lock_shard(m);
+                g.slots
+                    .iter()
+                    .map(|s| match s {
+                        SlotState::Exact(set) => set.capacity() * 8,
+                        SlotState::Sketched {
+                            shadow: Shadow::Tracked(set),
+                            ..
+                        } => set.capacity() * 8,
+                        SlotState::Sketched {
+                            shadow: Shadow::Dropped,
+                            ..
+                        } => 0,
+                    })
+                    .sum::<usize>()
+            })
+            .sum()
+    }
+
+    /// `(exact, sketched)` vertex counts.  Dense mode reports `(0, V)`:
+    /// every vertex has a full sketch.
+    pub fn tier_counts(&self) -> (u64, u64) {
+        let Some(h) = &self.hybrid else {
+            return (0, self.params.v);
+        };
+        let (mut exact, mut sketched) = (0u64, 0u64);
+        for m in &h.shards {
+            let g = lock_shard(m);
+            for s in &g.slots {
+                match s {
+                    SlotState::Exact(_) => exact += 1,
+                    SlotState::Sketched { .. } => sketched += 1,
+                }
+            }
+        }
+        (exact, sketched)
     }
 
     /// Shard words + within-shard word offset of vertex `u`.
     #[inline(always)]
     fn locate(&self, u: u32) -> (&[AtomicU64], usize) {
         debug_assert!((u as u64) < self.params.v);
+        debug_assert!(
+            self.hybrid.is_none(),
+            "dense-path access on a hybrid store; use the hybrid entry points"
+        );
         (
             self.shards[self.spec.shard_of(u)].as_slice(),
             self.spec.slot_of(u) * self.params.words(),
         )
     }
+
 
     /// XOR-merge a vertex-sketch delta into vertex `u` (thread-safe
     /// under arbitrary concurrency: atomic relaxed `fetch_xor`).
@@ -308,9 +533,184 @@ impl SketchStore {
         }
     }
 
+    // ---- hybrid (sparse/dense adaptive) entry points -----------------
+
+    /// Toggle `idx` into a hybrid slot, keeping the demotion shadow
+    /// current.  Never transitions tiers — callers decide that.
+    fn toggle_slot(
+        state: &mut SlotState,
+        params: &SketchParams,
+        seeds: &SketchSeeds,
+        cfg: &HybridConfig,
+        idx: u64,
+    ) {
+        debug_assert_ne!(idx, 0, "0 is the padding sentinel");
+        match state {
+            SlotState::Exact(set) => toggle_sorted(set, idx),
+            SlotState::Sketched { words, shadow } => {
+                CameoSketch::apply_update(words, params, seeds, idx);
+                if let Shadow::Tracked(set) = shadow {
+                    toggle_sorted(set, idx);
+                    if set.len() > shadow_cap(cfg) {
+                        *shadow = Shadow::Dropped;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Evaluate promotion/demotion for a slot after an ingest-path
+    /// write.  Promotion replays the exact set into a freshly allocated
+    /// block under the store's own seeds (so worker deltas keep merging
+    /// bit-identically) and keeps the set as the demotion shadow;
+    /// demotion is a plain state swap thanks to the shadow invariant.
+    fn settle_slot(&self, state: &mut SlotState, cfg: &HybridConfig) -> TierTransitions {
+        let mut t = TierTransitions::default();
+        match state {
+            SlotState::Exact(set) if set.len() > cfg.threshold as usize => {
+                let set = std::mem::take(set);
+                let mut words = vec![0u64; self.params.words()].into_boxed_slice();
+                for &idx in &set {
+                    CameoSketch::apply_update(&mut words, &self.params, &self.seeds, idx);
+                }
+                *state = SlotState::Sketched {
+                    words,
+                    shadow: Shadow::Tracked(set),
+                };
+                t.promotions = 1;
+            }
+            SlotState::Sketched {
+                shadow: Shadow::Tracked(set),
+                ..
+            } if set.len() < cfg.floor as usize => {
+                let shadow = std::mem::take(set);
+                *state = SlotState::Exact(shadow);
+                t.demotions = 1;
+            }
+            _ => {}
+        }
+        t
+    }
+
+    /// Toggle one encoded edge index into vertex `u` on the **ingest**
+    /// path, evaluating promotion/demotion.  Dense mode delegates to
+    /// [`Self::apply_local`] and reports no transitions.  Must only be
+    /// called by `u`'s shard owner (the exclusive-merge contract).
+    pub fn ingest_index(&self, u: u32, idx: u64) -> TierTransitions {
+        let Some(h) = &self.hybrid else {
+            self.apply_local(u, idx);
+            return TierTransitions::default();
+        };
+        let mut g = lock_shard(&h.shards[self.spec.shard_of(u)]);
+        let state = &mut g.slots[self.spec.slot_of(u)];
+        Self::toggle_slot(state, &self.params, &self.seeds, &h.cfg, idx);
+        self.settle_slot(state, &h.cfg)
+    }
+
+    /// Merge a worker's sketch delta into vertex `u` on the shard
+    /// owner's path, with the batch's raw endpoints (`others`) so the
+    /// hybrid tier can keep its demotion shadow current.  Dense mode is
+    /// exactly [`Self::merge_delta_exclusive`].
+    ///
+    /// A sketch delta arriving for a still-exact vertex force-promotes
+    /// it first (replaying the exact set into a fresh block), so
+    /// correctness never depends on the worker and the store agreeing
+    /// about a vertex's tier — workers advertise a threshold but the
+    /// store is the single source of truth.
+    pub fn merge_sketch_delta(&self, u: u32, delta: &[u64], others: &[u32]) -> TierTransitions {
+        let Some(h) = &self.hybrid else {
+            self.merge_delta_exclusive(u, delta);
+            return TierTransitions::default();
+        };
+        debug_assert_eq!(delta.len(), self.params.words());
+        #[cfg(debug_assertions)]
+        let _owner = self.writer_guard(self.spec.shard_of(u));
+        let mut g = lock_shard(&h.shards[self.spec.shard_of(u)]);
+        let state = &mut g.slots[self.spec.slot_of(u)];
+        let mut t = TierTransitions::default();
+        if let SlotState::Exact(set) = state {
+            let set = std::mem::take(set);
+            let mut words = vec![0u64; self.params.words()].into_boxed_slice();
+            for &idx in &set {
+                CameoSketch::apply_update(&mut words, &self.params, &self.seeds, idx);
+            }
+            *state = SlotState::Sketched {
+                words,
+                shadow: Shadow::Tracked(set),
+            };
+            t.promotions = 1;
+        }
+        let SlotState::Sketched { words, shadow } = state else {
+            unreachable!("force-promotion above leaves the slot sketched")
+        };
+        for (w, &d) in words.iter_mut().zip(delta) {
+            *w ^= d;
+        }
+        if let Shadow::Tracked(set) = shadow {
+            for &o in others {
+                toggle_sorted(set, crate::sketch::params::encode_edge(u, o, self.params.v));
+            }
+            if set.len() > shadow_cap(&h.cfg) {
+                *shadow = Shadow::Dropped;
+            }
+        }
+        t.absorb(self.settle_slot(state, &h.cfg));
+        t
+    }
+
+    /// Apply a worker's exact-set delta (the batch's odd-parity encoded
+    /// indices) to vertex `u` on the shard owner's path.  The index
+    /// list is copy-independent: the same indices are valid for every
+    /// sketch copy regardless of its seeds, which is what lets one
+    /// `EXACTDELTA2` frame serve all k stores.
+    pub fn merge_exact_delta(&self, u: u32, indices: &[u64]) -> TierTransitions {
+        let Some(h) = &self.hybrid else {
+            for &idx in indices {
+                self.apply_local(u, idx);
+            }
+            return TierTransitions::default();
+        };
+        #[cfg(debug_assertions)]
+        let _owner = self.writer_guard(self.spec.shard_of(u));
+        let mut g = lock_shard(&h.shards[self.spec.shard_of(u)]);
+        let state = &mut g.slots[self.spec.slot_of(u)];
+        for &idx in indices {
+            Self::toggle_slot(state, &self.params, &self.seeds, &h.cfg, idx);
+        }
+        self.settle_slot(state, &h.cfg)
+    }
+
+    /// If vertex `u` is currently in exact (cold) representation,
+    /// append its encoded edge indices to `out` and return `true`.
+    /// Sketched vertices and dense-mode stores return `false` and leave
+    /// `out` untouched — callers fall through to ℓ₀ sampling.
+    pub fn exact_indices_into(&self, u: u32, out: &mut Vec<u64>) -> bool {
+        let Some(h) = &self.hybrid else { return false };
+        let g = lock_shard(&h.shards[self.spec.shard_of(u)]);
+        match &g.slots[self.spec.slot_of(u)] {
+            SlotState::Exact(set) => {
+                out.extend_from_slice(set);
+                true
+            }
+            SlotState::Sketched { .. } => false,
+        }
+    }
+
     /// Apply a single edge-index update to vertex `u` locally (the main
     /// node's path for underfull leaves, §5.3).
+    ///
+    /// In hybrid mode this is the **query-path** toggle: it adjusts the
+    /// current representation in place but never promotes or demotes,
+    /// so certificate delete/restore cycles (`KConnectivity`) cannot
+    /// flap a vertex's tier mid-query.  Ingest paths use
+    /// [`Self::ingest_index`] instead.
     pub fn apply_local(&self, u: u32, idx: u64) {
+        if let Some(h) = &self.hybrid {
+            let mut g = lock_shard(&h.shards[self.spec.shard_of(u)]);
+            let state = &mut g.slots[self.spec.slot_of(u)];
+            Self::toggle_slot(state, &self.params, &self.seeds, &h.cfg, idx);
+            return;
+        }
         // relaxed atomic XORs, same rationale as merge_delta
         let (shard, base) = self.locate(u);
         let wpl = self.params.words_per_level();
@@ -338,6 +738,19 @@ impl SketchStore {
     pub fn read_level_into(&self, u: u32, level: u32, out: &mut [u64]) {
         let wpl = self.params.words_per_level();
         debug_assert_eq!(out.len(), wpl);
+        if let Some(h) = &self.hybrid {
+            let g = lock_shard(&h.shards[self.spec.shard_of(u)]);
+            match &g.slots[self.spec.slot_of(u)] {
+                // exact vertices contribute no sketch words; their
+                // edges are consumed via exact_indices_into instead
+                SlotState::Exact(_) => out.fill(0),
+                SlotState::Sketched { words, .. } => {
+                    let base = level as usize * wpl;
+                    out.copy_from_slice(&words[base..base + wpl]);
+                }
+            }
+            return;
+        }
         let (shard, vbase) = self.locate(u);
         let base = vbase + level as usize * wpl;
         for (i, slot) in out.iter_mut().enumerate() {
@@ -350,6 +763,19 @@ impl SketchStore {
     pub fn xor_level_into(&self, u: u32, level: u32, acc: &mut [u64]) {
         let wpl = self.params.words_per_level();
         debug_assert_eq!(acc.len(), wpl);
+        if let Some(h) = &self.hybrid {
+            let g = lock_shard(&h.shards[self.spec.shard_of(u)]);
+            match &g.slots[self.spec.slot_of(u)] {
+                SlotState::Exact(_) => {}
+                SlotState::Sketched { words, .. } => {
+                    let base = level as usize * wpl;
+                    for (slot, w) in acc.iter_mut().zip(&words[base..base + wpl]) {
+                        *slot ^= *w;
+                    }
+                }
+            }
+            return;
+        }
         let (shard, vbase) = self.locate(u);
         let base = vbase + level as usize * wpl;
         for (i, slot) in acc.iter_mut().enumerate() {
@@ -364,8 +790,19 @@ impl SketchStore {
         CameoSketch::query_level(&buf, &self.params, &self.seeds, level)
     }
 
-    /// Reset every bucket to zero (between bench runs).
+    /// Reset every bucket to zero (between bench runs).  Hybrid mode
+    /// resets every vertex to an empty exact set, releasing all
+    /// promoted blocks.
     pub fn clear(&self) {
+        if let Some(h) = &self.hybrid {
+            for m in &h.shards {
+                let mut g = lock_shard(m);
+                for s in g.slots.iter_mut() {
+                    *s = SlotState::Exact(Vec::new());
+                }
+            }
+            return;
+        }
         for shard in &self.shards {
             for w in shard {
                 w.store(0, Ordering::Relaxed);
@@ -678,5 +1115,175 @@ mod tests {
         assert_eq!(r1.forest.component, r8.forest.component);
         assert_eq!(r1.forest.edges, r2.forest.edges);
         assert_eq!(r1.forest.edges, r8.forest.edges);
+    }
+
+    // ---- hybrid sparse/dense tier ------------------------------------
+
+    fn hybrid_store(v: u64, seed: u64, threshold: u32, floor: u32) -> SketchStore {
+        SketchStore::with_shards_hybrid(
+            SketchParams::for_vertices(v),
+            seed,
+            ShardSpec::SINGLE,
+            Some(HybridConfig { threshold, floor }),
+        )
+    }
+
+    #[test]
+    fn hybrid_promote_demote_walk() {
+        let v = 64u64;
+        let s = hybrid_store(v, 11, 4, 2);
+        let idx: Vec<u64> = (0..5).map(|i| encode_edge(3, 10 + i, v)).collect();
+        let mut t = TierTransitions::default();
+        for &i in &idx {
+            t.absorb(s.ingest_index(3, i));
+        }
+        assert_eq!((t.promotions, t.demotions), (1, 0));
+        assert_eq!(s.tier_counts(), (v - 1, 1));
+        let mut buf = Vec::new();
+        assert!(!s.exact_indices_into(3, &mut buf));
+        // delete back below the floor: demotes exactly once
+        for &i in &idx[..4] {
+            t.absorb(s.ingest_index(3, i));
+        }
+        assert_eq!((t.promotions, t.demotions), (1, 1));
+        assert_eq!(s.tier_counts(), (v, 0));
+        buf.clear();
+        assert!(s.exact_indices_into(3, &mut buf));
+        assert_eq!(buf, vec![idx[4]]);
+        // and churn back up: a second promotion replays the survivor
+        for &i in &idx[..4] {
+            t.absorb(s.ingest_index(3, i));
+        }
+        assert_eq!((t.promotions, t.demotions), (2, 1));
+        assert_eq!(s.tier_counts(), (v - 1, 1));
+    }
+
+    #[test]
+    fn sketch_delta_force_promotes_and_matches_dense() {
+        let v = 64u64;
+        let params = SketchParams::for_vertices(v);
+        let hybrid = hybrid_store(v, 42, 8, 2);
+        let dense = SketchStore::new(params, 42);
+        // a cold vertex with two exact edges...
+        let pre = [encode_edge(1, 2, v), encode_edge(1, 5, v)];
+        for &i in &pre {
+            hybrid.ingest_index(1, i);
+            dense.apply_local(1, i);
+        }
+        // ...receives a worker sketch delta: force-promote, then merge
+        let batch: Vec<u32> = (10..20).collect();
+        let idx: Vec<u64> = batch.iter().map(|&o| encode_edge(1, o, v)).collect();
+        let delta = CameoSketch::delta_of_batch(&params, dense.seeds(), &idx);
+        let t = hybrid.merge_sketch_delta(1, &delta, &batch);
+        assert_eq!((t.promotions, t.demotions), (1, 0));
+        dense.merge_delta(1, &delta);
+        let mut a = vec![0u64; params.words_per_level()];
+        let mut b = vec![0u64; params.words_per_level()];
+        for level in 0..params.levels {
+            hybrid.read_level_into(1, level, &mut a);
+            dense.read_level_into(1, level, &mut b);
+            assert_eq!(a, b, "level {level}");
+        }
+    }
+
+    #[test]
+    fn exact_delta_applies_and_can_promote() {
+        let v = 64u64;
+        let s = hybrid_store(v, 7, 3, 1);
+        let idx: Vec<u64> = (0..3).map(|i| encode_edge(9, 20 + i, v)).collect();
+        let t = s.merge_exact_delta(9, &idx);
+        assert_eq!((t.promotions, t.demotions), (0, 0));
+        let mut buf = Vec::new();
+        assert!(s.exact_indices_into(9, &mut buf));
+        assert_eq!(buf.len(), 3);
+        // two more edges cross the threshold inside a single delta
+        let more = [encode_edge(9, 30, v), encode_edge(9, 31, v)];
+        let t = s.merge_exact_delta(9, &more);
+        assert_eq!(t.promotions, 1);
+        assert_eq!(s.tier_counts().1, 1);
+    }
+
+    #[test]
+    fn hybrid_bytes_track_resident_storage() {
+        let v = 256u64;
+        let params = SketchParams::for_vertices(v);
+        let s = hybrid_store(v, 3, 4, 2);
+        // empty: nothing resident in either tier
+        assert_eq!(s.bytes(), 0);
+        // a few cold vertices: exact bytes only
+        for u in 0..8u32 {
+            s.ingest_index(u, encode_edge(u, u + 100, v));
+        }
+        assert_eq!(s.sketch_bytes(), 0);
+        assert!(s.exact_bytes() > 0);
+        // promote one vertex: exactly one block resident
+        for i in 0..5u32 {
+            s.ingest_index(0, encode_edge(0, 10 + i, v));
+        }
+        assert_eq!(s.sketch_bytes(), params.words() * 8);
+        // the hybrid footprint on this sparse state is a small fraction
+        // of the dense store's eager Θ(V log³ V) allocation
+        assert!(s.bytes() * 5 < SketchStore::new(params, 3).bytes());
+    }
+
+    #[test]
+    fn hybrid_components_match_dense() {
+        let v = 96u64;
+        let params = SketchParams::for_vertices(v);
+        let seed = 0xFEED;
+        let hybrid = SketchStore::with_shards_hybrid(
+            params,
+            seed,
+            ShardSpec::new(3),
+            Some(HybridConfig {
+                threshold: 4,
+                floor: 2,
+            }),
+        );
+        let dense = SketchStore::with_shards(params, seed, ShardSpec::new(3));
+        // a star (promotes its center) plus a long path (stays exact)
+        let mut edges: Vec<(u32, u32)> = (1..20u32).map(|i| (0, i)).collect();
+        edges.extend((20..90u32).map(|i| (i, i + 1)));
+        for &(a, b) in &edges {
+            let idx = encode_edge(a, b, v);
+            hybrid.ingest_index(a, idx);
+            hybrid.ingest_index(b, idx);
+            dense.apply_local(a, idx);
+            dense.apply_local(b, idx);
+        }
+        let (exact, sketched) = hybrid.tier_counts();
+        assert_eq!(sketched, 1, "only the star center promotes");
+        assert_eq!(exact, v - 1);
+        let rh = boruvka_components(&hybrid);
+        let rd = boruvka_components(&dense);
+        assert_eq!(rh.forest.component, rd.forest.component);
+    }
+
+    /// A crossing edge whose endpoints are *both* promoted is invisible
+    /// to the exact pre-pass and must be recovered by cut sampling —
+    /// with the exact members' contributions compensated into their
+    /// supernode aggregates so the sketch algebra stays the textbook
+    /// cut sketch.
+    #[test]
+    fn hybrid_boruvka_samples_promoted_crossing_edge() {
+        let v = 64u64;
+        let s = hybrid_store(v, 21, 4, 2);
+        let ingest = |a: u32, b: u32| {
+            let idx = encode_edge(a, b, v);
+            s.ingest_index(a, idx);
+            s.ingest_index(b, idx);
+        };
+        for i in 1..8 {
+            ingest(0, i); // star A: 0 promotes
+        }
+        for i in 33..40 {
+            ingest(32, i); // star B: 32 promotes
+        }
+        ingest(0, 32); // promoted↔promoted bridge
+        assert_eq!(s.tier_counts().1, 2);
+        let r = boruvka_components(&s);
+        assert_eq!(r.forest.component[0], r.forest.component[32]);
+        assert_eq!(r.forest.component[0], r.forest.component[39]);
+        assert_ne!(r.forest.component[0], r.forest.component[50]);
     }
 }

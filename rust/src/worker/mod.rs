@@ -44,8 +44,37 @@ pub trait WorkerBackend {
     /// `encode_edge(vertex, other)` — the encode cost is part of the
     /// work being distributed away.
     fn process(&self, vertex: u32, others: &[u32], out: &mut Vec<u64>) -> Result<()>;
+
+    /// Like [`Self::process`], but may answer with an **exact-set**
+    /// delta when the backend was constructed with a hybrid threshold:
+    /// `out` then holds the batch's odd-parity edge indices (one list,
+    /// copy-independent — the same indices are valid for every sketch
+    /// copy) instead of k concatenated sketch deltas.  The default
+    /// implementation always produces sketch deltas, so backends
+    /// without an exact path (cube, xla) stay correct: the store
+    /// force-promotes a cold vertex that receives a sketch delta.
+    fn process_delta(
+        &self,
+        vertex: u32,
+        others: &[u32],
+        out: &mut Vec<u64>,
+    ) -> Result<DeltaFlavor> {
+        self.process(vertex, others, out)?;
+        Ok(DeltaFlavor::Sketch)
+    }
+
     /// Human-readable backend name (for logs / bench output).
     fn name(&self) -> &'static str;
+}
+
+/// Which representation a worker's reply uses (see
+/// [`WorkerBackend::process_delta`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeltaFlavor {
+    /// `out` holds `k × params.words()` XOR-merge-ready sketch words.
+    Sketch,
+    /// `out` holds the batch's odd-parity encoded edge indices.
+    Exact,
 }
 
 /// A batch handed to a [`SubmitBackend`], tagged with the distributor's
@@ -76,6 +105,9 @@ pub struct Completion {
     /// Exact bytes of the DELTA frame this completion arrived in
     /// (0 for in-process backends — no network traffic to meter).
     pub wire_bytes: u64,
+    /// `true` when `delta` is an exact-set index list
+    /// ([`DeltaFlavor::Exact`]) rather than k sketch deltas.
+    pub exact: bool,
     /// The submitted batch's endpoint buffer, handed back so the
     /// distributor can recycle it into the
     /// [`crate::coordinator::arena::BatchArena`] once the delta has
@@ -171,14 +203,16 @@ impl InlineSubmit {
 impl SubmitBackend for InlineSubmit {
     fn submit(&mut self, batch: PendingBatch) -> Result<()> {
         let mut delta = Vec::new();
-        self.backend
-            .process(batch.vertex, &batch.others, &mut delta)?;
+        let flavor = self
+            .backend
+            .process_delta(batch.vertex, &batch.others, &mut delta)?;
         self.ready.push(Completion {
             token: batch.token,
             ticket: batch.ticket,
             vertex: batch.vertex,
             delta,
             wire_bytes: 0,
+            exact: flavor == DeltaFlavor::Exact,
             others: batch.others,
         });
         Ok(())
@@ -230,13 +264,24 @@ impl WorkerSeeds {
 /// Native Rust CameoSketch worker.
 pub struct NativeWorker {
     seeds: WorkerSeeds,
+    /// Hybrid handshake threshold: batches whose odd-parity index count
+    /// is ≤ this answer with an exact-set delta (0 = sketch always).
+    threshold: u32,
     scratch: std::cell::RefCell<Vec<u64>>,
 }
 
 impl NativeWorker {
     pub fn new(seeds: WorkerSeeds) -> Self {
+        Self::with_threshold(seeds, 0)
+    }
+
+    /// A native worker speaking the hybrid protocol: batches whose
+    /// odd-parity index count is ≤ `threshold` are answered with an
+    /// exact-set delta instead of k sketch deltas (0 disables).
+    pub fn with_threshold(seeds: WorkerSeeds, threshold: u32) -> Self {
         Self {
             seeds,
+            threshold,
             scratch: std::cell::RefCell::new(Vec::new()),
         }
     }
@@ -258,6 +303,53 @@ impl WorkerBackend for NativeWorker {
             );
         }
         Ok(())
+    }
+
+    fn process_delta(
+        &self,
+        vertex: u32,
+        others: &[u32],
+        out: &mut Vec<u64>,
+    ) -> Result<DeltaFlavor> {
+        if self.threshold == 0 {
+            self.process(vertex, others, out)?;
+            return Ok(DeltaFlavor::Sketch);
+        }
+        let words = self.seeds.params.words();
+        let mut idx = self.scratch.borrow_mut();
+        batch_indices(vertex, others, self.seeds.params.v, &mut idx);
+        // parity-reduce: an index toggled an even number of times is a
+        // no-op under XOR and drops out of both flavors identically
+        idx.sort_unstable();
+        let mut keep = 0usize;
+        let mut i = 0usize;
+        while i < idx.len() {
+            let mut run = 1usize;
+            while i + run < idx.len() && idx[i + run] == idx[i] {
+                run += 1;
+            }
+            if run % 2 == 1 {
+                idx[keep] = idx[i];
+                keep += 1;
+            }
+            i += run;
+        }
+        idx.truncate(keep);
+        if keep <= self.threshold as usize {
+            out.extend_from_slice(&idx);
+            return Ok(DeltaFlavor::Exact);
+        }
+        for seeds in &self.seeds.per_copy {
+            let start = out.len();
+            out.resize(start + words, 0);
+            CameoSketch::delta_of_batch_into(
+                &mut out[start..],
+                &self.seeds.params,
+                seeds,
+                &idx,
+            );
+        }
+        Ok(DeltaFlavor::Sketch)
     }
 
     fn name(&self) -> &'static str {
@@ -384,6 +476,7 @@ mod tests {
         assert_eq!(out[0].token, 7);
         assert_eq!(out[0].ticket, ticket, "completions echo the epoch ticket");
         assert_eq!(out[0].wire_bytes, 0, "inline backends meter no network");
+        assert!(!out[0].exact, "threshold-0 native stays sketch-flavored");
         assert_eq!(
             out[0].others,
             vec![1, 2],
@@ -401,6 +494,38 @@ mod tests {
         // distributor would (the barrier's debug leak detector panics on
         // drop otherwise)
         barrier.complete(out[0].ticket);
+    }
+
+    #[test]
+    fn native_with_threshold_returns_exact_for_small_batches() {
+        let s = seeds(64, 2);
+        let w = NativeWorker::with_threshold(s, 4);
+        let mut out = Vec::new();
+        // 5 raw entries, but `2` toggles twice and cancels → 3 survivors
+        let flavor = w.process_delta(0, &[1, 2, 2, 3, 9], &mut out).unwrap();
+        assert_eq!(flavor, DeltaFlavor::Exact);
+        let want: Vec<u64> = [1u32, 3, 9]
+            .iter()
+            .map(|&o| encode_edge(0, o, 64))
+            .collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn native_with_threshold_falls_back_to_sketch_for_big_batches() {
+        let s = seeds(64, 2);
+        let words = s.params.words();
+        let plain = NativeWorker::new(s.clone());
+        let w = NativeWorker::with_threshold(s, 2);
+        let others: Vec<u32> = (1..9).collect();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        assert_eq!(
+            w.process_delta(0, &others, &mut a).unwrap(),
+            DeltaFlavor::Sketch
+        );
+        plain.process(0, &others, &mut b).unwrap();
+        assert_eq!(a.len(), 2 * words);
+        assert_eq!(a, b, "sketch fallback is bit-identical to the plain path");
     }
 
     #[test]

@@ -31,11 +31,11 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::net::{
     delta2_wire_bytes, encode_batch2_into, encode_multibatch_header_into, encode_seq_batch_into,
-    Message,
+    exact_delta2_wire_bytes, Message,
 };
 use crate::sketch::params::SketchParams;
 use crate::worker::{
-    Completion, NativeWorker, PendingBatch, SubmitBackend, WorkerBackend, WorkerSeeds,
+    Completion, DeltaFlavor, NativeWorker, PendingBatch, SubmitBackend, WorkerBackend, WorkerSeeds,
 };
 
 /// Coordinator-side backend that forwards batches to a remote worker,
@@ -70,6 +70,8 @@ impl RemoteWorker {
             columns: params.columns,
             graph_seed,
             k,
+            // the lockstep v1 baseline never negotiates the hybrid tier
+            threshold: 0,
         };
         let sent = hello.write_to(&mut writer)?;
         let worker = Self {
@@ -184,6 +186,21 @@ impl PipelinedRemote {
         k: u32,
         window: usize,
     ) -> Result<Self> {
+        Self::connect_hybrid(addr, params, graph_seed, k, window, 0)
+    }
+
+    /// Like [`Self::connect`], negotiating the hybrid vertex tier: the
+    /// HELLO carries `threshold`, and the server answers batches whose
+    /// parity-reduced survivor count is at most `threshold` with compact
+    /// EXACTDELTA2 frames instead of full sketch deltas (0 disables).
+    pub fn connect_hybrid(
+        addr: &str,
+        params: SketchParams,
+        graph_seed: u64,
+        k: u32,
+        window: usize,
+        threshold: u32,
+    ) -> Result<Self> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
         let reader_stream = stream.try_clone()?;
@@ -194,6 +211,7 @@ impl PipelinedRemote {
             columns: params.columns,
             graph_seed,
             k,
+            threshold,
         };
         let bytes_sent = hello.write_to(&mut writer)?;
         let shared = Arc::new(PipeShared {
@@ -454,49 +472,80 @@ impl Drop for PipelinedRemote {
     }
 }
 
-/// The reader half: turns DELTA2 frames into completions until BYE,
-/// an error frame, or connection death.
+/// Match one completion frame against the pending map and publish it.
+/// Returns `false` when the frame is unanswerable (wrong vertex or
+/// unknown seq) and the connection must be marked dead.
+fn complete_frame(
+    shared: &PipeShared,
+    seq: u64,
+    vertex: u32,
+    delta: Vec<u64>,
+    wire: u64,
+    exact: bool,
+) -> bool {
+    let mut st = shared.state.lock().unwrap();
+    match st.pending.remove(&seq) {
+        Some(b) if b.vertex == vertex => {
+            st.completed.push_back(Completion {
+                token: seq,
+                ticket: b.ticket,
+                vertex,
+                delta,
+                wire_bytes: wire,
+                exact,
+                // hand the batch buffer back for arena
+                // recycling once the delta merges
+                others: b.others,
+            });
+            drop(st);
+            // lint: allow(relaxed-ordering) — wire-byte meter (Theorem 5.2 accounting), no synchronization role
+            shared.bytes_received.fetch_add(wire, Ordering::Relaxed);
+            shared.cv.notify_all();
+            true
+        }
+        Some(b) => {
+            crate::log_warn!(
+                "remote: delta seq {seq} for wrong vertex (sent {}, got \
+                 {vertex})",
+                b.vertex
+            );
+            // keep the batch requeueable
+            st.pending.insert(seq, b);
+            drop(st);
+            shared.mark_dead();
+            false
+        }
+        None => {
+            crate::log_warn!("remote: delta for unknown seq {seq}");
+            drop(st);
+            shared.mark_dead();
+            false
+        }
+    }
+}
+
+/// The reader half: turns DELTA2/EXACTDELTA2 frames into completions
+/// until BYE, an error frame, or connection death.
 fn reader_loop(shared: &PipeShared, mut reader: BufReader<TcpStream>) {
     loop {
         match Message::read_from(&mut reader) {
             Ok(Message::Delta2 { seq, vertex, delta }) => {
                 let wire = delta2_wire_bytes(delta.len());
-                let mut st = shared.state.lock().unwrap();
-                match st.pending.remove(&seq) {
-                    Some(b) if b.vertex == vertex => {
-                        st.completed.push_back(Completion {
-                            token: seq,
-                            ticket: b.ticket,
-                            vertex,
-                            delta,
-                            wire_bytes: wire,
-                            // hand the batch buffer back for arena
-                            // recycling once the delta merges
-                            others: b.others,
-                        });
-                        drop(st);
-                        // lint: allow(relaxed-ordering) — wire-byte meter (Theorem 5.2 accounting), no synchronization role
-                        shared.bytes_received.fetch_add(wire, Ordering::Relaxed);
-                        shared.cv.notify_all();
-                    }
-                    Some(b) => {
-                        crate::log_warn!(
-                            "remote: delta seq {seq} for wrong vertex (sent {}, got \
-                             {vertex})",
-                            b.vertex
-                        );
-                        // keep the batch requeueable
-                        st.pending.insert(seq, b);
-                        drop(st);
-                        shared.mark_dead();
-                        return;
-                    }
-                    None => {
-                        crate::log_warn!("remote: delta for unknown seq {seq}");
-                        drop(st);
-                        shared.mark_dead();
-                        return;
-                    }
+                if !complete_frame(shared, seq, vertex, delta, wire, false) {
+                    return;
+                }
+            }
+            Ok(Message::ExactDelta2 {
+                seq,
+                vertex,
+                indices,
+            }) => {
+                // cold-vertex completion: `delta` carries raw edge
+                // indices, not sketch words (the distributor dispatches
+                // on `exact`)
+                let wire = exact_delta2_wire_bytes(indices.len());
+                if !complete_frame(shared, seq, vertex, indices, wire, true) {
+                    return;
                 }
             }
             Ok(Message::Bye) => {
@@ -630,16 +679,22 @@ fn handle_connection(stream: TcpStream, opts: ServeOptions) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let writer = BufWriter::new(stream);
 
-    // handshake: first frame must be HELLO
+    // handshake: first frame must be HELLO.  The negotiated threshold
+    // makes this worker answer small parity-reduced batches with
+    // EXACTDELTA2 frames (threshold 0 = classic sketch-only behavior).
     let backend: Box<dyn WorkerBackend> = match Message::read_from(&mut reader)? {
         Message::Hello {
             vertices,
             columns,
             graph_seed,
             k,
+            threshold,
         } => {
             let params = SketchParams::with_columns(vertices, columns);
-            Box::new(NativeWorker::new(WorkerSeeds::derive(params, graph_seed, k)))
+            Box::new(NativeWorker::with_threshold(
+                WorkerSeeds::derive(params, graph_seed, k),
+                threshold,
+            ))
         }
         other => bail!("expected HELLO, got {other:?}"),
     };
@@ -701,11 +756,17 @@ fn handle_connection(stream: TcpStream, opts: ServeOptions) -> Result<()> {
                 others,
             } => {
                 out.clear();
-                backend.process(vertex, &others, &mut out)?;
-                let reply = Message::Delta2 {
-                    seq,
-                    vertex,
-                    delta: out.clone(),
+                let reply = match backend.process_delta(vertex, &others, &mut out)? {
+                    DeltaFlavor::Sketch => Message::Delta2 {
+                        seq,
+                        vertex,
+                        delta: out.clone(),
+                    },
+                    DeltaFlavor::Exact => Message::ExactDelta2 {
+                        seq,
+                        vertex,
+                        indices: out.clone(),
+                    },
                 };
                 if tx.send((due(opts.reply_latency), reply)).is_err() {
                     break;
@@ -720,12 +781,19 @@ fn handle_connection(stream: TcpStream, opts: ServeOptions) -> Result<()> {
                 let mut replies = Vec::with_capacity(batches.len());
                 for b in &batches {
                     out.clear();
-                    backend.process(b.vertex, &b.others, &mut out)?;
-                    replies.push(Message::Delta2 {
-                        seq: b.seq,
-                        vertex: b.vertex,
-                        delta: out.clone(),
-                    });
+                    let reply = match backend.process_delta(b.vertex, &b.others, &mut out)? {
+                        DeltaFlavor::Sketch => Message::Delta2 {
+                            seq: b.seq,
+                            vertex: b.vertex,
+                            delta: out.clone(),
+                        },
+                        DeltaFlavor::Exact => Message::ExactDelta2 {
+                            seq: b.seq,
+                            vertex: b.vertex,
+                            indices: out.clone(),
+                        },
+                    };
+                    replies.push(reply);
                 }
                 answered += replies.len() as u64;
                 let when = due(opts.reply_latency);
@@ -921,6 +989,7 @@ mod tests {
             columns: params.columns,
             graph_seed: 7,
             k: 2,
+            threshold: 0,
         };
         let multi = Message::MultiBatch {
             batches: vec![
@@ -948,6 +1017,62 @@ mod tests {
         for c in &got {
             assert_eq!(c.wire_bytes, delta2_wire_bytes(words));
         }
+    }
+
+    /// With a negotiated threshold the server answers small batches with
+    /// EXACTDELTA2 (raw indices, `exact: true`) and big batches with
+    /// DELTA2 (sketch words), and the byte meter reflects the compact
+    /// frames exactly.
+    #[test]
+    fn pipelined_hybrid_mixes_exact_and_sketch_completions() {
+        let params = SketchParams::for_vertices(64);
+        let server = WorkerServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let server_thread = std::thread::spawn(move || server.serve(1));
+
+        let mut p = PipelinedRemote::connect_hybrid(&addr, params, 42, 1, 8, 2).unwrap();
+        // batch 1: 2 survivors ≤ threshold 2 → exact; batch 2: 5 > 2 → sketch
+        p.submit(PendingBatch {
+            token: 1,
+            ticket: ticket(),
+            vertex: 0,
+            others: vec![3, 1],
+        })
+        .unwrap();
+        p.flush_submits().unwrap();
+        p.submit(PendingBatch {
+            token: 2,
+            ticket: ticket(),
+            vertex: 7,
+            others: vec![1, 2, 3, 4, 5],
+        })
+        .unwrap();
+        p.flush_submits().unwrap();
+        let mut got = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while got.len() < 2 && Instant::now() < deadline {
+            p.drain(&mut got, true).unwrap();
+        }
+        p.finish().unwrap();
+        server_thread.join().unwrap().unwrap();
+
+        assert_eq!(got.len(), 2);
+        got.sort_by_key(|c| c.token);
+        let exact = &got[0];
+        assert!(exact.exact, "small batch must come back as an exact delta");
+        assert_eq!(
+            exact.delta,
+            vec![encode_edge(0, 1, 64), encode_edge(0, 3, 64)],
+            "exact completions carry sorted edge indices"
+        );
+        assert_eq!(exact.wire_bytes, exact_delta2_wire_bytes(2));
+        let sketch = &got[1];
+        assert!(!sketch.exact, "big batch must fall back to a sketch delta");
+        assert_eq!(
+            sketch.delta,
+            native_delta(params, 42, 1, 7, &[1, 2, 3, 4, 5])
+        );
+        assert_eq!(sketch.wire_bytes, delta2_wire_bytes(params.words()));
     }
 
     #[test]

@@ -1,0 +1,190 @@
+//! Hybrid vertex-tier property test: random insert/delete/query
+//! interleavings that repeatedly cross the promotion threshold in both
+//! directions (promote → demote → promote churn), driven through the
+//! full session pipeline from multiple concurrent producers, with
+//! snapshot queries taken mid-churn.  Every answer must equal the
+//! from-scratch DSU referee exactly, with `batches_dropped == 0`.
+
+use landscape::baseline::Referee;
+use landscape::connectivity::dsu::Dsu;
+use landscape::stream::update::Update;
+use landscape::util::rng::Xoshiro256;
+use landscape::util::testkit::{arb_edge, Cases};
+use landscape::Landscape;
+
+const THRESHOLD: u32 = 4;
+const FLOOR: u32 = 2;
+
+fn hybrid_session(v: u64) -> Landscape {
+    Landscape::builder()
+        .vertices(v)
+        .alpha(1)
+        .distributor_threads(2)
+        .hybrid_threshold(THRESHOLD)
+        .hybrid_demote_floor(FLOOR)
+        // small log so producer drains genuinely interleave
+        .update_log_capacity(16)
+        .build()
+        .unwrap()
+}
+
+/// A valid random insert/delete stream biased to churn one designated
+/// hub vertex across the promotion threshold: phases of hub fan-out
+/// inserts (degree climbs past THRESHOLD → promote) alternate with
+/// phases that delete the hub's edges (degree falls below FLOOR →
+/// demote), with random background edges mixed throughout.
+fn churny_stream(rng: &mut Xoshiro256, v: u64, hub: u32) -> (Vec<Update>, Vec<(u32, u32)>) {
+    let mut live = std::collections::BTreeSet::new();
+    let mut stream = Vec::new();
+    let phases = 3 + rng.next_below(3); // 3..6 grow/shrink rounds
+    for _ in 0..phases {
+        // grow the hub well past the threshold
+        let fan = THRESHOLD + 2 + rng.next_below(4) as u32;
+        let mut added = 0u32;
+        let mut probe = 0u32;
+        while added < fan && (probe as u64) < v - 1 {
+            let other = (hub + 1 + probe) % v as u32;
+            probe += 1;
+            if other == hub {
+                continue;
+            }
+            let e = (hub.min(other), hub.max(other));
+            if live.insert(e) {
+                stream.push(Update::insert(e.0, e.1));
+                added += 1;
+            }
+        }
+        // background noise, inserts and deletes
+        for _ in 0..rng.next_below(20) {
+            if !live.is_empty() && rng.next_below(3) == 0 {
+                let i = rng.next_below(live.len() as u64) as usize;
+                let e: (u32, u32) = *live.iter().nth(i).unwrap();
+                live.remove(&e);
+                stream.push(Update::delete(e.0, e.1));
+            } else {
+                let e = arb_edge(rng, v);
+                if live.insert(e) {
+                    stream.push(Update::insert(e.0, e.1));
+                }
+            }
+        }
+        // strip the hub back down below the demotion floor
+        let hub_edges: Vec<(u32, u32)> = live
+            .iter()
+            .copied()
+            .filter(|&(a, b)| a == hub || b == hub)
+            .collect();
+        for e in hub_edges {
+            live.remove(&e);
+            stream.push(Update::delete(e.0, e.1));
+        }
+    }
+    (stream, live.into_iter().collect())
+}
+
+/// Deal the stream over `producers` threads (order preserved within a
+/// producer), take a snapshot query mid-churn from the main thread, and
+/// return the final queried partition.
+fn churn_partition(
+    rng: &mut Xoshiro256,
+    v: u64,
+    updates: &[Update],
+    producers: usize,
+) -> (Vec<u32>, landscape::metrics::MetricsSnapshot) {
+    let mut chunks: Vec<Vec<Update>> = vec![Vec::new(); producers];
+    for &u in updates {
+        chunks[rng.next_below(producers as u64) as usize].push(u);
+    }
+    let session = hybrid_session(v);
+    std::thread::scope(|scope| {
+        for chunk in chunks {
+            let mut handle = session.ingest_handle();
+            scope.spawn(move || {
+                for u in chunk {
+                    handle.ingest(u);
+                }
+                // handle drop publishes the tail
+            });
+        }
+        // a pinned snapshot taken while producers are mid-churn: it
+        // must answer (one-sided coverage) without wedging or panicking
+        // while promotions/demotions race underneath
+        let snap = session.query_handle().snapshot();
+        let _ = snap.connected_components();
+    });
+    assert_eq!(session.pending_producers(), 0, "all producers published");
+    let forest = session.query_handle().connected_components();
+    let m = session.metrics();
+    assert_eq!(m.batches_dropped, 0, "no update may vanish at the queue");
+    (forest.component, m)
+}
+
+#[test]
+fn hybrid_churn_matches_dsu_referee() {
+    Cases::new(6).run(|rng| {
+        let v = 24 + rng.next_below(40);
+        let hub = rng.next_below(v) as u32;
+        let (updates, live) = churny_stream(rng, v, hub);
+        let mut d = Dsu::from_edges(v as usize, &live);
+        let want = d.component_map();
+        for producers in [1usize, 3] {
+            let (got, m) = churn_partition(rng, v, &updates, producers);
+            assert!(
+                Referee::same_partition(&got, &want),
+                "hybrid store with {producers} producers diverges from the DSU referee"
+            );
+            assert_eq!(
+                m.vertices_exact + m.vertices_sketched,
+                v,
+                "every vertex sits in exactly one tier"
+            );
+        }
+    });
+}
+
+/// A fixed-seed single-producer run where the promotion/demotion walk is
+/// deterministic: the hub must be metered promoting AND demoting, and
+/// repeated queries across the churn must stay referee-exact.
+#[test]
+fn hybrid_churn_meters_promotions_and_demotions() {
+    let v = 48u64;
+    let hub = 7u32;
+    let mut rng = Xoshiro256::new(0x5EED_CAFE);
+    let (updates, live) = churny_stream(&mut rng, v, hub);
+    let session = hybrid_session(v);
+    let mut handle = session.ingest_handle();
+    let mid = updates.len() / 2;
+    for u in &updates[..mid] {
+        handle.ingest(*u);
+    }
+    handle.flush();
+    // mid-churn query: a prefix of the stream is also a valid stream
+    let _ = session.query_handle().connected_components();
+    for u in &updates[mid..] {
+        handle.ingest(*u);
+    }
+    handle.flush();
+
+    let forest = session.query_handle().connected_components();
+    let mut d = Dsu::from_edges(v as usize, &live);
+    assert!(
+        Referee::same_partition(&forest.component, &d.component_map()),
+        "post-churn partition diverges from the DSU referee"
+    );
+    let m = session.metrics();
+    assert_eq!(m.batches_dropped, 0);
+    assert!(
+        m.promotions > 0,
+        "the hub crossed the threshold: promotions must be metered"
+    );
+    assert!(
+        m.demotions > 0,
+        "the hub was stripped below the floor: demotions must be metered"
+    );
+    assert!(
+        m.promotions >= m.demotions,
+        "each demotion pairs with an earlier promotion (got {} vs {})",
+        m.promotions,
+        m.demotions
+    );
+}
