@@ -1,12 +1,18 @@
 # Convenience targets referenced by docs and test skip messages.
 
-.PHONY: build test fixtures artifacts fmt clippy lint miri tsan ci
+.PHONY: build test storage-test fixtures artifacts fmt clippy lint miri tsan ci
 
 build:
 	cargo build --release --workspace
 
 test:
 	cargo test -q --workspace
+
+# The external-memory storage tier: WAL/spill unit tests plus the
+# crash-recovery integration suite (see docs/STORAGE.md).
+storage-test:
+	cargo test -q -p landscape --lib storage::
+	cargo test -q -p landscape --test storage_recovery
 
 fmt:
 	cargo fmt --all -- --check

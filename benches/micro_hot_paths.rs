@@ -342,6 +342,66 @@ fn main() {
         }
     }
 
+    // resident vs spill-mode session ingest (the storage tier's
+    // headline): the same uniform insert stream through a fully
+    // resident session and through spill sessions whose resident
+    // budget holds only 25% / 50% of the sketch blocks, so ingest
+    // additionally pays gutter buffering, block faults, evictions,
+    // and WAL appends.  ns_per_op is per update end-to-end (handle
+    // create → ingest → publish → flush barrier, which in spill mode
+    // is also the durable cut).
+    {
+        use landscape::Landscape;
+
+        for vexp in [14u32, 17] {
+            let sv = 1u64 << vexp;
+            let sparams = SketchParams::for_vertices(sv);
+            let block_bytes = 8 + sparams.words() as u64 * 8;
+            let n_up = if args.quick { 20_000usize } else { 100_000usize };
+            let mut srng = Xoshiro256::new(300 + vexp as u64);
+            let sups: Vec<Update> = (0..n_up)
+                .map(|_| {
+                    let a = srng.next_below(sv - 1) as u32;
+                    let b = a + 1 + srng.next_below(sv - 1 - a as u64) as u32;
+                    Update::insert(a, b)
+                })
+                .collect();
+
+            let mut run = |name: String, budget_pct: Option<u64>| {
+                let dir = std::env::temp_dir().join(format!(
+                    "landscape-bench-spill-{}-{name}",
+                    std::process::id()
+                ));
+                let _ = std::fs::remove_dir_all(&dir);
+                let mut b = Landscape::builder()
+                    .vertices(sv)
+                    .alpha(1)
+                    .distributor_threads(2)
+                    .greedycc(false); // isolate the storage path
+                if let Some(pct) = budget_pct {
+                    b = b
+                        .storage_dir(&dir)
+                        .resident_budget_bytes(sv * block_bytes * pct / 100);
+                }
+                let session = b.build().unwrap();
+                let s = sbench(&args, 1, 3, || {
+                    let mut h = session.ingest_handle();
+                    for &u in &sups {
+                        h.ingest(u);
+                    }
+                    h.flush();
+                    session.flush();
+                });
+                row(&name, s.median / n_up as f64);
+                drop(session);
+                let _ = std::fs::remove_dir_all(&dir);
+            };
+            run(format!("ingest_resident_v2^{vexp}"), None);
+            run(format!("ingest_spill_budget25pct_v2^{vexp}"), Some(25));
+            run(format!("ingest_spill_budget50pct_v2^{vexp}"), Some(50));
+        }
+    }
+
     // work-queue handoff
     let q: WorkQueue<u64> = WorkQueue::new(1024);
     let s = sbench(&args, 1, 10, || {

@@ -38,6 +38,15 @@
 //! phase — promotions AND demotions must both be metered, every answer
 //! must match the exact referee, and the resident store bytes are
 //! reported against the analytic all-sketch figure.
+//!
+//! `--scenario recovery` runs only the crash-recovery scenario: the
+//! driver re-spawns itself as a child (`--scenario recovery-child`)
+//! that ingests a deterministic spill-mode stream, takes one durable
+//! cut partway, keeps merging past it, and then `process::abort()`s —
+//! a real kill, no destructors.  The parent reopens the storage
+//! directory with [`Landscape::recover`], replays the rest of the
+//! stream, and the final partition must match the exact referee with
+//! zero metered batch loss.
 
 use landscape::baseline::Referee;
 use landscape::benchkit::{fmt_bytes, fmt_rate};
@@ -552,15 +561,156 @@ fn stage_sparse() -> anyhow::Result<()> {
     Ok(())
 }
 
-/// The value following `--scenario`, if any.
-fn scenario_arg() -> Option<String> {
+/// The deterministic spill workload shared by the recovery parent and
+/// its aborting child: a dynamified Erdős–Rényi stream plus the spill
+/// session shape (vertex count and resident budget).  Both processes
+/// must compute identical values for the replay to line up.
+fn recovery_workload() -> (Vec<Update>, u64, u64) {
+    use landscape::sketch::params::DEFAULT_COLUMNS;
+    use landscape::stream::dynamify::Dynamify;
+    use landscape::stream::erdos::ErdosRenyi;
+    let v = 1u64 << 11;
+    let stream: Vec<Update> = Dynamify::new(ErdosRenyi::new(v, 0.01, 4242), 3).collect();
+    // ~64 resident blocks: far fewer than the stream touches, so the
+    // crash leaves state split across segments, gutter, and WAL tail
+    let params = landscape::SketchParams::with_columns(v, DEFAULT_COLUMNS);
+    let budget = 64 * (8 + params.words() as u64 * 8);
+    (stream, v, budget)
+}
+
+fn recovery_builder(v: u64, dir: &std::path::Path, budget: u64) -> landscape::LandscapeBuilder {
+    Landscape::builder()
+        .vertices(v)
+        .alpha(1)
+        .distributor_threads(2)
+        .update_log_capacity(32)
+        .storage_dir(dir)
+        .resident_budget_bytes(budget)
+}
+
+/// The crash-recovery scenario (CI-sized), parent side: pick a random
+/// durable point `d` and crash point `c`, spawn the child to ingest
+/// `stream[..c]` (durably marking only at `d`) and `abort()`, then
+/// recover, ingest `stream[c..]`, and check against the exact referee.
+fn stage_recovery() -> anyhow::Result<()> {
+    let (stream, v, budget) = recovery_workload();
+    let mut referee = Referee::new(v);
+    for u in &stream {
+        referee.apply(u);
+    }
+    let dir = std::env::temp_dir().join(format!("landscape-e2e-recovery-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // a fresh kill point every run — the property, not one fixed trace
+    let mut rng = Xoshiro256::new(u64::from(std::process::id()) | 1);
+    let d = rng.next_below(stream.len() as u64) as usize;
+    let c = d + rng.next_below((stream.len() - d + 1) as u64) as usize;
+
+    let sw = Stopwatch::new();
+    let status = std::process::Command::new(std::env::current_exe()?)
+        .args([
+            "--scenario",
+            "recovery-child",
+            "--dir",
+            dir.to_str().expect("temp dir is valid UTF-8"),
+            "--durable",
+            &d.to_string(),
+            "--crash",
+            &c.to_string(),
+        ])
+        .status()?;
+    if status.success() {
+        anyhow::bail!("recovery child was expected to abort mid-stream, but exited cleanly");
+    }
+
+    let session = recovery_builder(v, &dir, budget).recover()?;
+    if session.metrics().recoveries != 1 {
+        anyhow::bail!("recovered session must meter exactly one recovery");
+    }
+    let mut producer = session.ingest_handle();
+    for u in &stream[c..] {
+        producer.ingest(*u);
+    }
+    producer.flush();
+    session.flush();
+    let forest = session.query_handle().connected_components();
+    let ok = Referee::same_partition(&forest.component, &referee.component_map());
+    let m = session.metrics();
+    println!(
+        "[recovery] child aborted after {c}/{} updates (durable cut at {d}); \
+         recovered + replayed the rest in {:.2}s: {} components, {} WAL \
+         bytes, {} spilled, {} faults, {} dropped — {}",
+        stream.len(),
+        sw.elapsed_secs(),
+        forest.num_components(),
+        m.wal_bytes,
+        fmt_bytes(m.spill_bytes_written as f64),
+        m.block_faults,
+        m.batches_dropped,
+        if ok { "MATCH" } else { "MISMATCH" },
+    );
+    assert!(ok, "recovery scenario: partition mismatch after crash + recovery");
+    assert_eq!(m.batches_dropped, 0, "recovery scenario dropped batches");
+    assert!(m.wal_bytes > 0, "spill mode must have logged to the WAL");
+    assert!(
+        m.resident_sketch_bytes <= budget,
+        "resident gauge {} exceeds the budget {budget}",
+        m.resident_sketch_bytes
+    );
+    drop(session);
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}
+
+/// The crash-recovery scenario, child side: ingest to the durable
+/// point, `flush()` (checkpoint + fsync'd cut marker), keep going to
+/// the crash point so the tail lives only in the WAL and evicted
+/// segments, then die for real — no destructors, no final checkpoint.
+fn stage_recovery_child() -> anyhow::Result<()> {
+    let (stream, v, budget) = recovery_workload();
+    let dir = std::path::PathBuf::from(
+        flag_value("dir").ok_or_else(|| anyhow::anyhow!("recovery-child needs --dir"))?,
+    );
+    let d: usize = flag_value("durable")
+        .ok_or_else(|| anyhow::anyhow!("recovery-child needs --durable"))?
+        .parse()?;
+    let c: usize = flag_value("crash")
+        .ok_or_else(|| anyhow::anyhow!("recovery-child needs --crash"))?
+        .parse()?;
+
+    let session = recovery_builder(v, &dir, budget).build()?;
+    let mut producer = session.ingest_handle();
+    for u in &stream[..d] {
+        producer.ingest(*u);
+    }
+    producer.flush();
+    session.flush(); // the durable cut
+    for u in &stream[d..c] {
+        producer.ingest(*u);
+    }
+    producer.flush();
+    // settle the tail so it is merged and WAL-logged — but deliberately
+    // take no durable mark, leaving exactly what a crash leaves
+    let cut = session.cut();
+    session.wait_for(cut);
+    std::process::abort();
+}
+
+/// The value following `--<name>`, if any.
+fn flag_value(name: &str) -> Option<String> {
+    let flag = format!("--{name}");
     let mut args = std::env::args();
     while let Some(a) = args.next() {
-        if a == "--scenario" {
+        if a == flag {
             return args.next();
         }
     }
     None
+}
+
+/// The value following `--scenario`, if any.
+fn scenario_arg() -> Option<String> {
+    flag_value("scenario")
 }
 
 fn main() -> anyhow::Result<()> {
@@ -569,8 +719,10 @@ fn main() -> anyhow::Result<()> {
         Some("remote") => return stage_remote(),
         Some("snapshot") => return stage_snapshot(),
         Some("sparse") => return stage_sparse(),
+        Some("recovery") => return stage_recovery(),
+        Some("recovery-child") => return stage_recovery_child(),
         Some(other) => {
-            anyhow::bail!("unknown scenario {other} (query|remote|snapshot|sparse)")
+            anyhow::bail!("unknown scenario {other} (query|remote|snapshot|sparse|recovery)")
         }
         None => {}
     }

@@ -21,7 +21,7 @@
 //! 3. **hot-path-unwrap / thread-sleep** — `.unwrap()`, `.expect(` and
 //!    `thread::sleep` are banned in the hot-path module trees
 //!    (`sketch/`, `coordinator/`, `worker/`, `session/`, `gutter/`,
-//!    `hypertree/`) outside `#[cfg(test)]` blocks.  The lock-poisoning
+//!    `hypertree/`, `storage/`) outside `#[cfg(test)]` blocks.  The lock-poisoning
 //!    idiom (`.lock()`, `.read()`, `.write()`, `.wait(..)`,
 //!    `.wait_timeout(..)` immediately followed by `.unwrap()`) is
 //!    exempt: propagating a poisoned lock IS the invariant — a panic
@@ -61,6 +61,7 @@ const HOT_PATH_DIRS: &[&str] = &[
     "session/",
     "gutter/",
     "hypertree/",
+    "storage/",
 ];
 
 /// Files where `Ordering::Relaxed` is allowed without justification:
@@ -80,6 +81,7 @@ const MISSING_DOCS_REQUIRED: &[&str] = &[
     "coordinator/work_queue.rs",
     "session/mod.rs",
     "metrics.rs",
+    "storage/mod.rs",
 ];
 
 /// Receiver methods whose `Result` is the lock-poisoning propagation

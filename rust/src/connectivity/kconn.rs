@@ -81,6 +81,34 @@ impl KConnectivity {
         Self { k, stores }
     }
 
+    /// Like [`Self::with_shards`], but with every copy running on an
+    /// explicit storage backing (the spill tier) — `backings` must
+    /// hold exactly `k` entries, one per copy in copy order, each
+    /// sized for `params.words()` blocks.  See [`crate::storage`].
+    pub fn with_shards_storage(
+        params: SketchParams,
+        graph_seed: u64,
+        k: u32,
+        spec: ShardSpec,
+        backings: Vec<crate::storage::Backing>,
+    ) -> Self {
+        assert!(k >= 1);
+        assert_eq!(backings.len(), k as usize, "one backing per sketch copy");
+        let stores = backings
+            .into_iter()
+            .enumerate()
+            .map(|(copy, backing)| {
+                SketchStore::with_backing(
+                    params,
+                    SketchSeeds::copy_seed(graph_seed, copy as u32),
+                    spec,
+                    backing,
+                )
+            })
+            .collect();
+        Self { k, stores }
+    }
+
     pub fn k(&self) -> u32 {
         self.k
     }
@@ -132,6 +160,44 @@ impl KConnectivity {
     /// mirror each other's tier state).
     pub fn tier_counts(&self) -> (u64, u64) {
         self.stores[0].tier_counts()
+    }
+
+    /// Sketch bytes currently resident in memory across all k copies
+    /// (spill mode: the bounded hot sets; the gauge source).
+    pub fn resident_sketch_bytes(&self) -> u64 {
+        self.stores.iter().map(|s| s.resident_sketch_bytes()).sum()
+    }
+
+    /// Cold-block faults across all k copies (spill only).
+    pub fn block_faults(&self) -> u64 {
+        self.stores.iter().map(|s| s.block_faults()).sum()
+    }
+
+    /// Bytes written to segment files across all k copies (spill only).
+    pub fn spill_bytes_written(&self) -> u64 {
+        self.stores.iter().map(|s| s.spill_bytes_written()).sum()
+    }
+
+    /// Whether the copies run on the spill backing.
+    pub fn is_spill(&self) -> bool {
+        self.stores[0].is_spill()
+    }
+
+    /// Ticket-retire maintenance for one shard, on every copy (spill:
+    /// gutter flush + LRU eviction at a scheduling point).
+    pub fn maintain(&self, shard: usize) {
+        for s in &self.stores {
+            s.maintain(shard);
+        }
+    }
+
+    /// Persist + fsync every copy's backing state (the segment half of
+    /// a durable cut; no-op when resident).
+    pub fn checkpoint(&self) -> std::io::Result<()> {
+        for s in &self.stores {
+            s.checkpoint()?;
+        }
+        Ok(())
     }
 
     /// Extract the k-connectivity certificate.

@@ -23,6 +23,8 @@ use crate::hypertree::VertexBatch;
 use crate::metrics::Metrics;
 use crate::sketch::params::{encode_edge, SketchParams};
 use crate::sketch::store::TierTransitions;
+use crate::sketch::CameoSketch;
+use crate::storage::DurabilityLog;
 use crate::worker::remote::PipelinedRemote;
 use crate::worker::{Completion, InlineSubmit, PendingBatch, SubmitBackend};
 
@@ -56,6 +58,12 @@ pub(crate) struct Distributor {
     /// their work completes (delta merged, applied locally, or dropped)
     /// so the producer side can reuse them instead of allocating.
     pub arena: Arc<BatchArena>,
+    /// The session's write-ahead log when the store spills
+    /// (`storage_dir` set).  Every delta is appended *inside* the merge
+    /// gate's shared section, immediately before it merges, and the
+    /// merge is stamped with the record's own end offset — the pairing
+    /// that makes recovery replay idempotent (see `docs/STORAGE.md`).
+    pub wal: Option<Arc<DurabilityLog>>,
 }
 
 impl Distributor {
@@ -246,18 +254,33 @@ impl Distributor {
             // batch-granular atomicity for concurrent readers: the gate
             // is uncontended except while a query is reading the store
             let _merging = self.merge_gate.read().unwrap();
-            for copy in 0..k {
-                let t = if c.exact {
-                    self.kconn.stores()[copy].merge_exact_delta(c.vertex, &c.delta)
-                } else {
-                    let delta = &c.delta[copy * words..(copy + 1) * words];
-                    // the batch's endpoint list rides along so the shadow
-                    // set stays current across a sketch merge
-                    self.kconn.stores()[copy].merge_sketch_delta(c.vertex, delta, &c.others)
-                };
-                if copy == 0 {
-                    // all copies mirror tier state; meter copy 0 only
-                    transitions = t;
+            if let Some(wal) = &self.wal {
+                // durability path (spill store, hybrid tier excluded by
+                // the builder): log first, then merge stamped with the
+                // record's OWN end offset — the shared watermark can
+                // transiently trail other appenders, so stamping from it
+                // here could tag a block past a not-yet-merged record
+                // and make recovery skip that record's replay
+                if !self.log_and_merge(wal, &c) {
+                    Metrics::add(&self.metrics.batches_dropped, 1);
+                    self.arena.recycle(self.shard, c.others);
+                    self.barrier.complete(c.ticket);
+                    return;
+                }
+            } else {
+                for copy in 0..k {
+                    let t = if c.exact {
+                        self.kconn.stores()[copy].merge_exact_delta(c.vertex, &c.delta)
+                    } else {
+                        let delta = &c.delta[copy * words..(copy + 1) * words];
+                        // the batch's endpoint list rides along so the
+                        // shadow set stays current across a sketch merge
+                        self.kconn.stores()[copy].merge_sketch_delta(c.vertex, delta, &c.others)
+                    };
+                    if copy == 0 {
+                        // all copies mirror tier state; meter copy 0 only
+                        transitions = t;
+                    }
                 }
             }
         }
@@ -277,6 +300,52 @@ impl Distributor {
             }
         }
         self.barrier.complete(c.ticket);
+        // ticket-retire scheduling point: flush this shard's delta
+        // gutter past its high-water mark and evict back to the
+        // resident budget (a no-op for resident backings)
+        self.kconn.maintain(self.shard);
+    }
+
+    /// Append one completion to the WAL and merge it, stamping every
+    /// copy's merge with the record's **own** end offset.  Must be
+    /// called with the merge gate held shared.  Returns false when the
+    /// append failed — the caller takes the metered-drop path, because
+    /// merging an unlogged delta would silently void the recovery
+    /// contract.
+    fn log_and_merge(&self, wal: &DurabilityLog, c: &Completion) -> bool {
+        let words = self.params.words();
+        let receipt = if c.exact {
+            wal.append_exact(c.vertex, &c.delta)
+        } else {
+            wal.append_delta(c.vertex, &c.delta)
+        };
+        let a = match receipt {
+            Ok(a) => a,
+            Err(e) => {
+                crate::log_warn!(
+                    "distributor {}: WAL append failed (batch dropped): {e}",
+                    self.shard
+                );
+                return false;
+            }
+        };
+        Metrics::add(&self.metrics.wal_bytes, a.bytes);
+        if c.exact {
+            // exact completions need the hybrid tier, which the builder
+            // rejects alongside spilling — but tolerate one anyway,
+            // exactly the way recovery replay would: expand the indices
+            // per copy under its own seeds
+            for store in self.kconn.stores() {
+                let delta = CameoSketch::delta_of_batch(store.params(), store.seeds(), &c.delta);
+                store.merge_delta_logged(c.vertex, &delta, a.end);
+            }
+        } else {
+            for (copy, store) in self.kconn.stores().iter().enumerate() {
+                let delta = &c.delta[copy * words..(copy + 1) * words];
+                store.merge_delta_logged(c.vertex, delta, a.end);
+            }
+        }
+        true
     }
 
     /// Fold copy-0 tier transitions into the session counters.
@@ -293,6 +362,49 @@ impl Distributor {
     /// shard owner, no delta overhead.
     fn apply_local(&self, ticket: Ticket, batch: &VertexBatch) {
         let v = self.params.v;
+        if let Some(wal) = &self.wal {
+            // durability path: one copy-independent Exact record per
+            // underfull leaf (the same compact form the network's
+            // EXACTDELTA2 frames use), logged and merged under the gate
+            // with the record's own end offset as the LSN
+            let indices: Vec<u64> = batch
+                .others
+                .iter()
+                .map(|&other| encode_edge(batch.vertex, other, v))
+                .collect();
+            let logged = {
+                let _merging = self.merge_gate.read().unwrap();
+                match wal.append_exact(batch.vertex, &indices) {
+                    Ok(a) => {
+                        Metrics::add(&self.metrics.wal_bytes, a.bytes);
+                        for store in self.kconn.stores() {
+                            let delta = CameoSketch::delta_of_batch(
+                                store.params(),
+                                store.seeds(),
+                                &indices,
+                            );
+                            store.merge_delta_logged(batch.vertex, &delta, a.end);
+                        }
+                        true
+                    }
+                    Err(e) => {
+                        crate::log_warn!(
+                            "distributor {}: WAL append failed (batch dropped): {e}",
+                            self.shard
+                        );
+                        false
+                    }
+                }
+            };
+            if logged {
+                Metrics::add(&self.metrics.updates_local, batch.others.len() as u64);
+            } else {
+                Metrics::add(&self.metrics.batches_dropped, 1);
+            }
+            self.barrier.complete(ticket);
+            self.kconn.maintain(self.shard);
+            return;
+        }
         let mut transitions = TierTransitions::default();
         {
             let _merging = self.merge_gate.read().unwrap();
@@ -312,6 +424,7 @@ impl Distributor {
         self.meter_transitions(transitions);
         Metrics::add(&self.metrics.updates_local, batch.others.len() as u64);
         self.barrier.complete(ticket);
+        self.kconn.maintain(self.shard);
     }
 
     fn build_backend(

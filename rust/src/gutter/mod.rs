@@ -12,7 +12,16 @@
 //! stripe emits is consumed by the same distributor thread — the
 //! baseline keeps its per-update locking cost (that is the point of the
 //! ablation) but routes shard-affine like the hypertree does.
+//!
+//! The storage tier reuses the same write-optimized-buffering idea one
+//! level down: [`DeltaGutter`] accumulates XOR deltas for **cold**
+//! (non-resident) vertices inside a spill stripe, so a burst of updates
+//! to paged-out vertices turns into one large sequential segment write
+//! at flush time instead of a random block fault per batch (the
+//! GraphZeppelin gutter-tree argument applied to the sketch store
+//! itself — see `docs/STORAGE.md`).
 
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::hypertree::{BatchSink, VertexBatch};
@@ -111,6 +120,94 @@ impl GutterBuffer {
     /// The shard map stripes are aligned to.
     pub fn shards(&self) -> ShardSpec {
         self.spec
+    }
+}
+
+/// An XOR-accumulating per-vertex delta buffer for the spill tier's
+/// cold-vertex write path.
+///
+/// Because sketch merges are XOR (self-inverse, commutative), deltas
+/// destined for a paged-out vertex can be folded together here and
+/// applied to the on-disk block later in one read-modify-write — the
+/// write-optimized buffering of GraphZeppelin's gutter trees, applied
+/// at block granularity.  Every entry is a full `k × words`-long delta
+/// for one vertex.
+///
+/// Not internally synchronized: each [`DeltaGutter`] lives inside one
+/// spill-stripe mutex (shard-aligned, like [`GutterBuffer`]'s stripes).
+pub struct DeltaGutter {
+    words: usize,
+    entries: HashMap<u32, Box<[u64]>>,
+}
+
+impl DeltaGutter {
+    /// A gutter whose entries are `words`-long deltas.
+    pub fn new(words: usize) -> Self {
+        Self {
+            words,
+            entries: HashMap::new(),
+        }
+    }
+
+    /// Fold `delta` into vertex `u`'s accumulated entry (allocating a
+    /// zeroed entry on first touch).  `delta` must be `words` long.
+    pub fn xor(&mut self, u: u32, delta: &[u64]) {
+        debug_assert_eq!(delta.len(), self.words);
+        let entry = self
+            .entries
+            .entry(u)
+            .or_insert_with(|| vec![0u64; self.words].into_boxed_slice());
+        for (e, d) in entry.iter_mut().zip(delta) {
+            *e ^= d;
+        }
+    }
+
+    /// Whether vertex `u` has a buffered delta.
+    pub fn contains(&self, u: u32) -> bool {
+        self.entries.contains_key(&u)
+    }
+
+    /// Borrow vertex `u`'s buffered delta (query paths XOR this over
+    /// the on-disk block so reads see un-flushed updates).
+    pub fn peek(&self, u: u32) -> Option<&[u64]> {
+        self.entries.get(&u).map(|e| &**e)
+    }
+
+    /// Remove and return vertex `u`'s buffered delta (used when the
+    /// vertex is faulted in: the accumulated delta folds into the now
+    /// resident block).
+    pub fn take(&mut self, u: u32) -> Option<Box<[u64]>> {
+        self.entries.remove(&u)
+    }
+
+    /// Drain every entry, sorted by vertex id — ascending ids map to
+    /// ascending segment offsets, so the flush becomes one sequential
+    /// sweep per segment file.
+    pub fn drain_sorted(&mut self) -> Vec<(u32, Box<[u64]>)> {
+        let mut out: Vec<(u32, Box<[u64]>)> = self.entries.drain().collect();
+        out.sort_unstable_by_key(|(u, _)| *u);
+        out
+    }
+
+    /// Buffered payload bytes (entry words only, excluding map
+    /// overhead) — the flush high-water-mark input.
+    pub fn bytes(&self) -> u64 {
+        (self.entries.len() * self.words * 8) as u64
+    }
+
+    /// Number of vertices with buffered deltas.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the gutter is empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Drop all buffered deltas.
+    pub fn clear(&mut self) {
+        self.entries.clear();
     }
 }
 
@@ -224,5 +321,35 @@ mod tests {
             .map(|b| b.others.len())
             .sum();
         assert_eq!(total, 10_000);
+    }
+
+    #[test]
+    fn delta_gutter_folds_and_drains_sorted() {
+        let mut g = DeltaGutter::new(3);
+        assert!(g.is_empty());
+        g.xor(9, &[1, 2, 4]);
+        g.xor(3, &[8, 0, 0]);
+        g.xor(9, &[1, 2, 0]); // self-inverse: first two words cancel
+        assert_eq!(g.len(), 2);
+        assert_eq!(g.bytes(), 2 * 3 * 8);
+        assert!(g.contains(9) && !g.contains(7));
+        assert_eq!(g.peek(9).unwrap(), &[0, 0, 4]);
+        let drained = g.drain_sorted();
+        assert_eq!(drained[0].0, 3);
+        assert_eq!(drained[1].0, 9);
+        assert_eq!(&*drained[1].1, &[0, 0, 4]);
+        assert!(g.is_empty() && g.bytes() == 0);
+    }
+
+    #[test]
+    fn delta_gutter_take_removes_the_entry() {
+        let mut g = DeltaGutter::new(2);
+        g.xor(5, &[7, 7]);
+        assert_eq!(&*g.take(5).unwrap(), &[7, 7]);
+        assert!(g.take(5).is_none());
+        assert!(g.is_empty());
+        g.xor(5, &[1, 1]);
+        g.clear();
+        assert!(g.is_empty());
     }
 }

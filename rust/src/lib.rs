@@ -88,6 +88,7 @@ pub mod net;
 pub mod runtime;
 pub mod session;
 pub mod sketch;
+pub mod storage;
 pub mod stream;
 pub mod util;
 pub mod worker;

@@ -89,6 +89,23 @@ pub struct Metrics {
     pub store_sketch_bytes: AtomicU64,
     /// Gauge: resident exact-set bytes across all k copies (hybrid only).
     pub store_exact_bytes: AtomicU64,
+    /// Bytes written through to spill segment files (gutter flushes,
+    /// LRU evictions, checkpoints) across all k copies.
+    pub spill_bytes_written: AtomicU64,
+    /// Bytes appended to the write-ahead log (record framing included).
+    pub wal_bytes: AtomicU64,
+    /// Cold sketch blocks faulted in from segment files across all k
+    /// copies (second-touch promotions and query reads of spilled
+    /// vertices).
+    pub block_faults: AtomicU64,
+    /// Gauge: CAMEO sketch bytes currently resident in memory across
+    /// all k copies — for spill backings this is what the
+    /// `resident_budget_bytes` knob bounds; for resident/hybrid
+    /// backings it equals `store_sketch_bytes`.
+    pub resident_sketch_bytes: AtomicU64,
+    /// Sessions that came up through [`crate::Landscape::recover`]
+    /// (WAL-tail replay over checkpointed segments).
+    pub recoveries: AtomicU64,
 }
 
 /// A plain-value copy of [`Metrics`] — each field mirrors the counter
@@ -151,6 +168,16 @@ pub struct MetricsSnapshot {
     pub store_sketch_bytes: u64,
     /// See [`Metrics::store_exact_bytes`].
     pub store_exact_bytes: u64,
+    /// See [`Metrics::spill_bytes_written`].
+    pub spill_bytes_written: u64,
+    /// See [`Metrics::wal_bytes`].
+    pub wal_bytes: u64,
+    /// See [`Metrics::block_faults`].
+    pub block_faults: u64,
+    /// See [`Metrics::resident_sketch_bytes`].
+    pub resident_sketch_bytes: u64,
+    /// See [`Metrics::recoveries`].
+    pub recoveries: u64,
 }
 
 impl Metrics {
@@ -221,6 +248,11 @@ impl Metrics {
             vertices_sketched: Self::rd(&self.vertices_sketched),
             store_sketch_bytes: Self::rd(&self.store_sketch_bytes),
             store_exact_bytes: Self::rd(&self.store_exact_bytes),
+            spill_bytes_written: Self::rd(&self.spill_bytes_written),
+            wal_bytes: Self::rd(&self.wal_bytes),
+            block_faults: Self::rd(&self.block_faults),
+            resident_sketch_bytes: Self::rd(&self.resident_sketch_bytes),
+            recoveries: Self::rd(&self.recoveries),
         }
     }
 }

@@ -81,6 +81,7 @@ use crate::hypertree::{BatchSink, Hypertree, HypertreeConfig, VertexBatch};
 use crate::metrics::{Metrics, MetricsSnapshot};
 use crate::sketch::params::SketchParams;
 use crate::sketch::shard::ShardSpec;
+use crate::storage::{Backing, DurabilityLog, SpillBacking, SpillConfig};
 use crate::stream::update::Update;
 
 /// Default bounded size of each ingest handle's update log (updates
@@ -133,6 +134,23 @@ pub enum ConfigError {
     /// would be empty (or inverted) and vertices would oscillate between
     /// tiers on every update at the boundary.
     HybridFloorTooHigh(u32, u32),
+    /// `storage_dir` was set together with a nonzero `hybrid_threshold`
+    /// — the spill tier keeps every vertex as a fixed-size on-disk
+    /// block and cannot host the hybrid tier's variable-size exact
+    /// sets.
+    SpillWithHybrid,
+    /// `resident_budget_bytes` was set without `storage_dir` — a
+    /// resident budget only means something when there is somewhere to
+    /// spill to.
+    BudgetWithoutStorageDir,
+    /// `resident_budget_bytes` cannot hold one sketch block per shard
+    /// stripe per copy (`(given, minimum)`); below that the LRU would
+    /// thrash on every merge.
+    ResidentBudgetTooSmall(u64, u64),
+    /// Opening the storage tier failed (segment files, WAL, or WAL-tail
+    /// replay).  A fresh `build()` refuses a directory that already
+    /// holds a WAL — use [`Landscape::recover`] for that.
+    StorageIo(String),
 }
 
 impl std::fmt::Display for ConfigError {
@@ -172,6 +190,30 @@ impl std::fmt::Display for ConfigError {
                      hybrid_threshold = {threshold} (hysteresis band)"
                 )
             }
+            ConfigError::SpillWithHybrid => {
+                write!(
+                    f,
+                    "storage_dir cannot be combined with hybrid_threshold: the \
+                     spill tier stores fixed-size sketch blocks only"
+                )
+            }
+            ConfigError::BudgetWithoutStorageDir => {
+                write!(
+                    f,
+                    "resident_budget_bytes requires storage_dir (nothing to \
+                     spill to otherwise)"
+                )
+            }
+            ConfigError::ResidentBudgetTooSmall(given, min) => {
+                write!(
+                    f,
+                    "resident_budget_bytes = {given} cannot hold one sketch \
+                     block per shard stripe per copy (minimum {min})"
+                )
+            }
+            ConfigError::StorageIo(msg) => {
+                write!(f, "storage tier setup failed: {msg}")
+            }
         }
     }
 }
@@ -186,6 +228,8 @@ impl std::error::Error for ConfigError {}
 pub struct LandscapeBuilder {
     cfg: CoordinatorConfig,
     update_log_capacity: usize,
+    storage_dir: Option<std::path::PathBuf>,
+    resident_budget_bytes: Option<u64>,
 }
 
 impl Default for LandscapeBuilder {
@@ -200,6 +244,8 @@ impl LandscapeBuilder {
         Self {
             cfg: CoordinatorConfig::for_vertices(0),
             update_log_capacity: DEFAULT_UPDATE_LOG_CAPACITY,
+            storage_dir: None,
+            resident_budget_bytes: None,
         }
     }
 
@@ -208,6 +254,8 @@ impl LandscapeBuilder {
         Self {
             cfg,
             update_log_capacity: DEFAULT_UPDATE_LOG_CAPACITY,
+            storage_dir: None,
+            resident_budget_bytes: None,
         }
     }
 
@@ -308,6 +356,29 @@ impl LandscapeBuilder {
         self
     }
 
+    /// Back the sketch store with the external-memory spill tier under
+    /// `dir`: segment files per copy plus an append-only write-ahead
+    /// log, fsync'd at epoch cuts so [`Landscape::flush`] doubles as a
+    /// durability point.  A fresh `build()` refuses a directory that
+    /// already holds a WAL; reopen such a directory with
+    /// [`Landscape::recover`] instead.  Mutually exclusive with the
+    /// hybrid tier.  See `docs/STORAGE.md`.
+    pub fn storage_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.storage_dir = Some(dir.into());
+        self
+    }
+
+    /// Bound on in-memory sketch bytes per session when spilling:
+    /// each copy's store keeps a bounded LRU set of hot vertex blocks
+    /// resident and pages the rest to its segment files.  Unset means
+    /// unlimited (durability without spilling).  Requires
+    /// [`LandscapeBuilder::storage_dir`]; must hold at least one block
+    /// per shard stripe per copy.
+    pub fn resident_budget_bytes(mut self, bytes: u64) -> Self {
+        self.resident_budget_bytes = Some(bytes);
+        self
+    }
+
     /// Check every knob, returning the first violation.
     pub fn validate(&self) -> Result<(), ConfigError> {
         let c = &self.cfg;
@@ -355,14 +426,106 @@ impl LandscapeBuilder {
                 c.hybrid_threshold,
             ));
         }
+        if self.storage_dir.is_some() && c.hybrid_threshold > 0 {
+            return Err(ConfigError::SpillWithHybrid);
+        }
+        if self.resident_budget_bytes.is_some() && self.storage_dir.is_none() {
+            return Err(ConfigError::BudgetWithoutStorageDir);
+        }
+        if let Some(budget) = self.resident_budget_bytes {
+            // one block per shard stripe per copy, or the LRU thrashes
+            // on every merge
+            let block_bytes = 8 + c.params().words() as u64 * 8;
+            let min = c.k as u64 * c.shard_spec().count() as u64 * block_bytes;
+            if budget < min {
+                return Err(ConfigError::ResidentBudgetTooSmall(budget, min));
+            }
+        }
         Ok(())
     }
 
-    /// Validate and build the session.
+    /// Validate and build the session (fresh state; refuses a
+    /// `storage_dir` that already holds a WAL).
     pub fn build(self) -> Result<Landscape, ConfigError> {
         self.validate()?;
-        Ok(Landscape::spawn(self.cfg, self.update_log_capacity))
+        let storage = self.open_storage(false)?;
+        Landscape::spawn(self.cfg, self.update_log_capacity, storage)
     }
+
+    /// Validate and **recover** the session from its `storage_dir`:
+    /// reopen the checkpointed segment files, replay the WAL tail past
+    /// the last durable cut, and resume.  See [`Landscape::recover`].
+    pub fn recover(self) -> Result<Landscape, ConfigError> {
+        self.validate()?;
+        if self.storage_dir.is_none() {
+            return Err(ConfigError::StorageIo(
+                "recover requires storage_dir".to_string(),
+            ));
+        }
+        let storage = self.open_storage(true)?;
+        Landscape::spawn(self.cfg, self.update_log_capacity, storage)
+    }
+
+    /// Open the spill backings (one per copy) and the WAL under
+    /// `storage_dir`; `None` when the session is purely resident.
+    fn open_storage(&self, recovering: bool) -> Result<Option<StorageRuntime>, ConfigError> {
+        let Some(dir) = &self.storage_dir else {
+            return Ok(None);
+        };
+        let io = |e: std::io::Error| ConfigError::StorageIo(e.to_string());
+        std::fs::create_dir_all(dir).map_err(io)?;
+        let c = &self.cfg;
+        let params = c.params();
+        let spec = c.shard_spec();
+        let k = c.k as usize;
+        let per_copy = match self.resident_budget_bytes {
+            // unset = unlimited: durability without spilling
+            None => u64::MAX,
+            Some(b) => b / k as u64,
+        };
+        let wal_path = dir.join("wal.log");
+        let wal = if recovering {
+            DurabilityLog::open_append(&wal_path).map_err(io)?
+        } else {
+            // create_new underneath: an existing WAL means live state —
+            // refusing here is what makes accidental clobbering a typed
+            // error instead of silent data loss
+            DurabilityLog::create(&wal_path).map_err(|e| {
+                if e.kind() == std::io::ErrorKind::AlreadyExists {
+                    ConfigError::StorageIo(format!(
+                        "{} already holds a WAL — use Landscape::recover \
+                         to reopen it",
+                        dir.display()
+                    ))
+                } else {
+                    io(e)
+                }
+            })?
+        };
+        let wal = Arc::new(wal);
+        let mut backings = Vec::with_capacity(k);
+        for copy in 0..k {
+            let scfg = SpillConfig::new(dir.join(format!("copy{copy}")), per_copy);
+            let backing =
+                SpillBacking::open(params.words(), c.vertices, spec, &scfg, wal.watermark())
+                    .map_err(io)?;
+            backings.push(Backing::Spill(backing));
+        }
+        Ok(Some(StorageRuntime {
+            backings,
+            wal,
+            recovering,
+        }))
+    }
+}
+
+/// Opened storage-tier state handed from the builder to
+/// [`Landscape::spawn`]: the per-copy backings, the shared WAL, and
+/// whether a WAL-tail replay is owed before ingest resumes.
+struct StorageRuntime {
+    backings: Vec<Backing>,
+    wal: Arc<DurabilityLog>,
+    recovering: bool,
 }
 
 /// Report returned by [`IngestHandle::ingest_all`].
@@ -507,6 +670,10 @@ pub(crate) struct SessionCore {
     /// while every *pre-cut* update is fully merged at both endpoints
     /// before the read begins (that is what `wait_for_cut` waited for).
     merge_gate: Arc<RwLock<()>>,
+    /// The write-ahead log when the store spills (`storage_dir` set):
+    /// distributors append to it before merging; [`Landscape::flush`]
+    /// checkpoints the segments and fsyncs a cut marker through it.
+    wal: Option<Arc<DurabilityLog>>,
     pub(crate) update_log_capacity: usize,
     active_handles: AtomicUsize,
     /// Live handles currently holding *unpublished* updates (private
@@ -707,6 +874,30 @@ impl SessionCore {
         self.query.apply_log(updates);
     }
 
+    /// The durable mark behind [`Landscape::flush`]: checkpoint every
+    /// copy's segment files, then append + fsync a cut marker to the
+    /// WAL.  Taken under the merge gate's **exclusive** side so no
+    /// record can slip in between the checkpoint and the marker — a
+    /// record there would be behind the marker (never replayed) yet
+    /// absent from the checkpoint, i.e. silently lost.  A no-op for
+    /// purely resident sessions.
+    pub(crate) fn durable_mark(&self, epoch: u64) {
+        let Some(wal) = &self.wal else {
+            return;
+        };
+        let _gate = self.merge_gate.write().unwrap();
+        let marked = self
+            .kconn
+            .checkpoint()
+            .and_then(|()| wal.cut_sync(epoch));
+        match marked {
+            Ok(bytes) => Metrics::add(&self.metrics.wal_bytes, bytes),
+            // state stays consistent (the WAL tail just keeps growing
+            // past the previous durable cut); surface it loudly
+            Err(e) => crate::log_warn!("session: durable cut failed: {e}"),
+        }
+    }
+
     /// Refresh the store-derived gauges from sketch-store truth, then
     /// snapshot.  The gauges (tier populations, resident bytes) are
     /// point-in-time facts owned by the stores, not monotone counters —
@@ -723,6 +914,15 @@ impl SessionCore {
         Metrics::set(
             &self.metrics.store_exact_bytes,
             self.kconn.exact_bytes() as u64,
+        );
+        Metrics::set(
+            &self.metrics.resident_sketch_bytes,
+            self.kconn.resident_sketch_bytes(),
+        );
+        Metrics::set(&self.metrics.block_faults, self.kconn.block_faults());
+        Metrics::set(
+            &self.metrics.spill_bytes_written,
+            self.kconn.spill_bytes_written(),
         );
         self.metrics.snapshot()
     }
@@ -763,18 +963,64 @@ impl Landscape {
         LandscapeBuilder::from_config(config).build()
     }
 
-    /// Construct the engine room.  `config` has been validated.
-    fn spawn(config: CoordinatorConfig, update_log_capacity: usize) -> Self {
+    /// Recover a session from its `storage_dir`: reopen the
+    /// checkpointed segment files, replay the WAL tail past the last
+    /// durable cut (idempotently, via per-block LSNs), and resume
+    /// ingest where the durable state left off.  The builder must
+    /// carry the same shape knobs (`vertices`, `k`, `columns`,
+    /// `graph_seed`, `distributor_threads`) the crashed session had.
+    pub fn recover(builder: LandscapeBuilder) -> Result<Self, ConfigError> {
+        builder.recover()
+    }
+
+    /// Construct the engine room.  `config` has been validated;
+    /// `storage` is the opened spill tier when `storage_dir` was set.
+    fn spawn(
+        config: CoordinatorConfig,
+        update_log_capacity: usize,
+        storage: Option<StorageRuntime>,
+    ) -> Result<Self, ConfigError> {
         let params = config.params();
         let spec = config.shard_spec();
         let metrics = Arc::new(Metrics::new());
-        let kconn = Arc::new(KConnectivity::with_shards_hybrid(
-            params,
-            config.graph_seed,
-            config.k,
-            spec,
-            config.hybrid(),
-        ));
+        let (kconn, wal, recovering) = match storage {
+            Some(rt) => {
+                let kconn = Arc::new(KConnectivity::with_shards_storage(
+                    params,
+                    config.graph_seed,
+                    config.k,
+                    spec,
+                    rt.backings,
+                ));
+                (kconn, Some(rt.wal), rt.recovering)
+            }
+            None => {
+                let kconn = Arc::new(KConnectivity::with_shards_hybrid(
+                    params,
+                    config.graph_seed,
+                    config.k,
+                    spec,
+                    config.hybrid(),
+                ));
+                (kconn, None, false)
+            }
+        };
+        if let (true, Some(wal)) = (recovering, wal.as_ref()) {
+            // no distributors are running yet: the stores are privately
+            // owned here, so replay needs no gate
+            let stats = crate::storage::replay_into(kconn.stores(), wal.path())
+                .map_err(|e| ConfigError::StorageIo(format!("WAL replay failed: {e}")))?;
+            Metrics::add(&metrics.recoveries, 1);
+            crate::log_info!(
+                "session: recovered from {} — replayed {}/{} WAL tail records \
+                 ({} already persisted{})",
+                wal.path().display(),
+                stats.replayed,
+                stats.tail_records,
+                stats.skipped,
+                if stats.torn_tail { ", torn tail dropped" } else { "" }
+            );
+        }
         let queue = Arc::new(ShardedWorkQueue::new(spec.count(), config.queue_capacity));
         let barrier = Arc::new(EpochBarrier::new());
         let arena = Arc::new(BatchArena::new(spec.count()));
@@ -812,11 +1058,20 @@ impl Landscape {
             barrier,
             query_serial: Mutex::new(()),
             merge_gate: Arc::new(RwLock::new(())),
+            wal,
             update_log_capacity,
             active_handles: AtomicUsize::new(0),
             pending_handles: AtomicUsize::new(0),
             config,
         });
+
+        if recovering && core.query.enabled() {
+            // the GreedyCC accelerator did not survive the crash:
+            // re-seed it from the recovered sketches, or tier 0 would
+            // confidently certify a fresh all-singleton partition
+            let result = boruvka_components(&core.kconn.stores()[0]);
+            core.query.reseed(core.params.v, &result.forest);
+        }
 
         // one distributor per shard: thread `shard` is the only writer
         // of sketch shard `shard` during ingestion, so its merges use
@@ -841,11 +1096,12 @@ impl Landscape {
                 barrier: core.barrier.clone(),
                 merge_gate: core.merge_gate.clone(),
                 arena: arena.clone(),
+                wal: core.wal.clone(),
             };
             distributors.push(std::thread::spawn(move || d.run()));
         }
 
-        Self { core, distributors }
+        Ok(Self { core, distributors })
     }
 
     /// Spawn an independent ingestion handle (one per producer thread).
@@ -879,9 +1135,18 @@ impl Landscape {
     /// stream: producers that keep publishing during the call land in
     /// later epochs and never extend it.  Equivalent to
     /// `wait_for(cut())`.
+    ///
+    /// When the session spills (`storage_dir` set) this is also the
+    /// **durability point**: after the wait retires the cut, the
+    /// segment files are checkpointed and a cut marker is fsync'd
+    /// through the WAL, so everything published before this call
+    /// survives a crash (see `docs/STORAGE.md`).  Queries take cuts
+    /// too, but only `flush()` pays for durability.
     pub fn flush(&self) {
         let cut = self.core.cut_shared();
+        let epoch = cut.epoch();
         self.core.wait_for_cut(cut);
+        self.core.durable_mark(epoch);
     }
 
     /// Take a stream cut *without waiting*: force-flush the shared
@@ -1146,6 +1411,102 @@ mod tests {
         assert!(msg.contains("gamma"), "{msg}");
         let msg = ConfigError::NoRemoteWorkerAddrs.to_string();
         assert!(msg.contains("address"), "{msg}");
+        let msg = ConfigError::ResidentBudgetTooSmall(8, 4096).to_string();
+        assert!(msg.contains("resident_budget_bytes"), "{msg}");
+    }
+
+    #[test]
+    fn builder_rejects_bad_storage_combos() {
+        // all three rejections fire in validate(), before any I/O —
+        // the named directory must never be created
+        let dir = "/nonexistent/landscape-validate-only";
+        assert_eq!(
+            Landscape::builder()
+                .vertices(16)
+                .hybrid_threshold(4)
+                .storage_dir(dir)
+                .build()
+                .err(),
+            Some(ConfigError::SpillWithHybrid)
+        );
+        assert_eq!(
+            Landscape::builder()
+                .vertices(16)
+                .resident_budget_bytes(1 << 20)
+                .build()
+                .err(),
+            Some(ConfigError::BudgetWithoutStorageDir)
+        );
+        let err = Landscape::builder()
+            .vertices(16)
+            .storage_dir(dir)
+            .resident_budget_bytes(8)
+            .build()
+            .err()
+            .expect("a budget below one block per stripe must be rejected");
+        assert!(
+            matches!(err, ConfigError::ResidentBudgetTooSmall(8, _)),
+            "{err:?}"
+        );
+    }
+
+    fn storage_tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "landscape-session-{}-{name}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn spill_session_matches_referee_refuses_clobber_and_recovers() {
+        let v = 128u64;
+        let model = ErdosRenyi::new(v, 0.1, 909);
+        let want = ref_partition(v, &edge_list(&model));
+        let updates: Vec<Update> = Dynamify::new(model, 3).collect();
+        let dir = storage_tmp("spill-roundtrip");
+        let budget = 64 * 1024u64;
+        let builder = || {
+            Landscape::builder()
+                .vertices(v)
+                .alpha(1)
+                .distributor_threads(2)
+                .storage_dir(&dir)
+                .resident_budget_bytes(budget)
+        };
+
+        let session = builder().build().unwrap();
+        let mut h = session.ingest_handle();
+        for u in &updates {
+            h.ingest(*u);
+        }
+        h.flush();
+        session.flush(); // the durable mark
+        let forest = session.query_handle().connected_components();
+        assert!(same_partition(&forest.component, &want));
+        let m = session.metrics();
+        assert_eq!(m.batches_dropped, 0);
+        assert!(m.wal_bytes > 0, "merges must have been logged");
+        assert!(
+            m.resident_sketch_bytes <= budget,
+            "gauge {} exceeds the budget {budget}",
+            m.resident_sketch_bytes
+        );
+        drop(session);
+
+        // a second fresh build on the same directory must refuse to
+        // clobber the live WAL…
+        let err = builder().build().err().expect("existing WAL refused");
+        assert!(matches!(err, ConfigError::StorageIo(_)), "{err:?}");
+
+        // …while recovery reopens it and answers the same partition
+        let recovered = builder().recover().unwrap();
+        let rf = recovered.query_handle().connected_components();
+        assert!(same_partition(&rf.component, &want));
+        assert_eq!(recovered.metrics().recoveries, 1);
+        drop(recovered);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     fn small_session(v: u64) -> Landscape {

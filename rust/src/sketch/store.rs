@@ -51,6 +51,17 @@
 //! own distributor thread, reads hold the session merge gate
 //! exclusively), it simply makes the plain non-atomic slot contents
 //! data-race-free without adding relaxed atomics outside the kernels.
+//!
+//! **Storage backing** (`storage/`): the dense arrays above are one of
+//! two interchangeable backings behind [`crate::storage::Backing`].
+//! [`ResidentBacking`] (defined here so the relaxed-atomic kernels
+//! stay inside this file, the `landscape_lint` Relaxed whitelist)
+//! keeps everything in RAM; [`crate::storage::SpillBacking`] keeps a
+//! bounded hot set resident and pages cold per-vertex blocks to
+//! segment files, with WAL-tail replay for crash recovery.  The spill
+//! backing is mutually exclusive with the hybrid tier (enforced by the
+//! session builder): spilling pages fixed-size CAMEO blocks, not
+//! variable-size exact sets.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -59,6 +70,7 @@ use crate::sketch::params::SketchParams;
 use crate::sketch::seeds::SketchSeeds;
 use crate::sketch::shard::ShardSpec;
 use crate::sketch::CameoSketch;
+use crate::storage::{Backing, SketchBacking};
 
 /// Configuration for the hybrid sparse/dense vertex representation.
 ///
@@ -154,14 +166,229 @@ fn lock_shard(m: &Mutex<HybridShard>) -> std::sync::MutexGuard<'_, HybridShard> 
     m.lock().unwrap_or_else(|p| p.into_inner())
 }
 
+/// The all-resident dense storage backing: per-shard arrays of atomic
+/// sketch words, with the 8-way unrolled XOR-merge kernels.
+///
+/// Defined in this file (rather than `storage/`) so the
+/// `Ordering::Relaxed` kernel bodies stay inside `sketch/store.rs`,
+/// the single file `landscape_lint`'s Relaxed-ordering whitelist
+/// names; `storage/` re-exports it as part of the backing surface.
+/// The single-writer-per-shard debug detector stays one level up in
+/// [`SketchStore`], which owns the writer tags.
+pub struct ResidentBacking {
+    words: usize,
+    spec: ShardSpec,
+    shards: Vec<Vec<AtomicU64>>,
+}
+
+impl ResidentBacking {
+    /// Eagerly allocate all-zero dense arrays for `vertices` blocks of
+    /// `words` words, partitioned per `spec`.
+    pub fn new(words: usize, vertices: u64, spec: ShardSpec) -> Self {
+        let shards = (0..spec.count())
+            .map(|s| {
+                let total = spec.shard_len(s, vertices) * words;
+                let mut shard = Vec::with_capacity(total);
+                shard.resize_with(total, || AtomicU64::new(0));
+                shard
+            })
+            .collect();
+        Self {
+            words,
+            spec,
+            shards,
+        }
+    }
+
+    /// An empty backing (no dense arrays) — the placeholder a hybrid
+    /// store carries, since hybrid state lives in per-slot blocks.
+    pub fn empty(words: usize, spec: ShardSpec) -> Self {
+        Self {
+            words,
+            spec,
+            shards: (0..spec.count()).map(|_| Vec::new()).collect(),
+        }
+    }
+
+    /// Words per vertex block.
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    /// Shard words + within-shard word offset of vertex `u`.
+    #[inline(always)]
+    fn locate(&self, u: u32) -> (&[AtomicU64], usize) {
+        (
+            self.shards[self.spec.shard_of(u)].as_slice(),
+            self.spec.slot_of(u) * self.words,
+        )
+    }
+
+    /// XOR-merge a full-block delta into vertex `u` (thread-safe under
+    /// arbitrary concurrency: atomic relaxed `fetch_xor`).  8-way
+    /// unrolled; zero delta words are skipped because an atomic RMW
+    /// dwarfs the branch.  Bit-identical to
+    /// [`Self::merge_delta_scalar`].
+    pub fn merge_delta(&self, u: u32, delta: &[u64]) {
+        debug_assert_eq!(delta.len(), self.words);
+        let (shard, base) = self.locate(u);
+        let dst = &shard[base..base + delta.len()];
+        let mut dc = delta.chunks_exact(8);
+        let mut wc = dst.chunks_exact(8);
+        for (d, w) in (&mut dc).zip(&mut wc) {
+            let [d0, d1, d2, d3, d4, d5, d6, d7] = d else {
+                unreachable!()
+            };
+            let [w0, w1, w2, w3, w4, w5, w6, w7] = w else {
+                unreachable!()
+            };
+            if *d0 != 0 {
+                w0.fetch_xor(*d0, Ordering::Relaxed);
+            }
+            if *d1 != 0 {
+                w1.fetch_xor(*d1, Ordering::Relaxed);
+            }
+            if *d2 != 0 {
+                w2.fetch_xor(*d2, Ordering::Relaxed);
+            }
+            if *d3 != 0 {
+                w3.fetch_xor(*d3, Ordering::Relaxed);
+            }
+            if *d4 != 0 {
+                w4.fetch_xor(*d4, Ordering::Relaxed);
+            }
+            if *d5 != 0 {
+                w5.fetch_xor(*d5, Ordering::Relaxed);
+            }
+            if *d6 != 0 {
+                w6.fetch_xor(*d6, Ordering::Relaxed);
+            }
+            if *d7 != 0 {
+                w7.fetch_xor(*d7, Ordering::Relaxed);
+            }
+        }
+        for (&d, w) in dc.remainder().iter().zip(wc.remainder()) {
+            if d != 0 {
+                w.fetch_xor(d, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Scalar reference for [`Self::merge_delta`] (correctness oracle
+    /// and bench baseline).
+    pub fn merge_delta_scalar(&self, u: u32, delta: &[u64]) {
+        debug_assert_eq!(delta.len(), self.words);
+        let (shard, base) = self.locate(u);
+        for (i, &d) in delta.iter().enumerate() {
+            if d != 0 {
+                shard[base + i].fetch_xor(d, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// XOR-merge on the shard owner's fast path: plain relaxed
+    /// load/store, correct only under the single-writer-per-shard
+    /// contract (enforced in debug builds by [`SketchStore`]'s writer
+    /// tags).  8-way unrolled, all loads before all stores, no
+    /// per-word zero branch.  Bit-identical to
+    /// [`Self::merge_delta_exclusive_scalar`].
+    pub fn merge_delta_exclusive(&self, u: u32, delta: &[u64]) {
+        debug_assert_eq!(delta.len(), self.words);
+        let (shard, base) = self.locate(u);
+        let dst = &shard[base..base + delta.len()];
+        let mut dc = delta.chunks_exact(8);
+        let mut wc = dst.chunks_exact(8);
+        for (d, w) in (&mut dc).zip(&mut wc) {
+            let [d0, d1, d2, d3, d4, d5, d6, d7] = d else {
+                unreachable!()
+            };
+            let [w0, w1, w2, w3, w4, w5, w6, w7] = w else {
+                unreachable!()
+            };
+            // all loads before all stores: eight independent XOR chains
+            let x0 = w0.load(Ordering::Relaxed) ^ *d0;
+            let x1 = w1.load(Ordering::Relaxed) ^ *d1;
+            let x2 = w2.load(Ordering::Relaxed) ^ *d2;
+            let x3 = w3.load(Ordering::Relaxed) ^ *d3;
+            let x4 = w4.load(Ordering::Relaxed) ^ *d4;
+            let x5 = w5.load(Ordering::Relaxed) ^ *d5;
+            let x6 = w6.load(Ordering::Relaxed) ^ *d6;
+            let x7 = w7.load(Ordering::Relaxed) ^ *d7;
+            w0.store(x0, Ordering::Relaxed);
+            w1.store(x1, Ordering::Relaxed);
+            w2.store(x2, Ordering::Relaxed);
+            w3.store(x3, Ordering::Relaxed);
+            w4.store(x4, Ordering::Relaxed);
+            w5.store(x5, Ordering::Relaxed);
+            w6.store(x6, Ordering::Relaxed);
+            w7.store(x7, Ordering::Relaxed);
+        }
+        for (&d, w) in dc.remainder().iter().zip(wc.remainder()) {
+            w.store(w.load(Ordering::Relaxed) ^ d, Ordering::Relaxed);
+        }
+    }
+
+    /// Scalar reference for [`Self::merge_delta_exclusive`] (same
+    /// single-writer contract).
+    pub fn merge_delta_exclusive_scalar(&self, u: u32, delta: &[u64]) {
+        debug_assert_eq!(delta.len(), self.words);
+        let (shard, base) = self.locate(u);
+        for (i, &d) in delta.iter().enumerate() {
+            if d != 0 {
+                let w = &shard[base + i];
+                w.store(w.load(Ordering::Relaxed) ^ d, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Copy `dst.len()` words of vertex `u`'s block starting at word
+    /// `word_off` (relaxed loads — only sound while no writer is
+    /// mid-delta on `u`'s shard, which the session's merge gate
+    /// guarantees to readers).
+    pub fn read_words_into(&self, u: u32, word_off: usize, dst: &mut [u64]) {
+        let (shard, base) = self.locate(u);
+        let src = &shard[base + word_off..base + word_off + dst.len()];
+        for (d, w) in dst.iter_mut().zip(src) {
+            *d = w.load(Ordering::Relaxed);
+        }
+    }
+
+    /// XOR `acc.len()` words of vertex `u`'s block (from `word_off`)
+    /// into `acc` — the supernode aggregation primitive.
+    pub fn xor_words_into(&self, u: u32, word_off: usize, acc: &mut [u64]) {
+        let (shard, base) = self.locate(u);
+        let src = &shard[base + word_off..base + word_off + acc.len()];
+        for (a, w) in acc.iter_mut().zip(src) {
+            *a ^= w.load(Ordering::Relaxed);
+        }
+    }
+
+    /// Reset every bucket to zero.
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            for w in shard {
+                w.store(0, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Total resident sketch bytes (the full eager allocation).
+    pub fn resident_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.len() as u64 * 8).sum()
+    }
+}
+
 /// The main node's graph sketch: V vertex sketches across N shards.
 pub struct SketchStore {
     params: SketchParams,
     seeds: SketchSeeds,
     spec: ShardSpec,
-    shards: Vec<Vec<AtomicU64>>,
-    /// `Some` enables the hybrid sparse/dense tier; the dense `shards`
-    /// arrays above are then empty and all state lives here.
+    /// Where the dense sketch words live: all-resident arrays or the
+    /// spill tier.  Hybrid mode carries an empty resident backing —
+    /// hybrid state lives in per-slot blocks below.
+    backing: Backing,
+    /// `Some` enables the hybrid sparse/dense tier; the dense backing
+    /// above is then empty and all state lives here.
     hybrid: Option<HybridState>,
     /// Debug-only per-shard writer-ownership tags (0 = free, else the
     /// owning thread's [`thread_tag`]).  The exclusive merge kernels
@@ -225,18 +452,39 @@ impl SketchStore {
         hybrid: Option<HybridConfig>,
     ) -> Self {
         let words = params.words();
-        let shards: Vec<Vec<AtomicU64>> = if hybrid.is_some() {
-            (0..spec.count()).map(|_| Vec::new()).collect()
+        let backing = if hybrid.is_some() {
+            Backing::Resident(ResidentBacking::empty(words, spec))
         } else {
-            (0..spec.count())
-                .map(|s| {
-                    let total = spec.shard_len(s, params.v) * words;
-                    let mut shard = Vec::with_capacity(total);
-                    shard.resize_with(total, || AtomicU64::new(0));
-                    shard
-                })
-                .collect()
+            Backing::Resident(ResidentBacking::new(words, params.v, spec))
         };
+        Self::build(params, graph_seed, spec, backing, hybrid)
+    }
+
+    /// Allocate a store over an explicit storage backing (the spill
+    /// tier's entry point — see [`crate::storage`]).  The backing's
+    /// block width must match `params.words()`, and a spill backing is
+    /// mutually exclusive with the hybrid tier.
+    pub fn with_backing(
+        params: SketchParams,
+        graph_seed: u64,
+        spec: ShardSpec,
+        backing: Backing,
+    ) -> Self {
+        debug_assert_eq!(backing.words(), params.words());
+        Self::build(params, graph_seed, spec, backing, None)
+    }
+
+    fn build(
+        params: SketchParams,
+        graph_seed: u64,
+        spec: ShardSpec,
+        backing: Backing,
+        hybrid: Option<HybridConfig>,
+    ) -> Self {
+        debug_assert!(
+            hybrid.is_none() || matches!(backing, Backing::Resident(_)),
+            "the hybrid tier pages variable-size exact sets; it cannot spill"
+        );
         let hybrid = hybrid.map(|cfg| HybridState {
             cfg,
             shards: (0..spec.count())
@@ -252,7 +500,7 @@ impl SketchStore {
             seeds: SketchSeeds::derive(&params, graph_seed),
             params,
             spec,
-            shards,
+            backing,
             hybrid,
             #[cfg(debug_assertions)]
             writer_tags: (0..spec.count()).map(|_| AtomicU64::new(0)).collect(),
@@ -319,10 +567,11 @@ impl SketchStore {
     }
 
     /// Bytes of CAMEO sketch words currently resident (dense mode: the
-    /// full eager allocation; hybrid: promoted vertices only).
+    /// full eager allocation; spill mode: the bounded hot set; hybrid:
+    /// promoted vertices only).
     pub fn sketch_bytes(&self) -> usize {
         match &self.hybrid {
-            None => self.shards.iter().map(|s| s.len() * 8).sum(),
+            None => self.backing.resident_bytes() as usize,
             Some(h) => {
                 let block = self.params.words() * 8;
                 h.shards
@@ -385,69 +634,31 @@ impl SketchStore {
         (exact, sketched)
     }
 
-    /// Shard words + within-shard word offset of vertex `u`.
+    /// Debug checks shared by every dense-path (non-hybrid) entry.
     #[inline(always)]
-    fn locate(&self, u: u32) -> (&[AtomicU64], usize) {
+    fn debug_check_dense(&self, u: u32) {
+        let _ = u;
         debug_assert!((u as u64) < self.params.v);
         debug_assert!(
             self.hybrid.is_none(),
             "dense-path access on a hybrid store; use the hybrid entry points"
         );
-        (
-            self.shards[self.spec.shard_of(u)].as_slice(),
-            self.spec.slot_of(u) * self.params.words(),
-        )
     }
 
-
     /// XOR-merge a vertex-sketch delta into vertex `u` (thread-safe
-    /// under arbitrary concurrency: atomic relaxed `fetch_xor`).
+    /// under arbitrary concurrency on the resident backing: atomic
+    /// relaxed `fetch_xor`; the spill backing serializes per stripe).
     ///
-    /// 8-way unrolled over u64 chunks; zero delta words are skipped
-    /// because an atomic RMW dwarfs the branch.  Bit-identical to
-    /// [`Self::merge_delta_scalar`] (property-tested, tails included).
+    /// Resident: 8-way unrolled over u64 chunks; zero delta words are
+    /// skipped because an atomic RMW dwarfs the branch.  Bit-identical
+    /// to [`Self::merge_delta_scalar`] (property-tested, tails
+    /// included).
     pub fn merge_delta(&self, u: u32, delta: &[u64]) {
         debug_assert_eq!(delta.len(), self.params.words());
-        let (shard, base) = self.locate(u);
-        let dst = &shard[base..base + delta.len()];
-        let mut dc = delta.chunks_exact(8);
-        let mut wc = dst.chunks_exact(8);
-        for (d, w) in (&mut dc).zip(&mut wc) {
-            let [d0, d1, d2, d3, d4, d5, d6, d7] = d else {
-                unreachable!()
-            };
-            let [w0, w1, w2, w3, w4, w5, w6, w7] = w else {
-                unreachable!()
-            };
-            if *d0 != 0 {
-                w0.fetch_xor(*d0, Ordering::Relaxed);
-            }
-            if *d1 != 0 {
-                w1.fetch_xor(*d1, Ordering::Relaxed);
-            }
-            if *d2 != 0 {
-                w2.fetch_xor(*d2, Ordering::Relaxed);
-            }
-            if *d3 != 0 {
-                w3.fetch_xor(*d3, Ordering::Relaxed);
-            }
-            if *d4 != 0 {
-                w4.fetch_xor(*d4, Ordering::Relaxed);
-            }
-            if *d5 != 0 {
-                w5.fetch_xor(*d5, Ordering::Relaxed);
-            }
-            if *d6 != 0 {
-                w6.fetch_xor(*d6, Ordering::Relaxed);
-            }
-            if *d7 != 0 {
-                w7.fetch_xor(*d7, Ordering::Relaxed);
-            }
-        }
-        for (&d, w) in dc.remainder().iter().zip(wc.remainder()) {
-            if d != 0 {
-                w.fetch_xor(d, Ordering::Relaxed);
-            }
+        self.debug_check_dense(u);
+        match &self.backing {
+            Backing::Resident(r) => r.merge_delta(u, delta),
+            Backing::Spill(s) => s.merge_delta(u, delta, s.watermark_now()),
         }
     }
 
@@ -456,11 +667,10 @@ impl SketchStore {
     /// as a baseline row in the bench trajectory.
     pub fn merge_delta_scalar(&self, u: u32, delta: &[u64]) {
         debug_assert_eq!(delta.len(), self.params.words());
-        let (shard, base) = self.locate(u);
-        for (i, &d) in delta.iter().enumerate() {
-            if d != 0 {
-                shard[base + i].fetch_xor(d, Ordering::Relaxed);
-            }
+        self.debug_check_dense(u);
+        match &self.backing {
+            Backing::Resident(r) => r.merge_delta_scalar(u, delta),
+            Backing::Spill(s) => s.merge_delta(u, delta, s.watermark_now()),
         }
     }
 
@@ -474,46 +684,21 @@ impl SketchStore {
     /// same-shard writers could lose updates; use [`Self::merge_delta`]
     /// when exclusivity is not structurally guaranteed.
     ///
-    /// 8-way unrolled: eight relaxed loads, eight XORs, eight relaxed
-    /// stores per chunk, with no per-word zero branch — without the RMW
-    /// cost the plain store is cheaper than a mispredict on the dense
-    /// deltas γ-full batches produce.  Bit-identical to
-    /// [`Self::merge_delta_exclusive_scalar`] (property-tested).
+    /// Resident: 8-way unrolled, eight relaxed loads, eight XORs,
+    /// eight relaxed stores per chunk, with no per-word zero branch —
+    /// without the RMW cost the plain store is cheaper than a
+    /// mispredict on the dense deltas γ-full batches produce.
+    /// Bit-identical to [`Self::merge_delta_exclusive_scalar`]
+    /// (property-tested).  Spill: stripe-serialized merge (the
+    /// single-writer contract still applies and is still checked).
     pub fn merge_delta_exclusive(&self, u: u32, delta: &[u64]) {
         debug_assert_eq!(delta.len(), self.params.words());
+        self.debug_check_dense(u);
         #[cfg(debug_assertions)]
         let _owner = self.writer_guard(self.spec.shard_of(u));
-        let (shard, base) = self.locate(u);
-        let dst = &shard[base..base + delta.len()];
-        let mut dc = delta.chunks_exact(8);
-        let mut wc = dst.chunks_exact(8);
-        for (d, w) in (&mut dc).zip(&mut wc) {
-            let [d0, d1, d2, d3, d4, d5, d6, d7] = d else {
-                unreachable!()
-            };
-            let [w0, w1, w2, w3, w4, w5, w6, w7] = w else {
-                unreachable!()
-            };
-            // all loads before all stores: eight independent XOR chains
-            let x0 = w0.load(Ordering::Relaxed) ^ *d0;
-            let x1 = w1.load(Ordering::Relaxed) ^ *d1;
-            let x2 = w2.load(Ordering::Relaxed) ^ *d2;
-            let x3 = w3.load(Ordering::Relaxed) ^ *d3;
-            let x4 = w4.load(Ordering::Relaxed) ^ *d4;
-            let x5 = w5.load(Ordering::Relaxed) ^ *d5;
-            let x6 = w6.load(Ordering::Relaxed) ^ *d6;
-            let x7 = w7.load(Ordering::Relaxed) ^ *d7;
-            w0.store(x0, Ordering::Relaxed);
-            w1.store(x1, Ordering::Relaxed);
-            w2.store(x2, Ordering::Relaxed);
-            w3.store(x3, Ordering::Relaxed);
-            w4.store(x4, Ordering::Relaxed);
-            w5.store(x5, Ordering::Relaxed);
-            w6.store(x6, Ordering::Relaxed);
-            w7.store(x7, Ordering::Relaxed);
-        }
-        for (&d, w) in dc.remainder().iter().zip(wc.remainder()) {
-            w.store(w.load(Ordering::Relaxed) ^ d, Ordering::Relaxed);
+        match &self.backing {
+            Backing::Resident(r) => r.merge_delta_exclusive(u, delta),
+            Backing::Spill(s) => s.merge_delta(u, delta, s.watermark_now()),
         }
     }
 
@@ -522,15 +707,86 @@ impl SketchStore {
     /// oracle for the unrolled kernel (same single-writer contract).
     pub fn merge_delta_exclusive_scalar(&self, u: u32, delta: &[u64]) {
         debug_assert_eq!(delta.len(), self.params.words());
+        self.debug_check_dense(u);
         #[cfg(debug_assertions)]
         let _owner = self.writer_guard(self.spec.shard_of(u));
-        let (shard, base) = self.locate(u);
-        for (i, &d) in delta.iter().enumerate() {
-            if d != 0 {
-                let w = &shard[base + i];
-                w.store(w.load(Ordering::Relaxed) ^ d, Ordering::Relaxed);
-            }
+        match &self.backing {
+            Backing::Resident(r) => r.merge_delta_exclusive_scalar(u, delta),
+            Backing::Spill(s) => s.merge_delta(u, delta, s.watermark_now()),
         }
+    }
+
+    /// XOR-merge a **WAL-logged** delta on the shard owner's path:
+    /// like [`Self::merge_delta_exclusive`], but tagging the mutation
+    /// with `lsn` — the end offset the [`crate::storage::DurabilityLog`]
+    /// returned for this delta's record — so a block evicted to disk
+    /// after the last durable cut carries proof the record is already
+    /// folded in, and recovery replay stays idempotent.
+    pub fn merge_delta_logged(&self, u: u32, delta: &[u64], lsn: u64) {
+        debug_assert_eq!(delta.len(), self.params.words());
+        self.debug_check_dense(u);
+        #[cfg(debug_assertions)]
+        let _owner = self.writer_guard(self.spec.shard_of(u));
+        match &self.backing {
+            Backing::Resident(r) => r.merge_delta_exclusive(u, delta),
+            Backing::Spill(s) => s.merge_delta(u, delta, lsn),
+        }
+    }
+
+    /// Replay one WAL record's per-copy delta during recovery,
+    /// applying it only if `record_end` is newer than the block's
+    /// persisted LSN.  Returns whether it was applied.  Resident
+    /// backings have no persisted LSNs (nothing survived the crash to
+    /// double-apply onto), so they always apply.
+    pub fn replay_delta(&self, u: u32, delta: &[u64], record_end: u64) -> std::io::Result<bool> {
+        debug_assert_eq!(delta.len(), self.params.words());
+        self.debug_check_dense(u);
+        match &self.backing {
+            Backing::Resident(r) => {
+                r.merge_delta(u, delta);
+                Ok(true)
+            }
+            Backing::Spill(s) => s.replay_delta(u, delta, record_end),
+        }
+    }
+
+    /// Scheduling-point maintenance for one shard's backing state
+    /// (spill: gutter flush past the high-water mark + LRU eviction).
+    /// Distributors call this at ticket-retire points so flush I/O
+    /// lands between batches, never mid-merge.
+    pub fn maintain(&self, shard: usize) {
+        self.backing.maintain(shard);
+    }
+
+    /// Persist and fsync all un-persisted backing state — the segment
+    /// half of a durable cut (no-op for resident backings).
+    pub fn checkpoint(&self) -> std::io::Result<()> {
+        self.backing.checkpoint()
+    }
+
+    /// Whether this store runs on the spill backing.
+    pub fn is_spill(&self) -> bool {
+        matches!(self.backing, Backing::Spill(_))
+    }
+
+    /// Sketch bytes currently resident in memory for this store's
+    /// backing (dense: the full allocation; spill: the bounded hot
+    /// set; hybrid: promoted blocks).
+    pub fn resident_sketch_bytes(&self) -> u64 {
+        if self.hybrid.is_some() {
+            return self.sketch_bytes() as u64;
+        }
+        self.backing.resident_bytes()
+    }
+
+    /// Cold blocks faulted in from segment files (spill only).
+    pub fn block_faults(&self) -> u64 {
+        self.backing.block_faults()
+    }
+
+    /// Bytes written through to segment files (spill only).
+    pub fn spill_bytes_written(&self) -> u64 {
+        self.backing.spill_bytes_written()
     }
 
     // ---- hybrid (sparse/dense adaptive) entry points -----------------
@@ -711,8 +967,21 @@ impl SketchStore {
             Self::toggle_slot(state, &self.params, &self.seeds, &h.cfg, idx);
             return;
         }
+        self.debug_check_dense(u);
+        let r = match &self.backing {
+            Backing::Resident(r) => r,
+            Backing::Spill(s) => {
+                // single-update blocks are rare off the batch path;
+                // expand to a full-block delta and go through the
+                // stripe merge so gutter/LRU semantics stay uniform
+                let delta =
+                    CameoSketch::delta_of_batch(&self.params, &self.seeds, &[idx]);
+                s.merge_delta(u, &delta, s.watermark_now());
+                return;
+            }
+        };
         // relaxed atomic XORs, same rationale as merge_delta
-        let (shard, base) = self.locate(u);
+        let (shard, base) = r.locate(u);
         let wpl = self.params.words_per_level();
         let rows = self.params.rows as usize;
         for level in 0..self.params.levels {
@@ -751,11 +1020,9 @@ impl SketchStore {
             }
             return;
         }
-        let (shard, vbase) = self.locate(u);
-        let base = vbase + level as usize * wpl;
-        for (i, slot) in out.iter_mut().enumerate() {
-            *slot = shard[base + i].load(Ordering::Relaxed);
-        }
+        self.debug_check_dense(u);
+        self.backing
+            .read_words_into(u, level as usize * wpl, out);
     }
 
     /// XOR one level of vertex `u` into `acc` — the supernode
@@ -776,10 +1043,18 @@ impl SketchStore {
             }
             return;
         }
-        let (shard, vbase) = self.locate(u);
-        let base = vbase + level as usize * wpl;
-        for (i, slot) in acc.iter_mut().enumerate() {
-            *slot ^= shard[base + i].load(Ordering::Relaxed);
+        self.debug_check_dense(u);
+        match &self.backing {
+            Backing::Resident(r) => r.xor_words_into(u, level as usize * wpl, acc),
+            Backing::Spill(s) => {
+                // range-read into a scratch block, then fold; spill
+                // queries are I/O-bound so the scratch alloc is noise
+                let mut tmp = vec![0u64; wpl];
+                s.read_words_into(u, level as usize * wpl, &mut tmp);
+                for (a, t) in acc.iter_mut().zip(&tmp) {
+                    *a ^= *t;
+                }
+            }
         }
     }
 
@@ -791,8 +1066,11 @@ impl SketchStore {
     }
 
     /// Reset every bucket to zero (between bench runs).  Hybrid mode
-    /// resets every vertex to an empty exact set, releasing all
-    /// promoted blocks.
+    /// resets every vertex to an empty exact set — releasing promoted
+    /// blocks, demotion shadows, and hence the tier counters and the
+    /// `store_exact_bytes`/`vertices_exact` gauges derived from them —
+    /// and the backing is always cleared too (spill mode re-sparses
+    /// its segment files so persisted blocks cannot resurrect).
     pub fn clear(&self) {
         if let Some(h) = &self.hybrid {
             for m in &h.shards {
@@ -801,13 +1079,8 @@ impl SketchStore {
                     *s = SlotState::Exact(Vec::new());
                 }
             }
-            return;
         }
-        for shard in &self.shards {
-            for w in shard {
-                w.store(0, Ordering::Relaxed);
-            }
-        }
+        self.backing.clear();
     }
 }
 
@@ -1257,6 +1530,123 @@ mod tests {
         let rh = boruvka_components(&hybrid);
         let rd = boruvka_components(&dense);
         assert_eq!(rh.forest.component, rd.forest.component);
+    }
+
+    /// `clear()` must reset the hybrid tier completely: exact sets,
+    /// promoted blocks, demotion shadows — so tier counts and the
+    /// byte accounting (the `store_exact_bytes`/`vertices_exact`
+    /// gauge sources) all read as empty afterwards.
+    #[test]
+    fn clear_resets_hybrid_tier_state() {
+        let v = 64u64;
+        let s = hybrid_store(v, 4, 3, 1);
+        // promote vertex 2, leave vertex 7 exact with one edge
+        for i in 0..5u32 {
+            s.ingest_index(2, encode_edge(2, 10 + i, v));
+        }
+        s.ingest_index(7, encode_edge(7, 8, v));
+        assert_eq!(s.tier_counts().1, 1);
+        assert!(s.bytes() > 0);
+        s.clear();
+        assert_eq!(s.tier_counts(), (v, 0));
+        assert_eq!(s.sketch_bytes(), 0);
+        assert_eq!(s.exact_bytes(), 0);
+        assert_eq!(s.bytes(), 0);
+        let mut buf = Vec::new();
+        assert!(s.exact_indices_into(2, &mut buf), "back to exact tier");
+        assert!(buf.is_empty(), "promoted block and shadow released");
+        assert!(s.exact_indices_into(7, &mut buf) && buf.is_empty());
+    }
+
+    // ---- spill backing ----------------------------------------------
+
+    fn spill_store(
+        name: &str,
+        params: SketchParams,
+        seed: u64,
+        spec: ShardSpec,
+        budget: u64,
+    ) -> SketchStore {
+        use crate::storage::{SpillBacking, SpillConfig};
+        let dir = std::env::temp_dir().join(format!(
+            "landscape_store_{}_{name}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = SpillConfig {
+            dir,
+            resident_budget_bytes: budget,
+            blocks_per_segment: 16,
+        };
+        let backing = SpillBacking::open(
+            params.words(),
+            params.v,
+            spec,
+            &cfg,
+            std::sync::Arc::new(AtomicU64::new(0)),
+        )
+        .unwrap();
+        SketchStore::with_backing(params, seed, spec, Backing::Spill(backing))
+    }
+
+    /// The spill backing must be observationally identical to the
+    /// resident one — same merges in, same sketch words and Borůvka
+    /// partition out — while keeping its hot set under the budget.
+    #[test]
+    fn spill_store_matches_resident_reference() {
+        let v = 96u64;
+        let params = SketchParams::for_vertices(v);
+        let spec = ShardSpec::new(3);
+        let budget = (params.words() * 8 * 6) as u64; // ~6 of 96 blocks
+        let spill = spill_store("equiv", params, 5, spec, budget);
+        let resident = SketchStore::with_shards(params, 5, spec);
+        assert!(spill.is_spill() && !resident.is_spill());
+
+        let mut lsn = 0u64;
+        for i in 0..300u32 {
+            let a = (i * 7) % v as u32;
+            let b = (a + 1 + (i * 13) % (v as u32 - 1)) % v as u32;
+            if a == b {
+                continue;
+            }
+            let idx = encode_edge(a.min(b), a.max(b), v);
+            let delta =
+                CameoSketch::delta_of_batch(&params, resident.seeds(), &[idx]);
+            lsn += 1;
+            spill.merge_delta_logged(a, &delta, lsn);
+            spill.merge_delta_logged(b, &delta, lsn);
+            resident.merge_delta_exclusive(a, &delta);
+            resident.merge_delta_exclusive(b, &delta);
+        }
+        for shard in 0..spec.count() {
+            spill.maintain(shard);
+        }
+        assert!(
+            spill.resident_sketch_bytes() <= budget,
+            "hot set {} over budget {budget}",
+            spill.resident_sketch_bytes()
+        );
+        assert!(spill.block_faults() > 0, "a tiny budget must fault");
+        assert!(spill.spill_bytes_written() > 0, "evictions must spill");
+
+        let wpl = params.words_per_level();
+        let (mut a, mut b) = (vec![0u64; wpl], vec![0u64; wpl]);
+        for u in 0..v as u32 {
+            for level in 0..params.levels {
+                spill.read_level_into(u, level, &mut a);
+                resident.read_level_into(u, level, &mut b);
+                assert_eq!(a, b, "vertex {u} level {level}");
+            }
+        }
+        let rs = boruvka_components(&spill);
+        let rr = boruvka_components(&resident);
+        assert_eq!(rs.forest.component, rr.forest.component);
+
+        // checkpoint + clear: persisted blocks must not resurrect
+        spill.checkpoint().unwrap();
+        spill.clear();
+        assert_eq!(spill.resident_sketch_bytes(), 0);
+        assert_eq!(spill.query_vertex_level(0, 0), None);
     }
 
     /// A crossing edge whose endpoints are *both* promoted is invisible

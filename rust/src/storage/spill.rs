@@ -1,0 +1,680 @@
+//! The spill backing: bounded-resident sketch blocks over fixed-size
+//! segment files.
+//!
+//! One [`SpillBacking`] holds **one sketch copy's** state (a
+//! `KConnectivity` with k copies owns k of them, one per
+//! `SketchStore`).  The unit of paging is the per-vertex sketch
+//! *block*: the vertex's full `params.words()`-long bucket array, plus
+//! an 8-byte LSN header on disk:
+//!
+//! ```text
+//! dir/seg-0000.bin, seg-0001.bin, ...       (fixed-size, sparse)
+//! block(u)  := segment[u / blocks_per_segment]
+//!              at offset (u % blocks_per_segment) × (8 + words×8)
+//! on disk   := [u64 le LSN] [words × u64 le buckets]
+//! ```
+//!
+//! The LSN is the WAL **end offset** of the last logged record folded
+//! into the block — recovery replays a WAL record into a block only
+//! when `record_end > block.lsn`, which makes replay idempotent over
+//! blocks that were evicted (and therefore persisted) after the last
+//! durable cut.  See `docs/STORAGE.md` for the full argument.
+//!
+//! Write path (per shard-aligned stripe, single distributor writer):
+//! a **resident** block is XOR-merged in place; a **cold** vertex's
+//! first touch parks the delta in the stripe's [`DeltaGutter`]
+//! (write-optimized buffering — no I/O); a second touch while parked
+//! faults the block in, folds the parked delta, and promotes the block
+//! to resident-hot.  Gutters flush to segments in vertex-sorted
+//! sequential sweeps at ticket-retire points ([`SpillBacking::maintain`]).
+//! Reads never populate the LRU: queries range-read straight from the
+//! segment (plus the parked gutter delta), so a Borůvka sweep over V
+//! cold vertices cannot thrash the hot set.
+//!
+//! A pwrite/pread failure on the hot merge path is unrecoverable (the
+//! in-memory state can no longer be made durable), so those paths
+//! panic with context instead of threading `io::Result` through every
+//! sketch-merge signature; setup/checkpoint/recovery paths return
+//! `io::Result` normally.
+
+use std::collections::{HashMap, VecDeque};
+use std::fs::{File, OpenOptions};
+use std::io;
+use std::os::unix::fs::FileExt;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::gutter::DeltaGutter;
+use crate::sketch::shard::ShardSpec;
+
+/// Sizing and placement knobs for a [`SpillBacking`].
+#[derive(Clone, Debug)]
+pub struct SpillConfig {
+    /// Directory holding this copy's segment files (created on open).
+    pub dir: PathBuf,
+    /// Resident block budget in **sketch bytes** (`words × 8` per
+    /// block, headers and map overhead excluded — the same accounting
+    /// as the `resident_sketch_bytes` gauge).  `u64::MAX` disables
+    /// eviction (durability-only mode).
+    pub resident_budget_bytes: u64,
+    /// Blocks per segment file; fixes every segment's size at
+    /// `blocks_per_segment × (8 + words×8)` bytes.
+    pub blocks_per_segment: u32,
+}
+
+impl SpillConfig {
+    /// A config with the default segment geometry (1024 blocks per
+    /// segment).
+    pub fn new(dir: PathBuf, resident_budget_bytes: u64) -> Self {
+        Self {
+            dir,
+            resident_budget_bytes,
+            blocks_per_segment: 1024,
+        }
+    }
+}
+
+/// A resident (in-memory) copy of one vertex's sketch block.
+struct Block {
+    words: Box<[u64]>,
+    /// WAL end offset of the last logged record folded in (what gets
+    /// persisted in the on-disk header on eviction/checkpoint).
+    lsn: u64,
+    /// Lazy-LRU stamp: matches the newest queue entry for this vertex.
+    stamp: u64,
+    dirty: bool,
+}
+
+/// One shard-aligned stripe: the single-writer unit of the spill tier,
+/// mirroring the sketch store's shard ownership.
+struct Stripe {
+    resident: HashMap<u32, Block>,
+    /// Lazy-deletion LRU: (vertex, stamp) pairs in touch order; stale
+    /// entries (stamp mismatch) are skipped at eviction time.
+    lru: VecDeque<(u32, u64)>,
+    gutter: DeltaGutter,
+    clock: u64,
+    /// Sketch bytes held by `resident` (gauge + budget input).
+    resident_bytes: u64,
+    /// Largest record-end LSN hint seen by this stripe — the stamp for
+    /// gutter-flushed blocks, whose individual record hints are folded
+    /// away (always ≥ every contributing record's end offset because
+    /// the stripe has a single logging writer).
+    max_lsn: u64,
+}
+
+/// Panic with context on an unrecoverable hot-path storage error.
+fn io_ok<T>(r: io::Result<T>, what: &str) -> T {
+    match r {
+        Ok(v) => v,
+        Err(e) => panic!("spill backing: {what} failed: {e}"),
+    }
+}
+
+/// Bounded-resident, segment-backed storage for one sketch copy.
+pub struct SpillBacking {
+    words: usize,
+    spec: ShardSpec,
+    block_bytes: u64,
+    blocks_per_segment: u32,
+    segment_len: u64,
+    /// Per-stripe budget: the store budget divided evenly across the
+    /// shard-aligned stripes (round-robin sharding spreads vertices
+    /// uniformly, so an even split is the right static partition).
+    stripe_budget: u64,
+    /// Gutter flush high-water mark per stripe (bytes).
+    gutter_hwm: u64,
+    segments: Vec<File>,
+    stripes: Vec<Mutex<Stripe>>,
+    /// WAL end-offset watermark (shared with the session's
+    /// `DurabilityLog`); the LSN source for merges that carry no
+    /// per-record hint.
+    watermark: Arc<AtomicU64>,
+    faults: AtomicU64,
+    spilled: AtomicU64,
+    resident: AtomicU64,
+}
+
+impl SpillBacking {
+    /// Open (or create) the segment files for `vertices` blocks of
+    /// `words` words each under `cfg.dir`.  Existing segment contents
+    /// are preserved — recovery reopens the checkpointed files; a
+    /// fresh session starts from all-sparse (all-zero, LSN 0) files.
+    /// Fresh-vs-stale-directory safety lives one level up, in the
+    /// session's WAL `create_new` check.
+    pub fn open(
+        words: usize,
+        vertices: u64,
+        spec: ShardSpec,
+        cfg: &SpillConfig,
+        watermark: Arc<AtomicU64>,
+    ) -> io::Result<Self> {
+        let block_bytes = 8 + words as u64 * 8;
+        let bps = cfg.blocks_per_segment.max(1);
+        let segment_len = bps as u64 * block_bytes;
+        let num_segments = vertices.div_ceil(bps as u64).max(1);
+        std::fs::create_dir_all(&cfg.dir)?;
+        let mut segments = Vec::with_capacity(num_segments as usize);
+        for i in 0..num_segments {
+            let f = OpenOptions::new()
+                .read(true)
+                .write(true)
+                .create(true)
+                .truncate(false)
+                .open(cfg.dir.join(format!("seg-{i:04}.bin")))?;
+            // eager fixed-size allocation; sparse until written, so a
+            // fresh store costs no real disk
+            if f.metadata()?.len() < segment_len {
+                f.set_len(segment_len)?;
+            }
+            segments.push(f);
+        }
+        let shards = spec.count();
+        let budget = cfg.resident_budget_bytes;
+        let stripe_budget = if budget == u64::MAX {
+            u64::MAX
+        } else {
+            (budget / shards as u64).max(words as u64 * 8)
+        };
+        let gutter_hwm = if stripe_budget == u64::MAX {
+            // durability-only mode still batches cold writes a little
+            (words as u64 * 8) * 64
+        } else {
+            (stripe_budget / 4).max(words as u64 * 8)
+        };
+        let stripes = (0..shards)
+            .map(|_| {
+                Mutex::new(Stripe {
+                    resident: HashMap::new(),
+                    lru: VecDeque::new(),
+                    gutter: DeltaGutter::new(words),
+                    clock: 0,
+                    resident_bytes: 0,
+                    max_lsn: 0,
+                })
+            })
+            .collect();
+        Ok(Self {
+            words,
+            spec,
+            block_bytes,
+            blocks_per_segment: bps,
+            segment_len,
+            stripe_budget,
+            gutter_hwm,
+            segments,
+            stripes,
+            watermark,
+            faults: AtomicU64::new(0),
+            spilled: AtomicU64::new(0),
+            resident: AtomicU64::new(0),
+        })
+    }
+
+    /// Words per block (one sketch copy's full bucket array).
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    fn stripe(&self, shard: usize) -> MutexGuard<'_, Stripe> {
+        self.stripes[shard].lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn seg_of(&self, u: u32) -> (&File, u64) {
+        let seg = (u / self.blocks_per_segment) as usize;
+        let off = (u % self.blocks_per_segment) as u64 * self.block_bytes;
+        (&self.segments[seg], off)
+    }
+
+    /// Read vertex `u`'s full on-disk block: `(lsn, words)`.
+    fn read_block(&self, u: u32) -> io::Result<(u64, Box<[u64]>)> {
+        let (file, off) = self.seg_of(u);
+        let mut buf = vec![0u8; self.block_bytes as usize];
+        file.read_exact_at(&mut buf, off)?;
+        let lsn = u64::from_le_bytes(buf[..8].try_into().map_err(|_| {
+            io::Error::new(io::ErrorKind::InvalidData, "block header slice")
+        })?);
+        let words = buf[8..]
+            .chunks_exact(8)
+            .map(|c| {
+                u64::from_le_bytes(c.try_into().unwrap_or([0; 8]))
+            })
+            .collect();
+        Ok((lsn, words))
+    }
+
+    /// Write vertex `u`'s block (header + words) back to its segment.
+    fn write_block(&self, u: u32, lsn: u64, words: &[u64]) -> io::Result<()> {
+        let (file, off) = self.seg_of(u);
+        let mut buf = Vec::with_capacity(self.block_bytes as usize);
+        buf.extend_from_slice(&lsn.to_le_bytes());
+        for w in words {
+            buf.extend_from_slice(&w.to_le_bytes());
+        }
+        file.write_all_at(&buf, off)?;
+        // lint: allow(relaxed-ordering) — monotone statistics counter
+        self.spilled.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn touch(&self, st: &mut Stripe, u: u32) {
+        st.clock += 1;
+        let stamp = st.clock;
+        if let Some(b) = st.resident.get_mut(&u) {
+            b.stamp = stamp;
+        }
+        st.lru.push_back((u, stamp));
+    }
+
+    fn insert_resident(&self, st: &mut Stripe, u: u32, block: Block) {
+        let bytes = (self.words * 8) as u64;
+        st.resident.insert(u, block);
+        st.resident_bytes += bytes;
+        // lint: allow(relaxed-ordering) — gauge source, read off-path
+        self.resident.fetch_add(bytes, Ordering::Relaxed);
+        self.touch(st, u);
+    }
+
+    /// Evict least-recently-used blocks until the stripe is back under
+    /// its budget, writing dirty ones through to their segments.
+    fn evict_to_budget(&self, st: &mut Stripe) {
+        let bytes = (self.words * 8) as u64;
+        while st.resident_bytes > self.stripe_budget {
+            let Some((u, stamp)) = st.lru.pop_front() else {
+                break;
+            };
+            let stale = st.resident.get(&u).map(|b| b.stamp != stamp).unwrap_or(true);
+            if stale {
+                continue; // lazy-deletion entry superseded by a newer touch
+            }
+            let Some(b) = st.resident.remove(&u) else {
+                continue;
+            };
+            st.resident_bytes -= bytes;
+            // lint: allow(relaxed-ordering) — gauge source, read off-path
+            self.resident.fetch_sub(bytes, Ordering::Relaxed);
+            if b.dirty {
+                io_ok(self.write_block(u, b.lsn, &b.words), "eviction writeback");
+            }
+        }
+    }
+
+    /// Flush the stripe's gutter: fold each parked delta into its
+    /// on-disk block in one vertex-sorted sequential sweep.  Flushed
+    /// blocks are stamped with the stripe's `max_lsn` (≥ every
+    /// contributing record's end offset — single logging writer).
+    fn flush_gutter(&self, st: &mut Stripe) {
+        if st.gutter.is_empty() {
+            return;
+        }
+        let stamp = st.max_lsn;
+        for (u, delta) in st.gutter.drain_sorted() {
+            let (lsn, mut words) = io_ok(self.read_block(u), "gutter flush read");
+            for (w, d) in words.iter_mut().zip(delta.iter()) {
+                *w ^= d;
+            }
+            io_ok(
+                self.write_block(u, lsn.max(stamp), &words),
+                "gutter flush write",
+            );
+        }
+    }
+
+    /// XOR-merge `delta` into vertex `u`'s block.  `lsn` is the WAL
+    /// end offset of the logged record this delta came from (pass the
+    /// current watermark for unlogged merges — safe because unlogged
+    /// mutation paths run with no appended-but-unmerged records in
+    /// flight; see the module docs).
+    pub fn merge_delta(&self, u: u32, delta: &[u64], lsn: u64) {
+        debug_assert_eq!(delta.len(), self.words);
+        let shard = self.spec.shard_of(u);
+        let mut st = self.stripe(shard);
+        st.max_lsn = st.max_lsn.max(lsn);
+        if let Some(b) = st.resident.get_mut(&u) {
+            for (w, d) in b.words.iter_mut().zip(delta) {
+                *w ^= d;
+            }
+            b.dirty = true;
+            b.lsn = b.lsn.max(lsn);
+            self.touch(&mut st, u);
+        } else if st.gutter.contains(u) {
+            // second touch while parked: this vertex is warming up —
+            // fault the block in and promote it to resident-hot
+            let (disk_lsn, mut words) = io_ok(self.read_block(u), "fault-in read");
+            // lint: allow(relaxed-ordering) — monotone statistics counter
+            self.faults.fetch_add(1, Ordering::Relaxed);
+            if let Some(parked) = st.gutter.take(u) {
+                for (w, d) in words.iter_mut().zip(parked.iter()) {
+                    *w ^= d;
+                }
+            }
+            for (w, d) in words.iter_mut().zip(delta) {
+                *w ^= d;
+            }
+            self.insert_resident(
+                &mut st,
+                u,
+                Block {
+                    words,
+                    lsn: disk_lsn.max(lsn),
+                    stamp: 0, // insert_resident's touch re-stamps
+                    dirty: true,
+                },
+            );
+        } else {
+            // cold first touch: park the delta, no I/O
+            st.gutter.xor(u, delta);
+        }
+        if st.gutter.bytes() > self.gutter_hwm * 4 {
+            // backstop between maintain() calls so a pathological cold
+            // stream cannot grow the gutter unboundedly
+            self.flush_gutter(&mut st);
+        }
+        self.evict_to_budget(&mut st);
+    }
+
+    /// Read `dst.len()` words of vertex `u`'s block starting at word
+    /// `word_off`, without populating the resident set (query sweeps
+    /// must not thrash the hot LRU).  Folds in any parked gutter delta
+    /// so reads always see un-flushed updates.
+    pub fn read_words_into(&self, u: u32, word_off: usize, dst: &mut [u64]) {
+        debug_assert!(word_off + dst.len() <= self.words);
+        let shard = self.spec.shard_of(u);
+        let st = self.stripe(shard);
+        if let Some(b) = st.resident.get(&u) {
+            dst.copy_from_slice(&b.words[word_off..word_off + dst.len()]);
+            return;
+        }
+        let (file, off) = self.seg_of(u);
+        let mut buf = vec![0u8; dst.len() * 8];
+        io_ok(
+            file.read_exact_at(&mut buf, off + 8 + word_off as u64 * 8),
+            "query range read",
+        );
+        for (d, c) in dst.iter_mut().zip(buf.chunks_exact(8)) {
+            *d = u64::from_le_bytes(c.try_into().unwrap_or([0; 8]));
+        }
+        if let Some(parked) = st.gutter.peek(u) {
+            for (d, p) in dst.iter_mut().zip(parked[word_off..].iter()) {
+                *d ^= p;
+            }
+        }
+    }
+
+    /// Ticket-retire maintenance for one shard's stripe: flush the
+    /// gutter once it crosses the high-water mark, then re-enforce the
+    /// budget.  Called by the owning distributor between batches so
+    /// flush I/O happens at scheduling points, not mid-merge.
+    pub fn maintain(&self, shard: usize) {
+        let mut st = self.stripe(shard);
+        if st.gutter.bytes() > self.gutter_hwm {
+            self.flush_gutter(&mut st);
+        }
+        self.evict_to_budget(&mut st);
+    }
+
+    /// Replay one WAL record's delta during recovery: fold it into the
+    /// block **only if** `record_end > block.lsn` (the idempotence
+    /// rule).  Uses the disk block directly — recovery runs
+    /// single-threaded with empty gutters.  Returns whether the record
+    /// was applied.
+    pub fn replay_delta(&self, u: u32, delta: &[u64], record_end: u64) -> io::Result<bool> {
+        debug_assert_eq!(delta.len(), self.words);
+        let shard = self.spec.shard_of(u);
+        let mut st = self.stripe(shard);
+        st.max_lsn = st.max_lsn.max(record_end);
+        if let Some(b) = st.resident.get_mut(&u) {
+            if record_end <= b.lsn {
+                return Ok(false);
+            }
+            for (w, d) in b.words.iter_mut().zip(delta) {
+                *w ^= d;
+            }
+            b.lsn = record_end;
+            b.dirty = true;
+            return Ok(true);
+        }
+        let (disk_lsn, mut words) = self.read_block(u)?;
+        if record_end <= disk_lsn {
+            return Ok(false);
+        }
+        for (w, d) in words.iter_mut().zip(delta) {
+            *w ^= d;
+        }
+        self.insert_resident(
+            &mut st,
+            u,
+            Block {
+                words,
+                lsn: record_end,
+                stamp: 0,
+                dirty: true,
+            },
+        );
+        self.evict_to_budget(&mut st);
+        Ok(true)
+    }
+
+    /// Write every un-persisted mutation through to the segment files
+    /// and fsync them — the segment half of the durable-cut contract
+    /// (the caller then appends + fsyncs the WAL cut marker).  Blocks
+    /// stay resident; only their dirty bits clear.
+    pub fn checkpoint(&self) -> io::Result<()> {
+        for stripe in &self.stripes {
+            let mut st = stripe.lock().unwrap_or_else(|p| p.into_inner());
+            self.flush_gutter(&mut st);
+            let mut dirty: Vec<u32> = st
+                .resident
+                .iter()
+                .filter(|(_, b)| b.dirty)
+                .map(|(u, _)| *u)
+                .collect();
+            dirty.sort_unstable(); // sequential sweep per segment
+            for u in dirty {
+                if let Some(b) = st.resident.get_mut(&u) {
+                    self.write_block(u, b.lsn, &b.words)?;
+                    b.dirty = false;
+                }
+            }
+        }
+        for f in &self.segments {
+            f.sync_data()?;
+        }
+        Ok(())
+    }
+
+    /// Reset to the empty-sketch state: drop every resident block and
+    /// parked delta and re-sparse the segment files (all zeros, LSN 0).
+    /// Not WAL-logged — a test/maintenance utility, like the resident
+    /// store's `clear`.
+    pub fn clear(&self) {
+        for stripe in &self.stripes {
+            let mut st = stripe.lock().unwrap_or_else(|p| p.into_inner());
+            let bytes = st.resident_bytes;
+            st.resident.clear();
+            st.lru.clear();
+            st.gutter.clear();
+            st.resident_bytes = 0;
+            st.clock = 0;
+            st.max_lsn = 0;
+            // lint: allow(relaxed-ordering) — gauge source, read off-path
+            self.resident.fetch_sub(bytes, Ordering::Relaxed);
+        }
+        for f in &self.segments {
+            io_ok(f.set_len(0), "segment truncate");
+            io_ok(f.set_len(self.segment_len), "segment re-sparse");
+        }
+    }
+
+    /// Current WAL watermark (the LSN hint for unlogged merges).
+    pub fn watermark_now(&self) -> u64 {
+        // lint: allow(relaxed-ordering) — monotone hint; stale reads only under-stamp, repaired by the max() folds
+        self.watermark.load(Ordering::Relaxed)
+    }
+
+    /// Sketch bytes currently resident across all stripes (the
+    /// `resident_sketch_bytes` gauge source).
+    pub fn resident_bytes(&self) -> u64 {
+        // lint: allow(relaxed-ordering) — gauge read
+        self.resident.load(Ordering::Relaxed)
+    }
+
+    /// Cold blocks faulted in from segments since open.
+    pub fn block_faults(&self) -> u64 {
+        // lint: allow(relaxed-ordering) — statistics read
+        self.faults.load(Ordering::Relaxed)
+    }
+
+    /// Bytes written to segment files since open (evictions, gutter
+    /// flushes, checkpoints).
+    pub fn spill_bytes_written(&self) -> u64 {
+        // lint: allow(relaxed-ordering) — statistics read
+        self.spilled.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "landscape_spill_{}_{name}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn backing(name: &str, words: usize, vertices: u64, budget: u64) -> SpillBacking {
+        let cfg = SpillConfig {
+            dir: tmp(name),
+            resident_budget_bytes: budget,
+            blocks_per_segment: 8, // small segments exercise seg math
+        };
+        SpillBacking::open(
+            words,
+            vertices,
+            ShardSpec::new(2),
+            &cfg,
+            Arc::new(AtomicU64::new(0)),
+        )
+        .unwrap()
+    }
+
+    fn read_all(b: &SpillBacking, u: u32) -> Vec<u64> {
+        let mut out = vec![0u64; b.words()];
+        b.read_words_into(u, 0, &mut out);
+        out
+    }
+
+    #[test]
+    fn merge_read_roundtrip_through_gutter_and_fault() {
+        let b = backing("roundtrip", 4, 32, u64::MAX);
+        // first touch parks in the gutter; reads must still see it
+        b.merge_delta(5, &[1, 2, 3, 4], 10);
+        assert_eq!(read_all(&b, 5), vec![1, 2, 3, 4]);
+        assert_eq!(b.block_faults(), 0);
+        // second touch faults in and folds both deltas
+        b.merge_delta(5, &[8, 0, 0, 1], 20);
+        assert_eq!(b.block_faults(), 1);
+        assert_eq!(read_all(&b, 5), vec![9, 2, 3, 5]);
+        // partial-range read
+        let mut mid = vec![0u64; 2];
+        b.read_words_into(5, 1, &mut mid);
+        assert_eq!(mid, vec![2, 3]);
+        // untouched vertex reads all-zero
+        assert_eq!(read_all(&b, 6), vec![0; 4]);
+    }
+
+    #[test]
+    fn budget_is_enforced_and_evicted_blocks_survive_on_disk() {
+        // budget of exactly 2 blocks per stripe (2 stripes)
+        let b = backing("budget", 4, 64, 2 * 2 * 4 * 8);
+        for u in 0..32u32 {
+            // two touches each → every block becomes resident-hot
+            b.merge_delta(u, &[u as u64 + 1, 0, 0, 0], u as u64);
+            b.merge_delta(u, &[0, u as u64 + 1, 0, 0], 100 + u as u64);
+        }
+        assert!(
+            b.resident_bytes() <= 2 * 2 * 4 * 8,
+            "resident {} exceeds budget",
+            b.resident_bytes()
+        );
+        assert!(b.spill_bytes_written() > 0, "evictions must write through");
+        // every vertex — evicted or resident — still reads back exactly
+        for u in 0..32u32 {
+            assert_eq!(read_all(&b, u), vec![u as u64 + 1, u as u64 + 1, 0, 0]);
+        }
+    }
+
+    #[test]
+    fn maintain_flushes_the_gutter_sequentially() {
+        let b = backing("maintain", 2, 64, 2 * 2 * 8);
+        // park many cold single-touch vertices (never fault)
+        for u in 0..40u32 {
+            b.merge_delta(u, &[u as u64, 7], u as u64);
+        }
+        assert_eq!(b.block_faults(), 0);
+        b.maintain(0);
+        b.maintain(1);
+        assert!(b.spill_bytes_written() > 0);
+        for u in 0..40u32 {
+            assert_eq!(read_all(&b, u), vec![u as u64, 7]);
+        }
+    }
+
+    #[test]
+    fn replay_is_idempotent_over_persisted_lsns() {
+        let b = backing("replay", 2, 16, u64::MAX);
+        // live-merge a logged record, checkpoint it to disk
+        b.merge_delta(3, &[5, 5], 100);
+        b.checkpoint().unwrap();
+        // a replay of the same record (end=100) must be a no-op...
+        assert!(!b.replay_delta(3, &[5, 5], 100).unwrap());
+        assert_eq!(read_all(&b, 3), vec![5, 5]);
+        // ...while a later record replays exactly once
+        assert!(b.replay_delta(3, &[1, 0], 150).unwrap());
+        assert!(!b.replay_delta(3, &[1, 0], 150).unwrap());
+        assert_eq!(read_all(&b, 3), vec![4, 5]);
+    }
+
+    #[test]
+    fn checkpoint_then_reopen_recovers_all_state() {
+        let dir = tmp("reopen");
+        let cfg = SpillConfig {
+            dir: dir.clone(),
+            resident_budget_bytes: u64::MAX,
+            blocks_per_segment: 4,
+        };
+        let wm = Arc::new(AtomicU64::new(0));
+        let b = SpillBacking::open(3, 20, ShardSpec::new(2), &cfg, wm.clone()).unwrap();
+        for u in 0..20u32 {
+            b.merge_delta(u, &[u as u64, 1, 2], u as u64 + 1);
+        }
+        b.checkpoint().unwrap();
+        drop(b);
+        let b2 = SpillBacking::open(3, 20, ShardSpec::new(2), &cfg, wm).unwrap();
+        for u in 0..20u32 {
+            assert_eq!(read_all(&b2, u), vec![u as u64, 1, 2]);
+        }
+        // LSNs survived the checkpoint: pre-checkpoint records skip
+        assert!(!b2.replay_delta(7, &[9, 9, 9], 8).unwrap());
+        assert_eq!(read_all(&b2, 7), vec![7, 1, 2]);
+    }
+
+    #[test]
+    fn clear_resets_memory_and_disk() {
+        let b = backing("clear", 2, 16, u64::MAX);
+        b.merge_delta(1, &[1, 1], 5);
+        b.merge_delta(1, &[2, 0], 6);
+        b.checkpoint().unwrap();
+        b.clear();
+        assert_eq!(b.resident_bytes(), 0);
+        assert_eq!(read_all(&b, 1), vec![0, 0]);
+        // post-clear, old LSNs are gone: any record replays
+        assert!(b.replay_delta(1, &[3, 3], 1).unwrap());
+        assert_eq!(read_all(&b, 1), vec![3, 3]);
+    }
+}

@@ -1,0 +1,556 @@
+//! Append-only write-ahead log of batch deltas.
+//!
+//! The log is the durability half of the storage tier: every sketch or
+//! exact-index delta the distributors merge is first appended here, so
+//! a crash can lose nothing that reached the sketch state.  Records are
+//! length-prefixed and the payloads **reuse the `net/` v2 frame
+//! encoders** — a sketch delta is a `DELTA2` frame and an exact-index
+//! batch is an `EXACTDELTA2` frame, byte-identical to what the remote
+//! transport puts on the wire — plus one storage-private record type,
+//! the *durable-cut marker*, appended (and fsync'd) when an epoch cut
+//! is made durable:
+//!
+//! ```text
+//! wal.log   := record*
+//! record    := [u32 le payload_len] [payload]
+//! payload   := DELTA2 frame          (tag 5: seq, vertex, k·words u64s)
+//!            | EXACTDELTA2 frame     (tag 9: seq, vertex, indices)
+//!            | cut marker            (tag 0xC5: u64 le epoch)
+//! ```
+//!
+//! A `DELTA2` payload carries the **concatenation of all k copies'**
+//! deltas for the vertex (length `k × params.words()`); an
+//! `EXACTDELTA2` payload's indices are copy-independent, exactly as on
+//! the wire.  The `seq` field is the record ordinal, for debugging.
+//!
+//! **Torn-tail tolerance:** appends are not fsync'd individually (the
+//! durability contract is *at epoch cuts*, see `docs/STORAGE.md`), so
+//! after a crash the file may end mid-record.  [`scan`] stops cleanly
+//! at the first short, oversized, or unparseable record and reports the
+//! valid prefix length; [`WalWriter::open_append`] truncates the torn
+//! tail before resuming appends.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::net::Message;
+
+/// Upper bound on a single record's payload (matches the `net/` reader
+/// cap): anything larger is treated as corruption, not a record.
+const MAX_PAYLOAD: u32 = 1 << 28;
+
+/// Storage-private payload tag for the durable-cut marker (chosen well
+/// clear of the `net/` frame tags 0..=9).
+const CUT_TAG: u8 = 0xC5;
+
+/// One decoded log record.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WalRecord {
+    /// A sketch delta for `vertex`: the concatenation of all k copies'
+    /// `params.words()`-long deltas (a `DELTA2` frame on disk).
+    Delta {
+        /// Record ordinal at append time (debugging only).
+        seq: u64,
+        /// The destination vertex.
+        vertex: u32,
+        /// `k × words` XOR-delta words.
+        delta: Vec<u64>,
+    },
+    /// An exact-index batch for `vertex` (an `EXACTDELTA2` frame on
+    /// disk); the encoded edge indices are valid for every sketch copy.
+    Exact {
+        /// Record ordinal at append time (debugging only).
+        seq: u64,
+        /// The destination vertex.
+        vertex: u32,
+        /// Odd-parity encoded edge indices of the batch.
+        indices: Vec<u64>,
+    },
+    /// A durable-cut marker: every record before this offset is also
+    /// reflected in the checkpointed segment files, and the log was
+    /// fsync'd immediately after this record.
+    Cut {
+        /// The epoch the durable cut covered.
+        epoch: u64,
+    },
+}
+
+/// The result of scanning a log file: the decodable prefix.
+#[derive(Debug)]
+pub struct WalScan {
+    /// Records in append order, each paired with its **end offset**
+    /// (the log length after the record was appended — the LSN the
+    /// spill tier stamps blocks with).
+    pub records: Vec<(u64, WalRecord)>,
+    /// Length of the valid prefix; anything past it is a torn tail.
+    pub valid_len: u64,
+    /// Whether trailing bytes past `valid_len` were present (a torn
+    /// final record from a crash mid-append).
+    pub torn: bool,
+}
+
+impl WalScan {
+    /// Index into `records` just past the last durable-cut marker
+    /// (0 when no marker exists — the whole log is tail).
+    pub fn tail_start(&self) -> usize {
+        self.records
+            .iter()
+            .rposition(|(_, r)| matches!(r, WalRecord::Cut { .. }))
+            .map(|i| i + 1)
+            .unwrap_or(0)
+    }
+}
+
+/// Decode one payload, or `None` if it is not a valid record (the scan
+/// treats that as the corruption boundary).
+fn decode_payload(payload: &[u8]) -> Option<WalRecord> {
+    match payload.first()? {
+        &CUT_TAG => {
+            let bytes: [u8; 8] = payload.get(1..9)?.try_into().ok()?;
+            if payload.len() != 9 {
+                return None;
+            }
+            Some(WalRecord::Cut {
+                epoch: u64::from_le_bytes(bytes),
+            })
+        }
+        _ => {
+            let mut r = payload;
+            let msg = Message::read_from(&mut r).ok()?;
+            if !r.is_empty() {
+                return None; // trailing garbage inside the record
+            }
+            match msg {
+                Message::Delta2 { seq, vertex, delta } => {
+                    Some(WalRecord::Delta { seq, vertex, delta })
+                }
+                Message::ExactDelta2 {
+                    seq,
+                    vertex,
+                    indices,
+                } => Some(WalRecord::Exact {
+                    seq,
+                    vertex,
+                    indices,
+                }),
+                _ => None, // a frame type that never belongs in the log
+            }
+        }
+    }
+}
+
+/// Scan `path`, decoding the valid record prefix and tolerating a torn
+/// tail.  Reads the whole file into memory — this runs at recovery
+/// time, never on the ingest path.
+pub fn scan(path: &Path) -> std::io::Result<WalScan> {
+    let mut bytes = Vec::new();
+    File::open(path)?.read_to_end(&mut bytes)?;
+    let mut records = Vec::new();
+    let mut off = 0usize;
+    loop {
+        let Some(len_bytes) = bytes.get(off..off + 4) else {
+            break; // short length prefix: torn
+        };
+        let len = u32::from_le_bytes(len_bytes.try_into().map_err(|_| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, "length slice")
+        })?) as usize;
+        if len == 0 || len > MAX_PAYLOAD as usize {
+            break; // nonsense length: corruption boundary
+        }
+        let Some(payload) = bytes.get(off + 4..off + 4 + len) else {
+            break; // short payload: torn final record
+        };
+        let Some(rec) = decode_payload(payload) else {
+            break; // undecodable payload: corruption boundary
+        };
+        off += 4 + len;
+        records.push((off as u64, rec));
+    }
+    Ok(WalScan {
+        records,
+        valid_len: off as u64,
+        torn: off < bytes.len(),
+    })
+}
+
+/// The append half of the log.  Not internally synchronized — wrap in
+/// [`DurabilityLog`] (or a mutex) for concurrent appenders.
+pub struct WalWriter {
+    file: File,
+    len: u64,
+    seq: u64,
+}
+
+impl WalWriter {
+    /// Create a fresh log at `path`.  Fails if the file already exists:
+    /// silently overwriting a previous session's log would destroy the
+    /// very state [`crate::session::Landscape::recover`] exists to
+    /// restore.
+    pub fn create(path: &Path) -> std::io::Result<Self> {
+        let file = OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(path)?;
+        Ok(Self {
+            file,
+            len: 0,
+            seq: 0,
+        })
+    }
+
+    /// Open an existing log for appending, truncating any torn tail
+    /// left by a crash mid-append.  Returns the writer positioned at
+    /// the end of the valid prefix.
+    pub fn open_append(path: &Path) -> std::io::Result<Self> {
+        let prior = scan(path)?;
+        let file = OpenOptions::new().read(true).write(true).open(path)?;
+        if prior.torn {
+            file.set_len(prior.valid_len)?;
+        }
+        Ok(Self {
+            file,
+            len: prior.valid_len,
+            seq: prior.records.len() as u64,
+        })
+    }
+
+    /// Append one pre-encoded payload; returns the new log length (the
+    /// record's end offset).
+    fn append_payload(&mut self, payload: &[u8]) -> std::io::Result<u64> {
+        debug_assert!(payload.len() <= MAX_PAYLOAD as usize);
+        let mut buf = Vec::with_capacity(4 + payload.len());
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(payload);
+        // one write_all per record: a crash can tear at most the final
+        // record, which scan()/open_append() tolerate by construction
+        self.file.write_all(&buf)?;
+        self.len += buf.len() as u64;
+        self.seq += 1;
+        Ok(self.len)
+    }
+
+    /// Encode a `net/` frame into a payload buffer.
+    fn frame_payload(msg: &Message) -> std::io::Result<Vec<u8>> {
+        let mut payload = Vec::with_capacity(msg.wire_bytes() as usize);
+        msg.write_to(&mut payload).map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+        })?;
+        Ok(payload)
+    }
+
+    /// Append a sketch-delta record (`delta` = k concatenated copies).
+    /// Returns the record's end offset.
+    pub fn append_delta(&mut self, vertex: u32, delta: &[u64]) -> std::io::Result<u64> {
+        let payload = Self::frame_payload(&Message::Delta2 {
+            seq: self.seq,
+            vertex,
+            delta: delta.to_vec(),
+        })?;
+        self.append_payload(&payload)
+    }
+
+    /// Append an exact-index record.  Returns the record's end offset.
+    pub fn append_exact(&mut self, vertex: u32, indices: &[u64]) -> std::io::Result<u64> {
+        let payload = Self::frame_payload(&Message::ExactDelta2 {
+            seq: self.seq,
+            vertex,
+            indices: indices.to_vec(),
+        })?;
+        self.append_payload(&payload)
+    }
+
+    /// Append a durable-cut marker.  Returns the record's end offset.
+    pub fn append_cut(&mut self, epoch: u64) -> std::io::Result<u64> {
+        let mut payload = [0u8; 9];
+        payload[0] = CUT_TAG;
+        payload[1..9].copy_from_slice(&epoch.to_le_bytes());
+        self.append_payload(&payload)
+    }
+
+    /// Flush appended records to stable storage (the fsync of the
+    /// durable-cut contract).
+    pub fn sync(&self) -> std::io::Result<()> {
+        self.file.sync_data()
+    }
+
+    /// Current log length in bytes.
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    /// Whether the log holds no records yet.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// The session-level durability log: a mutex-wrapped [`WalWriter`] plus
+/// the shared **watermark** — the log's current end offset, which the
+/// spill tier reads to stamp mutated blocks with an LSN (see
+/// `docs/STORAGE.md` for why replay needs it).
+///
+/// Appenders are the distributor threads (one append per retired
+/// batch, *before* the merge, under the session merge gate's shared
+/// side); the durable-cut path appends the marker and fsyncs under the
+/// gate's exclusive side.
+pub struct DurabilityLog {
+    path: PathBuf,
+    writer: Mutex<WalWriter>,
+    watermark: Arc<AtomicU64>,
+}
+
+/// Receipt for one [`DurabilityLog`] append: the record's **end
+/// offset** (the LSN the caller must stamp the ensuing merge with —
+/// reading the shared watermark instead is racy, see `docs/STORAGE.md`)
+/// and the **bytes** the record occupies (for `wal_bytes` metering).
+#[derive(Clone, Copy, Debug)]
+pub struct Appended {
+    /// File offset one past the record — its LSN.
+    pub end: u64,
+    /// Bytes the record occupies on disk, length prefix included.
+    pub bytes: u64,
+}
+
+impl DurabilityLog {
+    fn wrap(path: PathBuf, writer: WalWriter) -> Self {
+        let watermark = Arc::new(AtomicU64::new(writer.len()));
+        Self {
+            path,
+            writer: Mutex::new(writer),
+            watermark,
+        }
+    }
+
+    /// Create a fresh log at `path` (fails if one already exists).
+    pub fn create(path: &Path) -> std::io::Result<Self> {
+        Ok(Self::wrap(path.to_path_buf(), WalWriter::create(path)?))
+    }
+
+    /// Re-open an existing log, truncating any torn tail.
+    pub fn open_append(path: &Path) -> std::io::Result<Self> {
+        Ok(Self::wrap(path.to_path_buf(), WalWriter::open_append(path)?))
+    }
+
+    /// The log file's path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// The shared end-offset watermark handle (cloned into each spill
+    /// backing as its LSN source).
+    pub fn watermark(&self) -> Arc<AtomicU64> {
+        self.watermark.clone()
+    }
+
+    fn lock(&self) -> MutexGuard<'_, WalWriter> {
+        self.writer.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn publish(&self, end: u64) {
+        // the same thread appends then merges (program order suffices);
+        // cross-thread readers only look under the session merge gate.
+        // lint: allow(relaxed-ordering) — monotone watermark hint; the merge gate synchronizes readers
+        self.watermark.store(end, Ordering::Relaxed);
+    }
+
+    /// Append a sketch-delta record.
+    pub fn append_delta(&self, vertex: u32, delta: &[u64]) -> std::io::Result<Appended> {
+        let mut w = self.lock();
+        let before = w.len();
+        let end = w.append_delta(vertex, delta)?;
+        drop(w);
+        self.publish(end);
+        Ok(Appended {
+            end,
+            bytes: end - before,
+        })
+    }
+
+    /// Append an exact-index record.
+    pub fn append_exact(&self, vertex: u32, indices: &[u64]) -> std::io::Result<Appended> {
+        let mut w = self.lock();
+        let before = w.len();
+        let end = w.append_exact(vertex, indices)?;
+        drop(w);
+        self.publish(end);
+        Ok(Appended {
+            end,
+            bytes: end - before,
+        })
+    }
+
+    /// Append a durable-cut marker and fsync the log — the durability
+    /// point of the epoch-cut contract.  Returns the bytes appended.
+    pub fn cut_sync(&self, epoch: u64) -> std::io::Result<u64> {
+        let mut w = self.lock();
+        let before = w.len();
+        let end = w.append_cut(epoch)?;
+        w.sync()?;
+        drop(w);
+        self.publish(end);
+        Ok(end - before)
+    }
+
+    /// Current log length in bytes.
+    pub fn len(&self) -> u64 {
+        self.lock().len()
+    }
+
+    /// Whether the log holds no records yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "landscape_wal_{}_{name}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("wal.log")
+    }
+
+    #[test]
+    fn roundtrip_all_record_types() {
+        let path = tmp("roundtrip");
+        let mut w = WalWriter::create(&path).unwrap();
+        let e1 = w.append_delta(7, &[1, 0, u64::MAX, 42]).unwrap();
+        let e2 = w.append_exact(9, &[3, 5, 8]).unwrap();
+        let e3 = w.append_cut(11).unwrap();
+        let e4 = w.append_exact(2, &[]).unwrap();
+        w.sync().unwrap();
+
+        let s = scan(&path).unwrap();
+        assert!(!s.torn);
+        assert_eq!(s.valid_len, w.len());
+        let (offs, recs): (Vec<u64>, Vec<WalRecord>) = s.records.into_iter().unzip();
+        assert_eq!(offs, vec![e1, e2, e3, e4]);
+        assert_eq!(
+            recs,
+            vec![
+                WalRecord::Delta {
+                    seq: 0,
+                    vertex: 7,
+                    delta: vec![1, 0, u64::MAX, 42]
+                },
+                WalRecord::Exact {
+                    seq: 1,
+                    vertex: 9,
+                    indices: vec![3, 5, 8]
+                },
+                WalRecord::Cut { epoch: 11 },
+                WalRecord::Exact {
+                    seq: 3,
+                    vertex: 2,
+                    indices: vec![]
+                },
+            ]
+        );
+    }
+
+    #[test]
+    fn tail_start_points_past_last_cut() {
+        let path = tmp("tail");
+        let mut w = WalWriter::create(&path).unwrap();
+        w.append_delta(1, &[1]).unwrap();
+        w.append_cut(1).unwrap();
+        w.append_delta(2, &[2]).unwrap();
+        w.append_cut(2).unwrap();
+        w.append_delta(3, &[3]).unwrap();
+        let s = scan(&path).unwrap();
+        assert_eq!(s.tail_start(), 4);
+        assert!(matches!(
+            s.records[s.tail_start()].1,
+            WalRecord::Delta { vertex: 3, .. }
+        ));
+
+        // no marker at all: the whole log is tail
+        let path2 = tmp("tail_none");
+        let mut w2 = WalWriter::create(&path2).unwrap();
+        w2.append_delta(1, &[1]).unwrap();
+        assert_eq!(scan(&path2).unwrap().tail_start(), 0);
+    }
+
+    #[test]
+    fn torn_final_record_is_tolerated_and_truncated() {
+        let path = tmp("torn");
+        let mut w = WalWriter::create(&path).unwrap();
+        w.append_delta(1, &[10, 20]).unwrap();
+        let keep = w.append_exact(2, &[30]).unwrap();
+        w.append_delta(3, &[40, 50, 60]).unwrap();
+        drop(w);
+
+        // tear the final record mid-payload, as a crash mid-append would
+        let full = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(full - 9).unwrap();
+        drop(f);
+
+        let s = scan(&path).unwrap();
+        assert!(s.torn);
+        assert_eq!(s.valid_len, keep);
+        assert_eq!(s.records.len(), 2);
+
+        // open_append truncates the tail and appends cleanly after it
+        let mut w = WalWriter::open_append(&path).unwrap();
+        assert_eq!(w.len(), keep);
+        w.append_cut(5).unwrap();
+        let s = scan(&path).unwrap();
+        assert!(!s.torn);
+        assert_eq!(s.records.len(), 3);
+        assert_eq!(s.records[2].1, WalRecord::Cut { epoch: 5 });
+    }
+
+    #[test]
+    fn garbage_length_prefix_stops_the_scan() {
+        let path = tmp("garbage");
+        let mut w = WalWriter::create(&path).unwrap();
+        let keep = w.append_delta(4, &[7]).unwrap();
+        drop(w);
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        f.write_all(&[0xAB; 16]).unwrap();
+        drop(f);
+        let s = scan(&path).unwrap();
+        assert!(s.torn);
+        assert_eq!(s.valid_len, keep);
+        assert_eq!(s.records.len(), 1);
+    }
+
+    #[test]
+    fn create_refuses_to_clobber_an_existing_log() {
+        let path = tmp("clobber");
+        let _w = WalWriter::create(&path).unwrap();
+        assert!(WalWriter::create(&path).is_err());
+    }
+
+    #[test]
+    fn durability_log_tracks_the_watermark() {
+        let path = tmp("durable");
+        let log = DurabilityLog::create(&path).unwrap();
+        let wm = log.watermark();
+        assert_eq!(wm.load(Ordering::Relaxed), 0);
+        let a1 = log.append_delta(1, &[1, 2]).unwrap();
+        assert_eq!(a1.end, a1.bytes, "first record starts at offset 0");
+        assert_eq!(wm.load(Ordering::Relaxed), a1.end);
+        let a2 = log.append_exact(2, &[9]).unwrap();
+        assert_eq!(a2.end, a1.bytes + a2.bytes);
+        assert_eq!(wm.load(Ordering::Relaxed), a2.end);
+        log.cut_sync(3).unwrap();
+        assert_eq!(wm.load(Ordering::Relaxed), log.len());
+
+        // re-open resumes at the same watermark
+        drop(log);
+        let log = DurabilityLog::open_append(&path).unwrap();
+        assert_eq!(log.watermark().load(Ordering::Relaxed), log.len());
+    }
+}

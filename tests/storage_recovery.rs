@@ -1,0 +1,239 @@
+//! Crash-recovery and spill-budget integration tests for the
+//! external-memory storage tier (`storage/`).
+//!
+//! The property test drives random valid insert/delete streams through
+//! a spilling session, takes one durable cut partway (`flush()`), lets
+//! more batches merge *without* a durable mark, and then "crashes" —
+//! dropping the session with the post-cut tail living only in the WAL
+//! and (partially, via evictions) in the segment files.  Recovery must
+//! replay that tail idempotently, the remaining stream is ingested, and
+//! the final partition must equal the from-scratch DSU referee with
+//! `batches_dropped == 0`.  The companion e2e scenario
+//! (`--scenario recovery`) repeats this with a real `process::abort()`.
+//!
+//! The V = 2^17 test is the acceptance criterion for the resident
+//! budget: an ingest touching far more sketch blocks than the budget
+//! can hold must keep the `resident_sketch_bytes` gauge at or below
+//! the configured bound while faulting and spilling.
+
+use landscape::baseline::Referee;
+use landscape::connectivity::dsu::Dsu;
+use landscape::session::ConfigError;
+use landscape::stream::update::Update;
+use landscape::sketch::params::DEFAULT_COLUMNS;
+use landscape::util::rng::Xoshiro256;
+use landscape::util::testkit::arb_edge;
+use landscape::{Landscape, LandscapeBuilder, SketchParams};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "landscape-storage-recovery-{}-{name}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A valid random insert/delete stream plus its final live edge set.
+fn random_stream(rng: &mut Xoshiro256, v: u64, len: usize) -> (Vec<Update>, Vec<(u32, u32)>) {
+    let mut live = std::collections::BTreeSet::new();
+    let mut stream = Vec::new();
+    while stream.len() < len {
+        if !live.is_empty() && rng.next_below(3) == 0 {
+            let i = rng.next_below(live.len() as u64) as usize;
+            let e: (u32, u32) = *live.iter().nth(i).unwrap();
+            live.remove(&e);
+            stream.push(Update::delete(e.0, e.1));
+        } else {
+            let e = arb_edge(rng, v);
+            if live.insert(e) {
+                stream.push(Update::insert(e.0, e.1));
+            }
+        }
+    }
+    (stream, live.into_iter().collect())
+}
+
+fn ref_partition(v: u64, edges: &[(u32, u32)]) -> Vec<u32> {
+    let mut d = Dsu::new(v as usize);
+    for &(a, b) in edges {
+        d.union(a, b);
+    }
+    d.component_map()
+}
+
+fn spill_builder(v: u64, dir: &std::path::Path, budget: u64) -> LandscapeBuilder {
+    Landscape::builder()
+        .vertices(v)
+        .alpha(1)
+        .distributor_threads(2)
+        .update_log_capacity(32)
+        .storage_dir(dir)
+        .resident_budget_bytes(budget)
+}
+
+fn ingest_all(session: &Landscape, updates: &[Update]) {
+    let mut h = session.ingest_handle();
+    for u in updates {
+        h.ingest(*u);
+    }
+    h.flush();
+}
+
+#[test]
+fn random_streams_survive_a_crash_at_a_random_batch() {
+    let v = 96u64;
+    let params = SketchParams::with_columns(v, DEFAULT_COLUMNS);
+    // a handful of resident blocks per copy: evictions happen even on
+    // these small streams, so recovery mixes checkpointed, evicted, and
+    // WAL-tail-only state
+    let budget = 8 * (8 + params.words() as u64 * 8);
+    let mut rng = Xoshiro256::new(0x5709_4A11);
+
+    for case in 0..6u32 {
+        let dir = tmp(&format!("prop-{case}"));
+        let (stream, live) = random_stream(&mut rng, v, 120 + case as usize * 40);
+        let want = ref_partition(v, &live);
+        // durable point d, crash point c, with d <= c <= len
+        let d = rng.next_below(stream.len() as u64) as usize;
+        let c = d + rng.next_below((stream.len() - d + 1) as u64) as usize;
+
+        let session = spill_builder(v, &dir, budget).build().unwrap();
+        ingest_all(&session, &stream[..d]);
+        session.flush(); // durable cut: checkpoint + fsync'd marker
+        ingest_all(&session, &stream[d..c]);
+        // settle the tail so it is merged and WAL-logged, but take NO
+        // durable mark — exactly the state a crash leaves behind
+        let cut = session.cut();
+        session.wait_for(cut);
+        assert_eq!(session.metrics().batches_dropped, 0, "case {case}");
+        drop(session); // "crash": no final checkpoint runs
+
+        let recovered = spill_builder(v, &dir, budget).recover().unwrap();
+        let m = recovered.metrics();
+        assert_eq!(m.recoveries, 1, "case {case}");
+        // replay the rest of the stream and compare to the referee
+        ingest_all(&recovered, &stream[c..]);
+        recovered.flush();
+        let forest = recovered.query_handle().connected_components();
+        assert!(
+            Referee::same_partition(&forest.component, &want),
+            "case {case}: post-recovery partition diverged from the DSU referee \
+             (d = {d}, c = {c}, |stream| = {})",
+            stream.len()
+        );
+        assert_eq!(recovered.metrics().batches_dropped, 0, "case {case}");
+        drop(recovered);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn double_crash_replays_idempotently() {
+    // crash, recover, then crash again WITHOUT a new durable cut: the
+    // second recovery replays the same WAL tail over segments that may
+    // already hold some of its effects (evicted during the first
+    // recovery's ingest) — the per-block LSN rule must skip those
+    let v = 64u64;
+    let params = SketchParams::with_columns(v, DEFAULT_COLUMNS);
+    let budget = 6 * (8 + params.words() as u64 * 8);
+    let dir = tmp("double-crash");
+    let mut rng = Xoshiro256::new(0xD0_5E_ED);
+    let (stream, live) = random_stream(&mut rng, v, 160);
+    let want = ref_partition(v, &live);
+    let mid = stream.len() / 2;
+
+    let session = spill_builder(v, &dir, budget).build().unwrap();
+    ingest_all(&session, &stream[..mid]);
+    let cut = session.cut();
+    session.wait_for(cut);
+    drop(session); // first crash: nothing was ever durably marked
+
+    let recovered = spill_builder(v, &dir, budget).recover().unwrap();
+    ingest_all(&recovered, &stream[mid..]);
+    let cut = recovered.cut();
+    recovered.wait_for(cut);
+    drop(recovered); // second crash, still no durable mark
+
+    let again = spill_builder(v, &dir, budget).recover().unwrap();
+    again.flush();
+    let forest = again.query_handle().connected_components();
+    assert!(
+        Referee::same_partition(&forest.component, &want),
+        "double-crash recovery diverged from the DSU referee"
+    );
+    assert_eq!(again.metrics().batches_dropped, 0);
+    drop(again);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn recover_without_storage_dir_is_a_typed_error() {
+    let err = Landscape::builder()
+        .vertices(16)
+        .recover()
+        .err()
+        .expect("recover without storage_dir must be rejected");
+    assert!(matches!(err, ConfigError::StorageIo(_)), "{err:?}");
+}
+
+#[test]
+fn v17_ingest_over_budget_respects_the_resident_gauge() {
+    // the acceptance criterion: V = 2^17, a stream touching far more
+    // sketch blocks than the budget can hold resident
+    let v = 1u64 << 17;
+    let params = SketchParams::with_columns(v, DEFAULT_COLUMNS);
+    let block_bytes = 8 + params.words() as u64 * 8;
+    let budget = 192 * block_bytes; // ~192 resident blocks across 2 stripes
+    let dir = tmp("v17-budget");
+
+    // a ring over ~1.5k distinct vertices spread across the full 2^17
+    // range (plus chords), so thousands of blocks are touched
+    let mut updates = Vec::new();
+    let n = 1536u64;
+    let stride = v / n; // spreads vertices across every segment
+    let at = |i: u64| ((i % n) * stride) as u32;
+    for i in 0..n {
+        updates.push(Update::insert(at(i), at(i + 1)));
+    }
+    let mut rng = Xoshiro256::new(0x17_B0D6E7);
+    for _ in 0..512 {
+        let a = rng.next_below(n);
+        let b = rng.next_below(n);
+        if at(a) != at(b) {
+            updates.push(Update::insert(at(a), at(b)));
+        }
+    }
+    let edges: Vec<(u32, u32)> = updates
+        .iter()
+        .map(|u| (u.u, u.v))
+        .collect();
+    let want = ref_partition(v, &edges);
+
+    let session = spill_builder(v, &dir, budget).build().unwrap();
+    ingest_all(&session, &updates);
+    session.flush();
+    let m = session.metrics();
+    assert_eq!(m.batches_dropped, 0);
+    assert!(
+        m.resident_sketch_bytes <= budget,
+        "resident gauge {} exceeds the budget {budget}",
+        m.resident_sketch_bytes
+    );
+    assert!(
+        m.block_faults > 0,
+        "an over-budget ingest must fault cold blocks back in"
+    );
+    assert!(
+        m.spill_bytes_written > 0,
+        "evictions and gutter flushes must have written through"
+    );
+    assert!(m.wal_bytes > 0);
+    let forest = session.query_handle().connected_components();
+    assert!(
+        Referee::same_partition(&forest.component, &want),
+        "spilled partition diverged from the DSU referee"
+    );
+    drop(session);
+    let _ = std::fs::remove_dir_all(&dir);
+}
