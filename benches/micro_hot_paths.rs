@@ -8,8 +8,12 @@
 //! latency, Borůvka queries, query latency idle vs under sustained
 //! never-idle ingest (`query_latency_idle` vs
 //! `query_latency_under_load_p{1,4}` — the epoch cut barrier's win),
-//! GreedyCC ops, adjacency-matrix bit flips, and RAM bandwidth —
-//! everything EXPERIMENTS.md §Perf tracks.
+//! multi-tenant fabric ingest (`ingest_tenants_{1,4,16}` — N logical
+//! graphs over one shared distributor pool) and cross-tenant query
+//! isolation (`query_under_hot_neighbor` — an idle tenant's query
+//! while a neighbor tenant churns), GreedyCC ops, adjacency-matrix
+//! bit flips, and RAM bandwidth — everything EXPERIMENTS.md §Perf
+//! tracks.
 
 use std::sync::Arc;
 
@@ -643,6 +647,117 @@ fn main() {
             };
             row(&name, median);
         }
+    }
+
+    // multi-tenant fabric ingest (the serving layer's headline): the
+    // same stream split across N tenants of ONE fabric, each tenant its
+    // own logical graph with its own producer thread, all multiplexed
+    // over the same two distributors.  ns_per_op is per update
+    // end-to-end (handle create → ingest on all tenants → per-tenant
+    // flush barrier), so the rows track how much sharing the pipeline
+    // costs as tenant count grows.
+    {
+        use landscape::serve::{Fabric, FabricConfig, TenantConfig};
+
+        let tv = 1u64 << 12;
+        let n_up = if args.quick { 40_000usize } else { 200_000usize };
+        let mut trng = Xoshiro256::new(88);
+        let tups: Vec<Update> = (0..n_up)
+            .map(|_| {
+                let a = trng.next_below(tv - 1) as u32;
+                let b = a + 1 + trng.next_below(tv - 1 - a as u64) as u32;
+                Update::insert(a, b)
+            })
+            .collect();
+        for tenants in [1usize, 4, 16] {
+            let mut fc = FabricConfig::for_vertices(tv);
+            fc.base.distributor_threads = 2;
+            fc.base.use_greedycc = false; // isolate the shared-pipeline path
+            let fabric = Fabric::spawn(fc).unwrap();
+            let ids: Vec<_> = (0..tenants)
+                .map(|i| {
+                    fabric
+                        .create_tenant(TenantConfig::named(format!("t{i}"), tv))
+                        .unwrap()
+                })
+                .collect();
+            let chunks: Vec<Vec<Update>> = (0..tenants)
+                .map(|p| tups.iter().copied().skip(p).step_by(tenants).collect())
+                .collect();
+            let s = sbench(&args, 1, 3, || {
+                std::thread::scope(|scope| {
+                    for (id, chunk) in ids.iter().zip(&chunks) {
+                        let mut h = fabric.ingest_handle(*id).unwrap();
+                        scope.spawn(move || {
+                            for &u in chunk {
+                                h.ingest(u);
+                            }
+                        });
+                    }
+                });
+                for id in &ids {
+                    fabric.flush(*id).unwrap();
+                }
+            });
+            row(&format!("ingest_tenants_{tenants}"), s.median / n_up as f64);
+        }
+    }
+
+    // cross-tenant query isolation: a forced tier-2 query on an idle
+    // tenant while a neighbor tenant of the SAME fabric churns at full
+    // rate without pausing.  Because every tenant has its own epoch
+    // barrier, the idle tenant's cut settles against its own (empty)
+    // in-flight set — the row should track `query_latency_idle`, not
+    // `query_latency_under_load_p1`.
+    {
+        use landscape::serve::{Fabric, FabricConfig, TenantConfig};
+        use landscape::util::testkit::{churn_chord, cycle_graph};
+        use std::sync::atomic::{AtomicBool, Ordering};
+
+        let qv = 1u64 << 12;
+        let span = 16u32;
+        let ncycles = (qv as u32) / span;
+        let mut fc = FabricConfig::for_vertices(qv);
+        fc.base.alpha = 1;
+        fc.base.distributor_threads = 2;
+        fc.base.use_greedycc = false; // isolate the cut + sketch-read path
+        let fabric = Fabric::spawn(fc).unwrap();
+        let idle = fabric
+            .create_tenant(TenantConfig::named("idle", qv))
+            .unwrap();
+        let hot = fabric.create_tenant(TenantConfig::named("hot", qv)).unwrap();
+        {
+            let mut h = fabric.ingest_handle(idle).unwrap();
+            for u in cycle_graph(ncycles, span) {
+                h.ingest(u);
+            }
+        }
+        fabric.flush(idle).unwrap();
+
+        let stop = AtomicBool::new(false);
+        let median = std::thread::scope(|scope| {
+            let mut h = fabric.ingest_handle(hot).unwrap();
+            let stop_ref = &stop;
+            // partition-invariant churn on the hot tenant, publishing
+            // every round so ITS pipeline never goes idle
+            scope.spawn(move || {
+                let mut i = 0u32;
+                while !stop_ref.load(Ordering::Acquire) {
+                    let (x, y) = churn_chord((i % ncycles) * span, 0, span);
+                    h.ingest(Update::insert(x, y));
+                    h.ingest(Update::delete(x, y));
+                    h.flush();
+                    i += 1;
+                }
+            });
+            let q = fabric.query_handle(idle).unwrap();
+            let s = sbench(&args, 1, 5, || {
+                let _ = q.full_connectivity_query();
+            });
+            stop.store(true, Ordering::Release);
+            s.median
+        });
+        row("query_under_hot_neighbor", median);
     }
 
     // GreedyCC ops

@@ -47,6 +47,16 @@
 //! directory with [`Landscape::recover`], replays the rest of the
 //! stream, and the final partition must match the exact referee with
 //! zero metered batch loss.
+//!
+//! `--scenario tenants` runs only the multi-tenant serving scenario:
+//! three logical graphs multiplexed over ONE shared fabric (shared
+//! distributor pool, real TCP worker servers), driven end-to-end
+//! through the length-prefixed TCP front end.  The quota'd hot tenant
+//! must collect metered rejections with nothing silently dropped, an
+//! idle tenant's snapshot must stay prompt while the hot tenant
+//! saturates, every tenant must match its own exact referee, and the
+//! per-tenant TBATCH2/TDELTA2 byte accounting must keep the
+//! Theorem 5.2 bound **per tenant**.
 
 use landscape::baseline::Referee;
 use landscape::benchkit::{fmt_bytes, fmt_rate};
@@ -696,6 +706,249 @@ fn stage_recovery_child() -> anyhow::Result<()> {
     std::process::abort();
 }
 
+/// The multi-tenant serving scenario (CI-sized): three logical graphs
+/// over ONE shared fabric — shared distributor pool, two real TCP
+/// worker servers — driven entirely through the length-prefixed TCP
+/// front end.  The hot tenant saturates its admission quota (every
+/// refusal metered and answered with a retry hint, refused chunks
+/// withheld, nothing silently dropped); two background tenants stream
+/// unthrottled; a fourth, idle tenant is probed for snapshot
+/// promptness throughout; every streaming tenant's final partition
+/// must match its own exact referee; and each tenant's attributed
+/// wire bytes (TBATCH2 out + TDELTA2 back) must stay under the
+/// Theorem 5.2 bound computed from that tenant's OWN stream bytes.
+fn stage_tenants() -> anyhow::Result<()> {
+    use landscape::serve::front::{Client, Front};
+    use landscape::serve::wire::WireMetrics;
+    use landscape::serve::{Fabric, FabricConfig};
+    use landscape::stream::dynamify::Dynamify;
+    use landscape::stream::erdos::ErdosRenyi;
+    use landscape::worker::remote::WorkerServer;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    struct TenantRun {
+        name: &'static str,
+        updates: u64,
+        rejections: u64,
+        ok: bool,
+        m: WireMetrics,
+    }
+
+    // Same density recipe as the remote scenario: per-vertex leaves
+    // clear the γ-flush threshold at V=1024, so every tenant's batches
+    // really cross the worker wire and the per-tenant byte meters see
+    // real traffic.
+    let v = 1u64 << 10;
+
+    let w0 = WorkerServer::bind("127.0.0.1:0")?;
+    let w1 = WorkerServer::bind("127.0.0.1:0")?;
+    let addrs = vec![w0.local_addr()?.to_string(), w1.local_addr()?.to_string()];
+    let w0_thread = std::thread::spawn(move || w0.serve(1));
+    let w1_thread = std::thread::spawn(move || w1.serve(1));
+
+    let mut fc = FabricConfig::for_vertices(v);
+    fc.base.alpha = 1;
+    fc.base.distributor_threads = 2;
+    fc.base.remote_window = 8;
+    fc.base.worker = WorkerKind::Remote { addrs };
+    // Theorem 5.2, attributed per tenant: TBATCH2 + TDELTA2 bytes for
+    // tenant t stay under (3 + 1/(γα)) · (t's stream bytes)
+    let bound_factor = 3.0 + 1.0 / (fc.base.gamma * fc.base.alpha as f64);
+    let fabric = Arc::new(Fabric::spawn(fc).map_err(|e| anyhow::anyhow!("fabric: {e}"))?);
+
+    let front = Front::bind("127.0.0.1:0", Arc::clone(&fabric))?;
+    let addr = front.local_addr()?.to_string();
+    // four connections: one probe + three streaming tenants
+    let front_thread = std::thread::spawn(move || front.serve(4));
+
+    // The idle tenant: an 8-cycle, published and settled before the
+    // streamers start — its snapshot latency is the promptness signal.
+    let mut probe = Client::connect(&addr)?;
+    let idle = probe.create("idle", v, 0, 0)?;
+    let cycle: Vec<Update> = (0..8u32).map(|i| Update::insert(i, (i + 1) % 8)).collect();
+    anyhow::ensure!(probe.ingest(idle, &cycle)?.is_none(), "idle tenant throttled");
+    probe.flush(idle)?;
+    let idle_components = (v as usize - 8) + 1;
+
+    let hot_done = AtomicBool::new(false);
+    let sw = Stopwatch::new();
+
+    // One streaming tenant, driven over its own TCP connection: ingest
+    // in chunks (retrying throttled chunks after the server's hint),
+    // flush, query, read the metrics block, say goodbye.
+    let run_stream = |name: &'static str,
+                      seed: u64,
+                      quota: Option<(u64, u64)>|
+     -> anyhow::Result<TenantRun> {
+        let mut client = Client::connect(&addr)?;
+        let (rate, burst) = quota.unwrap_or((0, 0));
+        let id = client.create(name, v, rate, burst)?;
+        let mut referee = Referee::new(v);
+        let mut rejections = 0u64;
+        let mut updates = 0u64;
+        let mut chunk: Vec<Update> = Vec::with_capacity(1024);
+        for u in Dynamify::new(ErdosRenyi::new(v, 0.1, seed), 3) {
+            referee.apply(&u);
+            chunk.push(u);
+            updates += 1;
+            if chunk.len() == 1024 {
+                loop {
+                    match client.ingest(id, &chunk)? {
+                        None => break,
+                        Some(backoff) => {
+                            anyhow::ensure!(
+                                quota.is_some(),
+                                "unthrottled tenant {name} was refused"
+                            );
+                            rejections += 1;
+                            std::thread::sleep(backoff.min(Duration::from_millis(50)));
+                        }
+                    }
+                }
+                chunk.clear();
+            }
+        }
+        while !chunk.is_empty() {
+            match client.ingest(id, &chunk)? {
+                None => chunk.clear(),
+                Some(backoff) => {
+                    rejections += 1;
+                    std::thread::sleep(backoff.min(Duration::from_millis(50)));
+                }
+            }
+        }
+        if quota.is_some() {
+            hot_done.store(true, Ordering::Release);
+        }
+        client.flush(id)?;
+        let (_, got) = client.components(id)?;
+        let m = client.metrics(id)?;
+        client.bye()?;
+        Ok(TenantRun {
+            name,
+            updates,
+            rejections,
+            ok: Referee::same_partition(&got, &referee.component_map()),
+            m,
+        })
+    };
+
+    let (runs, max_probe, probes) = std::thread::scope(
+        |scope| -> anyhow::Result<(Vec<TenantRun>, Duration, u32)> {
+            let bg1 = scope.spawn(|| run_stream("bg-even", 9091, None));
+            let bg2 = scope.spawn(|| run_stream("bg-odd", 9092, None));
+            let hot = scope.spawn(|| run_stream("hot", 9093, Some((200_000, 10_000))));
+
+            // Promptness under a saturating neighbor: the idle tenant's
+            // snapshot is bounded by its OWN in-flight work (none), not
+            // by the hot tenant's backlog on the shared pipeline.
+            let mut max_probe = Duration::ZERO;
+            let mut probes = 0u32;
+            loop {
+                let t0 = Instant::now();
+                let (nc, map) = probe.components(idle)?;
+                max_probe = max_probe.max(t0.elapsed());
+                probes += 1;
+                anyhow::ensure!(
+                    nc as usize == idle_components && map.len() == v as usize,
+                    "idle tenant's answer drifted under load: {nc} components"
+                );
+                if hot_done.load(Ordering::Acquire) || probes >= 64 {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+
+            let mut runs = Vec::new();
+            for h in [hot, bg1, bg2] {
+                runs.push(
+                    h.join()
+                        .map_err(|_| anyhow::anyhow!("tenant thread panicked"))??,
+                );
+            }
+            Ok((runs, max_probe, probes))
+        },
+    )?;
+    let secs = sw.elapsed_secs();
+
+    let total: u64 = runs.iter().map(|r| r.updates).sum();
+    let ratios: Vec<String> = runs
+        .iter()
+        .map(|r| {
+            let net = r.m.batch_bytes_sent + r.m.delta_bytes_received;
+            format!("{}={:.2}×", r.name, net as f64 / r.m.stream_bytes as f64)
+        })
+        .collect();
+    println!(
+        "[tenants] 3 streaming tenants + 1 idle over one fabric via the TCP \
+         front: {} updates in {:.2}s ({}); hot tenant {} metered quota \
+         rejections; idle probe max {:?} over {} probes; per-tenant \
+         wire/stream ratios (bound {:.0}×): {}",
+        total,
+        secs,
+        fmt_rate(total as f64 / secs),
+        runs[0].rejections,
+        max_probe,
+        probes,
+        bound_factor,
+        ratios.join(", "),
+    );
+
+    for r in &runs {
+        assert!(r.ok, "tenant {} diverges from its own referee", r.name);
+        assert_eq!(
+            r.m.updates_ingested, r.updates,
+            "tenant {}: every admitted update ingested",
+            r.name
+        );
+        assert_eq!(
+            r.m.stream_bytes,
+            r.updates * 9,
+            "tenant {}: stream-byte accounting",
+            r.name
+        );
+        assert_eq!(r.m.batches_dropped, 0, "tenant {} dropped batches", r.name);
+        assert!(
+            r.m.batch_bytes_sent > 0,
+            "tenant {}: no batches crossed the wire",
+            r.name
+        );
+        let net = r.m.batch_bytes_sent + r.m.delta_bytes_received;
+        assert!(
+            (net as f64) < bound_factor * r.m.stream_bytes as f64,
+            "tenant {}: per-tenant Theorem 5.2 bound violated ({} wire bytes \
+             vs {} stream bytes)",
+            r.name,
+            net,
+            r.m.stream_bytes
+        );
+        assert_eq!(
+            r.m.quota_rejections, r.rejections,
+            "tenant {}: rejection meter disagrees with the client",
+            r.name
+        );
+    }
+    assert!(runs[0].rejections > 0, "the hot tenant was never throttled");
+    assert!(
+        runs[1].rejections == 0 && runs[2].rejections == 0,
+        "a background tenant was throttled"
+    );
+    let bound = Duration::from_secs(10);
+    assert!(
+        max_probe < bound,
+        "idle tenant's snapshot took {max_probe:?} under a hot neighbor"
+    );
+
+    probe.bye()?;
+    let _ = front_thread.join();
+    drop(fabric); // closes the worker connections so the servers exit
+    let _ = w0_thread.join();
+    let _ = w1_thread.join();
+    Ok(())
+}
+
 /// The value following `--<name>`, if any.
 fn flag_value(name: &str) -> Option<String> {
     let flag = format!("--{name}");
@@ -721,8 +974,11 @@ fn main() -> anyhow::Result<()> {
         Some("sparse") => return stage_sparse(),
         Some("recovery") => return stage_recovery(),
         Some("recovery-child") => return stage_recovery_child(),
+        Some("tenants") => return stage_tenants(),
         Some(other) => {
-            anyhow::bail!("unknown scenario {other} (query|remote|snapshot|sparse|recovery)")
+            anyhow::bail!(
+                "unknown scenario {other} (query|remote|snapshot|sparse|recovery|tenants)"
+            )
         }
         None => {}
     }

@@ -62,6 +62,7 @@ const HOT_PATH_DIRS: &[&str] = &[
     "gutter/",
     "hypertree/",
     "storage/",
+    "serve/",
 ];
 
 /// Files where `Ordering::Relaxed` is allowed without justification:
@@ -82,6 +83,7 @@ const MISSING_DOCS_REQUIRED: &[&str] = &[
     "session/mod.rs",
     "metrics.rs",
     "storage/mod.rs",
+    "serve/mod.rs",
 ];
 
 /// Receiver methods whose `Result` is the lock-poisoning propagation

@@ -12,15 +12,22 @@
 //! back to PR 2's fail-fast path: close the shard queue so producers
 //! take their metered drop path, and account every lost batch in
 //! `batches_dropped`.
+//!
+//! Multi-tenancy: every work item carries a [`TenantId`], and the
+//! distributor resolves the owning tenant's state (store, epoch
+//! barrier, merge gate, metrics, WAL) through a [`TenantDirectory`] at
+//! merge time.  Single-tenant sessions install a directory with one
+//! runtime aliasing the session's own state, so the solo path is
+//! behaviorally identical to the pre-tenant code.
 
 use std::collections::HashSet;
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::connectivity::kconn::KConnectivity;
 use crate::hypertree::VertexBatch;
 use crate::metrics::Metrics;
+use crate::net::tbatch2_wire_bytes;
 use crate::sketch::params::{encode_edge, SketchParams};
 use crate::sketch::store::TierTransitions;
 use crate::sketch::CameoSketch;
@@ -29,8 +36,8 @@ use crate::worker::remote::PipelinedRemote;
 use crate::worker::{Completion, InlineSubmit, PendingBatch, SubmitBackend};
 
 use super::arena::BatchArena;
-use super::work_queue::{EpochBarrier, ShardedWorkQueue, Ticket};
-use super::{build_inline_backend, WorkItem, WorkerKind};
+use super::work_queue::{ShardedWorkQueue, Ticket};
+use super::{build_inline_backend, TenantDirectory, TenantId, TenantRuntime, WorkItem, WorkerKind};
 
 /// Everything a distributor thread needs, bundled so the spawn site
 /// stays readable.
@@ -47,23 +54,30 @@ pub(crate) struct Distributor {
     /// 0 = sketch-only.
     pub hybrid_threshold: u32,
     pub queue: Arc<ShardedWorkQueue<WorkItem>>,
-    pub kconn: Arc<KConnectivity>,
+    /// Resolves each work item's tenant id to the owning tenant's
+    /// runtime (store, epoch barrier, merge gate, metrics, WAL).  Solo
+    /// sessions install a single-entry directory aliasing the session
+    /// state; the multi-tenant fabric installs its registry.
+    pub tenants: Arc<dyn TenantDirectory>,
+    /// Session/fabric-global metrics for connection-level accounting
+    /// that is not attributable to one tenant: worker failures,
+    /// requeues, the in-flight peak gauge, exact framing-layer wire
+    /// bytes, and resolve-miss drops.  For solo sessions this is the
+    /// same object as the lone runtime's metrics.
     pub metrics: Arc<Metrics>,
-    pub barrier: Arc<EpochBarrier>,
-    /// Shared with the session's query path: a merge holds it shared so
-    /// a concurrent sketch read (which holds it exclusively, *after*
-    /// its cut has retired) never observes a torn multi-word delta.
-    pub merge_gate: Arc<RwLock<()>>,
     /// Shared with `QueueSink`: batch buffers are recycled here once
     /// their work completes (delta merged, applied locally, or dropped)
     /// so the producer side can reuse them instead of allocating.
     pub arena: Arc<BatchArena>,
-    /// The session's write-ahead log when the store spills
-    /// (`storage_dir` set).  Every delta is appended *inside* the merge
-    /// gate's shared section, immediately before it merges, and the
-    /// merge is stamped with the record's own end offset — the pairing
-    /// that makes recovery replay idempotent (see `docs/STORAGE.md`).
-    pub wal: Option<Arc<DurabilityLog>>,
+    /// Tenant-tagged wire mode (the multi-tenant fabric sets this):
+    /// remote connections frame every batch as a standalone TBATCH2 and
+    /// the batch leg is metered per tenant at submit time from
+    /// `tbatch2_wire_bytes` — exact in steady state (each submitted
+    /// batch is one frame); a failover resubmission re-crosses the wire
+    /// without re-metering the tenant, so only the fabric-global
+    /// framing-layer meter counts retransmissions.  Solo sessions keep
+    /// classic BATCH2/MULTIBATCH framing.
+    pub tagged_wire: bool,
 }
 
 impl Distributor {
@@ -128,18 +142,20 @@ impl Distributor {
             };
 
             match item {
-                WorkItem::Local(ticket, batch) => {
-                    self.apply_local(ticket, &batch);
+                WorkItem::Local(tenant, ticket, batch) => {
+                    self.apply_local(tenant, ticket, &batch);
                     self.arena.recycle(self.shard, batch.others);
                 }
-                WorkItem::Distribute(ticket, batch) => {
+                WorkItem::Distribute(tenant, ticket, batch) => {
                     let token = next_token;
                     next_token += 1;
+                    let n_others = batch.others.len();
                     // the epoch ticket rides inside the PendingBatch, so
                     // it survives window buffering, the wire, and any
                     // failover resubmission — a requeued batch retires
                     // against its ORIGINAL epoch, never the current one
                     let pending = PendingBatch {
+                        tenant,
                         token,
                         ticket,
                         vertex: batch.vertex,
@@ -148,6 +164,17 @@ impl Distributor {
                     match backend.submit(pending) {
                         Ok(()) => {
                             if is_remote {
+                                if self.tagged_wire {
+                                    // per-tenant batch leg: one standalone
+                                    // TBATCH2 frame per submitted batch,
+                                    // so the helper is frame-exact
+                                    if let Some(rt) = self.tenants.runtime(tenant) {
+                                        Metrics::add(
+                                            &rt.metrics.batch_bytes_sent,
+                                            tbatch2_wire_bytes(n_others),
+                                        );
+                                    }
+                                }
                                 // occupancy, not in_flight(): completions
                                 // awaiting drain are no longer on the wire
                                 Metrics::raise(
@@ -169,8 +196,7 @@ impl Distributor {
                             } else {
                                 // per-batch computation error: the
                                 // backend survives, the batch does not
-                                Metrics::add(&self.metrics.batches_dropped, 1);
-                                self.barrier.complete(ticket);
+                                self.drop_one(tenant, ticket);
                                 crate::log_warn!("worker error (batch dropped): {e:#}");
                             }
                         }
@@ -221,14 +247,45 @@ impl Distributor {
         alive
     }
 
-    /// XOR-merge one completed delta into this distributor's shard,
-    /// retire its epoch ticket, and recycle its batch buffer.
+    /// A work item named a tenant the directory cannot resolve.
+    /// Unreachable by construction — tenants settle their epoch barrier
+    /// (cut + wait) before unregistering, so no in-flight work can
+    /// outlive its runtime — but a bug here must not panic the
+    /// distributor thread: meter the drop against the global metrics
+    /// (there is no tenant to charge) and keep going.  The ticket cannot
+    /// be retired (its barrier is gone with the runtime).
+    fn resolve_miss(&self, tenant: TenantId) {
+        Metrics::add(&self.metrics.batches_dropped, 1);
+        crate::log_error!(
+            "distributor {}: no runtime for tenant {tenant} — batch dropped",
+            self.shard
+        );
+    }
+
+    /// Meter one lost batch against its tenant and retire its ticket.
+    fn drop_one(&self, tenant: TenantId, ticket: Ticket) {
+        match self.tenants.runtime(tenant) {
+            Some(rt) => {
+                Metrics::add(&rt.metrics.batches_dropped, 1);
+                rt.barrier.complete(ticket);
+            }
+            None => self.resolve_miss(tenant),
+        }
+    }
+
+    /// XOR-merge one completed delta into its tenant's shard, retire its
+    /// epoch ticket, and recycle its batch buffer.
     ///
     /// Two flavors arrive: sketch deltas (`k × words` of XOR words) and,
     /// in hybrid mode, exact deltas (raw parity-reduced edge indices for
     /// a cold vertex — the same seed-independent list serves all k
     /// copies).
     fn merge(&self, c: Completion) {
+        let Some(rt) = self.tenants.runtime(c.tenant) else {
+            self.resolve_miss(c.tenant);
+            self.arena.recycle(self.shard, c.others);
+            return;
+        };
         let words = self.params.words();
         let k = self.k as usize;
         // exact deltas are variable-length by design; only sketch deltas
@@ -244,38 +301,38 @@ impl Distributor {
                 c.delta.len(),
                 words * k
             );
-            Metrics::add(&self.metrics.batches_dropped, 1);
+            Metrics::add(&rt.metrics.batches_dropped, 1);
             self.arena.recycle(self.shard, c.others);
-            self.barrier.complete(c.ticket);
+            rt.barrier.complete(c.ticket);
             return;
         }
         let mut transitions = TierTransitions::default();
         {
             // batch-granular atomicity for concurrent readers: the gate
             // is uncontended except while a query is reading the store
-            let _merging = self.merge_gate.read().unwrap();
-            if let Some(wal) = &self.wal {
+            let _merging = rt.merge_gate.read().unwrap();
+            if let Some(wal) = &rt.wal {
                 // durability path (spill store, hybrid tier excluded by
                 // the builder): log first, then merge stamped with the
                 // record's OWN end offset — the shared watermark can
                 // transiently trail other appenders, so stamping from it
                 // here could tag a block past a not-yet-merged record
                 // and make recovery skip that record's replay
-                if !self.log_and_merge(wal, &c) {
-                    Metrics::add(&self.metrics.batches_dropped, 1);
+                if !self.log_and_merge(&rt, wal, &c) {
+                    Metrics::add(&rt.metrics.batches_dropped, 1);
                     self.arena.recycle(self.shard, c.others);
-                    self.barrier.complete(c.ticket);
+                    rt.barrier.complete(c.ticket);
                     return;
                 }
             } else {
                 for copy in 0..k {
                     let t = if c.exact {
-                        self.kconn.stores()[copy].merge_exact_delta(c.vertex, &c.delta)
+                        rt.kconn.stores()[copy].merge_exact_delta(c.vertex, &c.delta)
                     } else {
                         let delta = &c.delta[copy * words..(copy + 1) * words];
                         // the batch's endpoint list rides along so the
                         // shadow set stays current across a sketch merge
-                        self.kconn.stores()[copy].merge_sketch_delta(c.vertex, delta, &c.others)
+                        rt.kconn.stores()[copy].merge_sketch_delta(c.vertex, delta, &c.others)
                     };
                     if copy == 0 {
                         // all copies mirror tier state; meter copy 0 only
@@ -284,26 +341,28 @@ impl Distributor {
                 }
             }
         }
-        self.meter_transitions(transitions);
+        self.meter_transitions(&rt, transitions);
         // the endpoint buffer's work is done, recycle it for producers
         self.arena.recycle(self.shard, c.others);
-        Metrics::add(&self.metrics.deltas_merged, 1);
+        Metrics::add(&rt.metrics.deltas_merged, 1);
         if c.wire_bytes > 0 {
             // real network traffic, metered byte-exactly at the framing
             // layer (inline backends report 0 — Theorem 5.2 counts only
-            // bytes that crossed a wire)
-            Metrics::add(&self.metrics.delta_bytes_received, c.wire_bytes);
+            // bytes that crossed a wire).  Tagged TDELTA2 frames carry
+            // exactly one tenant's delta, so the per-tenant charge is
+            // frame-exact too.
+            Metrics::add(&rt.metrics.delta_bytes_received, c.wire_bytes);
             if c.exact {
                 // compact-frame share of the delta leg (Theorem 5.2's
                 // win from the hybrid tier is exactly this gap)
-                Metrics::add(&self.metrics.exact_bytes, c.wire_bytes);
+                Metrics::add(&rt.metrics.exact_bytes, c.wire_bytes);
             }
         }
-        self.barrier.complete(c.ticket);
+        rt.barrier.complete(c.ticket);
         // ticket-retire scheduling point: flush this shard's delta
         // gutter past its high-water mark and evict back to the
         // resident budget (a no-op for resident backings)
-        self.kconn.maintain(self.shard);
+        rt.kconn.maintain(self.shard);
     }
 
     /// Append one completion to the WAL and merge it, stamping every
@@ -312,7 +371,7 @@ impl Distributor {
     /// append failed — the caller takes the metered-drop path, because
     /// merging an unlogged delta would silently void the recovery
     /// contract.
-    fn log_and_merge(&self, wal: &DurabilityLog, c: &Completion) -> bool {
+    fn log_and_merge(&self, rt: &TenantRuntime, wal: &DurabilityLog, c: &Completion) -> bool {
         let words = self.params.words();
         let receipt = if c.exact {
             wal.append_exact(c.vertex, &c.delta)
@@ -329,18 +388,18 @@ impl Distributor {
                 return false;
             }
         };
-        Metrics::add(&self.metrics.wal_bytes, a.bytes);
+        Metrics::add(&rt.metrics.wal_bytes, a.bytes);
         if c.exact {
             // exact completions need the hybrid tier, which the builder
             // rejects alongside spilling — but tolerate one anyway,
             // exactly the way recovery replay would: expand the indices
             // per copy under its own seeds
-            for store in self.kconn.stores() {
+            for store in rt.kconn.stores() {
                 let delta = CameoSketch::delta_of_batch(store.params(), store.seeds(), &c.delta);
                 store.merge_delta_logged(c.vertex, &delta, a.end);
             }
         } else {
-            for (copy, store) in self.kconn.stores().iter().enumerate() {
+            for (copy, store) in rt.kconn.stores().iter().enumerate() {
                 let delta = &c.delta[copy * words..(copy + 1) * words];
                 store.merge_delta_logged(c.vertex, delta, a.end);
             }
@@ -348,21 +407,26 @@ impl Distributor {
         true
     }
 
-    /// Fold copy-0 tier transitions into the session counters.
-    fn meter_transitions(&self, t: TierTransitions) {
+    /// Fold copy-0 tier transitions into the tenant's counters.
+    fn meter_transitions(&self, rt: &TenantRuntime, t: TierTransitions) {
         if t.promotions > 0 {
-            Metrics::add(&self.metrics.promotions, t.promotions);
+            Metrics::add(&rt.metrics.promotions, t.promotions);
         }
         if t.demotions > 0 {
-            Metrics::add(&self.metrics.demotions, t.demotions);
+            Metrics::add(&rt.metrics.demotions, t.demotions);
         }
     }
 
     /// §5.3's hybrid policy: underfull leaves apply per-update on the
     /// shard owner, no delta overhead.
-    fn apply_local(&self, ticket: Ticket, batch: &VertexBatch) {
+    fn apply_local(&self, tenant: TenantId, ticket: Ticket, batch: &VertexBatch) {
+        let Some(rt) = self.tenants.runtime(tenant) else {
+            // caller recycles the buffer; the ticket's barrier is gone
+            self.resolve_miss(tenant);
+            return;
+        };
         let v = self.params.v;
-        if let Some(wal) = &self.wal {
+        if let Some(wal) = &rt.wal {
             // durability path: one copy-independent Exact record per
             // underfull leaf (the same compact form the network's
             // EXACTDELTA2 frames use), logged and merged under the gate
@@ -373,11 +437,11 @@ impl Distributor {
                 .map(|&other| encode_edge(batch.vertex, other, v))
                 .collect();
             let logged = {
-                let _merging = self.merge_gate.read().unwrap();
+                let _merging = rt.merge_gate.read().unwrap();
                 match wal.append_exact(batch.vertex, &indices) {
                     Ok(a) => {
-                        Metrics::add(&self.metrics.wal_bytes, a.bytes);
-                        for store in self.kconn.stores() {
+                        Metrics::add(&rt.metrics.wal_bytes, a.bytes);
+                        for store in rt.kconn.stores() {
                             let delta = CameoSketch::delta_of_batch(
                                 store.params(),
                                 store.seeds(),
@@ -397,20 +461,20 @@ impl Distributor {
                 }
             };
             if logged {
-                Metrics::add(&self.metrics.updates_local, batch.others.len() as u64);
+                Metrics::add(&rt.metrics.updates_local, batch.others.len() as u64);
             } else {
-                Metrics::add(&self.metrics.batches_dropped, 1);
+                Metrics::add(&rt.metrics.batches_dropped, 1);
             }
-            self.barrier.complete(ticket);
-            self.kconn.maintain(self.shard);
+            rt.barrier.complete(ticket);
+            rt.kconn.maintain(self.shard);
             return;
         }
         let mut transitions = TierTransitions::default();
         {
-            let _merging = self.merge_gate.read().unwrap();
+            let _merging = rt.merge_gate.read().unwrap();
             for &other in &batch.others {
                 let idx = encode_edge(batch.vertex, other, v);
-                for (copy, store) in self.kconn.stores().iter().enumerate() {
+                for (copy, store) in rt.kconn.stores().iter().enumerate() {
                     // ingest-path write: hybrid stores evaluate
                     // promotion/demotion here (copy 0 is metered; all
                     // copies mirror tier state)
@@ -421,10 +485,10 @@ impl Distributor {
                 }
             }
         }
-        self.meter_transitions(transitions);
-        Metrics::add(&self.metrics.updates_local, batch.others.len() as u64);
-        self.barrier.complete(ticket);
-        self.kconn.maintain(self.shard);
+        self.meter_transitions(&rt, transitions);
+        Metrics::add(&rt.metrics.updates_local, batch.others.len() as u64);
+        rt.barrier.complete(ticket);
+        rt.kconn.maintain(self.shard);
     }
 
     fn build_backend(
@@ -463,14 +527,25 @@ impl Distributor {
             if failed.contains(&slot) {
                 continue;
             }
-            match PipelinedRemote::connect_hybrid(
-                &addrs[slot],
-                self.params,
-                self.graph_seed,
-                self.k,
-                self.window,
-                self.hybrid_threshold,
-            ) {
+            let conn = if self.tagged_wire {
+                PipelinedRemote::connect_tagged(
+                    &addrs[slot],
+                    self.params,
+                    self.graph_seed,
+                    self.k,
+                    self.window,
+                )
+            } else {
+                PipelinedRemote::connect_hybrid(
+                    &addrs[slot],
+                    self.params,
+                    self.graph_seed,
+                    self.k,
+                    self.window,
+                    self.hybrid_threshold,
+                )
+            };
+            match conn {
                 Ok(conn) => return Ok((slot, conn)),
                 Err(e) => {
                     crate::log_warn!(
@@ -581,16 +656,13 @@ impl Distributor {
         false
     }
 
-    /// Meter lost batches, retire each one's epoch ticket (so no cut
-    /// waits forever on work that can no longer complete), and recycle
-    /// their buffers — lost work, not lost memory.
+    /// Meter lost batches against their tenants, retire each one's epoch
+    /// ticket (so no cut waits forever on work that can no longer
+    /// complete), and recycle their buffers — lost work, not lost
+    /// memory.
     fn drop_batches(&self, batches: Vec<PendingBatch>) {
-        if batches.is_empty() {
-            return;
-        }
-        Metrics::add(&self.metrics.batches_dropped, batches.len() as u64);
         for b in batches {
-            self.barrier.complete(b.ticket);
+            self.drop_one(b.tenant, b.ticket);
             self.arena.recycle(self.shard, b.others);
         }
     }
@@ -603,9 +675,9 @@ impl Distributor {
     fn abandon_shard(&self) {
         self.queue.close_shard(self.shard);
         while let Some(item) = self.queue.pop(self.shard) {
-            let (WorkItem::Distribute(ticket, batch) | WorkItem::Local(ticket, batch)) = item;
-            Metrics::add(&self.metrics.batches_dropped, 1);
-            self.barrier.complete(ticket);
+            let (WorkItem::Distribute(tenant, ticket, batch)
+            | WorkItem::Local(tenant, ticket, batch)) = item;
+            self.drop_one(tenant, ticket);
             self.arena.recycle(self.shard, batch.others);
         }
     }

@@ -46,6 +46,55 @@ use crate::worker::{CubeWorker, NativeWorker, WorkerBackend, WorkerSeeds};
 pub use crate::session::IngestReport;
 pub use query::{QueryEngine, QueryTier};
 
+/// Identifier of one logical graph multiplexed over the shared pipeline
+/// (see [`crate::serve`]).  A single-tenant [`Landscape`] session is
+/// tenant `0` everywhere; the serving fabric allocates ids from 1.
+pub type TenantId = u32;
+
+/// The tenant id a plain single-tenant session runs under.
+pub const SOLO_TENANT: TenantId = 0;
+
+/// Everything a distributor needs to resolve per tenant: the tenant's
+/// own sketch store, epoch barrier, merge gate, metrics, and (optional)
+/// write-ahead log.  A solo session has exactly one of these; the
+/// serving fabric keeps one per live tenant and shares the distributor
+/// pool across them.
+pub(crate) struct TenantRuntime {
+    pub kconn: std::sync::Arc<KConnectivity>,
+    pub barrier: std::sync::Arc<work_queue::EpochBarrier>,
+    pub merge_gate: std::sync::Arc<std::sync::RwLock<()>>,
+    pub metrics: std::sync::Arc<crate::metrics::Metrics>,
+    pub wal: Option<std::sync::Arc<crate::storage::DurabilityLog>>,
+}
+
+/// Resolve a [`TenantId`] to its runtime.  The solo session's directory
+/// always answers with its single runtime; the fabric's registry
+/// answers `None` for a tenant dropped while work was in flight — the
+/// distributor then takes the defensive metered-drop path (unreachable
+/// by construction: tenant drop settles the barrier first, see
+/// `serve::TenantRegistry`).
+pub(crate) trait TenantDirectory: Send + Sync {
+    fn runtime(&self, tenant: TenantId) -> Option<std::sync::Arc<TenantRuntime>>;
+}
+
+/// The single-tenant directory: every lookup answers the session's one
+/// runtime (the id is ignored — a solo pipeline only ever mints
+/// [`SOLO_TENANT`] items), so resolution costs one `Arc` clone and the
+/// solo path stays behaviorally identical to the pre-tenant code.
+pub(crate) struct SoloDirectory(std::sync::Arc<TenantRuntime>);
+
+impl SoloDirectory {
+    pub(crate) fn new(runtime: std::sync::Arc<TenantRuntime>) -> Self {
+        Self(runtime)
+    }
+}
+
+impl TenantDirectory for SoloDirectory {
+    fn runtime(&self, _tenant: TenantId) -> Option<std::sync::Arc<TenantRuntime>> {
+        Some(self.0.clone())
+    }
+}
+
 /// Build an in-process worker backend inside a distributor thread.
 /// `WorkerKind::Remote` never comes through here — the distributor
 /// builds a pipelined connection (with failover) for it instead.
@@ -202,12 +251,16 @@ impl CoordinatorConfig {
 /// lifetime (queue → submit → out-of-order completion, surviving
 /// failover resubmission) and is retired exactly once at the merge or
 /// the metered drop.
+/// Each item also names the [`TenantId`] whose logical graph it belongs
+/// to, so a shared distributor can resolve the right store/barrier pair
+/// through its [`TenantDirectory`]; a solo session tags everything
+/// [`SOLO_TENANT`].
 pub(crate) enum WorkItem {
     /// A γ-full batch: worker backend → sketch delta → exclusive merge.
-    Distribute(work_queue::Ticket, VertexBatch),
+    Distribute(TenantId, work_queue::Ticket, VertexBatch),
     /// An underfull leaf at flush time: per-update local application on
     /// the shard owner (§5.3's hybrid policy — no delta overhead).
-    Local(work_queue::Ticket, VertexBatch),
+    Local(TenantId, work_queue::Ticket, VertexBatch),
 }
 
 /// The legacy single-owner facade: one session + one ingest handle

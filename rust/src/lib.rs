@@ -23,6 +23,10 @@
 //! * **L3 (this crate)** — the coordinator: ingestion, batching, worker
 //!   dispatch, merging, queries ([`coordinator`], [`hypertree`],
 //!   [`worker`], [`connectivity`]).
+//! * **Serving layer** ([`serve`]) — optional multi-tenancy on top of
+//!   L3: N logical graphs multiplexed over one shared pipeline, with a
+//!   TCP front end, per-tenant admission quotas, and per-tenant
+//!   isolation metrics.
 //! * **L2/L1 (python/, build-time only)** — the sketch-delta computation
 //!   graph and its Pallas kernel, AOT-lowered to HLO text artifacts that
 //!   [`runtime`] loads and executes via PJRT.  Workers can compute deltas
@@ -86,6 +90,7 @@ pub mod hypertree;
 pub mod metrics;
 pub mod net;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod sketch;
 pub mod storage;

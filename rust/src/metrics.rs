@@ -106,6 +106,21 @@ pub struct Metrics {
     /// Sessions that came up through [`crate::Landscape::recover`]
     /// (WAL-tail replay over checkpointed segments).
     pub recoveries: AtomicU64,
+    /// Ingest requests rejected by a tenant's admission quota (each got
+    /// a THROTTLED reply with a retry-after hint, never a silent drop).
+    /// On a per-tenant metrics object this counts that tenant only.
+    pub quota_rejections: AtomicU64,
+    /// Gauge: work items registered but not yet retired on the epoch
+    /// barrier (per-tenant pipeline backlog; refreshed at snapshot).
+    pub queue_depth: AtomicU64,
+    /// Total microseconds of wall-clock query latency (connectivity,
+    /// reachability, and k-connectivity entry points) — with
+    /// `queries_full + queries_partial + queries_greedy` this gives the
+    /// mean latency behind the serving layer's promptness checks.
+    pub query_us: AtomicU64,
+    /// Gauge: logical graphs currently registered on the serving
+    /// fabric (1 on a plain single-tenant session's own metrics).
+    pub tenants_active: AtomicU64,
 }
 
 /// A plain-value copy of [`Metrics`] — each field mirrors the counter
@@ -178,6 +193,14 @@ pub struct MetricsSnapshot {
     pub resident_sketch_bytes: u64,
     /// See [`Metrics::recoveries`].
     pub recoveries: u64,
+    /// See [`Metrics::quota_rejections`].
+    pub quota_rejections: u64,
+    /// See [`Metrics::queue_depth`].
+    pub queue_depth: u64,
+    /// See [`Metrics::query_us`].
+    pub query_us: u64,
+    /// See [`Metrics::tenants_active`].
+    pub tenants_active: u64,
 }
 
 impl Metrics {
@@ -253,6 +276,10 @@ impl Metrics {
             block_faults: Self::rd(&self.block_faults),
             resident_sketch_bytes: Self::rd(&self.resident_sketch_bytes),
             recoveries: Self::rd(&self.recoveries),
+            quota_rejections: Self::rd(&self.quota_rejections),
+            queue_depth: Self::rd(&self.queue_depth),
+            query_us: Self::rd(&self.query_us),
+            tenants_active: Self::rd(&self.tenants_active),
         }
     }
 }

@@ -27,7 +27,22 @@
 //! ERROR      tag=7  u32 code, u32 len, len×u8 utf-8 reason
 //! BYE        tag=8
 //! EXACTDELTA2 tag=9 u64 seq, u32 vertex, u32 count, count×u64 edge-indices
+//! TBATCH2    tag=10 u32 tenant, u64 seq, u32 vertex, u32 count, count×u32 other-endpoints
+//! TDELTA2    tag=11 u32 tenant, u64 seq, u32 vertex, u32 words, words×u64 delta
 //! ```
+//!
+//! TBATCH2/TDELTA2 are the multi-tenant serving layer's tagged
+//! generation of BATCH2/DELTA2: the 4-byte tenant id travels with the
+//! batch and is echoed on the delta, so one worker connection can carry
+//! interleaved batches of N logical graphs while the coordinator meters
+//! each tenant's wire bytes separately (Theorem 5.2 per tenant — see
+//! docs/SERVING.md).  Workers stay tenant-oblivious: every tenant
+//! shares the fabric's sketch parameters and graph seed, so the delta
+//! computation is identical and the tag is pure routing metadata.
+//! Tagged batches are deliberately sent as standalone frames (no
+//! TMULTIBATCH): coalescing would amortize ~1 byte per batch but smear
+//! frame bytes across tenants, and exact per-tenant accounting is the
+//! point.
 //!
 //! HELLO's `threshold` is the hybrid handshake (0 = sketch deltas
 //! only): batches whose odd-parity index count is ≤ threshold are
@@ -104,6 +119,23 @@ pub enum Message {
         vertex: u32,
         indices: Vec<u64>,
     },
+    /// Multi-tenant v2: a sequence-tagged batch belonging to logical
+    /// graph `tenant` (answered by a [`Message::TDelta2`] echoing both
+    /// `tenant` and `seq`, in any order).
+    TBatch2 {
+        tenant: u32,
+        seq: u64,
+        vertex: u32,
+        others: Vec<u32>,
+    },
+    /// Multi-tenant v2: the delta for the batch submitted under
+    /// (`tenant`, `seq`).
+    TDelta2 {
+        tenant: u32,
+        seq: u64,
+        vertex: u32,
+        delta: Vec<u64>,
+    },
     /// v2: fatal protocol/backend error; the sender closes after this.
     Error { code: u32, reason: String },
     /// v2: clean-close acknowledgement — the worker has answered every
@@ -121,6 +153,16 @@ pub fn exact_delta2_wire_bytes(count: usize) -> u64 {
     1 + 8 + 4 + 4 + count as u64 * 8
 }
 
+/// Exact wire size of a TBATCH2 frame carrying `count` other-endpoints.
+pub fn tbatch2_wire_bytes(count: usize) -> u64 {
+    1 + 4 + 8 + 4 + 4 + count as u64 * 4
+}
+
+/// Exact wire size of a TDELTA2 frame carrying `words` u64 words.
+pub fn tdelta2_wire_bytes(words: usize) -> u64 {
+    1 + 4 + 8 + 4 + 4 + words as u64 * 8
+}
+
 impl Message {
     /// Serialized size in bytes (tag + header + payload).
     pub fn wire_bytes(&self) -> u64 {
@@ -135,6 +177,8 @@ impl Message {
                 1 + 4 + batches.iter().map(SeqBatch::entry_bytes).sum::<u64>()
             }
             Message::ExactDelta2 { indices, .. } => exact_delta2_wire_bytes(indices.len()),
+            Message::TBatch2 { others, .. } => tbatch2_wire_bytes(others.len()),
+            Message::TDelta2 { delta, .. } => tdelta2_wire_bytes(delta.len()),
             Message::Error { reason, .. } => 1 + 4 + 4 + reason.len() as u64,
             Message::Bye => 1,
         }
@@ -204,6 +248,30 @@ impl Message {
                 w.write_all(&seq.to_le_bytes())?;
                 w.write_all(&vertex.to_le_bytes())?;
                 write_u64s(w, indices)?;
+            }
+            Message::TBatch2 {
+                tenant,
+                seq,
+                vertex,
+                others,
+            } => {
+                w.write_all(&[10u8])?;
+                w.write_all(&tenant.to_le_bytes())?;
+                w.write_all(&seq.to_le_bytes())?;
+                w.write_all(&vertex.to_le_bytes())?;
+                write_u32s(w, others)?;
+            }
+            Message::TDelta2 {
+                tenant,
+                seq,
+                vertex,
+                delta,
+            } => {
+                w.write_all(&[11u8])?;
+                w.write_all(&tenant.to_le_bytes())?;
+                w.write_all(&seq.to_le_bytes())?;
+                w.write_all(&vertex.to_le_bytes())?;
+                write_u64s(w, delta)?;
             }
             Message::Error { code, reason } => {
                 w.write_all(&[7u8])?;
@@ -311,6 +379,30 @@ impl Message {
                     indices: read_u64s(r, count)?,
                 })
             }
+            10 => {
+                let tenant = read_u32(r)?;
+                let seq = read_u64(r)?;
+                let vertex = read_u32(r)?;
+                let count = read_count(r, "tbatch2")?;
+                Ok(Message::TBatch2 {
+                    tenant,
+                    seq,
+                    vertex,
+                    others: read_u32s(r, count)?,
+                })
+            }
+            11 => {
+                let tenant = read_u32(r)?;
+                let seq = read_u64(r)?;
+                let vertex = read_u32(r)?;
+                let words = read_count(r, "tdelta2")?;
+                Ok(Message::TDelta2 {
+                    tenant,
+                    seq,
+                    vertex,
+                    delta: read_u64s(r, words)?,
+                })
+            }
             t => Err(anyhow!("unknown frame tag {t}")),
         }
     }
@@ -342,6 +434,18 @@ pub fn encode_seq_batch_into(buf: &mut Vec<u8>, seq: u64, vertex: u32, others: &
     extend_u32s(buf, others);
 }
 
+/// Append a TBATCH2 frame to a scatter buffer, byte-identical to
+/// `Message::TBatch2 { tenant, seq, vertex, others }.write_to(..)` —
+/// the tagged transport mode pre-serializes frames from borrowed
+/// batches exactly like [`encode_batch2_into`].
+pub fn encode_tbatch2_into(buf: &mut Vec<u8>, tenant: u32, seq: u64, vertex: u32, others: &[u32]) {
+    buf.push(10u8);
+    buf.extend_from_slice(&tenant.to_le_bytes());
+    buf.extend_from_slice(&seq.to_le_bytes());
+    buf.extend_from_slice(&vertex.to_le_bytes());
+    extend_u32s(buf, others);
+}
+
 fn extend_u32s(buf: &mut Vec<u8>, xs: &[u32]) {
     buf.extend_from_slice(&(xs.len() as u32).to_le_bytes());
     for x in xs {
@@ -349,7 +453,7 @@ fn extend_u32s(buf: &mut Vec<u8>, xs: &[u32]) {
     }
 }
 
-fn read_count<R: Read>(r: &mut R, what: &str) -> Result<usize> {
+pub(crate) fn read_count<R: Read>(r: &mut R, what: &str) -> Result<usize> {
     let n = read_u32(r)? as usize;
     if n > (1 << 28) {
         bail!("{what} too large: {n}");
@@ -357,19 +461,19 @@ fn read_count<R: Read>(r: &mut R, what: &str) -> Result<usize> {
     Ok(n)
 }
 
-fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+pub(crate) fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
 }
 
-fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+pub(crate) fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
     let mut b = [0u8; 8];
     r.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
 }
 
-fn write_u32s<W: Write>(w: &mut W, xs: &[u32]) -> Result<()> {
+pub(crate) fn write_u32s<W: Write>(w: &mut W, xs: &[u32]) -> Result<()> {
     w.write_all(&(xs.len() as u32).to_le_bytes())?;
     for x in xs {
         w.write_all(&x.to_le_bytes())?;
@@ -377,7 +481,7 @@ fn write_u32s<W: Write>(w: &mut W, xs: &[u32]) -> Result<()> {
     Ok(())
 }
 
-fn write_u64s<W: Write>(w: &mut W, xs: &[u64]) -> Result<()> {
+pub(crate) fn write_u64s<W: Write>(w: &mut W, xs: &[u64]) -> Result<()> {
     w.write_all(&(xs.len() as u32).to_le_bytes())?;
     for x in xs {
         w.write_all(&x.to_le_bytes())?;
@@ -385,7 +489,7 @@ fn write_u64s<W: Write>(w: &mut W, xs: &[u64]) -> Result<()> {
     Ok(())
 }
 
-fn read_u32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<u32>> {
+pub(crate) fn read_u32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<u32>> {
     let mut bytes = vec![0u8; n * 4];
     r.read_exact(&mut bytes)?;
     Ok(bytes
@@ -394,7 +498,7 @@ fn read_u32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<u32>> {
         .collect())
 }
 
-fn read_u64s<R: Read>(r: &mut R, n: usize) -> Result<Vec<u64>> {
+pub(crate) fn read_u64s<R: Read>(r: &mut R, n: usize) -> Result<Vec<u64>> {
     let mut bytes = vec![0u8; n * 8];
     r.read_exact(&mut bytes)?;
     Ok(bytes
@@ -481,6 +585,69 @@ mod tests {
             vertex: 5,
             indices: vec![],
         });
+    }
+
+    #[test]
+    fn tenant_frames_roundtrip() {
+        roundtrip(Message::TBatch2 {
+            tenant: 3,
+            seq: u64::MAX - 7,
+            vertex: 12,
+            others: vec![1, 2, u32::MAX],
+        });
+        roundtrip(Message::TBatch2 {
+            tenant: 0,
+            seq: 0,
+            vertex: 0,
+            others: vec![],
+        });
+        roundtrip(Message::TDelta2 {
+            tenant: 3,
+            seq: 99,
+            vertex: 12,
+            delta: vec![0, u64::MAX, 17],
+        });
+    }
+
+    #[test]
+    fn tenant_wire_bytes_helpers_are_exact() {
+        for count in [0usize, 1, 33] {
+            let msg = Message::TBatch2 {
+                tenant: 7,
+                seq: 5,
+                vertex: 1,
+                others: vec![2u32; count],
+            };
+            assert_eq!(msg.wire_bytes(), tbatch2_wire_bytes(count));
+        }
+        for words in [0usize, 1, 17] {
+            let msg = Message::TDelta2 {
+                tenant: 7,
+                seq: 5,
+                vertex: 1,
+                delta: vec![0u64; words],
+            };
+            assert_eq!(msg.wire_bytes(), tdelta2_wire_bytes(words));
+        }
+        // the tenant tag costs exactly 4 bytes over the untagged frames
+        assert_eq!(tbatch2_wire_bytes(9), 4 + 1 + 8 + 4 + 4 + 9 * 4);
+        assert_eq!(tdelta2_wire_bytes(9), delta2_wire_bytes(9) + 4);
+    }
+
+    #[test]
+    fn tbatch2_scatter_encoder_matches_message_framing() {
+        let msg = Message::TBatch2 {
+            tenant: 5,
+            seq: 77,
+            vertex: 3,
+            others: vec![1, 2, u32::MAX],
+        };
+        let mut want = Vec::new();
+        msg.write_to(&mut want).unwrap();
+        let mut got = Vec::new();
+        encode_tbatch2_into(&mut got, 5, 77, 3, &[1, 2, u32::MAX]);
+        assert_eq!(got, want);
+        assert_eq!(got.len() as u64, msg.wire_bytes());
     }
 
     #[test]

@@ -1,0 +1,517 @@
+//! The TCP front end: a thin, thread-per-connection server exposing
+//! the [`Fabric`](super::Fabric) over the [`super::wire`] protocol,
+//! plus the matching blocking [`Client`].
+//!
+//! Connection model (mirrors the worker server in
+//! `crate::worker::remote`): [`Front::serve`] accepts up to N
+//! connections, each handled on its own thread.  A connection owns one
+//! [`IngestHandle`] per tenant it has ingested into — so a
+//! connection's updates take the same lock-free thread-local ingest
+//! path as an in-process producer — and those handles are dropped
+//! (publishing their buffered tails) on `BYE`, on disconnect, or when
+//! the same connection drops the tenant.
+//!
+//! Admission happens here, **before** any update enters the pipeline:
+//! an over-quota `INGEST` is answered `THROTTLED` with a retry-after
+//! hint and its updates are not applied, so backpressure is explicit
+//! and lossless rather than a silent drop deep in the shared queues.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::TenantId;
+use crate::session::IngestHandle;
+use crate::stream::update::Update;
+
+use super::wire::{code, Request, Response, WireMetrics};
+use super::{Fabric, TenantConfig, TenantError};
+
+/// The front-end TCP server over one [`Fabric`].
+pub struct Front {
+    listener: TcpListener,
+    fabric: Arc<Fabric>,
+}
+
+impl Front {
+    /// Bind to `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port).
+    pub fn bind(addr: &str, fabric: Arc<Fabric>) -> Result<Self> {
+        Ok(Self {
+            listener: TcpListener::bind(addr)?,
+            fabric,
+        })
+    }
+
+    /// The bound address (hand to clients).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept and serve `max_connections` connections (`usize::MAX` to
+    /// run until the process ends), each on its own thread; returns
+    /// after the accepted connections have all finished.  A client
+    /// disconnecting mid-stream is normal teardown, not a server
+    /// error.
+    pub fn serve(&self, max_connections: usize) -> Result<()> {
+        let mut served = 0usize;
+        let mut accept_failures = 0u32;
+        let mut workers = Vec::new();
+        for stream in self.listener.incoming() {
+            let stream = match stream {
+                Ok(s) => {
+                    accept_failures = 0;
+                    s
+                }
+                Err(e) => {
+                    // transient SYN-drop accepts are served around; a
+                    // persistently failing accept (fd exhaustion) must
+                    // not become a hot error loop
+                    accept_failures += 1;
+                    if accept_failures >= 64 {
+                        bail!("front end: accept failing persistently: {e}");
+                    }
+                    crate::log_warn!(target: "front", "accept failed: {e}");
+                    continue;
+                }
+            };
+            let fabric = self.fabric.clone();
+            workers.push(std::thread::spawn(move || {
+                if let Err(e) = handle_connection(fabric, stream) {
+                    crate::log_warn!(target: "front", "connection ended with error: {e:#}");
+                }
+            }));
+            served += 1;
+            if served >= max_connections {
+                break;
+            }
+        }
+        for w in workers {
+            let _ = w.join();
+        }
+        Ok(())
+    }
+}
+
+/// Map a refused fabric operation onto its wire error frame.
+fn error_response(e: &TenantError) -> Response {
+    let code = match e {
+        TenantError::UnknownTenant(_) => code::UNKNOWN_TENANT,
+        TenantError::TenantBusy(_) => code::TENANT_BUSY,
+        TenantError::TenantLimitReached(_) => code::TENANT_LIMIT,
+        TenantError::ZeroVertices
+        | TenantError::VerticesExceedFabric(..)
+        | TenantError::NameTaken(_)
+        | TenantError::InvalidFabric(_) => code::BAD_CONFIG,
+    };
+    Response::Error {
+        code,
+        message: e.to_string(),
+    }
+}
+
+/// Every update must fall inside the tenant's logical range.
+fn range_error(tenant: TenantId, vertex: u32, vertices: u64) -> Response {
+    Response::Error {
+        code: code::VERTEX_RANGE,
+        message: format!(
+            "vertex {vertex} outside tenant {tenant}'s range 0..{vertices}"
+        ),
+    }
+}
+
+fn first_out_of_range(updates: &[Update], vertices: u64) -> Option<u32> {
+    updates
+        .iter()
+        .flat_map(|u| [u.u, u.v])
+        .find(|&x| x as u64 >= vertices)
+}
+
+/// One connection's request → response loop.
+fn handle_connection(fabric: Arc<Fabric>, stream: TcpStream) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    // this connection's ingest handles, one per tenant it writes to;
+    // dropping one publishes its buffered tail
+    let mut handles: HashMap<TenantId, IngestHandle> = HashMap::new();
+    loop {
+        let req = match Request::read_from(&mut reader) {
+            Ok(r) => r,
+            // EOF (or a torn frame at teardown) is normal client
+            // departure: drop the handles, publishing their tails
+            Err(_) => break,
+        };
+        let mut done = false;
+        let resp = match req {
+            Request::Create {
+                name,
+                vertices,
+                quota_rate,
+                quota_burst,
+            } => {
+                let cfg = TenantConfig {
+                    name,
+                    vertices,
+                    quota_rate,
+                    quota_burst,
+                };
+                match fabric.create_tenant(cfg) {
+                    Ok(tenant) => Response::Created { tenant },
+                    Err(e) => error_response(&e),
+                }
+            }
+            Request::Drop { tenant } => {
+                // release our own handle first, or the drop would
+                // always see this connection as a live writer
+                handles.remove(&tenant);
+                match fabric.drop_tenant(tenant) {
+                    Ok(()) => Response::Ok,
+                    Err(e) => error_response(&e),
+                }
+            }
+            Request::Ingest { tenant, updates } => match fabric.tenant_vertices(tenant) {
+                Err(e) => error_response(&e),
+                Ok(vertices) => {
+                    if let Some(bad) = first_out_of_range(&updates, vertices) {
+                        range_error(tenant, bad, vertices)
+                    } else {
+                        match fabric.admit(tenant, updates.len() as u64) {
+                            Err(e) => error_response(&e),
+                            Ok(Err(backoff)) => Response::Throttled {
+                                retry_after_micros: (backoff.as_micros() as u64).max(1),
+                            },
+                            Ok(Ok(())) => {
+                                let handle = match handles.entry(tenant) {
+                                    std::collections::hash_map::Entry::Occupied(o) => {
+                                        Ok(o.into_mut())
+                                    }
+                                    std::collections::hash_map::Entry::Vacant(v) => {
+                                        fabric.ingest_handle(tenant).map(|h| v.insert(h))
+                                    }
+                                };
+                                match handle {
+                                    Err(e) => error_response(&e),
+                                    Ok(h) => {
+                                        for u in &updates {
+                                            h.ingest(*u);
+                                        }
+                                        Response::Ok
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            },
+            Request::Flush { tenant } => {
+                if let Some(h) = handles.get_mut(&tenant) {
+                    h.flush();
+                }
+                match fabric.flush(tenant) {
+                    Ok(()) => Response::Ok,
+                    Err(e) => error_response(&e),
+                }
+            }
+            Request::Components { tenant } => {
+                // publish this connection's tail first: the reply
+                // covers everything this client has sent (other
+                // connections' unflushed tails are theirs to publish)
+                if let Some(h) = handles.get_mut(&tenant) {
+                    h.flush();
+                }
+                match fabric.connected_components(tenant) {
+                    Ok(forest) => Response::Components {
+                        num_components: forest.num_components() as u64,
+                        component: forest.component,
+                    },
+                    Err(e) => error_response(&e),
+                }
+            }
+            Request::Reach { tenant, pairs } => match fabric.tenant_vertices(tenant) {
+                Err(e) => error_response(&e),
+                Ok(vertices) => {
+                    let bad = pairs
+                        .iter()
+                        .flat_map(|&(a, b)| [a, b])
+                        .find(|&x| x as u64 >= vertices);
+                    match bad {
+                        Some(v) => range_error(tenant, v, vertices),
+                        None => {
+                            if let Some(h) = handles.get_mut(&tenant) {
+                                h.flush();
+                            }
+                            match fabric.reachability(tenant, &pairs) {
+                                Ok(answers) => Response::Reach { answers },
+                                Err(e) => error_response(&e),
+                            }
+                        }
+                    }
+                }
+            },
+            Request::Metrics { tenant } => match fabric.tenant_metrics(tenant) {
+                Ok(s) => Response::Metrics(WireMetrics {
+                    updates_ingested: s.updates_ingested,
+                    stream_bytes: s.stream_bytes,
+                    batch_bytes_sent: s.batch_bytes_sent,
+                    delta_bytes_received: s.delta_bytes_received,
+                    batches_dropped: s.batches_dropped,
+                    quota_rejections: s.quota_rejections,
+                    queue_depth: s.queue_depth,
+                    query_us: s.query_us,
+                }),
+                Err(e) => error_response(&e),
+            },
+            Request::Bye => {
+                // publish every tail this connection still buffers
+                handles.clear();
+                done = true;
+                Response::Ok
+            }
+        };
+        resp.write_to(&mut writer)?;
+        writer.flush()?;
+        if done {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// A blocking client for the front-end protocol: one request, one
+/// response, in order.  Thin by design — every method is one frame
+/// pair.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    /// Connect to a [`Front`]'s address.
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Self {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    fn call(&mut self, req: &Request) -> Result<Response> {
+        req.write_to(&mut self.writer)?;
+        self.writer.flush()?;
+        Response::read_from(&mut self.reader)
+    }
+
+    /// `CREATE`: register a tenant, returning its id.
+    pub fn create(
+        &mut self,
+        name: &str,
+        vertices: u64,
+        quota_rate: u64,
+        quota_burst: u64,
+    ) -> Result<TenantId> {
+        match self.call(&Request::Create {
+            name: name.to_string(),
+            vertices,
+            quota_rate,
+            quota_burst,
+        })? {
+            Response::Created { tenant } => Ok(tenant),
+            Response::Error { code, message } => bail!("create refused ({code}): {message}"),
+            other => bail!("unexpected reply to CREATE: {other:?}"),
+        }
+    }
+
+    /// `DROP`: unregister a tenant.
+    pub fn drop_tenant(&mut self, tenant: TenantId) -> Result<()> {
+        match self.call(&Request::Drop { tenant })? {
+            Response::Ok => Ok(()),
+            Response::Error { code, message } => bail!("drop refused ({code}): {message}"),
+            other => bail!("unexpected reply to DROP: {other:?}"),
+        }
+    }
+
+    /// `INGEST`: stream one chunk.  `Ok(None)` means accepted;
+    /// `Ok(Some(backoff))` means throttled — the chunk was **not**
+    /// applied, retry it after the hint.
+    pub fn ingest(&mut self, tenant: TenantId, updates: &[Update]) -> Result<Option<Duration>> {
+        match self.call(&Request::Ingest {
+            tenant,
+            updates: updates.to_vec(),
+        })? {
+            Response::Ok => Ok(None),
+            Response::Throttled { retry_after_micros } => {
+                Ok(Some(Duration::from_micros(retry_after_micros)))
+            }
+            Response::Error { code, message } => bail!("ingest refused ({code}): {message}"),
+            other => bail!("unexpected reply to INGEST: {other:?}"),
+        }
+    }
+
+    /// `FLUSH`: publish this connection's tail and settle the
+    /// tenant's pipeline.
+    pub fn flush(&mut self, tenant: TenantId) -> Result<()> {
+        match self.call(&Request::Flush { tenant })? {
+            Response::Ok => Ok(()),
+            Response::Error { code, message } => bail!("flush refused ({code}): {message}"),
+            other => bail!("unexpected reply to FLUSH: {other:?}"),
+        }
+    }
+
+    /// `COMPONENTS`: `(num_components, component-representative map)`
+    /// over the tenant's logical range.
+    pub fn components(&mut self, tenant: TenantId) -> Result<(u64, Vec<u32>)> {
+        match self.call(&Request::Components { tenant })? {
+            Response::Components {
+                num_components,
+                component,
+            } => Ok((num_components, component)),
+            Response::Error { code, message } => bail!("components refused ({code}): {message}"),
+            other => bail!("unexpected reply to COMPONENTS: {other:?}"),
+        }
+    }
+
+    /// `REACH`: batched reachability flags.
+    pub fn reach(&mut self, tenant: TenantId, pairs: &[(u32, u32)]) -> Result<Vec<bool>> {
+        match self.call(&Request::Reach {
+            tenant,
+            pairs: pairs.to_vec(),
+        })? {
+            Response::Reach { answers } => Ok(answers),
+            Response::Error { code, message } => bail!("reach refused ({code}): {message}"),
+            other => bail!("unexpected reply to REACH: {other:?}"),
+        }
+    }
+
+    /// `METRICS`: the tenant's wire metrics block.
+    pub fn metrics(&mut self, tenant: TenantId) -> Result<WireMetrics> {
+        match self.call(&Request::Metrics { tenant })? {
+            Response::Metrics(m) => Ok(m),
+            Response::Error { code, message } => bail!("metrics refused ({code}): {message}"),
+            other => bail!("unexpected reply to METRICS: {other:?}"),
+        }
+    }
+
+    /// `BYE`: orderly goodbye (the server publishes this connection's
+    /// buffered tails).
+    pub fn bye(mut self) -> Result<()> {
+        match self.call(&Request::Bye)? {
+            Response::Ok => Ok(()),
+            other => bail!("unexpected reply to BYE: {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::FabricConfig;
+    use super::*;
+
+    fn front(vertices: u64) -> (std::thread::JoinHandle<()>, String) {
+        front_with(vertices, 1)
+    }
+
+    fn front_with(vertices: u64, connections: usize) -> (std::thread::JoinHandle<()>, String) {
+        let mut cfg = FabricConfig::for_vertices(vertices);
+        cfg.base.distributor_threads = 2;
+        let fabric = Arc::new(Fabric::spawn(cfg).unwrap());
+        let server = Front::bind("127.0.0.1:0", fabric).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || server.serve(connections).unwrap());
+        (h, addr)
+    }
+
+    #[test]
+    fn full_session_over_the_wire() {
+        let (server, addr) = front(1 << 8);
+        let mut c = Client::connect(&addr).unwrap();
+        let t = c.create("wire-tenant", 1 << 8, 0, 0).unwrap();
+        // a 4-path and an isolated pair
+        c.ingest(
+            t,
+            &[
+                Update::insert(0, 1),
+                Update::insert(1, 2),
+                Update::insert(2, 3),
+                Update::insert(10, 11),
+            ],
+        )
+        .unwrap();
+        c.flush(t).unwrap();
+        let (n, map) = c.components(t).unwrap();
+        assert_eq!(map.len(), 1 << 8);
+        assert_eq!(n as usize, (1 << 8) - 4);
+        assert_eq!(map[0], map[3]);
+        assert_ne!(map[0], map[10]);
+        let reach = c.reach(t, &[(0, 3), (0, 10), (10, 11)]).unwrap();
+        assert_eq!(reach, vec![true, false, true]);
+        let m = c.metrics(t).unwrap();
+        assert_eq!(m.updates_ingested, 4);
+        assert_eq!(m.stream_bytes, 4 * 9);
+        assert_eq!(m.batches_dropped, 0);
+        assert_eq!(m.quota_rejections, 0);
+        c.drop_tenant(t).unwrap();
+        c.bye().unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn quota_throttles_over_the_wire() {
+        let (server, addr) = front(64);
+        let mut c = Client::connect(&addr).unwrap();
+        let t = c.create("throttled", 64, 10, 20).unwrap();
+        let chunk: Vec<Update> = (0..20).map(|i| Update::insert(i, (i + 1) % 64)).collect();
+        assert!(c.ingest(t, &chunk).unwrap().is_none(), "burst admits");
+        let backoff = c
+            .ingest(t, &chunk)
+            .unwrap()
+            .expect("over-burst chunk must throttle");
+        assert!(backoff > Duration::ZERO);
+        let m = c.metrics(t).unwrap();
+        assert_eq!(m.quota_rejections, 1);
+        // the throttled chunk was NOT applied
+        assert_eq!(m.updates_ingested as usize, chunk.len());
+        c.bye().unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn errors_carry_typed_codes() {
+        let (server, addr) = front(64);
+        let mut c = Client::connect(&addr).unwrap();
+        let err = c.create("too-big", 1 << 20, 0, 0).unwrap_err();
+        assert!(err.to_string().contains(&format!("({}", code::BAD_CONFIG)));
+        let err = c.flush(99).unwrap_err();
+        assert!(
+            err.to_string()
+                .contains(&format!("({}", code::UNKNOWN_TENANT)),
+            "{err}"
+        );
+        let t = c.create("ranged", 16, 0, 0).unwrap();
+        let err = c.ingest(t, &[Update::insert(0, 16)]).unwrap_err();
+        assert!(err.to_string().contains(&format!("({}", code::VERTEX_RANGE)));
+        c.bye().unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn drop_from_another_connection_is_busy() {
+        let (server, addr) = front_with(64, 2);
+        let mut writer = Client::connect(&addr).unwrap();
+        let t = writer.create("contested", 64, 0, 0).unwrap();
+        // the writer's INGEST opens a server-side handle on tenant t
+        writer.ingest(t, &[Update::insert(1, 2)]).unwrap();
+        let mut other = Client::connect(&addr).unwrap();
+        let err = other.drop_tenant(t).unwrap_err();
+        assert!(err.to_string().contains(&format!("({}", code::TENANT_BUSY)));
+        // the writer leaves; its handle closes and the drop goes through
+        writer.bye().unwrap();
+        other.drop_tenant(t).unwrap();
+        other.bye().unwrap();
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,779 @@
+//! The multi-tenant serving layer: N logical graphs over **one**
+//! shared pipeline.
+//!
+//! A [`Fabric`] owns the machinery a single [`crate::Landscape`]
+//! session owns — the sharded work queues, the batch-buffer arena, and
+//! the distributor threads (with their worker backends or remote
+//! connections) — but multiplexes any number of *tenants* over it.
+//! Each tenant is an independent logical graph: its own sketch stores,
+//! epoch barrier, merge gate, GreedyCC accelerator, and metrics,
+//! created and dropped at runtime through a validated
+//! [`TenantConfig`].  Work items are tagged with a [`TenantId`] from
+//! the ingest buffer all the way through the shard queues and (in
+//! remote mode) the v2 wire's `TBATCH2`/`TDELTA2` frames, and the
+//! distributors resolve the tag back to the right store/barrier pair
+//! through the fabric's [`TenantRegistry`] at merge time.
+//!
+//! Isolation is **structural**, not scheduled: tenants share compute
+//! (distributor threads, worker fleet) and contend on queue capacity,
+//! but no tenant can read or write another's sketches — a batch
+//! resolves to exactly one tenant's stores, the remote path verifies
+//! the server echoed the same tenant id before merging, and every
+//! byte of worker traffic is metered to the tenant that caused it, so
+//! the paper's Theorem 5.2 communication bound is checkable *per
+//! tenant*.  The admission layer ([`TenantConfig::quota_rate`]) adds
+//! the resource half: an over-rate tenant is refused with an explicit
+//! retry-after hint — never a silent drop — while idle tenants keep
+//! their query promptness.
+//!
+//! The TCP front end lives in [`front`]; its wire protocol in
+//! [`wire`].  In-process embedders can skip both and drive the fabric
+//! directly:
+//!
+//! ```no_run
+//! use landscape::serve::{Fabric, FabricConfig, TenantConfig};
+//! use landscape::stream::update::Update;
+//!
+//! let fabric = Fabric::spawn(FabricConfig::for_vertices(1 << 12)).unwrap();
+//! let a = fabric.create_tenant(TenantConfig::named("alice", 1 << 10)).unwrap();
+//! let b = fabric.create_tenant(TenantConfig::named("bob", 1 << 12)).unwrap();
+//! let mut ingest = fabric.ingest_handle(a).unwrap();
+//! ingest.ingest(Update::insert(1, 2));
+//! drop(ingest); // publishes the tail
+//! fabric.flush(a).unwrap();
+//! let forest = fabric.query_handle(b).unwrap().connected_components();
+//! assert_eq!(forest.num_components(), 1 << 12); // b never saw a's edge
+//! ```
+
+#![deny(missing_docs)]
+
+pub mod front;
+pub mod wire;
+
+use std::collections::HashMap;
+use std::sync::atomic::AtomicU32;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::connectivity::SpanningForest;
+use crate::coordinator::arena::BatchArena;
+use crate::coordinator::work_queue::ShardedWorkQueue;
+use crate::coordinator::{
+    distributor, CoordinatorConfig, TenantDirectory, TenantId, TenantRuntime, WorkItem, WorkerKind,
+};
+use crate::metrics::{Metrics, MetricsSnapshot};
+use crate::session::{
+    spawn_tenant_core, IngestHandle, LandscapeBuilder, QueryHandle, SessionCore,
+    DEFAULT_UPDATE_LOG_CAPACITY,
+};
+
+/// Serving-fabric configuration: the shared-pipeline knobs (a
+/// [`CoordinatorConfig`], validated exactly like a session's) plus the
+/// fabric-level limits.
+///
+/// Every tenant shares the fabric's [`crate::sketch::params::SketchParams`]
+/// and `graph_seed` — that is what keeps the worker fleet
+/// tenant-oblivious (a worker computes the same delta function for
+/// every tenant; only the tag differs).  A tenant's own
+/// [`TenantConfig::vertices`] is a *logical* bound within the fabric's
+/// vertex capacity, enforced at admission; each tenant's sketch stores
+/// are sized to the fabric capacity.
+#[derive(Clone, Debug)]
+pub struct FabricConfig {
+    /// The shared-pipeline knobs (vertex capacity, shard/thread count,
+    /// worker backend, buffer kind, …).  The fabric is sketch-only:
+    /// `hybrid_threshold` must be 0 and no spill directory is
+    /// supported — tenants are purely resident.
+    pub base: CoordinatorConfig,
+    /// Maximum concurrently registered tenants (≥ 1).
+    pub max_tenants: usize,
+    /// Per-ingest-handle update-log capacity (see
+    /// [`crate::session::LandscapeBuilder::update_log_capacity`]).
+    pub update_log_capacity: usize,
+}
+
+impl FabricConfig {
+    /// Paper-default knobs over a fabric-wide vertex capacity.
+    pub fn for_vertices(vertices: u64) -> Self {
+        Self {
+            base: CoordinatorConfig::for_vertices(vertices),
+            max_tenants: 64,
+            update_log_capacity: DEFAULT_UPDATE_LOG_CAPACITY,
+        }
+    }
+}
+
+/// A validated request to register one logical graph on the fabric.
+#[derive(Clone, Debug)]
+pub struct TenantConfig {
+    /// Human-readable name, unique among live tenants.
+    pub name: String,
+    /// Logical vertex-id space `0..vertices`; must fit the fabric's
+    /// capacity.  Ingest and queries outside the range are refused.
+    pub vertices: u64,
+    /// Admission quota in updates/second; 0 = unlimited.
+    pub quota_rate: u64,
+    /// Quota burst in updates; 0 derives one second's worth
+    /// (`quota_rate`).  A single ingest chunk larger than the burst
+    /// can never be admitted — size chunks below it.
+    pub quota_burst: u64,
+}
+
+impl TenantConfig {
+    /// An unlimited-rate tenant config.
+    pub fn named(name: impl Into<String>, vertices: u64) -> Self {
+        Self {
+            name: name.into(),
+            vertices,
+            quota_rate: 0,
+            quota_burst: 0,
+        }
+    }
+
+    /// Set the admission quota (updates/second, and burst in updates —
+    /// 0 derives one second's worth).
+    pub fn quota(mut self, rate: u64, burst: u64) -> Self {
+        self.quota_rate = rate;
+        self.quota_burst = burst;
+        self
+    }
+}
+
+/// Why a tenant operation was refused.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TenantError {
+    /// `vertices` was 0.
+    ZeroVertices,
+    /// The tenant asked for more vertices than the fabric's capacity.
+    VerticesExceedFabric(u64, u64),
+    /// The fabric already holds `max_tenants` live tenants.
+    TenantLimitReached(usize),
+    /// Another live tenant already uses this name.
+    NameTaken(String),
+    /// No live tenant has this id.
+    UnknownTenant(TenantId),
+    /// The tenant still has live ingest handles and cannot be dropped.
+    TenantBusy(TenantId),
+    /// The fabric's own base configuration was rejected (carries the
+    /// underlying [`crate::session::ConfigError`] rendering, or the
+    /// fabric-specific constraint that was violated).
+    InvalidFabric(String),
+}
+
+impl std::fmt::Display for TenantError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TenantError::ZeroVertices => write!(f, "tenant vertices must be nonzero"),
+            TenantError::VerticesExceedFabric(v, cap) => {
+                write!(f, "tenant wants {v} vertices but the fabric caps at {cap}")
+            }
+            TenantError::TenantLimitReached(max) => {
+                write!(f, "fabric already holds its maximum of {max} tenants")
+            }
+            TenantError::NameTaken(name) => write!(f, "tenant name {name:?} is already in use"),
+            TenantError::UnknownTenant(t) => write!(f, "tenant {t} is not registered"),
+            TenantError::TenantBusy(t) => {
+                write!(f, "tenant {t} still has live ingest handles")
+            }
+            TenantError::InvalidFabric(msg) => write!(f, "invalid fabric config: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TenantError {}
+
+/// Token-bucket admission state: `rate` tokens/second refill up to
+/// `burst`; a chunk of `n` updates spends `n` tokens or is refused
+/// with a retry-after hint.  `rate == 0` disables the quota.
+struct QuotaState {
+    rate: u64,
+    burst: f64,
+    inner: Mutex<Bucket>,
+}
+
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+impl QuotaState {
+    fn new(rate: u64, burst: u64) -> Self {
+        let burst = if burst == 0 { rate } else { burst } as f64;
+        Self {
+            rate,
+            burst,
+            inner: Mutex::new(Bucket {
+                tokens: burst,
+                last: Instant::now(),
+            }),
+        }
+    }
+
+    /// Admit `n` updates now, or refuse with the back-off after which
+    /// the bucket will hold `n` tokens again.
+    fn admit(&self, n: u64) -> Result<(), Duration> {
+        if self.rate == 0 {
+            return Ok(());
+        }
+        let mut b = self.inner.lock().unwrap();
+        let now = Instant::now();
+        let refill = now.duration_since(b.last).as_secs_f64() * self.rate as f64;
+        b.tokens = (b.tokens + refill).min(self.burst);
+        b.last = now;
+        let need = n as f64;
+        if b.tokens >= need {
+            b.tokens -= need;
+            Ok(())
+        } else {
+            let deficit = need - b.tokens;
+            Err(Duration::from_secs_f64(deficit / self.rate as f64))
+        }
+    }
+}
+
+/// One live logical graph: its engine-room core plus the fabric-side
+/// bookkeeping (name, logical size, admission state, and the
+/// pre-built runtime bundle the distributors resolve).
+struct Tenant {
+    id: TenantId,
+    name: String,
+    vertices: u64,
+    core: Arc<SessionCore>,
+    runtime: Arc<TenantRuntime>,
+    quota: QuotaState,
+}
+
+/// The fabric's tenant table: the [`TenantDirectory`] the shared
+/// distributor threads resolve tenant tags through, and the map the
+/// serving surface administers.
+pub struct TenantRegistry {
+    map: RwLock<HashMap<TenantId, Arc<Tenant>>>,
+    next_id: AtomicU32,
+}
+
+impl TenantRegistry {
+    fn new() -> Self {
+        Self {
+            map: RwLock::new(HashMap::new()),
+            next_id: AtomicU32::new(1),
+        }
+    }
+
+    fn get(&self, tenant: TenantId) -> Result<Arc<Tenant>, TenantError> {
+        self.map
+            .read()
+            .unwrap()
+            .get(&tenant)
+            .cloned()
+            .ok_or(TenantError::UnknownTenant(tenant))
+    }
+
+    fn live(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+}
+
+impl TenantDirectory for TenantRegistry {
+    fn runtime(&self, tenant: TenantId) -> Option<Arc<TenantRuntime>> {
+        self.map
+            .read()
+            .unwrap()
+            .get(&tenant)
+            .map(|t| t.runtime.clone())
+    }
+}
+
+/// One tenant's labeled metrics snapshot.
+#[derive(Clone, Debug)]
+pub struct TenantMetrics {
+    /// The tenant id.
+    pub id: TenantId,
+    /// The tenant's registered name.
+    pub name: String,
+    /// The tenant's full counter snapshot (per-tenant stream bytes,
+    /// wire bytes, drops, quota rejections, queue depth, query
+    /// latency, …).
+    pub snapshot: MetricsSnapshot,
+}
+
+/// The fabric-wide metrics view: one labeled snapshot per tenant plus
+/// the fabric's own connection-level summary.
+#[derive(Clone, Debug)]
+pub struct FabricMetrics {
+    /// Connection-level truth shared by all tenants: whole-connection
+    /// wire accounting (HELLO/SHUTDOWN framing, failover
+    /// retransmissions), worker failures, requeues, in-flight peaks,
+    /// and the `tenants_active` gauge.
+    pub fabric: MetricsSnapshot,
+    /// Per-tenant labeled snapshots, in tenant-id order.
+    pub tenants: Vec<TenantMetrics>,
+}
+
+/// The serving fabric: one shared pipeline, N logical graphs.
+///
+/// See the module docs for the isolation contract.  Dropping the
+/// fabric closes the shard queues and joins the distributor threads —
+/// drop every tenant ingest handle first (handles outliving the
+/// fabric take the metered drop path, exactly as with a session).
+pub struct Fabric {
+    config: FabricConfig,
+    registry: Arc<TenantRegistry>,
+    queue: Arc<ShardedWorkQueue<WorkItem>>,
+    arena: Arc<BatchArena>,
+    /// Fabric-global (connection-level) metrics: what is shared truth
+    /// rather than per-tenant attribution.
+    metrics: Arc<Metrics>,
+    distributors: Vec<JoinHandle<()>>,
+}
+
+impl Fabric {
+    /// Validate `config` and spawn the shared pipeline (shard queues,
+    /// arena, one distributor thread per shard) with **no** tenants
+    /// registered yet.
+    pub fn spawn(config: FabricConfig) -> Result<Self, TenantError> {
+        LandscapeBuilder::from_config(config.base.clone())
+            .update_log_capacity(config.update_log_capacity)
+            .validate()
+            .map_err(|e| TenantError::InvalidFabric(e.to_string()))?;
+        if config.base.hybrid_threshold != 0 {
+            return Err(TenantError::InvalidFabric(
+                "the serving fabric is sketch-only (hybrid_threshold must be 0): \
+                 tagged remote workers answer sketch deltas for every tenant"
+                    .to_string(),
+            ));
+        }
+        if config.max_tenants == 0 {
+            return Err(TenantError::InvalidFabric(
+                "max_tenants must be nonzero".to_string(),
+            ));
+        }
+        let spec = config.base.shard_spec();
+        let queue = Arc::new(ShardedWorkQueue::new(
+            spec.count(),
+            config.base.queue_capacity,
+        ));
+        let arena = Arc::new(BatchArena::new(spec.count()));
+        let metrics = Arc::new(Metrics::new());
+        let registry = Arc::new(TenantRegistry::new());
+        // remote fabrics speak the tenant-tagged frames so the wire
+        // carries the attribution; in-process fabrics resolve the tag
+        // at the queue and need no framing at all
+        let tagged_wire = matches!(config.base.worker, WorkerKind::Remote { .. });
+        let tenants: Arc<dyn TenantDirectory> = registry.clone();
+        let mut distributors = Vec::new();
+        for shard in 0..spec.count() {
+            let d = distributor::Distributor {
+                shard,
+                kind: config.base.worker.clone(),
+                params: config.base.params(),
+                graph_seed: config.base.graph_seed,
+                k: config.base.k,
+                window: config.base.remote_window.max(1),
+                hybrid_threshold: config.base.hybrid_threshold,
+                queue: queue.clone(),
+                tenants: tenants.clone(),
+                metrics: metrics.clone(),
+                arena: arena.clone(),
+                tagged_wire,
+            };
+            distributors.push(std::thread::spawn(move || d.run()));
+        }
+        crate::log_info!(
+            target: "serve",
+            "fabric up: {} shard(s), capacity {} vertices, {} backend{}",
+            spec.count(),
+            config.base.vertices,
+            match &config.base.worker {
+                WorkerKind::Remote { addrs } => format!("remote×{}", addrs.len()),
+                other => format!("{other:?}"),
+            },
+            if tagged_wire { " (tagged wire)" } else { "" },
+        );
+        Ok(Self {
+            config,
+            registry,
+            queue,
+            arena,
+            metrics,
+            distributors,
+        })
+    }
+
+    /// Register a new logical graph, returning its [`TenantId`].
+    pub fn create_tenant(&self, cfg: TenantConfig) -> Result<TenantId, TenantError> {
+        if cfg.vertices == 0 {
+            return Err(TenantError::ZeroVertices);
+        }
+        if cfg.vertices > self.config.base.vertices {
+            return Err(TenantError::VerticesExceedFabric(
+                cfg.vertices,
+                self.config.base.vertices,
+            ));
+        }
+        let mut map = self.registry.map.write().unwrap();
+        if map.len() >= self.config.max_tenants {
+            return Err(TenantError::TenantLimitReached(self.config.max_tenants));
+        }
+        if map.values().any(|t| t.name == cfg.name) {
+            return Err(TenantError::NameTaken(cfg.name));
+        }
+        // lint: allow(relaxed-ordering) — id allocation only needs uniqueness, which fetch_add provides at any ordering
+        let id = self.registry.next_id.fetch_add(1, Ordering::Relaxed);
+        let core = spawn_tenant_core(
+            self.config.base.clone(),
+            self.config.update_log_capacity,
+            id,
+            self.queue.clone(),
+            self.arena.clone(),
+        );
+        let runtime = core.tenant_runtime();
+        let tenant = Arc::new(Tenant {
+            id,
+            name: cfg.name.clone(),
+            vertices: cfg.vertices,
+            core,
+            runtime,
+            quota: QuotaState::new(cfg.quota_rate, cfg.quota_burst),
+        });
+        map.insert(id, tenant);
+        Metrics::set(&self.metrics.tenants_active, map.len() as u64);
+        drop(map);
+        crate::log_info!(
+            target: "serve",
+            "tenant {id} ({:?}) created: {} vertices, quota {}/s burst {}",
+            cfg.name,
+            cfg.vertices,
+            cfg.quota_rate,
+            cfg.quota_burst,
+        );
+        Ok(id)
+    }
+
+    /// Unregister a logical graph, releasing its stores.
+    ///
+    /// Refused with [`TenantError::TenantBusy`] while any ingest
+    /// handle on the tenant is still live.  Otherwise the tenant's
+    /// pipeline is **settled first** (epoch cut + wait, so every
+    /// in-flight batch merges and retires its barrier ticket) and only
+    /// then unregistered — in-flight work never resolves to a missing
+    /// runtime.  A handle racing this call can still slip work in
+    /// between the settle and the unregister; the distributors drop
+    /// such orphans *metered* (fabric-level `batches_dropped`), never
+    /// silently.
+    pub fn drop_tenant(&self, tenant: TenantId) -> Result<(), TenantError> {
+        let t = self.registry.get(tenant)?;
+        if t.core.live_handles() > 0 {
+            return Err(TenantError::TenantBusy(tenant));
+        }
+        let cut = t.core.cut_shared();
+        t.core.wait_for_cut(cut);
+        let mut map = self.registry.map.write().unwrap();
+        if t.core.live_handles() > 0 {
+            // a handle was spawned while we were settling: abort the
+            // drop, the caller retries once the handle closes
+            return Err(TenantError::TenantBusy(tenant));
+        }
+        map.remove(&tenant);
+        Metrics::set(&self.metrics.tenants_active, map.len() as u64);
+        drop(map);
+        crate::log_info!(target: "serve", "tenant {tenant} ({:?}) dropped", t.name);
+        Ok(())
+    }
+
+    /// Spawn an ingest handle over one tenant's logical graph (one per
+    /// producer thread, exactly like [`crate::Landscape::ingest_handle`]).
+    pub fn ingest_handle(&self, tenant: TenantId) -> Result<IngestHandle, TenantError> {
+        let t = self.registry.get(tenant)?;
+        Ok(IngestHandle::new(
+            t.core.clone(),
+            self.config.update_log_capacity,
+        ))
+    }
+
+    /// A cloneable read-side query handle over one tenant's graph.
+    pub fn query_handle(&self, tenant: TenantId) -> Result<QueryHandle, TenantError> {
+        let t = self.registry.get(tenant)?;
+        Ok(QueryHandle::new(t.core.clone()))
+    }
+
+    /// The tenant's logical vertex-id bound (`0..vertices`).
+    pub fn tenant_vertices(&self, tenant: TenantId) -> Result<u64, TenantError> {
+        Ok(self.registry.get(tenant)?.vertices)
+    }
+
+    /// Run one tenant's admission quota for a chunk of `updates`
+    /// updates: `Ok(Ok(()))` admits, `Ok(Err(backoff))` throttles (and
+    /// meters `quota_rejections` on the tenant — the refusal is always
+    /// accounted, never silent).
+    pub fn admit(
+        &self,
+        tenant: TenantId,
+        updates: u64,
+    ) -> Result<Result<(), Duration>, TenantError> {
+        let t = self.registry.get(tenant)?;
+        let verdict = t.quota.admit(updates);
+        if verdict.is_err() {
+            Metrics::add(&t.core.metrics.quota_rejections, 1);
+        }
+        Ok(verdict)
+    }
+
+    /// Epoch cut + wait over one tenant's pipeline (the §5.3 query
+    /// barrier, scoped to that tenant — other tenants' in-flight work
+    /// neither extends this wait nor is waited on).
+    pub fn flush(&self, tenant: TenantId) -> Result<(), TenantError> {
+        let t = self.registry.get(tenant)?;
+        let cut = t.core.cut_shared();
+        t.core.wait_for_cut(cut);
+        Ok(())
+    }
+
+    /// Connectivity over one tenant's logical range: the tenant's
+    /// tiered query, truncated to its `0..vertices` id space.
+    pub fn connected_components(&self, tenant: TenantId) -> Result<SpanningForest, TenantError> {
+        let t = self.registry.get(tenant)?;
+        let mut forest = t.core.connected_components();
+        // the tenant only ever ingests edges within its logical range,
+        // so every component root of a vertex < vertices is itself
+        // < vertices: the truncated map is self-contained
+        forest.component.truncate(t.vertices as usize);
+        forest
+            .edges
+            .retain(|&(u, v)| (u as u64) < t.vertices && (v as u64) < t.vertices);
+        Ok(forest)
+    }
+
+    /// Batched reachability over one tenant's graph.
+    pub fn reachability(
+        &self,
+        tenant: TenantId,
+        pairs: &[(u32, u32)],
+    ) -> Result<Vec<bool>, TenantError> {
+        let t = self.registry.get(tenant)?;
+        Ok(t.core.reachability(pairs))
+    }
+
+    /// Live tenants as `(id, name)`, in id order.
+    pub fn tenants(&self) -> Vec<(TenantId, String)> {
+        let map = self.registry.map.read().unwrap();
+        let mut out: Vec<(TenantId, String)> =
+            map.values().map(|t| (t.id, t.name.clone())).collect();
+        out.sort_unstable_by_key(|(id, _)| *id);
+        out
+    }
+
+    /// One tenant's metrics snapshot (store gauges and queue depth
+    /// refreshed at this call).
+    pub fn tenant_metrics(&self, tenant: TenantId) -> Result<MetricsSnapshot, TenantError> {
+        Ok(self.registry.get(tenant)?.core.metrics_snapshot())
+    }
+
+    /// The fabric-wide labeled metrics view: every tenant's snapshot
+    /// plus the fabric's connection-level summary.
+    pub fn metrics(&self) -> FabricMetrics {
+        let map = self.registry.map.read().unwrap();
+        Metrics::set(&self.metrics.tenants_active, map.len() as u64);
+        let mut tenants: Vec<TenantMetrics> = map
+            .values()
+            .map(|t| TenantMetrics {
+                id: t.id,
+                name: t.name.clone(),
+                snapshot: t.core.metrics_snapshot(),
+            })
+            .collect();
+        drop(map);
+        tenants.sort_unstable_by_key(|t| t.id);
+        FabricMetrics {
+            fabric: self.metrics.snapshot(),
+            tenants,
+        }
+    }
+
+    /// The fabric's shared-pipeline configuration.
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.config.base
+    }
+}
+
+impl Drop for Fabric {
+    fn drop(&mut self) {
+        self.queue.close();
+        for h in self.distributors.drain(..) {
+            let _ = h.join();
+        }
+        // remote connections are owned by the (now-joined) distributor
+        // threads, which ended them with SHUTDOWN → BYE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::connectivity::dsu::Dsu;
+    use crate::stream::update::Update;
+
+    fn fabric(vertices: u64) -> Fabric {
+        let mut cfg = FabricConfig::for_vertices(vertices);
+        cfg.base.distributor_threads = 2;
+        Fabric::spawn(cfg).unwrap()
+    }
+
+    #[test]
+    fn config_validation_is_typed() {
+        assert!(matches!(
+            Fabric::spawn(FabricConfig::for_vertices(0)),
+            Err(TenantError::InvalidFabric(_))
+        ));
+        let mut cfg = FabricConfig::for_vertices(64);
+        cfg.max_tenants = 0;
+        assert!(matches!(
+            Fabric::spawn(cfg),
+            Err(TenantError::InvalidFabric(_))
+        ));
+        let mut cfg = FabricConfig::for_vertices(64);
+        cfg.base.hybrid_threshold = 8;
+        assert!(matches!(
+            Fabric::spawn(cfg),
+            Err(TenantError::InvalidFabric(_))
+        ));
+    }
+
+    #[test]
+    fn tenant_validation_is_typed() {
+        let f = fabric(256);
+        assert_eq!(
+            f.create_tenant(TenantConfig::named("z", 0)),
+            Err(TenantError::ZeroVertices)
+        );
+        assert_eq!(
+            f.create_tenant(TenantConfig::named("big", 512)),
+            Err(TenantError::VerticesExceedFabric(512, 256))
+        );
+        let a = f.create_tenant(TenantConfig::named("a", 64)).unwrap();
+        assert_eq!(
+            f.create_tenant(TenantConfig::named("a", 64)),
+            Err(TenantError::NameTaken("a".to_string()))
+        );
+        assert!(matches!(
+            f.ingest_handle(a + 100),
+            Err(TenantError::UnknownTenant(_))
+        ));
+        let mut cfg = FabricConfig::for_vertices(256);
+        cfg.max_tenants = 1;
+        let f1 = Fabric::spawn(cfg).unwrap();
+        f1.create_tenant(TenantConfig::named("only", 16)).unwrap();
+        assert_eq!(
+            f1.create_tenant(TenantConfig::named("second", 16)),
+            Err(TenantError::TenantLimitReached(1))
+        );
+    }
+
+    #[test]
+    fn tenants_are_isolated_against_referees() {
+        let f = fabric(1 << 9);
+        let a = f.create_tenant(TenantConfig::named("a", 1 << 9)).unwrap();
+        let b = f.create_tenant(TenantConfig::named("b", 1 << 9)).unwrap();
+        let mut dsu_a = Dsu::new(1 << 9);
+        let mut dsu_b = Dsu::new(1 << 9);
+        let mut ha = f.ingest_handle(a).unwrap();
+        let mut hb = f.ingest_handle(b).unwrap();
+        // a: a path over evens; b: a clique over 0..8 — overlapping id
+        // spaces, disjoint edge sets
+        for i in 0..200u32 {
+            ha.ingest(Update::insert(2 * i, 2 * i + 2));
+            dsu_a.union(2 * i, 2 * i + 2);
+        }
+        for i in 0..8u32 {
+            for j in (i + 1)..8u32 {
+                hb.ingest(Update::insert(i, j));
+                dsu_b.union(i, j);
+            }
+        }
+        drop(ha);
+        drop(hb);
+        f.flush(a).unwrap();
+        f.flush(b).unwrap();
+        let fa = f.connected_components(a).unwrap();
+        let fb = f.connected_components(b).unwrap();
+        assert_eq!(fa.num_components(), dsu_a.num_components());
+        assert_eq!(fb.num_components(), dsu_b.num_components());
+        for (u, v) in [(0u32, 402u32), (1, 3), (0, 7)] {
+            assert_eq!(
+                fa.component[u as usize] == fa.component[v as usize],
+                dsu_a.connected(u, v),
+                "tenant a pair ({u},{v})"
+            );
+            assert_eq!(
+                fb.component[u as usize] == fb.component[v as usize],
+                dsu_b.connected(u, v),
+                "tenant b pair ({u},{v})"
+            );
+        }
+        let m = f.metrics();
+        assert_eq!(m.tenants.len(), 2);
+        for t in &m.tenants {
+            assert_eq!(t.snapshot.batches_dropped, 0, "tenant {} dropped", t.id);
+        }
+        assert_eq!(m.fabric.tenants_active, 2);
+    }
+
+    #[test]
+    fn drop_tenant_lifecycle() {
+        let f = fabric(128);
+        let a = f.create_tenant(TenantConfig::named("a", 128)).unwrap();
+        let h = f.ingest_handle(a).unwrap();
+        assert_eq!(f.drop_tenant(a), Err(TenantError::TenantBusy(a)));
+        drop(h);
+        f.drop_tenant(a).unwrap();
+        assert!(matches!(
+            f.drop_tenant(a),
+            Err(TenantError::UnknownTenant(_))
+        ));
+        assert_eq!(f.metrics().fabric.tenants_active, 0);
+        // ids are never reused
+        let b = f.create_tenant(TenantConfig::named("b", 16)).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn quota_throttles_and_meters() {
+        let f = fabric(128);
+        let limited = f
+            .create_tenant(TenantConfig::named("limited", 128).quota(10, 100))
+            .unwrap();
+        let free = f.create_tenant(TenantConfig::named("free", 128)).unwrap();
+        // burst of 100 admits the first chunk, refuses the next
+        assert!(f.admit(limited, 100).unwrap().is_ok());
+        let verdict = f.admit(limited, 100).unwrap();
+        let backoff = verdict.expect_err("second burst must throttle");
+        assert!(backoff > Duration::ZERO);
+        // the hint is the honest token deficit: ~100 tokens at 10/s
+        assert!(backoff <= Duration::from_secs(11), "hint {backoff:?}");
+        assert!(f.admit(free, 1_000_000).unwrap().is_ok());
+        let m = f.metrics();
+        for t in &m.tenants {
+            let expected = if t.id == limited { 1 } else { 0 };
+            assert_eq!(t.snapshot.quota_rejections, expected, "tenant {}", t.id);
+        }
+    }
+
+    #[test]
+    fn quota_refills_over_time() {
+        let q = QuotaState::new(1_000_000, 10);
+        assert!(q.admit(10).is_ok());
+        let backoff = q.admit(10).expect_err("bucket is empty");
+        // 10 tokens at 1M/s: ~10µs — spin until the bucket refills
+        // rather than sleeping (keeps the test robust under load)
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            if q.admit(10).is_ok() {
+                break;
+            }
+            assert!(Instant::now() < deadline, "bucket never refilled");
+            std::hint::spin_loop();
+        }
+        assert!(backoff <= Duration::from_millis(1));
+    }
+}

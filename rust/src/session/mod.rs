@@ -75,7 +75,10 @@ use crate::connectivity::SpanningForest;
 use crate::coordinator::arena::BatchArena;
 use crate::coordinator::query::{QueryEngine, QueryTier};
 use crate::coordinator::work_queue::{Cut, EpochBarrier, ShardedWorkQueue};
-use crate::coordinator::{distributor, BufferKind, CoordinatorConfig, WorkItem, WorkerKind};
+use crate::coordinator::{
+    distributor, BufferKind, CoordinatorConfig, SoloDirectory, TenantId, TenantRuntime, WorkItem,
+    WorkerKind, SOLO_TENANT,
+};
 use crate::gutter::GutterBuffer;
 use crate::hypertree::{BatchSink, Hypertree, HypertreeConfig, VertexBatch};
 use crate::metrics::{Metrics, MetricsSnapshot};
@@ -560,6 +563,10 @@ pub(crate) enum Buffer {
 pub(crate) struct QueueSink {
     queue: Arc<ShardedWorkQueue<WorkItem>>,
     spec: ShardSpec,
+    /// Which logical graph this sink feeds ([`SOLO_TENANT`] for
+    /// single-tenant sessions).  Every work item is tagged with it so
+    /// the distributors can resolve the owning tenant's state at merge.
+    tenant: TenantId,
     metrics: Arc<Metrics>,
     barrier: Arc<EpochBarrier>,
     /// Batch buffers recycled by the distributors once their work
@@ -585,9 +592,9 @@ impl QueueSink {
         );
         let ticket = self.barrier.register();
         let item = if local {
-            WorkItem::Local(ticket, batch)
+            WorkItem::Local(self.tenant, ticket, batch)
         } else {
-            WorkItem::Distribute(ticket, batch)
+            WorkItem::Distribute(self.tenant, ticket, batch)
         };
         if let Err(item) = self.queue.push(shard, item) {
             // the shard queue is closed: these updates will never reach
@@ -596,7 +603,7 @@ impl QueueSink {
             // so no cut waits on work that will never run)
             self.barrier.complete(ticket);
             Metrics::add(&self.metrics.batches_dropped, 1);
-            let (WorkItem::Distribute(_, batch) | WorkItem::Local(_, batch)) = item;
+            let (WorkItem::Distribute(_, _, batch) | WorkItem::Local(_, _, batch)) = item;
             self.arena.recycle(shard, batch.others);
             crate::log_warn!(
                 "session: DROPPED {kind} batch (vertex {vertex}, {len} \
@@ -749,15 +756,27 @@ impl SessionCore {
     /// a cut is taken every update it covers that tier 0 would answer
     /// from is already in the accelerator.
     pub(crate) fn connected_components_at(&self, pinned: Option<Cut>) -> SpanningForest {
-        let _serial = self.query_serial.lock().unwrap();
-        if let Some(forest) = self.query.try_greedy() {
-            Metrics::add(&self.metrics.queries_greedy, 1);
-            return forest;
-        }
-        if let Some(seed) = self.query.partial_seed() {
-            return self.partial_query_locked(seed, pinned);
-        }
-        self.full_query_locked(pinned)
+        self.metered_query(|| {
+            let _serial = self.query_serial.lock().unwrap();
+            if let Some(forest) = self.query.try_greedy() {
+                Metrics::add(&self.metrics.queries_greedy, 1);
+                return forest;
+            }
+            if let Some(seed) = self.query.partial_seed() {
+                return self.partial_query_locked(seed, pinned);
+            }
+            self.full_query_locked(pinned)
+        })
+    }
+
+    /// Meter one query's wall-clock latency into `query_us` (the
+    /// per-tenant promptness signal behind the serving layer's
+    /// isolation checks), passing the result through.
+    fn metered_query<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        Metrics::add(&self.metrics.query_us, t0.elapsed().as_micros() as u64);
+        out
     }
 
     /// Forced tier-2 (cut + full Borůvka) query.
@@ -767,8 +786,10 @@ impl SessionCore {
 
     /// Forced tier-2 query over `pinned` when given, else a fresh cut.
     pub(crate) fn full_connectivity_query_at(&self, pinned: Option<Cut>) -> SpanningForest {
-        let _serial = self.query_serial.lock().unwrap();
-        self.full_query_locked(pinned)
+        self.metered_query(|| {
+            let _serial = self.query_serial.lock().unwrap();
+            self.full_query_locked(pinned)
+        })
     }
 
     /// Batched reachability: tier 0 answers when no queried pair
@@ -780,17 +801,19 @@ impl SessionCore {
 
     /// Batched reachability over `pinned` when given, else a fresh cut.
     pub(crate) fn reachability_at(&self, pairs: &[(u32, u32)], pinned: Option<Cut>) -> Vec<bool> {
-        let _serial = self.query_serial.lock().unwrap();
-        if let Some(answers) = self.query.try_reachability(pairs) {
-            Metrics::add(&self.metrics.queries_greedy, 1);
-            return answers;
-        }
-        let forest = if let Some(seed) = self.query.partial_seed() {
-            self.partial_query_locked(seed, pinned)
-        } else {
-            self.full_query_locked(pinned)
-        };
-        pairs.iter().map(|&(a, b)| forest.connected(a, b)).collect()
+        self.metered_query(|| {
+            let _serial = self.query_serial.lock().unwrap();
+            if let Some(answers) = self.query.try_reachability(pairs) {
+                Metrics::add(&self.metrics.queries_greedy, 1);
+                return answers;
+            }
+            let forest = if let Some(seed) = self.query.partial_seed() {
+                self.partial_query_locked(seed, pinned)
+            } else {
+                self.full_query_locked(pinned)
+            };
+            pairs.iter().map(|&(a, b)| forest.connected(a, b)).collect()
+        })
     }
 
     /// k-edge-connectivity: `Some(w)` when the min cut w < k, `None`
@@ -801,11 +824,13 @@ impl SessionCore {
 
     /// k-edge-connectivity over `pinned` when given, else a fresh cut.
     pub(crate) fn k_connectivity_at(&self, pinned: Option<Cut>) -> Option<u64> {
-        let _serial = self.query_serial.lock().unwrap();
-        self.settle(pinned);
-        Metrics::add(&self.metrics.queries_full, 1);
-        let _read = self.merge_gate.write().unwrap();
-        self.kconn.query_capped_connectivity()
+        self.metered_query(|| {
+            let _serial = self.query_serial.lock().unwrap();
+            self.settle(pinned);
+            Metrics::add(&self.metrics.queries_full, 1);
+            let _read = self.merge_gate.write().unwrap();
+            self.kconn.query_capped_connectivity()
+        })
     }
 
     /// Re-seed the accelerator from a freshly computed forest — but
@@ -924,6 +949,7 @@ impl SessionCore {
             &self.metrics.spill_bytes_written,
             self.kconn.spill_bytes_written(),
         );
+        Metrics::set(&self.metrics.queue_depth, self.barrier.pending() as u64);
         self.metrics.snapshot()
     }
 
@@ -937,6 +963,99 @@ impl SessionCore {
         // lint: allow(relaxed-ordering) — diagnostic gauge of live handles; never used to synchronize teardown
         self.active_handles.fetch_sub(1, Ordering::Relaxed);
     }
+
+    /// Live ingest handles over this core (the serving layer refuses to
+    /// drop a tenant while any connection still holds one).
+    pub(crate) fn live_handles(&self) -> usize {
+        // lint: allow(relaxed-ordering) — advisory gauge; the drop path re-checks after settling the barrier
+        self.active_handles.load(Ordering::Relaxed)
+    }
+
+    /// Work items registered but not yet retired on this core's epoch
+    /// barrier — the per-tenant queue-depth gauge.
+    pub(crate) fn queue_depth(&self) -> usize {
+        self.barrier.pending()
+    }
+
+    /// Bundle this core's merge-side state for the distributors'
+    /// [`crate::coordinator::TenantDirectory`].
+    pub(crate) fn tenant_runtime(&self) -> Arc<TenantRuntime> {
+        Arc::new(TenantRuntime {
+            kconn: self.kconn.clone(),
+            barrier: self.barrier.clone(),
+            merge_gate: self.merge_gate.clone(),
+            metrics: self.metrics.clone(),
+            wal: self.wal.clone(),
+        })
+    }
+}
+
+/// Build one tenant's engine room over the fabric's **shared** shard
+/// queues and batch arena: its own sketch stores, epoch barrier, merge
+/// gate, metrics, query engine, and update buffer, with every enqueued
+/// work item tagged `tenant`.  The fabric (not this function) spawns
+/// the distributor threads, installing its registry as the
+/// [`crate::coordinator::TenantDirectory`]; tenants are purely resident
+/// (no WAL — the fabric validates that).  `config` must already be
+/// validated.
+pub(crate) fn spawn_tenant_core(
+    config: CoordinatorConfig,
+    update_log_capacity: usize,
+    tenant: TenantId,
+    queue: Arc<ShardedWorkQueue<WorkItem>>,
+    arena: Arc<BatchArena>,
+) -> Arc<SessionCore> {
+    let params = config.params();
+    let spec = config.shard_spec();
+    let metrics = Arc::new(Metrics::new());
+    let kconn = Arc::new(KConnectivity::with_shards_hybrid(
+        params,
+        config.graph_seed,
+        config.k,
+        spec,
+        config.hybrid(),
+    ));
+    let barrier = Arc::new(EpochBarrier::new());
+    let buffer = match config.buffer {
+        BufferKind::Hypertree => Buffer::Hyper(Arc::new(Hypertree::new(
+            HypertreeConfig::for_vertices(config.vertices, config.leaf_capacity()),
+            metrics.clone(),
+        ))),
+        BufferKind::Gutter => Buffer::Gutter(Arc::new(GutterBuffer::new(
+            config.vertices,
+            config.leaf_capacity(),
+            spec,
+            metrics.clone(),
+        ))),
+    };
+    let sink = Arc::new(QueueSink {
+        queue: queue.clone(),
+        spec,
+        tenant,
+        metrics: metrics.clone(),
+        barrier: barrier.clone(),
+        arena,
+        // remote fabrics meter the batch leg frame-exactly at submit
+        // (TBATCH2); in-process fabrics keep the nominal model here
+        meter_batch_bytes: !matches!(config.worker, WorkerKind::Remote { .. }),
+    });
+    Arc::new(SessionCore {
+        query: QueryEngine::new(config.vertices, config.use_greedycc, metrics.clone()),
+        params,
+        metrics,
+        kconn,
+        buffer,
+        sink,
+        queue,
+        barrier,
+        query_serial: Mutex::new(()),
+        merge_gate: Arc::new(RwLock::new(())),
+        wal: None,
+        update_log_capacity,
+        active_handles: AtomicUsize::new(0),
+        pending_handles: AtomicUsize::new(0),
+        config,
+    })
 }
 
 /// A shared ingestion + query session over one sketched graph.
@@ -1041,6 +1160,7 @@ impl Landscape {
         let sink = Arc::new(QueueSink {
             queue: queue.clone(),
             spec,
+            tenant: SOLO_TENANT,
             metrics: metrics.clone(),
             barrier: barrier.clone(),
             arena: arena.clone(),
@@ -1077,7 +1197,12 @@ impl Landscape {
         // of sketch shard `shard` during ingestion, so its merges use
         // the lock-free exclusive path.  The loop itself (interleaved
         // submit/drain, out-of-order merge, remote failover) lives in
-        // `coordinator::distributor::Distributor::run`.
+        // `coordinator::distributor::Distributor::run`.  A solo session
+        // installs a single-entry tenant directory aliasing its own
+        // state, so the multi-tenant resolution is behaviorally free
+        // here.
+        let tenants: Arc<dyn crate::coordinator::TenantDirectory> =
+            Arc::new(SoloDirectory::new(core.tenant_runtime()));
         let mut distributors = Vec::new();
         for shard in 0..core.config.shard_spec().count() {
             // construction data is Send — the backend itself is built
@@ -1091,12 +1216,10 @@ impl Landscape {
                 window: core.config.remote_window.max(1),
                 hybrid_threshold: core.config.hybrid_threshold,
                 queue: core.queue.clone(),
-                kconn: core.kconn.clone(),
+                tenants: tenants.clone(),
                 metrics: core.metrics.clone(),
-                barrier: core.barrier.clone(),
-                merge_gate: core.merge_gate.clone(),
                 arena: arena.clone(),
-                wal: core.wal.clone(),
+                tagged_wire: false,
             };
             distributors.push(std::thread::spawn(move || d.run()));
         }

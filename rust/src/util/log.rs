@@ -16,6 +16,16 @@
 //! landscape::log_warn!("dropped {} batches on shard {}", 3, 1);
 //! landscape::log_info!("ingested {} updates", 1_000_000);
 //! ```
+//!
+//! Subsystems that multiplex many contexts over shared machinery (the
+//! multi-tenant serving layer, chiefly) can prepend a context tag with
+//! the optional `target:` field — the line then reads
+//! `landscape[LEVEL][target] ...`, so one interleaved stderr stream
+//! stays attributable per tenant/connection:
+//!
+//! ```
+//! landscape::log_info!(target: "serve", "tenant {} created", 3);
+//! ```
 
 use std::sync::OnceLock;
 
@@ -80,9 +90,24 @@ pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
     }
 }
 
-/// Log at [`Level::Error`] severity.
+/// Emit one context-tagged log line (used by the `log_*!(target: ...)`
+/// macro arms; prefer those).
+pub fn log_target(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("landscape[{}][{}] {}", level.label(), target, args);
+    }
+}
+
+/// Log at [`Level::Error`] severity.  An optional leading
+/// `target: <expr>,` prepends a `[target]` context tag.
 #[macro_export]
 macro_rules! log_error {
+    (target: $target:expr, $($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Error) {
+            $crate::util::log::log_target(
+                $crate::util::log::Level::Error, $target, format_args!($($arg)*));
+        }
+    };
     ($($arg:tt)*) => {
         // check the filter BEFORE touching the arguments, so filtered
         // sites never evaluate expression operands
@@ -92,9 +117,16 @@ macro_rules! log_error {
     };
 }
 
-/// Log at [`Level::Warn`] severity.
+/// Log at [`Level::Warn`] severity.  An optional leading
+/// `target: <expr>,` prepends a `[target]` context tag.
 #[macro_export]
 macro_rules! log_warn {
+    (target: $target:expr, $($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Warn) {
+            $crate::util::log::log_target(
+                $crate::util::log::Level::Warn, $target, format_args!($($arg)*));
+        }
+    };
     ($($arg:tt)*) => {
         if $crate::util::log::enabled($crate::util::log::Level::Warn) {
             $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($arg)*));
@@ -102,9 +134,16 @@ macro_rules! log_warn {
     };
 }
 
-/// Log at [`Level::Info`] severity.
+/// Log at [`Level::Info`] severity.  An optional leading
+/// `target: <expr>,` prepends a `[target]` context tag.
 #[macro_export]
 macro_rules! log_info {
+    (target: $target:expr, $($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Info) {
+            $crate::util::log::log_target(
+                $crate::util::log::Level::Info, $target, format_args!($($arg)*));
+        }
+    };
     ($($arg:tt)*) => {
         if $crate::util::log::enabled($crate::util::log::Level::Info) {
             $crate::util::log::log($crate::util::log::Level::Info, format_args!($($arg)*));
@@ -112,9 +151,16 @@ macro_rules! log_info {
     };
 }
 
-/// Log at [`Level::Debug`] severity.
+/// Log at [`Level::Debug`] severity.  An optional leading
+/// `target: <expr>,` prepends a `[target]` context tag.
 #[macro_export]
 macro_rules! log_debug {
+    (target: $target:expr, $($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Debug) {
+            $crate::util::log::log_target(
+                $crate::util::log::Level::Debug, $target, format_args!($($arg)*));
+        }
+    };
     ($($arg:tt)*) => {
         if $crate::util::log::enabled($crate::util::log::Level::Debug) {
             $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($arg)*));
@@ -145,5 +191,15 @@ mod tests {
         assert!(Level::Error < Level::Warn);
         assert!(Level::Warn < Level::Info);
         assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn target_arms_expand() {
+        // both macro arms must compile against the same call-site shape;
+        // expansion is the contract here (output goes to stderr)
+        crate::log_debug!("plain {} arm", 1);
+        crate::log_debug!(target: "serve", "tagged {} arm", 2);
+        let tenant = 7u32;
+        crate::log_debug!(target: &format!("tenant-{tenant}"), "dynamic target");
     }
 }

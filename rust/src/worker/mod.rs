@@ -26,6 +26,7 @@ pub mod remote;
 use anyhow::Result;
 
 use crate::coordinator::work_queue::Ticket;
+use crate::coordinator::TenantId;
 use crate::sketch::params::{encode_edge, SketchParams};
 use crate::sketch::seeds::SketchSeeds;
 use crate::sketch::{CameoSketch, CubeSketch};
@@ -88,6 +89,11 @@ pub enum DeltaFlavor {
 /// is what keeps query cuts sound.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PendingBatch {
+    /// Logical graph this batch belongs to
+    /// ([`crate::coordinator::SOLO_TENANT`] for single-tenant sessions).
+    /// Backends carry it unchanged from submission to completion so the
+    /// distributor can resolve the owning tenant's runtime at merge time.
+    pub tenant: TenantId,
     pub token: u64,
     pub ticket: Ticket,
     pub vertex: u32,
@@ -98,6 +104,8 @@ pub struct PendingBatch {
 /// submitted under `token`, echoing the submitted batch's epoch ticket.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Completion {
+    /// Echo of the submitted batch's tenant id (see [`PendingBatch`]).
+    pub tenant: TenantId,
     pub token: u64,
     pub ticket: Ticket,
     pub vertex: u32,
@@ -207,6 +215,7 @@ impl SubmitBackend for InlineSubmit {
             .backend
             .process_delta(batch.vertex, &batch.others, &mut delta)?;
         self.ready.push(Completion {
+            tenant: batch.tenant,
             token: batch.token,
             ticket: batch.ticket,
             vertex: batch.vertex,
@@ -462,6 +471,7 @@ mod tests {
         let ticket = barrier.register();
         let mut b = InlineSubmit::new(Box::new(NativeWorker::new(s.clone())));
         b.submit(PendingBatch {
+            tenant: crate::coordinator::SOLO_TENANT,
             token: 7,
             ticket,
             vertex: 0,
@@ -474,6 +484,11 @@ mod tests {
         assert_eq!(b.in_flight(), 0);
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].token, 7);
+        assert_eq!(
+            out[0].tenant,
+            crate::coordinator::SOLO_TENANT,
+            "completions echo the tenant id"
+        );
         assert_eq!(out[0].ticket, ticket, "completions echo the epoch ticket");
         assert_eq!(out[0].wire_bytes, 0, "inline backends meter no network");
         assert!(!out[0].exact, "threshold-0 native stays sketch-flavored");

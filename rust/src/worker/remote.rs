@@ -29,9 +29,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::coordinator::TenantId;
 use crate::net::{
     delta2_wire_bytes, encode_batch2_into, encode_multibatch_header_into, encode_seq_batch_into,
-    exact_delta2_wire_bytes, Message,
+    encode_tbatch2_into, exact_delta2_wire_bytes, tdelta2_wire_bytes, Message,
 };
 use crate::sketch::params::SketchParams;
 use crate::worker::{
@@ -173,6 +174,12 @@ pub struct PipelinedRemote {
     frame_buf: Vec<u8>,
     window: usize,
     bytes_sent: u64,
+    /// Tenant-tagged wire mode: frame every batch as a standalone
+    /// TBATCH2 (never MULTIBATCH-coalesced) so each frame's bytes are
+    /// attributable to exactly one tenant — the per-tenant Theorem 5.2
+    /// meter sums `tbatch2_wire_bytes` per submitted batch and must
+    /// reconcile exactly against the framing layer.
+    tagged: bool,
     reader: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -200,6 +207,34 @@ impl PipelinedRemote {
         k: u32,
         window: usize,
         threshold: u32,
+    ) -> Result<Self> {
+        Self::connect_inner(addr, params, graph_seed, k, window, threshold, false)
+    }
+
+    /// Like [`Self::connect`], but in **tenant-tagged** wire mode for the
+    /// multi-tenant fabric: every batch goes out as a standalone TBATCH2
+    /// frame carrying its tenant id, and the server echoes the id on each
+    /// TDELTA2 reply.  Tagged mode never coalesces into MULTIBATCH — a
+    /// shared frame's bytes would not be attributable to one tenant — and
+    /// never negotiates the hybrid tier (the fabric is sketch-only).
+    pub fn connect_tagged(
+        addr: &str,
+        params: SketchParams,
+        graph_seed: u64,
+        k: u32,
+        window: usize,
+    ) -> Result<Self> {
+        Self::connect_inner(addr, params, graph_seed, k, window, 0, true)
+    }
+
+    fn connect_inner(
+        addr: &str,
+        params: SketchParams,
+        graph_seed: u64,
+        k: u32,
+        window: usize,
+        threshold: u32,
+        tagged: bool,
     ) -> Result<Self> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
@@ -232,6 +267,7 @@ impl PipelinedRemote {
             frame_buf: Vec::new(),
             window: window.max(1),
             bytes_sent,
+            tagged,
             reader: Some(reader),
         })
     }
@@ -322,7 +358,15 @@ impl SubmitBackend for PipelinedRemote {
         // `scatter_encoders_match_message_framing`), so the byte meter
         // below stays exact.
         self.frame_buf.clear();
-        if self.write_buf.len() == 1 {
+        if self.tagged {
+            // one standalone TBATCH2 frame per batch, still assembled
+            // into a single scatter buffer → one write.  Per-tenant byte
+            // attribution needs per-batch frames; the cost is one tag
+            // byte per batch over MULTIBATCH coalescing.
+            for b in &self.write_buf {
+                encode_tbatch2_into(&mut self.frame_buf, b.tenant, b.token, b.vertex, &b.others);
+            }
+        } else if self.write_buf.len() == 1 {
             let b = &self.write_buf[0];
             encode_batch2_into(&mut self.frame_buf, b.token, b.vertex, &b.others);
         } else {
@@ -473,8 +517,11 @@ impl Drop for PipelinedRemote {
 }
 
 /// Match one completion frame against the pending map and publish it.
-/// Returns `false` when the frame is unanswerable (wrong vertex or
-/// unknown seq) and the connection must be marked dead.
+/// Returns `false` when the frame is unanswerable (wrong vertex, wrong
+/// tenant echo, or unknown seq) and the connection must be marked dead.
+/// `echo_tenant` is the tenant id a TDELTA2 frame carried (`None` for
+/// untagged frames): it must match the submitted batch's tenant, or the
+/// reply would be merged into the wrong logical graph.
 fn complete_frame(
     shared: &PipeShared,
     seq: u64,
@@ -482,11 +529,25 @@ fn complete_frame(
     delta: Vec<u64>,
     wire: u64,
     exact: bool,
+    echo_tenant: Option<TenantId>,
 ) -> bool {
     let mut st = shared.state.lock().unwrap();
     match st.pending.remove(&seq) {
+        Some(b) if echo_tenant.is_some_and(|t| t != b.tenant) => {
+            crate::log_warn!(
+                "remote: delta seq {seq} echoed wrong tenant (sent {}, got {})",
+                b.tenant,
+                echo_tenant.unwrap_or_default()
+            );
+            // keep the batch requeueable
+            st.pending.insert(seq, b);
+            drop(st);
+            shared.mark_dead();
+            false
+        }
         Some(b) if b.vertex == vertex => {
             st.completed.push_back(Completion {
+                tenant: b.tenant,
                 token: seq,
                 ticket: b.ticket,
                 vertex,
@@ -531,7 +592,21 @@ fn reader_loop(shared: &PipeShared, mut reader: BufReader<TcpStream>) {
         match Message::read_from(&mut reader) {
             Ok(Message::Delta2 { seq, vertex, delta }) => {
                 let wire = delta2_wire_bytes(delta.len());
-                if !complete_frame(shared, seq, vertex, delta, wire, false) {
+                if !complete_frame(shared, seq, vertex, delta, wire, false, None) {
+                    return;
+                }
+            }
+            Ok(Message::TDelta2 {
+                tenant,
+                seq,
+                vertex,
+                delta,
+            }) => {
+                // tagged completion: the tenant echo is verified against
+                // the submitted batch so a confused server can never get
+                // a delta merged into the wrong logical graph
+                let wire = tdelta2_wire_bytes(delta.len());
+                if !complete_frame(shared, seq, vertex, delta, wire, false, Some(tenant)) {
                     return;
                 }
             }
@@ -544,7 +619,7 @@ fn reader_loop(shared: &PipeShared, mut reader: BufReader<TcpStream>) {
                 // indices, not sketch words (the distributor dispatches
                 // on `exact`)
                 let wire = exact_delta2_wire_bytes(indices.len());
-                if !complete_frame(shared, seq, vertex, indices, wire, true) {
+                if !complete_frame(shared, seq, vertex, indices, wire, true, None) {
                     return;
                 }
             }
@@ -728,7 +803,10 @@ fn handle_connection(stream: TcpStream, opts: ServeOptions) -> Result<()> {
         };
         let is_data = matches!(
             msg,
-            Message::Batch { .. } | Message::Batch2 { .. } | Message::MultiBatch { .. }
+            Message::Batch { .. }
+                | Message::Batch2 { .. }
+                | Message::TBatch2 { .. }
+                | Message::MultiBatch { .. }
         );
         let crash_now = opts.fail_after_batches.is_some_and(|limit| answered >= limit);
         if is_data && crash_now {
@@ -767,6 +845,31 @@ fn handle_connection(stream: TcpStream, opts: ServeOptions) -> Result<()> {
                         vertex,
                         indices: out.clone(),
                     },
+                };
+                if tx.send((due(opts.reply_latency), reply)).is_err() {
+                    break;
+                }
+                answered += 1;
+            }
+            Message::TBatch2 {
+                tenant,
+                seq,
+                vertex,
+                others,
+            } => {
+                // tenant-tagged batch: the id is opaque to the worker
+                // (all tenants share the fabric's seeds, so the
+                // computation is tenant-independent) and is echoed back
+                // verbatim so the coordinator can route the delta.
+                // Tagged mode never negotiates the hybrid tier, so the
+                // reply is always a full sketch delta.
+                out.clear();
+                backend.process(vertex, &others, &mut out)?;
+                let reply = Message::TDelta2 {
+                    tenant,
+                    seq,
+                    vertex,
+                    delta: out.clone(),
                 };
                 if tx.send((due(opts.reply_latency), reply)).is_err() {
                     break;
@@ -922,6 +1025,7 @@ mod tests {
         let batches = [(1u64, 0u32, vec![1u32, 3]), (2, 5, vec![6]), (3, 9, vec![2, 4])];
         for (token, vertex, others) in &batches {
             p.submit(PendingBatch {
+                tenant: 0,
                 token: *token,
                 ticket: ticket(),
                 vertex: *vertex,
@@ -962,12 +1066,14 @@ mod tests {
 
         let mut p = PipelinedRemote::connect(&addr, params, 7, 2, 16).unwrap();
         let b1 = PendingBatch {
+            tenant: 0,
             token: 1,
             ticket: ticket(),
             vertex: 0,
             others: vec![1, 2, 3],
         };
         let b2 = PendingBatch {
+            tenant: 0,
             token: 2,
             ticket: ticket(),
             vertex: 4,
@@ -1033,6 +1139,7 @@ mod tests {
         let mut p = PipelinedRemote::connect_hybrid(&addr, params, 42, 1, 8, 2).unwrap();
         // batch 1: 2 survivors ≤ threshold 2 → exact; batch 2: 5 > 2 → sketch
         p.submit(PendingBatch {
+            tenant: 0,
             token: 1,
             ticket: ticket(),
             vertex: 0,
@@ -1041,6 +1148,7 @@ mod tests {
         .unwrap();
         p.flush_submits().unwrap();
         p.submit(PendingBatch {
+            tenant: 0,
             token: 2,
             ticket: ticket(),
             vertex: 7,
@@ -1075,6 +1183,81 @@ mod tests {
         assert_eq!(sketch.wire_bytes, delta2_wire_bytes(params.words()));
     }
 
+    /// In tagged mode every batch rides a standalone TBATCH2 frame and
+    /// comes back as a TDELTA2 echoing the tenant id; deltas are
+    /// bit-identical to the untagged path (workers are tenant-oblivious)
+    /// and the byte meter reflects the tagged frames exactly — the
+    /// property that makes per-tenant Theorem 5.2 accounting possible.
+    #[test]
+    fn tagged_round_trip_echoes_tenants_and_meters_exact_bytes() {
+        use crate::net::tbatch2_wire_bytes;
+        let params = SketchParams::for_vertices(64);
+        let server = WorkerServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let server_thread = std::thread::spawn(move || server.serve(1));
+
+        let mut p = PipelinedRemote::connect_tagged(&addr, params, 42, 2, 8).unwrap();
+        let batches = [
+            (3u32, 1u64, 0u32, vec![1u32, 3]),
+            (7, 2, 5, vec![6]),
+            (3, 3, 9, vec![2, 4]),
+        ];
+        for (tenant, token, vertex, others) in &batches {
+            p.submit(PendingBatch {
+                tenant: *tenant,
+                token: *token,
+                ticket: ticket(),
+                vertex: *vertex,
+                others: others.clone(),
+            })
+            .unwrap();
+        }
+        p.flush_submits().unwrap();
+        let mut got = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while got.len() < batches.len() && Instant::now() < deadline {
+            p.drain(&mut got, true).unwrap();
+        }
+        assert_eq!(got.len(), 3);
+        for c in &got {
+            let (tenant, _, vertex, others) =
+                batches.iter().find(|b| b.1 == c.token).unwrap();
+            assert_eq!(c.tenant, *tenant, "TDELTA2 must echo the tenant id");
+            assert_eq!(c.vertex, *vertex);
+            assert!(!c.exact, "tagged mode is sketch-only");
+            assert_eq!(
+                c.delta,
+                native_delta(params, 42, 2, *vertex, others),
+                "tenant tagging must not perturb the computation"
+            );
+            assert_eq!(c.wire_bytes, tdelta2_wire_bytes(c.delta.len()));
+        }
+        p.finish().unwrap();
+        server_thread.join().unwrap().unwrap();
+
+        let hello = Message::Hello {
+            vertices: params.v,
+            columns: params.columns,
+            graph_seed: 42,
+            k: 2,
+            threshold: 0,
+        };
+        let batch_bytes: u64 = batches
+            .iter()
+            .map(|(_, _, _, others)| tbatch2_wire_bytes(others.len()))
+            .sum();
+        assert_eq!(
+            p.bytes_sent(),
+            hello.wire_bytes() + batch_bytes + Message::Shutdown.wire_bytes(),
+            "per-batch TBATCH2 byte helper must reconcile with the framing layer"
+        );
+        let words = 2 * params.words();
+        assert_eq!(
+            p.bytes_received(),
+            3 * tdelta2_wire_bytes(words) + Message::Bye.wire_bytes()
+        );
+    }
+
     #[test]
     fn crashed_server_leaves_unacked_batches_recoverable() {
         let params = SketchParams::for_vertices(64);
@@ -1089,6 +1272,7 @@ mod tests {
         let mut p = PipelinedRemote::connect(&addr, params, 42, 1, 8).unwrap();
         // first batch is answered; the second triggers the crash
         p.submit(PendingBatch {
+            tenant: 0,
             token: 1,
             ticket: ticket(),
             vertex: 0,
@@ -1105,6 +1289,7 @@ mod tests {
 
         let crash_ticket = ticket();
         p.submit(PendingBatch {
+            tenant: 0,
             token: 2,
             ticket: crash_ticket,
             vertex: 3,
@@ -1166,6 +1351,7 @@ mod tests {
         let mut comps = Vec::new();
         for i in 0..n {
             p.submit(PendingBatch {
+                tenant: 0,
                 token: i + 1,
                 ticket: ticket(),
                 vertex: i as u32,

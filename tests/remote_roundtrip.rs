@@ -191,6 +191,7 @@ fn remote_worker_meters_exact_wire_bytes() {
         columns: params.columns,
         graph_seed,
         k,
+        threshold: 0,
     };
     let batch = Message::Batch {
         vertex: 0,
